@@ -1,0 +1,54 @@
+//! Group-size search demo (the Table 4 story): the attention-error
+//! proxy finds the same h_g* as direct accuracy search in a fraction
+//! of the time.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example group_size_search
+//! ```
+
+use std::path::Path;
+
+use deltadq::delta::extract_deltas;
+use deltadq::eval::load_dataset;
+use deltadq::model::load_weights;
+use deltadq::search::{search_direct, search_proxy};
+
+fn main() -> anyhow::Result<()> {
+    let models = Path::new("artifacts/models/tiny");
+    anyhow::ensure!(
+        models.join("base.dqw").exists(),
+        "run `make artifacts` first"
+    );
+    let base = load_weights(&models.join("base.dqw"))?;
+    let ft = load_weights(&models.join("code.dqw"))?;
+    let eval_data: Vec<_> = load_dataset(Path::new("artifacts/data/code_eval.dqt"))?
+        .into_iter()
+        .take(150)
+        .collect();
+    let deltas = extract_deltas(&base, &ft);
+
+    for alpha in [4.0, 8.0] {
+        println!("== alpha = {alpha} ==");
+        let p = search_proxy(&base, &deltas, alpha, &eval_data, 0.01, 42);
+        println!(
+            "proxy  ({} candidates, {:.2}s): h_g* = {}",
+            p.candidates.len(),
+            p.elapsed.as_secs_f64(),
+            p.best_group_size
+        );
+        for (g, err) in &p.candidates {
+            println!("    h_g {g:>4}: attention error {err:.4e}");
+        }
+        let d = search_direct(&base, &deltas, alpha, &eval_data, 42);
+        println!(
+            "direct ({:.2}s): h_g* = {}  (speedup {:.1}x)",
+            d.elapsed.as_secs_f64(),
+            d.best_group_size,
+            d.elapsed.as_secs_f64() / p.elapsed.as_secs_f64().max(1e-9)
+        );
+        for (g, acc) in &d.candidates {
+            println!("    h_g {g:>4}: accuracy {acc:.2}%");
+        }
+    }
+    Ok(())
+}

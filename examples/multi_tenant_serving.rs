@@ -1,0 +1,138 @@
+//! End-to-end multi-tenant serving driver (experiment E10, the
+//! system-prompt-required full-system workload): load the trained base
+//! model, register three fine-tuned tenants as DeltaDQ-compressed
+//! deltas, optionally verify prefill logits against the AOT PJRT
+//! artifact, then serve an open-loop request stream and report
+//! latency/throughput — recorded in EXPERIMENTS.md §E10.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example multi_tenant_serving
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use deltadq::compress::pipeline::compress_model_deltas;
+use deltadq::compress::{DeltaDq, DeltaDqConfig};
+use deltadq::coordinator::{Server, ServerOptions};
+use deltadq::delta::extract_deltas;
+use deltadq::eval::tasks::vocab;
+use deltadq::eval::{gen_dataset, TaskKind};
+use deltadq::model::{forward, load_weights};
+use deltadq::runtime;
+use deltadq::tensor::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let models = Path::new("artifacts/models/tiny");
+    let base_path = models.join("base.dqw");
+    anyhow::ensure!(
+        base_path.exists(),
+        "run `make artifacts` first (missing {base_path:?})"
+    );
+    let base = Arc::new(load_weights(&base_path)?);
+    println!(
+        "loaded base model: {} params ({} preset)",
+        base.param_count(),
+        "tiny"
+    );
+
+    // --- optional: PJRT artifact cross-check (L3 ↔ L2 ↔ L1 compose) ---
+    let hlo = Path::new("artifacts/base_prefill_tiny_t48.hlo.txt");
+    if hlo.exists() {
+        let rt = runtime::PjrtRuntime::cpu()?;
+        let graph = rt.load(hlo)?;
+        let tokens = vec![1u32, 20, 4, 21, 3];
+        let args = runtime::base_prefill_args(&tokens, 48, &base)?;
+        let pjrt_logits = graph.execute_to_matrix(&args, (48, base.config.vocab_size))?;
+        let native = forward(base.as_ref(), &tokens);
+        let mut max_err = 0f32;
+        for p in 0..tokens.len() {
+            for c in 0..base.config.vocab_size {
+                max_err = max_err.max((pjrt_logits.get(p, c) - native.get(p, c)).abs());
+            }
+        }
+        println!("PJRT prefill vs native forward: max |Δlogit| = {max_err:.2e}");
+    } else {
+        println!("(no HLO artifact; skipping PJRT cross-check)");
+    }
+
+    // --- register tenants: compress each fine-tune at 16x ------------
+    let server = Server::start(
+        base.clone(),
+        ServerOptions {
+            max_batch: 8,
+            batch_window: Duration::from_micros(500),
+            workers: 2,
+            promote_after: 16,
+            ..Default::default()
+        },
+    );
+    let mut total_compressed = 0u64;
+    for task in ["math", "code", "chat"] {
+        let ft = load_weights(&models.join(format!("{task}.dqw")))?;
+        let deltas = extract_deltas(&base, &ft);
+        let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(16)));
+        let mut rng = Pcg64::seeded(7);
+        let set = compress_model_deltas(&deltas, &dq, &Default::default(), &mut rng);
+        println!(
+            "tenant '{task}': {:.1} KiB compressed ({:.1}x measured)",
+            set.storage_bits() as f64 / 8.0 / 1024.0,
+            set.measured_ratio()
+        );
+        total_compressed += set.storage_bits() / 8;
+        server.register_tenant(task, set);
+    }
+    println!(
+        "3 tenants resident in {:.1} KiB total (one dense fp32 model is {:.1} KiB)",
+        total_compressed as f64 / 1024.0,
+        base.param_count() as f64 * 4.0 / 1024.0
+    );
+
+    // --- open-loop request stream ------------------------------------
+    let n_requests = 120;
+    let mut rng = Pcg64::seeded(42);
+    let mut receivers = Vec::new();
+    let start = Instant::now();
+    let prompts: Vec<(String, Vec<u32>)> = ["math", "code", "chat"]
+        .iter()
+        .flat_map(|t| {
+            gen_dataset(TaskKind::parse(t).unwrap(), n_requests / 3 + 1, 9)
+                .into_iter()
+                .map(move |s| (t.to_string(), s.prompt))
+        })
+        .collect();
+    for i in 0..n_requests {
+        let (tenant, prompt) = &prompts[i % prompts.len()];
+        std::thread::sleep(Duration::from_secs_f64(rng.exponential(400.0).min(0.01)));
+        receivers.push((tenant.clone(), server.submit(tenant, prompt.clone(), 8)?));
+    }
+    let mut correct_shape = 0;
+    for (_, rx) in &receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(60))?;
+        if !resp.tokens.is_empty() || resp.tokens.iter().all(|&t| t != vocab::PAD) {
+            correct_shape += 1;
+        }
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let m = &server.metrics;
+    println!("\n--- E10 serving report ---");
+    println!(
+        "completed {} requests in {elapsed:.2}s -> {:.1} req/s, {:.0} tok/s",
+        receivers.len(),
+        receivers.len() as f64 / elapsed,
+        m.tokens_generated.load(std::sync::atomic::Ordering::Relaxed) as f64 / elapsed
+    );
+    println!(
+        "latency mean {:.1}ms p50 {:.1}ms p99 {:.1}ms; mean batch {:.2}",
+        m.mean_latency() * 1e3,
+        m.latency_percentile(50.0) * 1e3,
+        m.latency_percentile(99.0) * 1e3,
+        m.requests_completed.load(std::sync::atomic::Ordering::Relaxed) as f64
+            / m.batches_executed.load(std::sync::atomic::Ordering::Relaxed).max(1) as f64
+    );
+    println!("residency: {:?}", server.residency());
+    println!("sanity: {correct_shape}/{} responses well-formed", receivers.len());
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Quickstart: the DeltaDQ pipeline end-to-end on one tensor and then
+//! on a whole model, entirely in memory.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use std::collections::BTreeMap;
+
+use deltadq::compress::pipeline::{compress_model_deltas, reconstruct_weights};
+use deltadq::compress::{Compressor, DeltaDq, DeltaDqConfig, LayerContext};
+use deltadq::delta::extract_deltas;
+use deltadq::eval::{evaluate, gen_dataset, TaskKind};
+use deltadq::model::{ModelConfig, ModelWeights};
+use deltadq::tensor::{Matrix, Pcg64};
+
+fn main() -> anyhow::Result<()> {
+    // ------------------------------------------------ single tensor
+    println!("== single-tensor DeltaDQ ==");
+    let mut rng = Pcg64::seeded(1);
+    // a base weight and a small fine-tuning delta, like real SFT produces
+    let base = Matrix::randn(64, 64, 0.02, &mut rng);
+    let delta = Matrix::randn(64, 64, 0.002, &mut rng);
+
+    // Group-wise Dropout (α=8, h_g=16) + Separate Quantization (k=4, m=8):
+    // 1-bit codes → nominal 128x compression of the delta.
+    let dq = DeltaDq::new(DeltaDqConfig::with_quant(8.0, Some(16), 4, 8));
+    let compressed = dq.compress(&delta, &LayerContext::data_free(0, "demo"), &mut rng);
+
+    let dense_bits = (delta.len() * 16) as f64;
+    println!("  nominal ratio : {}x", dq.nominal_ratio());
+    println!(
+        "  measured ratio: {:.1}x ({} -> {} bits)",
+        dense_bits / compressed.storage_bits() as f64,
+        dense_bits,
+        compressed.storage_bits()
+    );
+    let err = delta.sq_distance(&compressed.to_dense()).sqrt()
+        / delta.frobenius_norm() as f64;
+    println!("  relative reconstruction error: {err:.3}");
+
+    // ------------------------------------------------ whole model
+    println!("\n== whole-model compress + eval ==");
+    let config = ModelConfig::tiny();
+    let mut rng = Pcg64::seeded(2);
+    let base = ModelWeights::init(config, &mut rng);
+    // synthesize a "fine-tune": small random deltas on every tensor
+    let mut ft = base.clone();
+    for name in config.delta_tensor_names() {
+        let (r, c) = ft.get(&name).shape();
+        let d = Matrix::randn(r, c, 0.001, &mut rng);
+        ft.get_mut(&name).add_assign(&d);
+    }
+    let deltas = extract_deltas(&base, &ft);
+
+    let dq16 = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(16)));
+    let set = compress_model_deltas(&deltas, &dq16, &BTreeMap::new(), &mut rng);
+    println!("  method          : {}", set.method);
+    println!("  nominal ratio   : {}x", set.nominal_ratio);
+    println!("  measured ratio  : {:.1}x", set.measured_ratio());
+    println!(
+        "  delta storage   : {:.1} KiB (dense fp16 would be {:.1} KiB)",
+        set.storage_bits() as f64 / 8.0 / 1024.0,
+        set.total_elems() as f64 * 2.0 / 1024.0
+    );
+
+    // evaluate base vs compressed-reconstruction on the math task
+    // (untrained weights — accuracies are near-zero; the point is the flow)
+    let eval_data = gen_dataset(TaskKind::Math, 32, 3);
+    let rebuilt = reconstruct_weights(&base, &set);
+    let acc_ft = evaluate(&ft, &eval_data);
+    let acc_cmp = evaluate(&rebuilt, &eval_data);
+    println!(
+        "  accuracy ft={:.1}% compressed={:.1}% (untrained demo weights)",
+        acc_ft.percent(),
+        acc_cmp.percent()
+    );
+    println!(
+        "\nFor trained models: run `make artifacts`, then\n  \
+         ./target/release/deltadq bench --name table1"
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Ultra-high compression walk-through (the Table 2/3 story): sweep m
+//! at fixed final bit width and watch accuracy survive 128× while
+//! m=1 collapses — the Separate Quantization effect.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ultra_compression
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use deltadq::compress::pipeline::{compress_model_deltas, reconstruct_weights};
+use deltadq::compress::{DeltaDq, DeltaDqConfig};
+use deltadq::delta::extract_deltas;
+use deltadq::eval::{evaluate, load_dataset};
+use deltadq::model::load_weights;
+use deltadq::tensor::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let models = Path::new("artifacts/models/tiny");
+    anyhow::ensure!(
+        models.join("base.dqw").exists(),
+        "run `make artifacts` first"
+    );
+    let base = load_weights(&models.join("base.dqw"))?;
+    let ft = load_weights(&models.join("code.dqw"))?;
+    let eval_data: Vec<_> = load_dataset(Path::new("artifacts/data/code_eval.dqt"))?
+        .into_iter()
+        .take(150)
+        .collect();
+    let deltas = extract_deltas(&base, &ft);
+
+    let original = evaluate(&ft, &eval_data).percent();
+    println!("original fine-tuned accuracy: {original:.2}%\n");
+    println!("{:<22} {:>8} {:>10} {:>10}", "config", "nominal", "KiB", "accuracy");
+
+    // fixed dropout alpha = 8; sweep the quantization stage
+    for (k, m) in [(8u32, 1u32), (4, 1), (4, 4), (4, 8), (2, 2), (2, 4)] {
+        let dq = DeltaDq::new(DeltaDqConfig::with_quant(8.0, Some(16), k, m));
+        let mut rng = Pcg64::seeded(99);
+        let set = compress_model_deltas(&deltas, &dq, &BTreeMap::new(), &mut rng);
+        let weights = reconstruct_weights(&base, &set);
+        let acc = evaluate(&weights, &eval_data).percent();
+        let nominal = deltadq::compress::ratio::nominal_ratio(8.0, Some((k, m)));
+        println!(
+            "{:<22} {:>7}x {:>10.1} {:>9.2}%",
+            format!("alpha=8 k={k} m={m}"),
+            if nominal.is_infinite() { "inf".to_string() } else { format!("{nominal:.0}") },
+            set.storage_bits() as f64 / 8.0 / 1024.0,
+            acc
+        );
+    }
+
+    println!(
+        "\nNote the k=4 column: m=1 packs the whole range into 4 bits and\n\
+         degrades; m=8 stores 1-bit parts that reassemble the same 4-bit\n\
+         codes exactly (lossless decomposition) -> accuracy holds at 128x."
+    );
+    Ok(())
+}

@@ -1,0 +1,143 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) → HLO **text**
+consumed by the rust PJRT runtime (``rust/src/runtime/``).
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Exported graphs per scale (default: tiny):
+
+* ``base_prefill``  — ``(tokens i32[T], *weights) → logits (T, vocab)``
+* ``delta_prefill`` — ``(tokens i32[T], *weights, *deltas) → logits``;
+  every linear layer runs the fused Pallas separate-computation kernel.
+
+Weight/delta arguments are passed in **sorted tensor-name order** — the
+same order the rust side's BTreeMap iteration yields, so both sides
+agree without a schema. A ``manifest.json`` records the argument list
+for validation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .common import PRESETS, ModelConfig
+from .model import forward, forward_delta
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def weight_specs(config: ModelConfig) -> list[tuple[str, tuple[int, int]]]:
+    """(name, shape) for every model tensor, sorted by name — the
+    canonical argument order."""
+    h = config.hidden
+    shapes: dict[str, tuple[int, int]] = {
+        "tok_emb": (config.vocab_size, h),
+        "pos_emb": (config.max_seq, h),
+        "final_norm": (1, h),
+        "lm_head": (config.vocab_size, h),
+    }
+    for l in range(config.n_layers):
+        shapes[f"layers.{l}.attn_norm"] = (1, h)
+        shapes[f"layers.{l}.attn.wq"] = (h, h)
+        shapes[f"layers.{l}.attn.wk"] = (h, h)
+        shapes[f"layers.{l}.attn.wv"] = (h, h)
+        shapes[f"layers.{l}.attn.wo"] = (h, h)
+        shapes[f"layers.{l}.mlp_norm"] = (1, h)
+        shapes[f"layers.{l}.mlp.gate"] = (config.ffn_hidden, h)
+        shapes[f"layers.{l}.mlp.up"] = (config.ffn_hidden, h)
+        shapes[f"layers.{l}.mlp.down"] = (h, config.ffn_hidden)
+    return sorted(shapes.items())
+
+
+def delta_specs(config: ModelConfig) -> list[tuple[str, tuple[int, int]]]:
+    """(name, shape) for the delta tensors, sorted by name."""
+    all_specs = dict(weight_specs(config))
+    return sorted((n, all_specs[n]) for n in config.delta_tensor_names())
+
+
+def lower_base_prefill(config: ModelConfig, seq_len: int):
+    specs = weight_specs(config)
+    names = [n for n, _ in specs]
+
+    def fn(tokens, *weights):
+        params = dict(zip(names, weights))
+        return (forward(params, config, tokens),)
+
+    args = [jax.ShapeDtypeStruct((seq_len,), jnp.int32)]
+    args += [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    return jax.jit(fn).lower(*args), names
+
+
+def lower_delta_prefill(config: ModelConfig, seq_len: int):
+    wspecs = weight_specs(config)
+    dspecs = delta_specs(config)
+    wnames = [n for n, _ in wspecs]
+    dnames = [n for n, _ in dspecs]
+
+    def fn(tokens, *tensors):
+        params = dict(zip(wnames, tensors[: len(wnames)]))
+        deltas = dict(zip(dnames, tensors[len(wnames):]))
+        return (forward_delta(params, deltas, config, tokens),)
+
+    args = [jax.ShapeDtypeStruct((seq_len,), jnp.int32)]
+    args += [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in wspecs]
+    args += [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in dspecs]
+    return jax.jit(fn).lower(*args), wnames, dnames
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", type=Path, default=Path("../artifacts"))
+    ap.add_argument("--scales", nargs="+", default=["tiny"])
+    ap.add_argument("--seq-len", type=int, default=48)
+    args = ap.parse_args()
+    args.out.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {"seq_len": args.seq_len, "graphs": {}}
+    for scale in args.scales:
+        config = PRESETS[scale]
+        t = args.seq_len
+
+        lowered, wnames = lower_base_prefill(config, t)
+        base_path = args.out / f"base_prefill_{scale}_t{t}.hlo.txt"
+        base_path.write_text(to_hlo_text(lowered))
+        print(f"wrote {base_path}")
+
+        lowered, wnames2, dnames = lower_delta_prefill(config, t)
+        delta_path = args.out / f"delta_prefill_{scale}_t{t}.hlo.txt"
+        delta_path.write_text(to_hlo_text(lowered))
+        print(f"wrote {delta_path}")
+
+        manifest["graphs"][scale] = {
+            "base_prefill": {
+                "file": base_path.name,
+                "args": ["tokens"] + wnames,
+            },
+            "delta_prefill": {
+                "file": delta_path.name,
+                "args": ["tokens"] + wnames2 + [f"delta:{n}" for n in dnames],
+            },
+            "vocab_size": config.vocab_size,
+            "hidden": config.hidden,
+            "n_layers": config.n_layers,
+        }
+    with open(args.out / "manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Shared constants and file formats between the python compile path and
+the rust coordinator.
+
+* vocab token layout — must mirror ``rust/src/eval/tasks.rs``;
+* ``.dqw`` weight files — must mirror ``rust/src/model/io.rs``;
+* ``.dqt`` dataset files — must mirror ``rust/src/eval/tasks.rs``;
+* model presets — must mirror ``rust/src/model/config.rs``.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+# --------------------------------------------------------------- vocab
+
+PAD, BOS, EOS, EQ = 0, 1, 2, 3
+PLUS, MINUS, TIMES = 4, 5, 6
+OPEN_P, CLOSE_P, OPEN_B, CLOSE_B = 7, 8, 9, 10
+SEP = 11
+NUM0 = 16
+NUM_COUNT = 256
+MATH_MOD = 64
+
+
+def num(v: int) -> int:
+    assert 0 <= v < NUM_COUNT
+    return NUM0 + v
+
+
+# ------------------------------------------------------------- presets
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int
+    hidden: int
+    n_layers: int
+    n_heads: int
+    ffn_hidden: int
+    max_seq: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.n_heads == 0
+        return self.hidden // self.n_heads
+
+    def delta_tensor_names(self) -> list[str]:
+        names = []
+        for l in range(self.n_layers):
+            for t in ("attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                      "mlp.gate", "mlp.up", "mlp.down"):
+                names.append(f"layers.{l}.{t}")
+        return names
+
+
+PRESETS = {
+    "tiny": ModelConfig(512, 64, 2, 4, 128, 64),
+    "small": ModelConfig(512, 128, 3, 8, 256, 64),
+    "base": ModelConfig(512, 192, 4, 8, 512, 64),
+    "large": ModelConfig(2048, 768, 12, 12, 2304, 256),
+}
+
+# ------------------------------------------------------------ .dqw I/O
+
+DQW_MAGIC = b"DDQW"
+DQW_VERSION = 1
+
+
+def save_weights(path: Path, config: ModelConfig, tensors: dict[str, np.ndarray]) -> None:
+    """Write a ``.dqw`` weight file (sorted tensor-name order, like the
+    rust writer's BTreeMap iteration)."""
+    with open(path, "wb") as f:
+        f.write(DQW_MAGIC)
+        f.write(struct.pack("<I", DQW_VERSION))
+        f.write(struct.pack(
+            "<6I", config.vocab_size, config.hidden, config.n_layers,
+            config.n_heads, config.ffn_hidden, config.max_seq))
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            t = np.ascontiguousarray(tensors[name], dtype=np.float32)
+            assert t.ndim == 2, f"{name} must be 2-D, got {t.shape}"
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<II", t.shape[0], t.shape[1]))
+            f.write(t.tobytes(order="C"))
+
+
+def load_weights(path: Path) -> tuple[ModelConfig, dict[str, np.ndarray]]:
+    with open(path, "rb") as f:
+        assert f.read(4) == DQW_MAGIC, "bad magic"
+        (version,) = struct.unpack("<I", f.read(4))
+        assert version == DQW_VERSION
+        vals = struct.unpack("<6I", f.read(24))
+        config = ModelConfig(*vals)
+        (count,) = struct.unpack("<I", f.read(4))
+        tensors = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            rows, cols = struct.unpack("<II", f.read(8))
+            data = np.frombuffer(f.read(rows * cols * 4), dtype="<f4")
+            tensors[name] = data.reshape(rows, cols).copy()
+    return config, tensors
+
+
+# ------------------------------------------------------------ .dqt I/O
+
+DQT_MAGIC = b"DDQT"
+
+
+def load_dataset(path: Path) -> list[tuple[list[int], list[int]]]:
+    """Read a ``.dqt`` dataset written by ``deltadq gen-data``."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == DQT_MAGIC, "bad dataset magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            plen, clen = struct.unpack("<HH", f.read(4))
+            toks = np.frombuffer(f.read((plen + clen) * 2), dtype="<u2")
+            out.append((toks[:plen].tolist(), toks[plen:].tolist()))
+    return out
+
+
+def save_dataset(path: Path, samples: list[tuple[list[int], list[int]]]) -> None:
+    with open(path, "wb") as f:
+        f.write(DQT_MAGIC)
+        f.write(struct.pack("<I", len(samples)))
+        for prompt, completion in samples:
+            f.write(struct.pack("<HH", len(prompt), len(completion)))
+            for t in list(prompt) + list(completion):
+                f.write(struct.pack("<H", t))

@@ -1,0 +1,148 @@
+"""S14: python mirror of the DeltaDQ compression algorithms (numpy).
+
+Used (a) to prepare delta tensors for the AOT delta-prefill graph and
+the Pallas dequant kernel inputs, and (b) by pytest to cross-check the
+algorithmic semantics against the rust implementation's documented
+invariants (exact per-group keep counts, lossless m-decomposition, …).
+The serving path never imports this — compression for deployment runs
+natively in rust (``deltadq compress``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+# ----------------------------------------------------- group-wise dropout
+
+def keep_count(length: int, alpha: float) -> int:
+    """round(len/α) clamped to [0, len] — mirrors ``dropout::keep_count``.
+
+    Note: rust rounds half-away-from-zero; python's ``round`` is
+    banker's. Use floor(x+0.5) to match rust exactly.
+    """
+    return min(int(np.floor(length / alpha + 0.5)), length)
+
+
+def group_dropout(delta: np.ndarray, alpha: float, group_size: int,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Group-wise Dropout (paper §3.3): within each contiguous group of
+    ``group_size`` in each row, keep exactly ``round(len/α)`` elements
+    uniformly at random; rescale survivors ×α."""
+    assert alpha >= 1.0 and group_size > 0
+    out = np.zeros_like(delta)
+    rows, cols = delta.shape
+    for r in range(rows):
+        for start in range(0, cols, group_size):
+            end = min(start + group_size, cols)
+            length = end - start
+            k = keep_count(length, alpha)
+            if k == 0:
+                continue
+            idx = rng.choice(length, size=k, replace=False) + start
+            out[r, idx] = delta[r, idx] * alpha
+    return out
+
+
+def row_dropout(delta: np.ndarray, alpha: float,
+                rng: np.random.Generator) -> np.ndarray:
+    """Row-wise Dropout = group size h_in."""
+    return group_dropout(delta, alpha, delta.shape[1], rng)
+
+
+def dare_dropout(delta: np.ndarray, alpha: float,
+                 rng: np.random.Generator) -> np.ndarray:
+    """DARE: global i.i.d. Bernoulli keep at p=1/α, rescale ×α."""
+    mask = rng.random(delta.shape) < (1.0 / alpha)
+    return np.where(mask, delta * alpha, 0.0).astype(delta.dtype)
+
+
+# --------------------------------------------------- separate quantization
+
+@dataclass
+class QuantParams:
+    scale: float
+    zero_point: int
+    bits: int
+
+
+def fit_quant(values: np.ndarray, bits: int) -> QuantParams:
+    """Per-tensor asymmetric uniform quantizer (paper Eq. 7–8), with the
+    same degenerate-tensor handling as the rust side."""
+    if values.size == 0:
+        return QuantParams(1.0, 0, bits)
+    lo, hi = float(values.min()), float(values.max())
+    levels = (1 << bits) - 1
+    if hi > lo:
+        scale = (hi - lo) / levels
+    elif lo != 0.0:
+        scale = abs(lo)
+    else:
+        scale = 1.0
+    zero = int(np.floor(-lo / scale + 0.5))
+    return QuantParams(scale, zero, bits)
+
+
+def quantize(values: np.ndarray, p: QuantParams) -> np.ndarray:
+    codes = np.floor(values / p.scale + 0.5).astype(np.int64) + p.zero_point
+    return np.clip(codes, 0, (1 << p.bits) - 1).astype(np.int32)
+
+
+def dequantize(codes: np.ndarray, p: QuantParams) -> np.ndarray:
+    return (p.scale * (codes.astype(np.int64) - p.zero_point)).astype(np.float32)
+
+
+@dataclass
+class Decomposed:
+    """m-part decomposition of a quantized sparse delta in the dense
+    (codes, mask) layout the Pallas dequant kernel consumes."""
+    codes: np.ndarray   # (m, rows, cols) int32, shifted per part
+    mask: np.ndarray    # (m, rows, cols) f32
+    params: QuantParams
+    m: int
+
+    @property
+    def step(self) -> int:
+        return (1 << self.params.bits) // self.m
+
+    def part_bits(self) -> int:
+        return self.params.bits - int(np.log2(self.m))
+
+
+def separate_quantize(sparse_delta: np.ndarray, bits: int, m: int) -> Decomposed:
+    """Quantize the non-zeros of ``sparse_delta`` to ``bits`` and
+    decompose by value into ``m`` parts (paper Eq. 6–11)."""
+    assert m & (m - 1) == 0 and m <= (1 << bits)
+    nz_mask = sparse_delta != 0.0
+    params = fit_quant(sparse_delta[nz_mask], bits)
+    codes_full = quantize(sparse_delta, params)
+    step = (1 << bits) // m
+    rows, cols = sparse_delta.shape
+    codes = np.zeros((m, rows, cols), np.int32)
+    mask = np.zeros((m, rows, cols), np.float32)
+    part_of = np.minimum(codes_full // step, m - 1)
+    for j in range(m):
+        sel = nz_mask & (part_of == j)
+        codes[j][sel] = codes_full[sel] - step * j
+        mask[j][sel] = 1.0
+    return Decomposed(codes, mask, params, m)
+
+
+def reconstruct(d: Decomposed) -> np.ndarray:
+    """Dequantize the decomposition back to the dense delta (Eq. 12)."""
+    part_ids = np.arange(d.m, dtype=np.int64).reshape(d.m, 1, 1)
+    vals = d.params.scale * (d.codes + d.step * part_ids - d.params.zero_point)
+    return np.sum(d.mask * vals, axis=0).astype(np.float32)
+
+
+def nominal_ratio(alpha: float, bits: int | None = None,
+                  m: int = 1) -> float:
+    """α·16/(k − log₂ m) — the paper's headline accounting."""
+    if bits is None:
+        return alpha
+    final_bits = bits - int(np.log2(m))
+    if final_bits == 0:
+        return float("inf")
+    return alpha * 16.0 / final_bits

@@ -1,0 +1,49 @@
+"""Continuation fine-tuning for slow-grokking tasks.
+
+The math task (modular add/sub) sits in a grokking regime: loss
+plateaus near 2.1 for ~1k steps before collapsing. The default
+``train.py`` budget under-trains it, so the Makefile runs this script
+afterwards to continue the math SFT from the saved base for more steps
+at a higher LR. Kept separate so the cheap tasks don't pay for it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from .common import PRESETS, load_dataset, load_weights, save_weights
+from .train import train_run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--data-dir", type=Path, default=Path("../artifacts/data"))
+    ap.add_argument("--out-dir", type=Path, default=Path("../artifacts/models"))
+    ap.add_argument("--task", default="math")
+    ap.add_argument("--scales", nargs="+", default=["tiny", "small", "base"])
+    ap.add_argument("--steps", nargs="+", type=int, default=[3500, 3000, 2200])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+
+    samples = load_dataset(args.data_dir / f"{args.task}_train.dqt")
+    for scale, steps in zip(args.scales, args.steps):
+        cfg, params = load_weights(args.out_dir / scale / "base.dqw")
+        assert cfg == PRESETS[scale]
+        print(f"[{scale}] continuing {args.task} SFT for {steps} steps")
+        ft, curve = train_run(cfg, params, samples, steps=steps, lr=args.lr,
+                              batch=args.batch, seq_len=40, sft_mask=True,
+                              seed=777, log_every=250,
+                              tag=f"{scale}/{args.task}+")
+        save_weights(args.out_dir / scale / f"{args.task}.dqw", cfg, ft)
+        log_path = args.out_dir / scale / "training_log.json"
+        if log_path.exists():
+            log = json.loads(log_path.read_text())
+            log["runs"][f"{args.task}_extra"] = curve
+            log_path.write_text(json.dumps(log, indent=1))
+
+
+if __name__ == "__main__":
+    main()

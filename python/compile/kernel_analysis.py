@@ -1,0 +1,76 @@
+"""L1 perf analysis: VMEM footprint + MXU-utilization *estimates* for
+the Pallas delta_matmul block shapes (interpret=True gives CPU-numpy
+timings only — not a TPU proxy; we optimize kernel *structure* and
+record the analytical roofline here, per the DESIGN.md §Perf method).
+
+Run: ``python -m compile.kernel_analysis``
+"""
+
+from __future__ import annotations
+
+from .kernels import mxu_utilization_estimate, pick_block, vmem_bytes
+
+# TPU-v4-ish envelope used for the estimate columns.
+VMEM_BUDGET = 16 * 1024 * 1024  # 16 MiB/core
+MXU = 128
+
+
+def analyze(t: int, h_in: int, h_out: int, candidates=(32, 64, 128, 256, 512)):
+    print(f"\n== delta_matmul blocks for X({t}x{h_in}) · W({h_out}x{h_in})ᵀ ==")
+    print(f"{'bt':>5} {'bo':>5} {'VMEM KiB':>10} {'fits':>5} {'MXU util':>9} "
+          f"{'grid':>10} {'HBM reads/elem':>15}")
+    best = None
+    seen = set()
+    for bt_t in candidates:
+        for bo_t in candidates:
+            bt = pick_block(t, bt_t)
+            bo = pick_block(h_out, bo_t)
+            if (bt, bo) in seen:
+                continue
+            seen.add((bt, bo))
+            vmem = vmem_bytes(bt, bo, h_in)
+            fits = vmem <= VMEM_BUDGET
+            util = mxu_utilization_estimate(bt, bo, h_in, MXU)
+            grid = (t // bt) * (h_out // bo)
+            # each W tile pair is read once per X-row block: t/bt times;
+            # each X block once per output-column block: h_out/bo times
+            reads = (t / bt) * 2 * h_out * h_in + (h_out / bo) * t * h_in
+            reads_per_elem = reads / (t * h_in + 2 * h_out * h_in)
+            row = (bt, bo, vmem / 1024, fits, util, grid, reads_per_elem)
+            if fits and (best is None or (util, -reads_per_elem) >
+                         (best[4], -best[6])):
+                best = row
+            print(f"{bt:>5} {bo:>5} {vmem / 1024:>10.0f} {str(fits):>5} "
+                  f"{util:>9.3f} {grid:>10} {reads_per_elem:>15.2f}")
+    if best:
+        print(f"--> chosen: bt={best[0]} bo={best[1]} "
+              f"(util {best[4]:.3f}, {best[2]:.0f} KiB VMEM)")
+    return best
+
+
+def main() -> None:
+    print("L1 Pallas delta_matmul — VMEM/MXU analysis (TPU envelope: "
+          f"{VMEM_BUDGET // (1024 * 1024)} MiB VMEM, {MXU}x{MXU} MXU)")
+    # serving shapes: prefill t=48 on the tiny preset, and an LLM-ish
+    # shape showing where the default (128,128) blocks come from
+    analyze(48, 64, 64)          # tiny preset attention projection
+    analyze(48, 128, 512)        # tiny preset mlp.gate at alpha-scale
+    analyze(512, 4096, 4096)     # Llama-7B-like projection (paper scale)
+    analyze(512, 4096, 11008)    # Llama-7B-like mlp
+    print(
+        "\nNotes:\n"
+        " * the fused tile (W_b + alpha*dW in VMEM) avoids a second HBM\n"
+        "   pass over the activations vs running base and delta matmuls\n"
+        "   separately: 2 weight streams + 1 activation stream instead\n"
+        "   of 2 activation streams.\n"
+        " * at the paper's scales the (128,128) default reaches full MXU\n"
+        "   occupancy with ~8.4 MiB VMEM — inside the 16 MiB budget, with\n"
+        "   room for double-buffering the next W tile pair.\n"
+        " * tiny-preset shapes underfill the MXU (h=64) — expected: the\n"
+        "   testbed models are deliberately small; the block logic is\n"
+        "   what carries to real scales."
+    )
+
+
+if __name__ == "__main__":
+    main()

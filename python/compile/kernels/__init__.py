@@ -1,0 +1,12 @@
+"""L1 Pallas kernels: fused base+delta matmul (separate computation) and
+m-part separate-quantization dequantization, with pure-jnp oracles in
+``ref.py``."""
+
+from .delta_matmul import delta_matmul, mxu_utilization_estimate, pick_block, vmem_bytes
+from .dequant import dequant
+from .ref import delta_matmul_ref, dequant_ref
+
+__all__ = [
+    "delta_matmul", "dequant", "delta_matmul_ref", "dequant_ref",
+    "pick_block", "vmem_bytes", "mxu_utilization_estimate",
+]

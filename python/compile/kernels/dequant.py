@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: Separate-Quantization dequantization (Eq. 12).
+
+Reconstructs the dense delta from the m decomposed parts in one pass:
+``Δ = Σ_j mask_j · s · (Q_j + step·j − z)``. The part dimension is kept
+fully resident per tile (m ≤ 16 small planes) and statically unrolled,
+so the kernel is a single fused multiply-accumulate over VMEM tiles —
+the TPU analogue of the paper's "computations using sparse libraries"
+deployment note.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .delta_matmul import pick_block
+
+
+def _kernel(codes_ref, mask_ref, o_ref, *, scale: float, zero_point: int,
+            step: int, m: int):
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for j in range(m):  # static unroll over parts
+        codes_j = codes_ref[j]
+        mask_j = mask_ref[j]
+        vals = scale * (codes_j + step * j - zero_point).astype(jnp.float32)
+        acc = acc + mask_j * vals
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "zero_point", "step",
+                                             "br", "bc"))
+def dequant(codes: jnp.ndarray, mask: jnp.ndarray, scale: float,
+            zero_point: int, step: int, br: int = 128,
+            bc: int = 128) -> jnp.ndarray:
+    """Dequantize m-part decomposed codes to the dense delta.
+
+    codes: (m, rows, cols) int32 shifted codes; mask: same-shape f32.
+    """
+    m, rows, cols = codes.shape
+    assert mask.shape == codes.shape
+    br = pick_block(rows, br)
+    bc = pick_block(cols, bc)
+    grid = (rows // br, cols // bc)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, zero_point=zero_point,
+                          step=step, m=m),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, br, bc), lambda i, j: (0, i, j)),
+            pl.BlockSpec((m, br, bc), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(codes, mask)

@@ -1,0 +1,34 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness
+ground truth — pytest asserts kernel == ref under interpret mode)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def delta_matmul_ref(x: jnp.ndarray, w_base: jnp.ndarray, dw: jnp.ndarray,
+                     alpha: float = 1.0) -> jnp.ndarray:
+    """Separate computation (paper Fig. 3), dense reference:
+    ``Y = X.W_b^T + alpha.X.dW^T``.
+
+    x:      (t, h_in)
+    w_base: (h_out, h_in)
+    dw:     (h_out, h_in)  -- the (reconstructed) delta
+    """
+    return x @ w_base.T + alpha * (x @ dw.T)
+
+
+def dequant_ref(codes: jnp.ndarray, mask: jnp.ndarray, scale: float,
+                zero_point: int, step: int) -> jnp.ndarray:
+    """Separate-Quantization dequantization (paper Eq. 12), summed over
+    the m decomposed parts:
+
+    ``delta = sum_j mask_j . s . (Q_j + step.j - z)``
+
+    codes: (m, rows, cols) int32 -- per-part *shifted* codes (0 where absent)
+    mask:  (m, rows, cols) f32   -- 1.0 where part j stores the element
+    """
+    m = codes.shape[0]
+    part_ids = jnp.arange(m, dtype=jnp.int32).reshape(m, 1, 1)
+    vals = scale * (codes + step * part_ids - zero_point).astype(jnp.float32)
+    return jnp.sum(mask * vals, axis=0)

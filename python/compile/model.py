@@ -1,0 +1,128 @@
+"""L2: the JAX transformer — forward pass (and training loss) matching
+the rust reference implementation in ``rust/src/model/forward.rs``
+op-for-op (RMSNorm eps 1e-6, SwiGLU MLP, learned positional embeddings,
+causal multi-head attention, untied LM head).
+
+Two serving graphs are exported by ``aot.py``:
+
+* ``forward``        — dense weights (base or merged fine-tune);
+* ``forward_delta``  — the paper's separate computation: every linear
+  layer goes through the L1 Pallas ``delta_matmul`` kernel with the
+  tenant's (reconstructed-dense) delta as a runtime argument.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig
+from .kernels import delta_matmul
+
+
+# ----------------------------------------------------------------- init
+
+def init_params(config: ModelConfig, seed: int) -> dict[str, np.ndarray]:
+    """Random init — N(0, 0.02) projections, ones for norm gains
+    (mirrors ``ModelWeights::init``)."""
+    rng = np.random.default_rng(seed)
+    std = 0.02
+
+    def randn(rows: int, cols: int) -> np.ndarray:
+        return (rng.standard_normal((rows, cols)) * std).astype(np.float32)
+
+    h = config.hidden
+    p: dict[str, np.ndarray] = {
+        "tok_emb": randn(config.vocab_size, h),
+        "pos_emb": randn(config.max_seq, h),
+        "final_norm": np.ones((1, h), np.float32),
+        "lm_head": randn(config.vocab_size, h),
+    }
+    for l in range(config.n_layers):
+        p[f"layers.{l}.attn_norm"] = np.ones((1, h), np.float32)
+        p[f"layers.{l}.attn.wq"] = randn(h, h)
+        p[f"layers.{l}.attn.wk"] = randn(h, h)
+        p[f"layers.{l}.attn.wv"] = randn(h, h)
+        p[f"layers.{l}.attn.wo"] = randn(h, h)
+        p[f"layers.{l}.mlp_norm"] = np.ones((1, h), np.float32)
+        p[f"layers.{l}.mlp.gate"] = randn(config.ffn_hidden, h)
+        p[f"layers.{l}.mlp.up"] = randn(config.ffn_hidden, h)
+        p[f"layers.{l}.mlp.down"] = randn(h, config.ffn_hidden)
+    return p
+
+
+# -------------------------------------------------------------- forward
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain.reshape(1, -1)
+
+
+def _attention(config: ModelConfig, l: int, x: jnp.ndarray, linear) -> jnp.ndarray:
+    t, h = x.shape
+    nh, d = config.n_heads, config.head_dim
+    q = linear(f"layers.{l}.attn.wq", x).reshape(t, nh, d)
+    k = linear(f"layers.{l}.attn.wk", x).reshape(t, nh, d)
+    v = linear(f"layers.{l}.attn.wv", x).reshape(t, nh, d)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(jnp.float32(d))
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal[None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,khd->qhd", probs, v).reshape(t, h)
+    return linear(f"layers.{l}.attn.wo", ctx)
+
+
+def _mlp(config: ModelConfig, l: int, x: jnp.ndarray, linear) -> jnp.ndarray:
+    gate = jax.nn.silu(linear(f"layers.{l}.mlp.gate", x))
+    up = linear(f"layers.{l}.mlp.up", x)
+    return linear(f"layers.{l}.mlp.down", gate * up)
+
+
+def _forward_with_linear(params, config: ModelConfig, tokens: jnp.ndarray,
+                         linear) -> jnp.ndarray:
+    """Shared block structure; ``linear(name, x)`` abstracts the weight
+    source exactly like the rust ``WeightSource`` trait."""
+    t = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t]
+    for l in range(config.n_layers):
+        normed = rmsnorm(x, params[f"layers.{l}.attn_norm"])
+        x = x + _attention(config, l, normed, linear)
+        normed = rmsnorm(x, params[f"layers.{l}.mlp_norm"])
+        x = x + _mlp(config, l, normed, linear)
+    x = rmsnorm(x, params["final_norm"])
+    return linear("lm_head", x)
+
+
+def forward(params, config: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Dense forward: token ids (t,) int32 → logits (t, vocab)."""
+    def linear(name: str, x: jnp.ndarray) -> jnp.ndarray:
+        return x @ params[name].T
+    return _forward_with_linear(params, config, tokens, linear)
+
+
+def forward_delta(params, deltas, config: ModelConfig,
+                  tokens: jnp.ndarray, alpha: float = 1.0) -> jnp.ndarray:
+    """Separate-computation forward: every linear layer with a delta
+    entry runs through the fused Pallas kernel ``X·W_bᵀ + α·X·ΔWᵀ``."""
+    def linear(name: str, x: jnp.ndarray) -> jnp.ndarray:
+        if name in deltas:
+            return delta_matmul(x, params[name], deltas[name], alpha=alpha)
+        return x @ params[name].T
+    return _forward_with_linear(params, config, tokens, linear)
+
+
+# ----------------------------------------------------------------- loss
+
+def batched_forward(params, config: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """(b, t) int32 → (b, t, vocab)."""
+    return jax.vmap(lambda seq: forward(params, config, seq))(tokens)
+
+
+def lm_loss(params, config: ModelConfig, tokens: jnp.ndarray,
+            targets: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked next-token cross-entropy. tokens/targets/mask: (b, t)."""
+    logits = batched_forward(params, config, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,97 @@
+"""File-format cross-checks: the python reader/writer must round-trip
+and agree with the rust formats (`.dqw`, `.dqt`)."""
+
+import struct
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+
+from compile.common import (DQW_MAGIC, PRESETS, load_dataset, load_weights,
+                            num, save_dataset, save_weights)
+
+
+def test_dqw_roundtrip(tmp_path):
+    cfg = PRESETS["tiny"]
+    rng = np.random.default_rng(0)
+    tensors = {
+        "tok_emb": rng.normal(size=(cfg.vocab_size, cfg.hidden)).astype(np.float32),
+        "zzz": np.ones((1, 3), np.float32),
+        "aaa": np.zeros((2, 2), np.float32),
+    }
+    p = tmp_path / "w.dqw"
+    save_weights(p, cfg, tensors)
+    cfg2, loaded = load_weights(p)
+    assert cfg2 == cfg
+    assert set(loaded) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(loaded[k], tensors[k])
+
+
+def test_dqw_header_layout(tmp_path):
+    """Byte-level check against the rust io.rs layout."""
+    cfg = PRESETS["tiny"]
+    p = tmp_path / "w.dqw"
+    save_weights(p, cfg, {"t": np.asarray([[1.5]], np.float32)})
+    raw = p.read_bytes()
+    assert raw[:4] == DQW_MAGIC
+    version, = struct.unpack_from("<I", raw, 4)
+    assert version == 1
+    vals = struct.unpack_from("<6I", raw, 8)
+    assert vals == (cfg.vocab_size, cfg.hidden, cfg.n_layers, cfg.n_heads,
+                    cfg.ffn_hidden, cfg.max_seq)
+    count, = struct.unpack_from("<I", raw, 32)
+    assert count == 1
+    nlen, = struct.unpack_from("<H", raw, 36)
+    assert raw[38:38 + nlen] == b"t"
+    rows, cols = struct.unpack_from("<II", raw, 38 + nlen)
+    assert (rows, cols) == (1, 1)
+    val, = struct.unpack_from("<f", raw, 46 + nlen)
+    assert val == 1.5
+
+
+def test_dqt_roundtrip(tmp_path):
+    samples = [([1, 20, 4, 21, 3], [22]), ([1, 7, 7], [8, 8, 2])]
+    p = tmp_path / "d.dqt"
+    save_dataset(p, samples)
+    assert load_dataset(p) == samples
+
+
+def test_dqt_reads_rust_generated_file():
+    """Integration: the artifacts pipeline writes .dqt via rust."""
+    p = Path(__file__).resolve().parents[2] / "artifacts/data/math_eval.dqt"
+    if not p.exists():
+        pytest.skip("artifacts not built")
+    samples = load_dataset(p)
+    assert len(samples) > 0
+    from compile.common import BOS, EQ, MATH_MOD, NUM0, PLUS, MINUS, TIMES
+    for prompt, completion in samples[:50]:
+        assert prompt[0] == BOS and prompt[4] == EQ
+        a, b = prompt[1] - NUM0, prompt[3] - NUM0
+        c = completion[0] - NUM0
+        op = prompt[2]
+        want = {PLUS: (a + b) % MATH_MOD,
+                MINUS: (a - b) % MATH_MOD,
+                TIMES: (a * b) % MATH_MOD}[op]
+        assert c == want, "rust and python disagree on task semantics"
+
+
+def test_num_token_mapping():
+    assert num(0) == 16
+    assert num(255) == 271
+    with pytest.raises(AssertionError):
+        num(256)
+
+
+def test_presets_match_rust():
+    t = PRESETS["tiny"]
+    assert (t.vocab_size, t.hidden, t.n_layers, t.n_heads,
+            t.ffn_hidden, t.max_seq) == (512, 64, 2, 4, 128, 64)
+    b = PRESETS["base"]
+    assert (b.hidden, b.n_layers) == (192, 4)
+    assert PRESETS["large"].hidden == 768
+    for cfg in PRESETS.values():
+        assert cfg.hidden % cfg.n_heads == 0

@@ -1,0 +1,159 @@
+"""Python compression mirror (S14): the same invariants the rust side
+property-tests, swept with hypothesis."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.compress import (dare_dropout, fit_quant, dequantize,
+                              group_dropout, keep_count, nominal_ratio,
+                              quantize, reconstruct, row_dropout,
+                              separate_quantize)
+
+
+def sparse_delta(rng, rows=16, cols=32, density=0.4, std=0.02):
+    d = rng.normal(size=(rows, cols)).astype(np.float32) * std
+    d[rng.random((rows, cols)) > density] = 0.0
+    return d
+
+
+# --------------------------------------------------------------- dropout
+
+def test_group_dropout_exact_counts():
+    rng = np.random.default_rng(1)
+    d = rng.normal(size=(8, 64)).astype(np.float32)
+    out = group_dropout(d, alpha=4.0, group_size=16, rng=rng)
+    for r in range(8):
+        for g in range(0, 64, 16):
+            nnz = np.count_nonzero(out[r, g:g + 16])
+            assert nnz == 4  # 16/4
+
+
+def test_dropout_rescales_by_alpha():
+    rng = np.random.default_rng(2)
+    d = np.ones((4, 32), np.float32)
+    out = group_dropout(d, alpha=2.0, group_size=8, rng=rng)
+    vals = np.unique(out)
+    assert set(vals.tolist()) <= {0.0, 2.0}
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.sampled_from([1.0, 2.0, 4.0, 8.0]),
+       group=st.sampled_from([4, 8, 16, 32]))
+def test_group_dropout_density(alpha, group):
+    rng = np.random.default_rng(int(alpha * 10 + group))
+    d = rng.normal(size=(16, 32)).astype(np.float32)
+    out = group_dropout(d, alpha=alpha, group_size=group, rng=rng)
+    got = np.count_nonzero(out) / out.size
+    want = keep_count(min(group, 32), alpha) / min(group, 32)
+    assert abs(got - want) < 0.05
+
+
+def test_row_dropout_is_group_at_hin():
+    rng1 = np.random.default_rng(3)
+    rng2 = np.random.default_rng(3)
+    d = rng1.normal(size=(4, 16)).astype(np.float32)
+    rng1 = np.random.default_rng(4)
+    rng2 = np.random.default_rng(4)
+    a = row_dropout(d, 4.0, rng1)
+    b = group_dropout(d, 4.0, 16, rng2)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_dare_density_near_nominal():
+    rng = np.random.default_rng(5)
+    d = rng.normal(size=(64, 64)).astype(np.float32)
+    out = dare_dropout(d, 8.0, rng)
+    density = np.count_nonzero(out) / out.size
+    assert abs(density - 0.125) < 0.02
+
+
+def test_keep_count_matches_rust_rounding():
+    # rust rounds half away from zero: round(16/3.0)=5, round(2/8)=0,
+    # round(8/3.2)=round(2.5)=3 (not banker's 2)
+    assert keep_count(64, 4.0) == 16
+    assert keep_count(2, 8.0) == 0
+    assert keep_count(16, 3.0) == 5
+    assert keep_count(8, 3.2) == 3
+
+
+# ---------------------------------------------------- separate quantization
+
+def test_quant_roundtrip_error_bounded():
+    rng = np.random.default_rng(6)
+    vals = rng.normal(size=1000).astype(np.float32) * 0.01
+    for bits in (2, 4, 8):
+        p = fit_quant(vals, bits)
+        rt = dequantize(quantize(vals, p), p)
+        assert np.abs(rt - vals).max() <= 0.5 * p.scale * 1.001
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), m=st.sampled_from([1, 2, 4, 8]))
+def test_decomposition_lossless_vs_m1(bits, m):
+    """DESIGN.md §7 invariant: reassembling m parts == m=1 dequant."""
+    if m > (1 << bits):
+        return
+    rng = np.random.default_rng(bits * 10 + m)
+    d = sparse_delta(rng)
+    base = reconstruct(separate_quantize(d, bits, 1))
+    dec = reconstruct(separate_quantize(d, bits, m))
+    np.testing.assert_array_equal(base, dec)
+
+
+def test_parts_partition_nnz():
+    rng = np.random.default_rng(8)
+    d = sparse_delta(rng)
+    dec = separate_quantize(d, 8, 4)
+    total_mask = dec.mask.sum(axis=0)
+    # every nnz owned by exactly one part; zeros by none
+    assert np.all(total_mask[d != 0] == 1.0)
+    assert np.all(total_mask[d == 0] == 0.0)
+
+
+def test_part_codes_fit_reduced_width():
+    rng = np.random.default_rng(9)
+    d = sparse_delta(rng)
+    dec = separate_quantize(d, 8, 8)
+    assert dec.part_bits() == 5
+    assert dec.codes.max() < (1 << 5)
+
+
+def test_extreme_m_equals_levels():
+    rng = np.random.default_rng(10)
+    d = sparse_delta(rng)
+    dec = separate_quantize(d, 2, 4)
+    assert dec.part_bits() == 0
+    assert dec.codes.max() == 0  # no information left in codes
+    base = reconstruct(separate_quantize(d, 2, 1))
+    np.testing.assert_array_equal(reconstruct(dec), base)
+
+
+def test_nominal_ratio_formula():
+    assert nominal_ratio(8.0) == 8.0
+    assert nominal_ratio(8.0, 8, 1) == 16.0
+    assert nominal_ratio(8.0, 4, 8) == 128.0
+    assert nominal_ratio(32.0, 4, 8) == 512.0
+    assert nominal_ratio(8.0, 4, 16) == float("inf")
+
+
+# ---------------------------------------------------- kernel integration
+
+def test_decomposition_feeds_dequant_kernel():
+    """python compress output is directly consumable by the L1 kernel."""
+    import jax.numpy as jnp
+    from compile.kernels import dequant
+    rng = np.random.default_rng(11)
+    d = sparse_delta(rng, rows=16, cols=16)
+    dec = separate_quantize(d, 8, 4)
+    out = dequant(jnp.asarray(dec.codes), jnp.asarray(dec.mask),
+                  dec.params.scale, dec.params.zero_point, dec.step)
+    np.testing.assert_allclose(np.asarray(out), reconstruct(dec),
+                               rtol=1e-5, atol=1e-6)
+    # and the reconstruction is close to the original sparse delta
+    err = np.abs(reconstruct(dec) - d).max()
+    assert err <= 0.5 * dec.params.scale * 1.001

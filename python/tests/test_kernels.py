@@ -1,0 +1,138 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle — the
+core correctness signal, swept over shapes/dtypes with hypothesis."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (delta_matmul, delta_matmul_ref, dequant,
+                             dequant_ref, mxu_utilization_estimate,
+                             pick_block, vmem_bytes)
+
+RNG = np.random.default_rng(7)
+
+
+def rand(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale)
+
+
+# ----------------------------------------------------------- delta_matmul
+
+def test_delta_matmul_matches_ref_basic():
+    x, wb, dw = rand((32, 64)), rand((48, 64)), rand((48, 64), 0.01)
+    out = delta_matmul(x, wb, dw, alpha=8.0)
+    ref = delta_matmul_ref(x, wb, dw, alpha=8.0)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_delta_matmul_zero_delta_is_base_matmul():
+    x, wb = rand((16, 32)), rand((8, 32))
+    out = delta_matmul(x, wb, jnp.zeros_like(wb))
+    np.testing.assert_allclose(out, x @ wb.T, rtol=1e-5, atol=1e-5)
+
+
+def test_delta_matmul_alpha_scales_delta_only():
+    x, wb, dw = rand((8, 16)), rand((8, 16)), rand((8, 16), 0.1)
+    o1 = delta_matmul(x, wb, dw, alpha=1.0)
+    o2 = delta_matmul(x, wb, dw, alpha=2.0)
+    # o2 - o1 == x @ dw.T
+    np.testing.assert_allclose(o2 - o1, x @ dw.T, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 40),
+    h_in=st.integers(1, 48),
+    h_out=st.integers(1, 48),
+    alpha=st.sampled_from([1.0, 2.0, 8.0, 64.0]),
+)
+def test_delta_matmul_shape_sweep(t, h_in, h_out, alpha):
+    rng = np.random.default_rng(t * 1000 + h_in * 10 + h_out)
+    x = jnp.asarray(rng.normal(size=(t, h_in)).astype(np.float32))
+    wb = jnp.asarray(rng.normal(size=(h_out, h_in)).astype(np.float32))
+    dw = jnp.asarray(rng.normal(size=(h_out, h_in)).astype(np.float32) * 0.02)
+    out = delta_matmul(x, wb, dw, alpha=alpha)
+    ref = delta_matmul_ref(x, wb, dw, alpha=alpha)
+    assert out.shape == (t, h_out)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bt=st.sampled_from([1, 8, 16, 128]), bo=st.sampled_from([1, 8, 16, 128]))
+def test_delta_matmul_block_sizes_do_not_change_result(bt, bo):
+    x, wb, dw = rand((24, 32)), rand((40, 32)), rand((40, 32), 0.01)
+    out = delta_matmul(x, wb, dw, alpha=4.0, bt=bt, bo=bo)
+    ref = delta_matmul_ref(x, wb, dw, alpha=4.0)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- dequant
+
+def make_decomposition(rng, m, rows, cols, bits):
+    step = (1 << bits) // m
+    codes = rng.integers(0, max(step, 1), size=(m, rows, cols)).astype(np.int32)
+    # partition: each element belongs to at most one part
+    owner = rng.integers(0, m + 1, size=(rows, cols))  # m = "no part" (zero)
+    mask = np.zeros((m, rows, cols), np.float32)
+    for j in range(m):
+        mask[j][owner == j] = 1.0
+    codes = codes * mask.astype(np.int32)
+    return jnp.asarray(codes), jnp.asarray(mask)
+
+
+def test_dequant_matches_ref():
+    rng = np.random.default_rng(3)
+    codes, mask = make_decomposition(rng, 4, 32, 48, 8)
+    out = dequant(codes, mask, 0.01, 128, 64)
+    ref = dequant_ref(codes, mask, 0.01, 128, 64)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 4, 8]),
+    rows=st.integers(1, 24),
+    cols=st.integers(1, 24),
+    bits=st.sampled_from([4, 8]),
+)
+def test_dequant_shape_sweep(m, rows, cols, bits):
+    if m > (1 << bits):
+        return
+    rng = np.random.default_rng(m * 100 + rows * 10 + cols)
+    codes, mask = make_decomposition(rng, m, rows, cols, bits)
+    scale, zero = 0.005, (1 << bits) // 2
+    step = (1 << bits) // m
+    out = dequant(codes, mask, scale, zero, step)
+    ref = dequant_ref(codes, mask, scale, zero, step)
+    assert out.shape == (rows, cols)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_dequant_empty_mask_gives_zero():
+    codes = jnp.zeros((2, 8, 8), jnp.int32)
+    mask = jnp.zeros((2, 8, 8), jnp.float32)
+    out = dequant(codes, mask, 0.1, 8, 8)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+# ------------------------------------------------------------- estimates
+
+def test_pick_block_divides():
+    for dim in [1, 7, 48, 128, 300]:
+        for target in [1, 16, 128]:
+            b = pick_block(dim, target)
+            assert dim % b == 0 and 1 <= b <= min(dim, target)
+
+
+def test_vmem_and_mxu_estimates():
+    # 128x128 tiles over h_in=512 f32: x 256KiB + 3*256KiB w + 64KiB out
+    assert vmem_bytes(128, 128, 512) == 4 * (128 * 512 + 3 * 128 * 512 + 128 * 128)
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(64, 128, 128) == 0.5
+    assert mxu_utilization_estimate(1, 1, 1) == pytest.approx((1 / 128) ** 3)

@@ -1,0 +1,93 @@
+"""L2 model checks: shapes, causality, separate-computation equivalence
+(the JAX mirror of the rust forward tests), and loss sanity."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.common import PRESETS
+from compile.model import (batched_forward, forward, forward_delta,
+                           init_params, lm_loss)
+
+CFG = PRESETS["tiny"]
+
+
+def params():
+    return {k: jnp.asarray(v) for k, v in init_params(CFG, 0).items()}
+
+
+def test_forward_shape_and_finite():
+    p = params()
+    logits = forward(p, CFG, jnp.asarray([1, 2, 3, 4], jnp.int32))
+    assert logits.shape == (4, CFG.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality_prefix_invariance():
+    p = params()
+    full = forward(p, CFG, jnp.asarray([5, 6, 7, 8], jnp.int32))
+    prefix = forward(p, CFG, jnp.asarray([5, 6], jnp.int32))
+    np.testing.assert_allclose(full[:2], prefix, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_delta_zero_deltas_identity():
+    p = params()
+    deltas = {n: jnp.zeros_like(p[n]) for n in CFG.delta_tensor_names()}
+    toks = jnp.asarray([1, 2, 3], jnp.int32)
+    a = forward(p, CFG, toks)
+    b = forward_delta(p, deltas, CFG, toks)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_delta_matches_merged_weights():
+    """Separate computation == merging the delta into the weights."""
+    p = params()
+    rng = np.random.default_rng(1)
+    deltas = {
+        n: jnp.asarray(rng.normal(size=p[n].shape).astype(np.float32) * 0.003)
+        for n in CFG.delta_tensor_names()
+    }
+    merged = dict(p)
+    for n, d in deltas.items():
+        merged[n] = p[n] + d
+    toks = jnp.asarray([7, 8, 9, 10, 11], jnp.int32)
+    a = forward(merged, CFG, toks)
+    b = forward_delta(p, deltas, CFG, toks)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_batched_forward_matches_single():
+    p = params()
+    batch = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    out = batched_forward(p, CFG, batch)
+    single = forward(p, CFG, batch[1])
+    np.testing.assert_allclose(out[1], single, rtol=1e-5, atol=1e-5)
+
+
+def test_lm_loss_uniform_at_init_and_masks():
+    p = params()
+    toks = jnp.asarray([[1, 2, 3, 0]], jnp.int32)
+    tgts = jnp.asarray([[2, 3, 2, 0]], jnp.int32)
+    mask = jnp.asarray([[1.0, 1.0, 1.0, 0.0]])
+    loss = float(lm_loss(p, CFG, toks, tgts, mask))
+    # near ln(vocab) for an untrained model
+    assert abs(loss - np.log(CFG.vocab_size)) < 1.0
+    # fully-masked loss is zero-safe
+    loss0 = float(lm_loss(p, CFG, toks, tgts, jnp.zeros_like(mask)))
+    assert loss0 == 0.0
+
+
+def test_init_matches_rust_tensor_set():
+    p = init_params(CFG, 0)
+    expected = {"tok_emb", "pos_emb", "final_norm", "lm_head"}
+    for l in range(CFG.n_layers):
+        for t in ("attn_norm", "attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                  "mlp_norm", "mlp.gate", "mlp.up", "mlp.down"):
+            expected.add(f"layers.{l}.{t}")
+    assert set(p) == expected
+    assert p["lm_head"].shape == (CFG.vocab_size, CFG.hidden)
+    assert p[f"layers.0.mlp.gate"].shape == (CFG.ffn_hidden, CFG.hidden)

@@ -1,0 +1,153 @@
+//! `cargo bench --bench e2e_serving` — end-to-end coordinator
+//! benchmarks: throughput/latency under different batching policies,
+//! Hot vs Cold residency, and tenant counts (the batching and
+//! residency ablations of DESIGN.md §5).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use deltadq::compress::pipeline::compress_model_deltas;
+use deltadq::compress::{DeltaDq, DeltaDqConfig};
+use deltadq::coordinator::{Server, ServerOptions};
+use deltadq::delta::extract_deltas;
+use deltadq::delta::format::DeltaSet;
+use deltadq::eval::{gen_dataset, TaskKind};
+use deltadq::model::{load_weights, ModelConfig, ModelWeights};
+use deltadq::tensor::{Matrix, Pcg64};
+
+/// Load the trained tiny base if present, else synthesize one.
+fn base_model() -> Arc<ModelWeights> {
+    let path = std::path::Path::new("artifacts/models/tiny/base.dqw");
+    if path.exists() {
+        if let Ok(w) = load_weights(path) {
+            return Arc::new(w);
+        }
+    }
+    let mut rng = Pcg64::seeded(1);
+    Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng))
+}
+
+fn make_deltas(base: &ModelWeights, seed: u64) -> DeltaSet {
+    let mut rng = Pcg64::seeded(seed);
+    let mut ft = base.clone();
+    for name in base.config.delta_tensor_names() {
+        let (r, c) = ft.get(&name).shape();
+        let d = Matrix::randn(r, c, 0.001, &mut rng);
+        ft.get_mut(&name).add_assign(&d);
+    }
+    let deltas = extract_deltas(base, &ft);
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(16)));
+    compress_model_deltas(&deltas, &dq, &Default::default(), &mut rng)
+}
+
+struct RunReport {
+    reqs_per_s: f64,
+    tokens_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+}
+
+/// Drive `n` closed-loop-ish requests through a server config.
+fn drive(options: ServerOptions, tenants: usize, n: usize, promote: bool) -> RunReport {
+    let base = base_model();
+    let mut options = options;
+    options.promote_after = if promote { 1 } else { u64::MAX };
+    let server = Server::start(base.clone(), options);
+    for i in 0..tenants {
+        server.register_tenant(&format!("t{i}"), make_deltas(&base, 100 + i as u64));
+    }
+    let prompts: Vec<Vec<u32>> = gen_dataset(TaskKind::Math, n, 7)
+        .into_iter()
+        .map(|s| s.prompt)
+        .collect();
+    let start = Instant::now();
+    let receivers: Vec<_> = (0..n)
+        .filter_map(|i| {
+            server
+                .submit(&format!("t{}", i % tenants), prompts[i % prompts.len()].clone(), 6)
+                .ok()
+        })
+        .collect();
+    for rx in &receivers {
+        let _ = rx.recv_timeout(Duration::from_secs(120));
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let m = &server.metrics;
+    let completed = m.requests_completed.load(std::sync::atomic::Ordering::Relaxed);
+    let batches = m.batches_executed.load(std::sync::atomic::Ordering::Relaxed).max(1);
+    let report = RunReport {
+        reqs_per_s: completed as f64 / elapsed,
+        tokens_per_s: m.tokens_generated.load(std::sync::atomic::Ordering::Relaxed) as f64
+            / elapsed,
+        p50_ms: m.latency_percentile(50.0) * 1e3,
+        p99_ms: m.latency_percentile(99.0) * 1e3,
+        mean_batch: completed as f64 / batches as f64,
+    };
+    server.shutdown();
+    report
+}
+
+fn main() {
+    let n = 96;
+    println!("== E10 end-to-end serving benchmarks (tiny model, {n} requests) ==\n");
+
+    println!("-- batching ablation (2 tenants, cold) --");
+    println!(
+        "{:<28} {:>9} {:>9} {:>9} {:>9} {:>7}",
+        "policy", "req/s", "tok/s", "p50 ms", "p99 ms", "batch"
+    );
+    for (name, max_batch, window_us) in [
+        ("no batching (b=1)", 1usize, 0u64),
+        ("batch 4, 200us window", 4, 200),
+        ("batch 8, 500us window", 8, 500),
+        ("batch 16, 2ms window", 16, 2000),
+    ] {
+        let r = drive(
+            ServerOptions {
+                max_batch,
+                batch_window: Duration::from_micros(window_us),
+                workers: 1,
+                ..Default::default()
+            },
+            2,
+            n,
+            false,
+        );
+        println!(
+            "{:<28} {:>9.1} {:>9.0} {:>9.2} {:>9.2} {:>7.2}",
+            name, r.reqs_per_s, r.tokens_per_s, r.p50_ms, r.p99_ms, r.mean_batch
+        );
+    }
+
+    println!("\n-- residency ablation (2 tenants, batch 8) --");
+    for (name, promote) in [("cold: separate computation", false), ("hot: dense cache", true)] {
+        let r = drive(
+            ServerOptions { max_batch: 8, workers: 1, ..Default::default() },
+            2,
+            n,
+            promote,
+        );
+        println!(
+            "{:<28} {:>9.1} req/s  p50 {:>7.2}ms  p99 {:>7.2}ms",
+            name, r.reqs_per_s, r.p50_ms, r.p99_ms
+        );
+    }
+
+    println!("\n-- tenant-count scaling (batch 8, hot) --");
+    for tenants in [1usize, 2, 4, 8] {
+        let r = drive(
+            ServerOptions { max_batch: 8, workers: 1, ..Default::default() },
+            tenants,
+            n,
+            true,
+        );
+        println!(
+            "{:<28} {:>9.1} req/s  p50 {:>7.2}ms  p99 {:>7.2}ms",
+            format!("{tenants} tenants"),
+            r.reqs_per_s,
+            r.p50_ms,
+            r.p99_ms
+        );
+    }
+}

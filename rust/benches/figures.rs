@@ -1,0 +1,27 @@
+//! `cargo bench --bench figures` — regenerates the paper's Figures 4–8
+//! (experiments E5–E9) plus the design ablations from the trained
+//! artifacts. Skips gracefully when `make artifacts` has not run.
+
+use std::path::Path;
+
+use deltadq::bench_harness;
+use deltadq::util::bench::bench_once;
+
+fn main() {
+    let models = Path::new("artifacts/models");
+    let data = Path::new("artifacts/data");
+    if !models.join("tiny/base.dqw").exists() {
+        eprintln!("figures bench skipped: run `make artifacts` first");
+        return;
+    }
+    for name in ["fig4", "fig5", "fig6", "fig7", "fig8", "ablations"] {
+        let (result, timing) = bench_once(name, || bench_harness::run(name, models, data));
+        match result {
+            Ok(report) => {
+                println!("{report}");
+                println!("[{}]\n", timing.report());
+            }
+            Err(e) => eprintln!("{name} failed: {e:#}"),
+        }
+    }
+}

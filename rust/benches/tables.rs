@@ -1,0 +1,27 @@
+//! `cargo bench --bench tables` — regenerates the paper's Tables 1–4
+//! (experiments E1–E4) from the trained artifacts. Skips gracefully
+//! when `make artifacts` has not run.
+
+use std::path::Path;
+
+use deltadq::bench_harness;
+use deltadq::util::bench::bench_once;
+
+fn main() {
+    let models = Path::new("artifacts/models");
+    let data = Path::new("artifacts/data");
+    if !models.join("tiny/base.dqw").exists() {
+        eprintln!("tables bench skipped: run `make artifacts` first");
+        return;
+    }
+    for name in ["table1", "table2", "table3", "table4"] {
+        let (result, timing) = bench_once(name, || bench_harness::run(name, models, data));
+        match result {
+            Ok(report) => {
+                println!("{report}");
+                println!("[{}]\n", timing.report());
+            }
+            Err(e) => eprintln!("{name} failed: {e:#}"),
+        }
+    }
+}

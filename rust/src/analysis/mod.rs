@@ -1,0 +1,173 @@
+//! Distribution analysis (S17) backing the paper's motivating figures.
+//!
+//! * Figure 4: per-output-element variance & min-max range of the
+//!   matmul partial products, delta weight vs fine-tuned weight.
+//! * Figure 6: the delta-weight value distribution before and after
+//!   uniform quantization.
+
+use std::collections::BTreeMap;
+
+use crate::model::weights::ModelWeights;
+use crate::quant::uniform::fake_quantize;
+use crate::tensor::stats::{median, Histogram, IntermediateStats};
+use crate::tensor::Matrix;
+
+/// Fig. 4 comparison for one tensor: intermediate-result statistics of
+/// the delta weight vs the full fine-tuned weight on the same inputs.
+#[derive(Debug, Clone)]
+pub struct BalancedResultReport {
+    pub tensor: String,
+    /// Median partial-product variance, delta weight.
+    pub delta_variance: f64,
+    /// Median partial-product variance, fine-tuned weight.
+    pub finetuned_variance: f64,
+    /// Median partial-product min-max range, delta weight.
+    pub delta_range: f64,
+    /// Median partial-product min-max range, fine-tuned weight.
+    pub finetuned_range: f64,
+}
+
+impl BalancedResultReport {
+    /// Variance contrast (fine-tuned / delta); ≫ 1 is the phenomenon.
+    pub fn variance_contrast(&self) -> f64 {
+        self.finetuned_variance / self.delta_variance.max(1e-300)
+    }
+
+    /// Range contrast (fine-tuned / delta).
+    pub fn range_contrast(&self) -> f64 {
+        self.finetuned_range / self.delta_range.max(1e-300)
+    }
+}
+
+/// Compute the Fig. 4 statistics for one tensor given calibration
+/// inputs `x` (t × h_in), the base weight, and the delta.
+pub fn balanced_intermediate_results(
+    name: &str,
+    x: &Matrix,
+    base: &Matrix,
+    delta: &Matrix,
+    max_elems: usize,
+) -> BalancedResultReport {
+    let finetuned = base.add(delta);
+    let d = IntermediateStats::compute(x, delta, max_elems);
+    let f = IntermediateStats::compute(x, &finetuned, max_elems);
+    BalancedResultReport {
+        tensor: name.to_string(),
+        delta_variance: d.median_variance(),
+        finetuned_variance: f.median_variance(),
+        delta_range: d.median_range(),
+        finetuned_range: f.median_range(),
+    }
+}
+
+/// Whole-model Fig. 4 sweep: one report per delta tensor with
+/// calibration inputs available.
+pub fn balanced_results_sweep(
+    base: &ModelWeights,
+    deltas: &BTreeMap<String, Matrix>,
+    calibration: &BTreeMap<String, Matrix>,
+    max_elems: usize,
+) -> Vec<BalancedResultReport> {
+    deltas
+        .iter()
+        .filter_map(|(name, delta)| {
+            calibration.get(name).map(|x| {
+                balanced_intermediate_results(name, x, base.get(name), delta, max_elems)
+            })
+        })
+        .collect()
+}
+
+/// Fig. 6: delta-weight histogram before and after k-bit uniform
+/// quantization (same bins for comparability).
+#[derive(Debug, Clone)]
+pub struct QuantDistributionReport {
+    pub before: Histogram,
+    pub after: Histogram,
+    pub bits: u32,
+    /// Quantization MSE.
+    pub mse: f64,
+}
+
+pub fn quant_distribution(delta: &Matrix, bits: u32, bins: usize) -> QuantDistributionReport {
+    let before = Histogram::of_matrix(delta, bins);
+    let (quantized, _) = fake_quantize(delta, bits);
+    let mut after = Histogram::new(before.lo, before.hi, bins);
+    for &v in quantized.data() {
+        after.add(v as f64);
+    }
+    let mse = delta.sq_distance(&quantized) / delta.len().max(1) as f64;
+    QuantDistributionReport { before, after, bits, mse }
+}
+
+/// Median variance contrast across a sweep — the single number quoted
+/// in EXPERIMENTS.md for Fig. 4.
+pub fn median_contrast(reports: &[BalancedResultReport]) -> (f64, f64) {
+    let v: Vec<f64> = reports.iter().map(|r| r.variance_contrast()).collect();
+    let r: Vec<f64> = reports.iter().map(|r| r.range_contrast()).collect();
+    (median(&v), median(&r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    #[test]
+    fn delta_shows_balanced_intermediate_results() {
+        // Genuine setup: base ~ N(0, 0.02), delta ~ N(0, 0.002) (10x
+        // smaller, like real fine-tuning deltas).
+        let mut rng = Pcg64::seeded(1);
+        let x = Matrix::randn(16, 64, 1.0, &mut rng);
+        let base = Matrix::randn(32, 64, 0.02, &mut rng);
+        let delta = Matrix::randn(32, 64, 0.002, &mut rng);
+        let r = balanced_intermediate_results("t", &x, &base, &delta, 256);
+        assert!(r.variance_contrast() > 10.0, "contrast {}", r.variance_contrast());
+        assert!(r.range_contrast() > 3.0, "contrast {}", r.range_contrast());
+    }
+
+    #[test]
+    fn quant_distribution_mse_shrinks_with_bits() {
+        let mut rng = Pcg64::seeded(2);
+        let delta = Matrix::randn(32, 32, 0.01, &mut rng);
+        let r2 = quant_distribution(&delta, 2, 32);
+        let r8 = quant_distribution(&delta, 8, 32);
+        assert!(r8.mse < r2.mse / 100.0, "{} vs {}", r8.mse, r2.mse);
+        assert_eq!(r2.before.total(), 32 * 32);
+        assert_eq!(r2.after.total(), 32 * 32);
+    }
+
+    #[test]
+    fn quantized_histogram_concentrates_mass() {
+        // after k-bit quantization at most 2^k distinct values exist, so
+        // at most 2^k bins are occupied
+        let mut rng = Pcg64::seeded(3);
+        let delta = Matrix::randn(64, 64, 0.01, &mut rng);
+        let r = quant_distribution(&delta, 2, 64);
+        let occupied = r.after.counts.iter().filter(|&&c| c > 0).count();
+        assert!(occupied <= 4, "occupied {occupied}");
+    }
+
+    #[test]
+    fn median_contrast_aggregates() {
+        let reports = vec![
+            BalancedResultReport {
+                tensor: "a".into(),
+                delta_variance: 1.0,
+                finetuned_variance: 100.0,
+                delta_range: 1.0,
+                finetuned_range: 10.0,
+            },
+            BalancedResultReport {
+                tensor: "b".into(),
+                delta_variance: 1.0,
+                finetuned_variance: 400.0,
+                delta_range: 1.0,
+                finetuned_range: 20.0,
+            },
+        ];
+        let (v, r) = median_contrast(&reports);
+        assert_eq!(v, 250.0);
+        assert_eq!(r, 15.0);
+    }
+}

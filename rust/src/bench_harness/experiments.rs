@@ -1,0 +1,527 @@
+//! The per-table / per-figure experiment drivers (E1–E9).
+//!
+//! Every driver prints rows with the same structure as the paper's
+//! artifact. Determinism: all randomness derives from fixed seeds, so
+//! reruns reproduce EXPERIMENTS.md bit-for-bit.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::analysis::{balanced_results_sweep, median_contrast, quant_distribution};
+use crate::compress::pipeline::{
+    capture_calibration, compress_model_deltas, reconstruct_weights,
+};
+use crate::compress::{
+    Compressor, Dare, DeltaDq, DeltaDqConfig, DeltaZip, DeltaZipConfig, Magnitude,
+};
+use crate::delta::extract_deltas;
+use crate::dropout::{dropout, DropoutKind};
+use crate::eval::{evaluate, load_dataset, Sample};
+use crate::model::{forward, generate, load_weights, ModelWeights};
+use crate::search::{search_direct, search_proxy};
+use crate::sparse::CsrMatrix;
+use crate::tensor::{Matrix, Pcg64};
+use crate::util::table::{fmt, fmt_ratio, Table};
+
+const SEED: u64 = 20240701;
+/// Eval-set slice for table accuracy runs (single-core budget).
+const EVAL_N: usize = 150;
+/// Default group size used when the search is not re-run per cell
+/// (Table 4 / fig5 justify the choice).
+const DEFAULT_GROUP: usize = 16;
+
+// ------------------------------------------------------------- loading
+
+fn load_pair(models_dir: &Path, scale: &str, task: &str) -> Result<(ModelWeights, ModelWeights)> {
+    let dir = models_dir.join(scale);
+    let base = load_weights(&dir.join("base.dqw"))
+        .with_context(|| format!("missing {scale}/base.dqw — run `make artifacts`"))?;
+    let ft = load_weights(&dir.join(format!("{task}.dqw")))
+        .with_context(|| format!("missing {scale}/{task}.dqw — run `make artifacts`"))?;
+    Ok((base, ft))
+}
+
+fn load_eval(data_dir: &Path, task: &str, n: usize) -> Result<Vec<Sample>> {
+    let samples = load_dataset(&data_dir.join(format!("{task}_eval.dqt")))
+        .with_context(|| format!("missing {task}_eval.dqt — run `deltadq gen-data`"))?;
+    Ok(samples.into_iter().take(n).collect())
+}
+
+/// Compress the ft−base delta with `method` and return task accuracy %.
+fn compress_and_eval(
+    base: &ModelWeights,
+    ft: &ModelWeights,
+    method: &dyn Compressor,
+    calibration: &BTreeMap<String, Matrix>,
+    eval_data: &[Sample],
+    seed: u64,
+) -> f64 {
+    let deltas = extract_deltas(base, ft);
+    let mut rng = Pcg64::seeded(seed);
+    let set = compress_model_deltas(&deltas, method, calibration, &mut rng);
+    let weights = reconstruct_weights(base, &set);
+    evaluate(&weights, eval_data).percent()
+}
+
+/// The four methods at a given *total* ratio, instantiated like the
+/// paper's rows (DESIGN.md §7 baseline definitions).
+fn methods_for_ratio(ratio: f64, group_size: usize) -> Vec<Box<dyn Compressor>> {
+    vec![
+        Box::new(Magnitude::new(ratio)),
+        Box::new(DeltaZip::new(DeltaZipConfig::for_total_ratio(ratio))),
+        Box::new(Dare::new(ratio)),
+        Box::new(DeltaDq::new(DeltaDqConfig::for_total_ratio(ratio, Some(group_size)))),
+    ]
+}
+
+// ------------------------------------------------------------- table 1
+
+/// E1 / Table 1: accuracy at α ∈ {2,4,8,16} across scales × {math,code}.
+pub fn table1(models_dir: &Path, data_dir: &Path) -> Result<String> {
+    let scales = ["tiny", "small", "base"];
+    let tasks = ["math", "code"];
+    let mut out = String::new();
+    let mut t = Table::new(
+        "Table 1 — accuracy vs compression ratio (scales map 7B/13B/70B → tiny/small/base)",
+        &["Method", "Quant", "Ratio", "math:tiny", "math:small", "math:base", "code:tiny",
+          "code:small", "code:base"],
+    );
+
+    // originals
+    let mut original_row = vec!["Original".to_string(), "x".to_string(), "1".to_string()];
+    let mut pairs = BTreeMap::new();
+    let mut evals = BTreeMap::new();
+    for task in tasks {
+        let eval_data = load_eval(data_dir, task, EVAL_N)?;
+        for scale in scales {
+            let (base, ft) = load_pair(models_dir, scale, task)?;
+            let acc = evaluate(&ft, &eval_data).percent();
+            original_row.push(fmt(acc, 2));
+            pairs.insert((task, scale), (base, ft));
+        }
+        evals.insert(task, eval_data);
+    }
+    t.add_row(original_row);
+
+    for ratio in [2.0, 4.0, 8.0, 16.0] {
+        for method_idx in 0..4 {
+            let method = &methods_for_ratio(ratio, DEFAULT_GROUP)[method_idx];
+            let quantized = matches!(method.name().as_str(), "DELTAZIP" if ratio > 8.0)
+                || (method.name().starts_with("DeltaDQ") && ratio >= 16.0);
+            let mut row = vec![
+                method.name(),
+                if quantized { "yes".into() } else { "x".into() },
+                fmt_ratio(ratio),
+            ];
+            for task in tasks {
+                for scale in scales {
+                    let (base, ft) = &pairs[&(task, scale)];
+                    let calib = if method.name() == "DELTAZIP" {
+                        capture_calibration(ft, &evals[task][..8.min(evals[task].len())], 128)
+                    } else {
+                        BTreeMap::new()
+                    };
+                    let acc = compress_and_eval(
+                        base,
+                        ft,
+                        method.as_ref(),
+                        &calib,
+                        &evals[task],
+                        SEED ^ (ratio as u64) ^ (method_idx as u64) << 8,
+                    );
+                    row.push(fmt(acc, 2));
+                }
+            }
+            t.add_row(row);
+        }
+    }
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+// -------------------------------------------------------- tables 2 & 3
+
+/// Ultra-high compression sweep for one scale (Table 2 = tiny/7B,
+/// Table 3 = base/70B).
+fn ultra_table(
+    models_dir: &Path,
+    data_dir: &Path,
+    scale: &str,
+    task: &str,
+    title: &str,
+    ratios: &[f64],
+    deltadq_rows: &[(f64, u32, u32)], // (total, k, m) per extra DeltaDQ row
+) -> Result<String> {
+    let (base, ft) = load_pair(models_dir, scale, task)?;
+    let eval_data = load_eval(data_dir, task, EVAL_N)?;
+    let mut t = Table::new(title, &["Method", "Ratio", "Accuracy"]);
+    t.add_row(vec![
+        "Original".into(),
+        "1".into(),
+        fmt(evaluate(&ft, &eval_data).percent(), 2),
+    ]);
+    for &ratio in ratios {
+        for (i, method) in [
+            Box::new(Magnitude::new(ratio)) as Box<dyn Compressor>,
+            Box::new(DeltaZip::new(DeltaZipConfig::for_total_ratio(ratio))),
+            Box::new(Dare::new(ratio)),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let calib = if method.name() == "DELTAZIP" {
+                capture_calibration(&ft, &eval_data[..8.min(eval_data.len())], 128)
+            } else {
+                BTreeMap::new()
+            };
+            let acc = compress_and_eval(
+                &base,
+                &ft,
+                method.as_ref(),
+                &calib,
+                &eval_data,
+                SEED ^ (ratio as u64) ^ ((i as u64) << 16),
+            );
+            t.add_row(vec![method.name(), fmt_ratio(ratio), fmt(acc, 2)]);
+        }
+        // DeltaDQ(m=1) at this ratio: keep dropout at ratio/2 + 8-bit
+        let alpha_m1 = ratio / 2.0;
+        let dq_m1 = DeltaDq::new(DeltaDqConfig::with_quant(alpha_m1, Some(DEFAULT_GROUP), 8, 1));
+        let acc = compress_and_eval(&base, &ft, &dq_m1, &BTreeMap::new(), &eval_data, SEED ^ ratio as u64);
+        t.add_row(vec![dq_m1.name(), fmt_ratio(ratio), fmt(acc, 2)]);
+    }
+    // the m-decomposed rows (the paper's headline)
+    for &(total, k, m) in deltadq_rows {
+        let cfg = match total {
+            t if t.is_infinite() => {
+                // the "-" extreme: m = 2^k
+                DeltaDqConfig::with_quant(8.0, Some(DEFAULT_GROUP), k, m)
+            }
+            _ => {
+                // derive alpha from total = alpha * 16/(k - log2 m)
+                let final_bits = (k - m.ilog2()) as f64;
+                DeltaDqConfig::with_quant(total * final_bits / 16.0, Some(DEFAULT_GROUP), k, m)
+            }
+        };
+        let dq = DeltaDq::new(cfg);
+        let acc = compress_and_eval(&base, &ft, &dq, &BTreeMap::new(), &eval_data, SEED ^ 0xDD);
+        t.add_row(vec![dq.name(), fmt_ratio(dq.nominal_ratio()), fmt(acc, 2)]);
+    }
+    Ok(t.render())
+}
+
+/// E2 / Table 2: WizardMath-7B (tiny) ultra-high compression.
+pub fn table2(models_dir: &Path, data_dir: &Path) -> Result<String> {
+    // Task note: the ultra-high tables run on the *code* task — the math
+    // stand-in's grokked arithmetic circuit is brittle at testbed scale
+    // (even 2x dropout of its delta collapses exact-match; documented as
+    // a finding in EXPERIMENTS.md §Brittleness), while code degrades
+    // gracefully like the paper's GSM8k curves do at 7B+.
+    ultra_table(
+        models_dir,
+        data_dir,
+        "tiny",
+        "code",
+        "Table 2 — ultra-high compression, code @ tiny (7B stand-in)",
+        &[32.0, 64.0, 128.0],
+        &[(64.0, 4, 4), (128.0, 4, 8), (f64::INFINITY, 4, 16)],
+    )
+}
+
+/// E3 / Table 3: WizardMath-70B ultra-high compression (code task —
+/// see the task note on [`table2`]).
+pub fn table3(models_dir: &Path, data_dir: &Path) -> Result<String> {
+    ultra_table(
+        models_dir,
+        data_dir,
+        "base",
+        "code",
+        "Table 3 — ultra-high compression, code @ base (70B stand-in)",
+        &[128.0, 256.0, 512.0],
+        &[(256.0, 4, 4), (512.0, 4, 8), (f64::INFINITY, 4, 16)],
+    )
+}
+
+// ------------------------------------------------------------- table 4
+
+/// E4 / Table 4: group-size selection, Direct vs Proxy, α ∈ {2,4,8}.
+pub fn table4(models_dir: &Path, data_dir: &Path) -> Result<String> {
+    let (base, ft) = load_pair(models_dir, "tiny", "code")?;
+    let eval_data = load_eval(data_dir, "code", EVAL_N)?;
+    let deltas = extract_deltas(&base, &ft);
+    let mut t = Table::new(
+        "Table 4 — group-size selection: Direct vs Proxy (times in seconds; code @ tiny)",
+        &["alpha", "Selection", "Time(s)", "h_g*"],
+    );
+    for alpha in [2.0, 4.0, 8.0] {
+        let d = search_direct(&base, &deltas, alpha, &eval_data, SEED);
+        t.add_row(vec![
+            fmt_ratio(alpha),
+            "Direct".into(),
+            fmt(d.elapsed.as_secs_f64(), 2),
+            d.best_group_size.to_string(),
+        ]);
+        let p = search_proxy(&base, &deltas, alpha, &eval_data, 0.01, SEED);
+        t.add_row(vec![
+            fmt_ratio(alpha),
+            "Proxy".into(),
+            fmt(p.elapsed.as_secs_f64(), 2),
+            p.best_group_size.to_string(),
+        ]);
+    }
+    Ok(t.render())
+}
+
+// -------------------------------------------------------------- fig 4
+
+/// E5 / Figure 4: Balanced Intermediate Results — variance & min-max
+/// range of partial products, delta vs fine-tuned weight.
+pub fn fig4(models_dir: &Path, data_dir: &Path) -> Result<String> {
+    let (base, ft) = load_pair(models_dir, "tiny", "math")?;
+    let eval_data = load_eval(data_dir, "math", 16)?;
+    let deltas = extract_deltas(&base, &ft);
+    let calib = capture_calibration(&ft, &eval_data, 64);
+    let reports = balanced_results_sweep(&base, &deltas, &calib, 128);
+    let (var_contrast, range_contrast) = median_contrast(&reports);
+    let mut t = Table::new(
+        "Figure 4 — Balanced Intermediate Results (median over sampled output elements)",
+        &["Tensor", "Var(delta)", "Var(finetuned)", "Range(delta)", "Range(finetuned)"],
+    );
+    for r in reports.iter().take(8) {
+        t.add_row(vec![
+            r.tensor.clone(),
+            format!("{:.3e}", r.delta_variance),
+            format!("{:.3e}", r.finetuned_variance),
+            format!("{:.3e}", r.delta_range),
+            format!("{:.3e}", r.finetuned_range),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "median contrast (finetuned/delta): variance {var_contrast:.1}x, range {range_contrast:.1}x\n"
+    ));
+    Ok(out)
+}
+
+// -------------------------------------------------------------- fig 5
+
+/// E6 / Figure 5: accuracy vs group size at fixed α.
+pub fn fig5(models_dir: &Path, data_dir: &Path) -> Result<String> {
+    let (base, ft) = load_pair(models_dir, "tiny", "code")?;
+    let eval_data = load_eval(data_dir, "code", EVAL_N)?;
+    let _deltas = extract_deltas(&base, &ft);
+    let alpha = 8.0;
+    let mut t = Table::new(
+        "Figure 5 — accuracy vs group size h_g (code @ tiny, alpha = 8)",
+        &["h_g", "Accuracy"],
+    );
+    for h_g in crate::dropout::group_size_grid(base.config.hidden, alpha) {
+        let dq = DeltaDq::new(DeltaDqConfig::dropout_only(alpha, Some(h_g)));
+        let acc =
+            compress_and_eval(&base, &ft, &dq, &BTreeMap::new(), &eval_data, SEED ^ h_g as u64);
+        t.add_row(vec![h_g.to_string(), fmt(acc, 2)]);
+    }
+    Ok(t.render())
+}
+
+// -------------------------------------------------------------- fig 6
+
+/// E7 / Figure 6: delta distribution before/after uniform quantization.
+pub fn fig6(models_dir: &Path, _data_dir: &Path) -> Result<String> {
+    let (base, ft) = load_pair(models_dir, "tiny", "math")?;
+    let deltas = extract_deltas(&base, &ft);
+    let delta = &deltas["layers.0.attn.wq"];
+    let mut out = String::from("## Figure 6 — delta weight distribution (layers.0.attn.wq)\n");
+    for bits in [8u32, 4, 2] {
+        let r = quant_distribution(delta, bits, 48);
+        out.push_str(&format!(
+            "before : {} [{:+.4}, {:+.4}]\n",
+            r.before.sparkline(),
+            r.before.lo,
+            r.before.hi
+        ));
+        out.push_str(&format!(
+            "after{bits}b: {} mse={:.3e}\n",
+            r.after.sparkline(),
+            r.mse
+        ));
+    }
+    Ok(out)
+}
+
+// -------------------------------------------------------------- fig 7
+
+/// E8 / Figure 7: memory & accuracy vs m at final bit k ∈ {8,4,2,1}.
+pub fn fig7(models_dir: &Path, data_dir: &Path) -> Result<String> {
+    let (base, ft) = load_pair(models_dir, "tiny", "code")?;
+    let eval_data = load_eval(data_dir, "code", EVAL_N)?;
+    let deltas = extract_deltas(&base, &ft);
+    let alpha = 8.0;
+    let mut t = Table::new(
+        "Figure 7 — Separate Quantization: memory & accuracy vs m (code @ tiny, alpha = 8)",
+        &["final bits k", "m", "storage(KiB)", "Accuracy"],
+    );
+    // final bit width k with m parts means quantizing at k + log2 m bits
+    for final_bits in [8u32, 4, 2, 1] {
+        for m in [1u32, 2, 4, 8] {
+            let k = final_bits + m.ilog2();
+            if k > 8 {
+                continue;
+            }
+            let dq = DeltaDq::new(DeltaDqConfig::with_quant(alpha, Some(DEFAULT_GROUP), k, m));
+            let mut rng = Pcg64::seeded(SEED ^ (final_bits as u64) << 4 ^ m as u64);
+            let set = compress_model_deltas(&extract_deltas(&base, &ft), &dq, &BTreeMap::new(), &mut rng);
+            let weights = reconstruct_weights(&base, &set);
+            let acc = evaluate(&weights, &eval_data).percent();
+            t.add_row(vec![
+                final_bits.to_string(),
+                m.to_string(),
+                fmt(set.storage_bits() as f64 / 8.0 / 1024.0, 1),
+                fmt(acc, 2),
+            ]);
+        }
+    }
+    let _ = deltas;
+    let _ = alpha;
+    Ok(t.render())
+}
+
+// -------------------------------------------------------------- fig 8
+
+/// E9 / Figure 8: case study — responses before/after 128× compression.
+///
+/// Task note: run on the *code* fine-tune. The chat stand-in's learned
+/// 64-entry style table is as brittle as the math circuit at tiny
+/// scale (90% → 10% at a mere 4×; EXPERIMENTS.md §Brittleness), whereas
+/// the paper's WizardLM-7B has the redundancy to survive 128× — code
+/// is the task in that regime here.
+pub fn fig8(models_dir: &Path, data_dir: &Path) -> Result<String> {
+    let (base, ft) = load_pair(models_dir, "tiny", "code")?;
+    let eval_data = load_eval(data_dir, "code", 64)?;
+    let dq = DeltaDq::new(DeltaDqConfig::with_quant(8.0, Some(DEFAULT_GROUP), 4, 8));
+    let mut rng = Pcg64::seeded(SEED);
+    let set = compress_model_deltas(&extract_deltas(&base, &ft), &dq, &BTreeMap::new(), &mut rng);
+    let compressed = reconstruct_weights(&base, &set);
+    let mut agree_tokens = 0usize;
+    let mut total_tokens = 0usize;
+    let mut identical = 0usize;
+    let mut examples = String::new();
+    for (i, s) in eval_data.iter().enumerate() {
+        let before = generate(&ft, &s.prompt, s.completion.len() + 2, Some(crate::eval::tasks::vocab::EOS));
+        let after = generate(&compressed, &s.prompt, s.completion.len() + 2, Some(crate::eval::tasks::vocab::EOS));
+        let n = before.len().max(after.len());
+        let agree = before.iter().zip(&after).filter(|(a, b)| a == b).count();
+        agree_tokens += agree;
+        total_tokens += n;
+        if before == after {
+            identical += 1;
+        }
+        if i < 3 {
+            examples.push_str(&format!(
+                "prompt {:?}\n  before: {:?}\n  after : {:?}\n",
+                s.prompt, before, after
+            ));
+        }
+    }
+    let mut out = String::from("## Figure 8 — case study: responses before/after 128x DeltaDQ (code @ tiny)\n");
+    out.push_str(&examples);
+    out.push_str(&format!(
+        "identical responses: {identical}/{} ({:.1}%), token agreement {:.1}%\n",
+        eval_data.len(),
+        100.0 * identical as f64 / eval_data.len() as f64,
+        100.0 * agree_tokens as f64 / total_tokens.max(1) as f64
+    ));
+    Ok(out)
+}
+
+// ----------------------------------------------------------- ablations
+
+/// Design-choice ablations called out in DESIGN.md §5:
+/// dropout granularity, storage format, and quantization granularity.
+pub fn ablations(models_dir: &Path, data_dir: &Path) -> Result<String> {
+    let (base, ft) = load_pair(models_dir, "tiny", "code")?;
+    let eval_data = load_eval(data_dir, "code", EVAL_N)?;
+    let deltas = extract_deltas(&base, &ft);
+    let mut out = String::new();
+
+    // (a) dropout granularity at alpha = 8
+    let mut t = Table::new(
+        "Ablation A — dropout granularity (code @ tiny, alpha = 8)",
+        &["Granularity", "Accuracy"],
+    );
+    let alpha = 8.0;
+    for (name, kind) in [
+        ("global (DARE)", DropoutKind::Global),
+        ("row-wise", DropoutKind::RowWise),
+        ("group-wise h_g=16", DropoutKind::GroupWise { group_size: 16 }),
+    ] {
+        let mut rng = Pcg64::seeded(SEED ^ 0xA);
+        let mut set = crate::delta::format::DeltaSet::new(name, alpha);
+        for (tname, d) in &deltas {
+            let r = dropout(d, alpha, kind, &mut rng);
+            set.tensors.insert(
+                tname.clone(),
+                crate::compress::CompressedDelta::Sparse(CsrMatrix::from_dense(&r.matrix)),
+            );
+        }
+        let weights = reconstruct_weights(&base, &set);
+        t.add_row(vec![name.to_string(), fmt(evaluate(&weights, &eval_data).percent(), 2)]);
+    }
+    out.push_str(&t.render());
+
+    // (b) storage accounting: CSR vs dense for the sparse delta
+    let mut t = Table::new(
+        "Ablation B — storage format at alpha = 8 (whole model delta)",
+        &["Format", "KiB"],
+    );
+    let mut rng = Pcg64::seeded(SEED ^ 0xB);
+    let dq = DeltaDq::new(DeltaDqConfig::dropout_only(8.0, Some(16)));
+    let set = compress_model_deltas(&deltas, &dq, &BTreeMap::new(), &mut rng);
+    t.add_row(vec!["dense fp16".into(), fmt(set.total_elems() as f64 * 2.0 / 1024.0, 1)]);
+    t.add_row(vec!["CSR fp16+idx16".into(), fmt(set.storage_bits() as f64 / 8.0 / 1024.0, 1)]);
+    let dq_q = DeltaDq::new(DeltaDqConfig::with_quant(8.0, Some(16), 4, 8));
+    let mut rng = Pcg64::seeded(SEED ^ 0xB);
+    let set_q = compress_model_deltas(&deltas, &dq_q, &BTreeMap::new(), &mut rng);
+    t.add_row(vec![
+        "CSR 1-bit codes (k=4,m=8)".into(),
+        fmt(set_q.storage_bits() as f64 / 8.0 / 1024.0, 1),
+    ]);
+    out.push_str(&t.render());
+
+    // (c) per-tensor vs group-wise quantization at 4-bit on the sparse delta
+    let mut t = Table::new(
+        "Ablation C — quantizer granularity (4-bit on alpha=8 sparse delta)",
+        &["Quantizer", "Accuracy"],
+    );
+    for (name, group) in [("per-tensor (DeltaDQ)", None), ("group-128", Some(128usize))] {
+        let mut rng = Pcg64::seeded(SEED ^ 0xC);
+        let mut set = crate::delta::format::DeltaSet::new(name, 32.0);
+        for (tname, d) in &deltas {
+            let r = dropout(d, 8.0, DropoutKind::GroupWise { group_size: 16 }, &mut rng);
+            let quantized = match group {
+                None => {
+                    let csr = CsrMatrix::from_dense(&r.matrix);
+                    crate::compress::CompressedDelta::Quantized(
+                        crate::quant::separate::DecomposedDelta::compress(&csr, 4, 1),
+                    )
+                }
+                Some(g) => {
+                    let gq = crate::quant::groupwise::group_fake_quantize_sparse(&r.matrix, 4, g);
+                    crate::compress::CompressedDelta::Sparse(CsrMatrix::from_dense(&gq.matrix))
+                }
+            };
+            set.tensors.insert(tname.clone(), quantized);
+        }
+        let weights = reconstruct_weights(&base, &set);
+        t.add_row(vec![name.to_string(), fmt(evaluate(&weights, &eval_data).percent(), 2)]);
+    }
+    out.push_str(&t.render());
+
+    // quick check that the fine-tuned model itself is healthy
+    let orig = evaluate(&ft, &eval_data).percent();
+    out.push_str(&format!("(original fine-tuned accuracy: {orig:.2}%)\n"));
+    let _ = forward(&ft, &[1, 2, 3]); // keep forward linked in release builds
+    Ok(out)
+}

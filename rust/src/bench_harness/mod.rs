@@ -1,0 +1,38 @@
+//! Bench harness (experiment index E1–E9 in DESIGN.md): one entry per
+//! paper table/figure, each printing the same rows/series the paper
+//! reports. Invoked by `deltadq bench --name <exp>` and by the
+//! `cargo bench` drivers.
+
+pub mod experiments;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+/// Run one named experiment; returns the rendered report text.
+pub fn run(name: &str, models_dir: &Path, data_dir: &Path) -> Result<String> {
+    match name {
+        "table1" => experiments::table1(models_dir, data_dir),
+        "table2" => experiments::table2(models_dir, data_dir),
+        "table3" => experiments::table3(models_dir, data_dir),
+        "table4" => experiments::table4(models_dir, data_dir),
+        "fig4" => experiments::fig4(models_dir, data_dir),
+        "fig5" => experiments::fig5(models_dir, data_dir),
+        "fig6" => experiments::fig6(models_dir, data_dir),
+        "fig7" => experiments::fig7(models_dir, data_dir),
+        "fig8" => experiments::fig8(models_dir, data_dir),
+        "ablations" => experiments::ablations(models_dir, data_dir),
+        "all" => {
+            let mut out = String::new();
+            for exp in [
+                "fig4", "fig5", "fig6", "fig7", "fig8", "table1", "table2", "table3", "table4",
+                "ablations",
+            ] {
+                out.push_str(&run(exp, models_dir, data_dir)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+}

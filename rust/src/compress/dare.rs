@@ -1,0 +1,88 @@
+//! DARE baseline (Yu et al. 2023, "Language Models are Super Mario"):
+//! global i.i.d. Bernoulli dropout on the delta weight with drop rate
+//! `p = 1 − 1/α`, then rescale the survivors by `1/(1−p) = α`.
+//!
+//! DARE differs from DeltaDQ's Group-wise Dropout only in mask
+//! granularity: it draws one global Bernoulli mask, so the per-row /
+//! per-group survivor counts fluctuate — exactly the variance the
+//! paper's row/group-exact masks remove (§3.3).
+
+use crate::compress::{CompressedDelta, Compressor, LayerContext};
+use crate::dropout::{dropout, DropoutKind};
+use crate::sparse::csr::CsrMatrix;
+use crate::tensor::{Matrix, Pcg64};
+
+/// The DARE compressor at ratio α.
+#[derive(Debug, Clone, Copy)]
+pub struct Dare {
+    pub alpha: f64,
+}
+
+impl Dare {
+    pub fn new(alpha: f64) -> Dare {
+        assert!(alpha >= 1.0);
+        Dare { alpha }
+    }
+}
+
+impl Compressor for Dare {
+    fn name(&self) -> String {
+        "DARE".to_string()
+    }
+
+    fn nominal_ratio(&self) -> f64 {
+        self.alpha
+    }
+
+    fn compress(
+        &self,
+        delta: &Matrix,
+        _ctx: &LayerContext<'_>,
+        rng: &mut Pcg64,
+    ) -> CompressedDelta {
+        let r = dropout(delta, self.alpha, DropoutKind::Global, rng);
+        CompressedDelta::Sparse(CsrMatrix::from_dense(&r.matrix))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_near_nominal() {
+        let mut rng0 = Pcg64::seeded(1);
+        let d = Matrix::randn(64, 64, 0.02, &mut rng0);
+        let dare = Dare::new(8.0);
+        let mut rng = Pcg64::seeded(2);
+        let c = dare.compress(&d, &LayerContext::data_free(0, "t"), &mut rng);
+        let density = c.nnz() as f64 / d.len() as f64;
+        assert!((density - 0.125).abs() < 0.02, "density {density}");
+    }
+
+    #[test]
+    fn survivors_rescaled() {
+        let d = Matrix::full(16, 16, 1.0);
+        let dare = Dare::new(4.0);
+        let mut rng = Pcg64::seeded(3);
+        let dense = dare.compress(&d, &LayerContext::data_free(0, "t"), &mut rng).to_dense();
+        for &v in dense.data() {
+            assert!(v == 0.0 || (v - 4.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn per_row_counts_fluctuate_unlike_rowwise() {
+        // The structural difference vs DeltaDQ: global masks give uneven
+        // per-row survivor counts.
+        let mut rng0 = Pcg64::seeded(4);
+        let d = Matrix::randn(32, 128, 0.02, &mut rng0);
+        let dare = Dare::new(4.0);
+        let mut rng = Pcg64::seeded(5);
+        let dense = dare.compress(&d, &LayerContext::data_free(0, "t"), &mut rng).to_dense();
+        let counts: Vec<usize> =
+            dense.rows_iter().map(|r| r.iter().filter(|v| **v != 0.0).count()).collect();
+        let distinct: std::collections::HashSet<usize> = counts.iter().copied().collect();
+        assert!(distinct.len() > 1, "global Bernoulli should vary per row: {counts:?}");
+    }
+}

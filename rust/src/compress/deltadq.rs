@@ -1,0 +1,191 @@
+//! The DeltaDQ pipeline (paper §3.3–§3.4, Fig. 2):
+//!
+//! 1. *(upstream)* Split Weight — `ΔW = W_ft − W_b` ([`crate::delta`]).
+//! 2. **Group-wise Dropout** — exact-count dropout within groups of
+//!    `h_g` along each row, survivors rescaled ×α.
+//! 3. **Separate Quantization** *(optional, for ultra-high ratios)* —
+//!    per-tensor k-bit uniform quantization, decomposed into m parts of
+//!    `k − log₂ m` bits each.
+//! 4. *(downstream)* Deployment — [`crate::coordinator`] serves the
+//!    compressed deltas with separate computation.
+
+use crate::compress::{CompressedDelta, Compressor, LayerContext};
+use crate::dropout::{dropout, DropoutKind};
+use crate::quant::separate::DecomposedDelta;
+use crate::sparse::csr::CsrMatrix;
+use crate::tensor::{Matrix, Pcg64};
+
+/// Configuration of one DeltaDQ run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeltaDqConfig {
+    /// Sparsification ratio α₁ (keep 1/α₁ of the delta elements).
+    pub alpha: f64,
+    /// Group size `h_g` for Group-wise Dropout. `None` = row-wise
+    /// (i.e. `h_g = h_in`). Normally chosen by [`crate::search`].
+    pub group_size: Option<usize>,
+    /// Separate Quantization `(k, m)`: quantize to `k` bits, decompose
+    /// into `m` parts (`None` = no quantization; values stay fp16).
+    pub quant: Option<(u32, u32)>,
+}
+
+impl DeltaDqConfig {
+    /// Dropout-only configuration (paper's 2×/4×/8× rows).
+    pub fn dropout_only(alpha: f64, group_size: Option<usize>) -> DeltaDqConfig {
+        DeltaDqConfig { alpha, group_size, quant: None }
+    }
+
+    /// Full pipeline with Separate Quantization.
+    pub fn with_quant(alpha: f64, group_size: Option<usize>, k: u32, m: u32) -> DeltaDqConfig {
+        DeltaDqConfig { alpha, group_size, quant: Some((k, m)) }
+    }
+
+    /// The paper's named operating points for a target total ratio
+    /// (§4.2): 2×–8× use dropout only; 16× = 8× dropout + 8-bit m=1;
+    /// 32× = 16× dropout + 8-bit; 64× = 8× + (k=4,m=4) 2-bit parts ≈
+    /// paper's m=4 row; 128× = 8× + (k=4,m=8) 1-bit parts; 256× = 16× +
+    /// (k=4,m=8); 512× = 32× + (k=4,m=8).
+    pub fn for_total_ratio(total: f64, group_size: Option<usize>) -> DeltaDqConfig {
+        match total as u64 {
+            0..=1 => DeltaDqConfig::dropout_only(1.0, group_size),
+            2 => DeltaDqConfig::dropout_only(2.0, group_size),
+            4 => DeltaDqConfig::dropout_only(4.0, group_size),
+            8 => DeltaDqConfig::dropout_only(8.0, group_size),
+            16 => DeltaDqConfig::with_quant(8.0, group_size, 8, 1),
+            32 => DeltaDqConfig::with_quant(16.0, group_size, 8, 1),
+            64 => DeltaDqConfig::with_quant(8.0, group_size, 4, 4),
+            128 => DeltaDqConfig::with_quant(8.0, group_size, 4, 8),
+            256 => DeltaDqConfig::with_quant(16.0, group_size, 4, 8),
+            512 => DeltaDqConfig::with_quant(32.0, group_size, 4, 8),
+            other => panic!("no canonical DeltaDQ operating point for {other}x"),
+        }
+    }
+}
+
+/// The DeltaDQ compressor.
+#[derive(Debug, Clone)]
+pub struct DeltaDq {
+    pub config: DeltaDqConfig,
+}
+
+impl DeltaDq {
+    pub fn new(config: DeltaDqConfig) -> DeltaDq {
+        DeltaDq { config }
+    }
+
+    /// Stage 2 only: the sparse delta after Group-wise Dropout.
+    pub fn sparsify(&self, delta: &Matrix, rng: &mut Pcg64) -> CsrMatrix {
+        let kind = match self.config.group_size {
+            Some(g) => DropoutKind::GroupWise { group_size: g },
+            None => DropoutKind::RowWise,
+        };
+        let result = dropout(delta, self.config.alpha, kind, rng);
+        CsrMatrix::from_dense(&result.matrix)
+    }
+}
+
+impl Compressor for DeltaDq {
+    fn name(&self) -> String {
+        match self.config.quant {
+            Some((_, m)) if m > 1 => format!("DeltaDQ(m={m})"),
+            Some(_) => "DeltaDQ(m=1)".to_string(),
+            None => "DeltaDQ".to_string(),
+        }
+    }
+
+    fn nominal_ratio(&self) -> f64 {
+        crate::compress::ratio::nominal_ratio(self.config.alpha, self.config.quant)
+    }
+
+    fn compress(
+        &self,
+        delta: &Matrix,
+        _ctx: &LayerContext<'_>,
+        rng: &mut Pcg64,
+    ) -> CompressedDelta {
+        let sparse = self.sparsify(delta, rng);
+        match self.config.quant {
+            None => CompressedDelta::Sparse(sparse),
+            Some((k, m)) => {
+                CompressedDelta::Quantized(DecomposedDelta::compress(&sparse, k, m))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::ratio::nominal_ratio;
+
+    fn delta(seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        Matrix::randn(16, 64, 0.02, &mut rng)
+    }
+
+    #[test]
+    fn dropout_only_density_matches_alpha() {
+        let d = delta(1);
+        let dq = DeltaDq::new(DeltaDqConfig::dropout_only(4.0, Some(16)));
+        let mut rng = Pcg64::seeded(2);
+        let c = dq.compress(&d, &LayerContext::data_free(0, "t"), &mut rng);
+        assert_eq!(c.nnz(), 16 * 64 / 4);
+        assert!(matches!(c, CompressedDelta::Sparse(_)));
+    }
+
+    #[test]
+    fn quantized_pipeline_produces_decomposed() {
+        let d = delta(3);
+        let dq = DeltaDq::new(DeltaDqConfig::with_quant(8.0, Some(8), 4, 8));
+        let mut rng = Pcg64::seeded(4);
+        let c = dq.compress(&d, &LayerContext::data_free(0, "t"), &mut rng);
+        match &c {
+            CompressedDelta::Quantized(q) => {
+                assert_eq!(q.part_bits(), 1, "4-bit quant over 8 parts → 1-bit");
+                assert_eq!(q.nnz(), 16 * 64 / 8);
+            }
+            other => panic!("expected quantized, got {other:?}"),
+        }
+        assert_eq!(dq.nominal_ratio(), 128.0);
+    }
+
+    #[test]
+    fn reconstruction_error_grows_with_alpha() {
+        let d = delta(5);
+        let mut errs = Vec::new();
+        for alpha in [2.0, 4.0, 8.0] {
+            let dq = DeltaDq::new(DeltaDqConfig::dropout_only(alpha, Some(16)));
+            let mut rng = Pcg64::seeded(6);
+            let c = dq.compress(&d, &LayerContext::data_free(0, "t"), &mut rng);
+            errs.push(d.sq_distance(&c.to_dense()));
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn canonical_operating_points_hit_ratio() {
+        for total in [2.0f64, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0] {
+            let cfg = DeltaDqConfig::for_total_ratio(total, None);
+            let got = nominal_ratio(cfg.alpha, cfg.quant);
+            assert_eq!(got, total, "config {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn names_follow_paper_convention() {
+        assert_eq!(DeltaDq::new(DeltaDqConfig::dropout_only(4.0, None)).name(), "DeltaDQ");
+        assert_eq!(
+            DeltaDq::new(DeltaDqConfig::with_quant(8.0, None, 8, 1)).name(),
+            "DeltaDQ(m=1)"
+        );
+        assert_eq!(
+            DeltaDq::new(DeltaDqConfig::with_quant(8.0, None, 4, 8)).name(),
+            "DeltaDQ(m=8)"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_operating_point_panics() {
+        let _ = DeltaDqConfig::for_total_ratio(96.0, None);
+    }
+}

@@ -1,0 +1,139 @@
+//! Magnitude pruning baseline (Han et al. 2015) applied to the delta
+//! weight: keep the global top-`1/α` fraction of elements by |Δw|,
+//! drop the rest. No rescaling (magnitude pruning is not an unbiased
+//! estimator — it deliberately keeps the largest weights as-is).
+
+use crate::compress::{CompressedDelta, Compressor, LayerContext};
+use crate::sparse::csr::CsrMatrix;
+use crate::tensor::{Matrix, Pcg64};
+
+/// Global magnitude pruner at ratio α.
+#[derive(Debug, Clone, Copy)]
+pub struct Magnitude {
+    pub alpha: f64,
+}
+
+impl Magnitude {
+    pub fn new(alpha: f64) -> Magnitude {
+        assert!(alpha >= 1.0);
+        Magnitude { alpha }
+    }
+
+    /// The |value| threshold that keeps `keep` elements (k-th largest).
+    fn threshold(delta: &Matrix, keep: usize) -> f32 {
+        if keep == 0 {
+            return f32::INFINITY;
+        }
+        if keep >= delta.len() {
+            return 0.0;
+        }
+        let mut mags: Vec<f32> = delta.data().iter().map(|v| v.abs()).collect();
+        // select_nth_unstable puts the (len-keep)-th smallest in place so
+        // everything right of it is the top-`keep` set.
+        let idx = mags.len() - keep;
+        let (_, nth, _) = mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+        *nth
+    }
+}
+
+impl Compressor for Magnitude {
+    fn name(&self) -> String {
+        "Magnitude".to_string()
+    }
+
+    fn nominal_ratio(&self) -> f64 {
+        self.alpha
+    }
+
+    fn compress(
+        &self,
+        delta: &Matrix,
+        _ctx: &LayerContext<'_>,
+        _rng: &mut Pcg64,
+    ) -> CompressedDelta {
+        let keep = (delta.len() as f64 / self.alpha).round() as usize;
+        let thresh = Self::threshold(delta, keep);
+        let mut out = delta.clone();
+        // Keep strictly-above-threshold, then fill remaining quota from
+        // the elements exactly at the threshold (ties).
+        let mut kept = 0usize;
+        for v in out.data_mut() {
+            if v.abs() > thresh {
+                kept += 1;
+            } else {
+                *v = 0.0;
+            }
+        }
+        if kept < keep && thresh.is_finite() {
+            let mut quota = keep - kept;
+            for (i, &orig) in delta.data().iter().enumerate() {
+                if quota == 0 {
+                    break;
+                }
+                if orig.abs() == thresh && orig != 0.0 {
+                    out.data_mut()[i] = orig;
+                    quota -= 1;
+                }
+            }
+        }
+        CompressedDelta::Sparse(CsrMatrix::from_dense(&out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let d = Matrix::from_vec(2, 4, vec![0.1, -0.9, 0.2, 0.8, -0.05, 0.3, -0.7, 0.01]);
+        let m = Magnitude::new(2.0);
+        let mut rng = Pcg64::seeded(1);
+        let c = m.compress(&d, &LayerContext::data_free(0, "t"), &mut rng);
+        let dense = c.to_dense();
+        // top-4 by |v|: -0.9, 0.8, -0.7, 0.3
+        assert_eq!(dense.get(0, 1), -0.9);
+        assert_eq!(dense.get(0, 3), 0.8);
+        assert_eq!(dense.get(1, 2), -0.7);
+        assert_eq!(dense.get(1, 1), 0.3);
+        assert_eq!(c.nnz(), 4);
+    }
+
+    #[test]
+    fn no_rescaling_applied() {
+        let d = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let m = Magnitude::new(2.0);
+        let mut rng = Pcg64::seeded(2);
+        let dense = m.compress(&d, &LayerContext::data_free(0, "t"), &mut rng).to_dense();
+        assert_eq!(dense.data(), &[0.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn exact_keep_count_with_ties() {
+        let d = Matrix::full(2, 8, 0.5); // every |v| equal
+        let m = Magnitude::new(4.0);
+        let mut rng = Pcg64::seeded(3);
+        let c = m.compress(&d, &LayerContext::data_free(0, "t"), &mut rng);
+        assert_eq!(c.nnz(), 4, "ties must be broken to hit the quota");
+    }
+
+    #[test]
+    fn alpha_one_keeps_all() {
+        let mut rng0 = Pcg64::seeded(4);
+        let d = Matrix::randn(4, 8, 1.0, &mut rng0);
+        let m = Magnitude::new(1.0);
+        let mut rng = Pcg64::seeded(5);
+        let c = m.compress(&d, &LayerContext::data_free(0, "t"), &mut rng);
+        assert!(c.to_dense().allclose(&d, 0.0, 0.0));
+    }
+
+    #[test]
+    fn extreme_alpha_keeps_none_or_few() {
+        let mut rng0 = Pcg64::seeded(6);
+        let d = Matrix::randn(4, 8, 1.0, &mut rng0);
+        let m = Magnitude::new(64.0);
+        let mut rng = Pcg64::seeded(7);
+        let c = m.compress(&d, &LayerContext::data_free(0, "t"), &mut rng);
+        assert!(c.nnz() <= 1);
+    }
+}

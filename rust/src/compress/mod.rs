@@ -1,0 +1,152 @@
+//! Delta-compression framework (S5): the [`Compressor`] trait, the
+//! compressed-delta representation shared by all methods, and the four
+//! pipelines the paper evaluates — [`deltadq::DeltaDq`] plus the
+//! [`magnitude::Magnitude`], [`dare::Dare`], and [`deltazip::DeltaZip`]
+//! baselines (Table 1–3).
+
+pub mod dare;
+pub mod deltadq;
+pub mod deltazip;
+pub mod magnitude;
+pub mod pipeline;
+pub mod ratio;
+
+pub use dare::Dare;
+pub use deltadq::{DeltaDq, DeltaDqConfig};
+pub use deltazip::{DeltaZip, DeltaZipConfig};
+pub use magnitude::Magnitude;
+pub use ratio::RatioReport;
+
+use crate::quant::separate::DecomposedDelta;
+use crate::sparse::csr::CsrMatrix;
+use crate::tensor::{Matrix, Pcg64};
+
+/// A compressed per-layer delta weight, ready for storage or the
+/// separate-computation serving path.
+#[derive(Debug, Clone)]
+pub enum CompressedDelta {
+    /// Sparse fp16-valued delta (dropout / magnitude output).
+    Sparse(CsrMatrix),
+    /// Sparse + Separate-Quantized delta (DeltaDQ with quantization, or
+    /// DELTAZIP's sparse+quant output represented post-hoc).
+    Quantized(DecomposedDelta),
+    /// Dense fake-quantized delta (no sparsity — not produced by any of
+    /// the paper's methods at α>1, but used by ablations).
+    Dense(Matrix),
+}
+
+impl CompressedDelta {
+    /// Reconstruct the (approximate) dense delta.
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            CompressedDelta::Sparse(csr) => csr.to_dense(),
+            CompressedDelta::Quantized(d) => d.to_dense(),
+            CompressedDelta::Dense(m) => m.clone(),
+        }
+    }
+
+    /// Accumulate `scale · Δ` into a dense weight buffer (serving path).
+    pub fn add_to_dense(&self, out: &mut Matrix, scale: f32) {
+        match self {
+            CompressedDelta::Sparse(csr) => csr.add_to_dense(out, scale),
+            CompressedDelta::Quantized(d) => d.add_to_dense(out, scale),
+            CompressedDelta::Dense(m) => out.add_scaled(m, scale),
+        }
+    }
+
+    /// Delta-path matmul `X·Δᵀ` without densifying.
+    pub fn matmul_nt_from_dense(&self, x: &Matrix) -> Matrix {
+        match self {
+            CompressedDelta::Sparse(csr) => csr.matmul_nt_from_dense(x),
+            CompressedDelta::Quantized(d) => d.matmul_nt_from_dense(x),
+            CompressedDelta::Dense(m) => x.matmul_nt(m),
+        }
+    }
+
+    /// (rows, cols).
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            CompressedDelta::Sparse(csr) => csr.shape(),
+            CompressedDelta::Quantized(d) => d.shape(),
+            CompressedDelta::Dense(m) => m.shape(),
+        }
+    }
+
+    /// Stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        match self {
+            CompressedDelta::Sparse(csr) => csr.nnz(),
+            CompressedDelta::Quantized(d) => d.nnz(),
+            CompressedDelta::Dense(m) => m.count_nonzeros(),
+        }
+    }
+
+    /// Measured storage cost in bits (paper accounting; DESIGN.md §7).
+    pub fn storage_bits(&self) -> u64 {
+        match self {
+            // fp16 values + 16-bit column indices + 32-bit row offsets
+            CompressedDelta::Sparse(csr) => csr.storage_bits(16, 16, 32),
+            CompressedDelta::Quantized(d) => d.storage_bits(),
+            CompressedDelta::Dense(m) => m.len() as u64 * 16,
+        }
+    }
+}
+
+/// Per-layer context available to a compressor.
+pub struct LayerContext<'a> {
+    /// Layer index (0-based) within the model.
+    pub layer_index: usize,
+    /// Human-readable tensor name ("layers.3.attn.wq" etc.).
+    pub name: &'a str,
+    /// Calibration inputs `X` for this tensor (t × h_in) — required by
+    /// second-order methods (DELTAZIP); ignored by data-free methods.
+    pub calibration: Option<&'a Matrix>,
+}
+
+impl<'a> LayerContext<'a> {
+    /// A data-free context (no calibration inputs).
+    pub fn data_free(layer_index: usize, name: &'a str) -> LayerContext<'a> {
+        LayerContext { layer_index, name, calibration: None }
+    }
+}
+
+/// A delta-weight compression method (one of the paper's four).
+pub trait Compressor {
+    /// Display name used in tables ("DeltaDQ", "DARE", …).
+    fn name(&self) -> String;
+
+    /// Nominal compression ratio (the paper's α·16/(k−log₂m) headline).
+    fn nominal_ratio(&self) -> f64;
+
+    /// Compress one layer's delta weight.
+    fn compress(
+        &self,
+        delta: &Matrix,
+        ctx: &LayerContext<'_>,
+        rng: &mut Pcg64,
+    ) -> CompressedDelta;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    #[test]
+    fn compressed_delta_dense_passthrough() {
+        let mut rng = Pcg64::seeded(1);
+        let m = Matrix::randn(4, 6, 0.1, &mut rng);
+        let c = CompressedDelta::Dense(m.clone());
+        assert_eq!(c.to_dense(), m);
+        assert_eq!(c.shape(), (4, 6));
+        assert_eq!(c.storage_bits(), 24 * 16);
+    }
+
+    #[test]
+    fn sparse_variant_storage_counts_csr() {
+        let m = Matrix::from_vec(2, 4, vec![0.0, 1.0, 0.0, 0.0, 2.0, 0.0, 0.0, 3.0]);
+        let c = CompressedDelta::Sparse(CsrMatrix::from_dense(&m));
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.storage_bits(), 3 * 32 + 3 * 32);
+    }
+}

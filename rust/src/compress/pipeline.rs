@@ -1,0 +1,229 @@
+//! Whole-model compression pipeline: run a [`Compressor`] over every
+//! delta tensor of a fine-tuned model, with optional calibration-input
+//! capture for second-order methods (DELTAZIP).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::compress::{CompressedDelta, Compressor, LayerContext};
+use crate::delta::format::DeltaSet;
+use crate::eval::tasks::Sample;
+use crate::model::forward::{forward, WeightSource};
+use crate::model::weights::ModelWeights;
+use crate::model::ModelConfig;
+use crate::tensor::{Matrix, Pcg64};
+
+/// A [`WeightSource`] wrapper that records the inputs fed to each
+/// linear layer — calibration capture for SparseGPT-style methods.
+pub struct RecordingSource<'a, S: WeightSource> {
+    inner: &'a S,
+    records: RefCell<BTreeMap<String, Vec<Matrix>>>,
+    /// Cap on captured rows per tensor (keeps the Hessian cheap).
+    max_rows: usize,
+}
+
+impl<'a, S: WeightSource> RecordingSource<'a, S> {
+    pub fn new(inner: &'a S, max_rows: usize) -> RecordingSource<'a, S> {
+        RecordingSource { inner, records: RefCell::new(BTreeMap::new()), max_rows }
+    }
+
+    /// Concatenate recorded inputs per tensor (rows capped).
+    pub fn into_calibration(self) -> BTreeMap<String, Matrix> {
+        let records = self.records.into_inner();
+        let mut out = BTreeMap::new();
+        for (name, chunks) in records {
+            let cols = chunks[0].cols();
+            let mut rows = 0usize;
+            let mut data = Vec::new();
+            'outer: for chunk in &chunks {
+                for r in 0..chunk.rows() {
+                    if rows >= self.max_rows {
+                        break 'outer;
+                    }
+                    data.extend_from_slice(chunk.row(r));
+                    rows += 1;
+                }
+            }
+            out.insert(name, Matrix::from_vec(rows, cols, data));
+        }
+        out
+    }
+}
+
+impl<'a, S: WeightSource> WeightSource for RecordingSource<'a, S> {
+    fn config(&self) -> ModelConfig {
+        self.inner.config()
+    }
+
+    fn dense(&self, name: &str) -> &Matrix {
+        self.inner.dense(name)
+    }
+
+    fn linear(&self, name: &str, x: &Matrix) -> Matrix {
+        let mut records = self.records.borrow_mut();
+        let entry = records.entry(name.to_string()).or_default();
+        let have: usize = entry.iter().map(|m| m.rows()).sum();
+        if have < self.max_rows {
+            entry.push(x.clone());
+        }
+        drop(records);
+        self.inner.linear(name, x)
+    }
+}
+
+/// Run forward passes over `samples` against the *fine-tuned* weights
+/// and capture per-tensor linear inputs (DELTAZIP calibrates against
+/// the model being compressed).
+pub fn capture_calibration(
+    weights: &ModelWeights,
+    samples: &[Sample],
+    max_rows: usize,
+) -> BTreeMap<String, Matrix> {
+    let rec = RecordingSource::new(weights, max_rows);
+    for s in samples {
+        let seq = s.full_sequence();
+        let _ = forward(&rec, &seq[..seq.len() - 1]);
+    }
+    rec.into_calibration()
+}
+
+/// Compress every delta tensor of a model with the given method.
+///
+/// `calibration` maps tensor name → captured inputs; pass an empty map
+/// for data-free methods.
+pub fn compress_model_deltas(
+    deltas: &BTreeMap<String, Matrix>,
+    method: &dyn Compressor,
+    calibration: &BTreeMap<String, Matrix>,
+    rng: &mut Pcg64,
+) -> DeltaSet {
+    let mut set = DeltaSet::new(&method.name(), method.nominal_ratio());
+    for (idx, (name, delta)) in deltas.iter().enumerate() {
+        let ctx = LayerContext {
+            layer_index: layer_index_of(name),
+            name,
+            calibration: calibration.get(name),
+        };
+        let _ = idx;
+        let compressed = method.compress(delta, &ctx, rng);
+        set.tensors.insert(name.clone(), compressed);
+    }
+    set
+}
+
+/// Reconstruct full fine-tuned weights from base + compressed deltas
+/// (the merged path; the serving path uses `DeltaView` instead).
+pub fn reconstruct_weights(base: &ModelWeights, set: &DeltaSet) -> ModelWeights {
+    let mut out = base.clone();
+    for (name, delta) in &set.tensors {
+        delta.add_to_dense(out.get_mut(name), 1.0);
+    }
+    out
+}
+
+/// Convert a `DeltaSet` to the per-tensor map a `DeltaView` needs.
+pub fn delta_map(set: &DeltaSet) -> BTreeMap<String, CompressedDelta> {
+    set.tensors.clone()
+}
+
+/// Parse the layer index out of "layers.<i>.…" (0 for globals).
+pub fn layer_index_of(name: &str) -> usize {
+    name.strip_prefix("layers.")
+        .and_then(|rest| rest.split('.').next())
+        .and_then(|i| i.parse().ok())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Dare, DeltaDq, DeltaDqConfig, DeltaZip, DeltaZipConfig};
+    use crate::delta::extract::extract_deltas;
+    use crate::eval::tasks::{gen_dataset, TaskKind};
+
+    fn base_and_ft() -> (ModelWeights, ModelWeights) {
+        let mut rng = Pcg64::seeded(1);
+        let base = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+        let mut ft = base.clone();
+        let mut rng2 = Pcg64::seeded(2);
+        for name in base.config.delta_tensor_names() {
+            let (r, c) = ft.get(&name).shape();
+            ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, &mut rng2));
+        }
+        (base, ft)
+    }
+
+    #[test]
+    fn layer_index_parsing() {
+        assert_eq!(layer_index_of("layers.3.attn.wq"), 3);
+        assert_eq!(layer_index_of("layers.11.mlp.down"), 11);
+        assert_eq!(layer_index_of("lm_head"), 0);
+    }
+
+    #[test]
+    fn compress_all_tensors() {
+        let (base, ft) = base_and_ft();
+        let deltas = extract_deltas(&base, &ft);
+        let mut rng = Pcg64::seeded(3);
+        let dq = DeltaDq::new(DeltaDqConfig::dropout_only(4.0, Some(16)));
+        let set = compress_model_deltas(&deltas, &dq, &BTreeMap::new(), &mut rng);
+        assert_eq!(set.tensors.len(), deltas.len());
+        assert_eq!(set.method, "DeltaDQ");
+        // density across the whole set ≈ 1/4
+        let density = set.nnz() as f64 / set.total_elems() as f64;
+        assert!((density - 0.25).abs() < 0.01, "density {density}");
+    }
+
+    #[test]
+    fn reconstruct_approximates_finetuned() {
+        let (base, ft) = base_and_ft();
+        let deltas = extract_deltas(&base, &ft);
+        let mut rng = Pcg64::seeded(4);
+        // alpha = 1: lossless; reconstruction must equal the fine-tune
+        let dq = DeltaDq::new(DeltaDqConfig::dropout_only(1.0, None));
+        let set = compress_model_deltas(&deltas, &dq, &BTreeMap::new(), &mut rng);
+        let rebuilt = reconstruct_weights(&base, &set);
+        for (name, t) in ft.iter() {
+            assert!(rebuilt.get(name).allclose(t, 1e-5, 1e-5), "{name}");
+        }
+    }
+
+    #[test]
+    fn calibration_capture_covers_all_linear_tensors() {
+        let (_, ft) = base_and_ft();
+        let data = gen_dataset(TaskKind::Math, 4, 5);
+        let calib = capture_calibration(&ft, &data, 64);
+        // 7 tensors per layer + lm_head
+        let c = ft.config;
+        for name in c.delta_tensor_names() {
+            let x = calib.get(&name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(x.rows() > 0 && x.rows() <= 64);
+            let expected_cols = ft.get(&name).cols();
+            assert_eq!(x.cols(), expected_cols, "{name}");
+        }
+        assert!(calib.contains_key("lm_head"));
+    }
+
+    #[test]
+    fn deltazip_consumes_calibration() {
+        let (base, ft) = base_and_ft();
+        let deltas = extract_deltas(&base, &ft);
+        let data = gen_dataset(TaskKind::Math, 4, 6);
+        let calib = capture_calibration(&ft, &data, 32);
+        let mut rng = Pcg64::seeded(7);
+        let dz = DeltaZip::new(DeltaZipConfig::sparsify_only(4.0));
+        let set = compress_model_deltas(&deltas, &dz, &calib, &mut rng);
+        let density = set.nnz() as f64 / set.total_elems() as f64;
+        assert!((density - 0.25).abs() < 0.02, "density {density}");
+    }
+
+    #[test]
+    fn dare_runs_data_free() {
+        let (base, ft) = base_and_ft();
+        let deltas = extract_deltas(&base, &ft);
+        let mut rng = Pcg64::seeded(8);
+        let set = compress_model_deltas(&deltas, &Dare::new(8.0), &BTreeMap::new(), &mut rng);
+        let density = set.nnz() as f64 / set.total_elems() as f64;
+        assert!((density - 0.125).abs() < 0.01, "density {density}");
+    }
+}

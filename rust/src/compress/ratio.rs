@@ -1,0 +1,120 @@
+//! Compression-ratio accounting.
+//!
+//! The paper quotes ratios **on the delta weight** against an fp16 dense
+//! baseline (16 bits/element). Two views are reported:
+//!
+//! * **nominal ratio** — the paper's headline number: the sparsification
+//!   ratio `α` times the quantization gain `16/(k − log₂ m)` (§3.4).
+//! * **storage ratio** — measured bits: dense fp16 cost divided by the
+//!   actual CSR/bit-packed footprint including indices, offsets and
+//!   quantization parameters (what Figure 7's memory axis shows).
+
+/// Bits to store a dense fp16 tensor of `elems` elements.
+pub fn dense_fp16_bits(elems: u64) -> u64 {
+    elems * 16
+}
+
+/// Nominal combined ratio `α · 16/(k − log₂ m)` (paper §3.4). With no
+/// quantization the second factor is 1 (values stay fp16).
+pub fn nominal_ratio(alpha: f64, quant: Option<(u32, u32)>) -> f64 {
+    match quant {
+        None => alpha,
+        Some((k, m)) => {
+            assert!(m.is_power_of_two() && m <= (1 << k));
+            let final_bits = k - m.ilog2();
+            if final_bits == 0 {
+                // The "-" rows of Tables 2–3: every part stores a single
+                // value; treat as the limit (ratio dominated by indices).
+                f64::INFINITY
+            } else {
+                alpha * 16.0 / final_bits as f64
+            }
+        }
+    }
+}
+
+/// Measured storage ratio: dense fp16 bits / actual compressed bits.
+pub fn storage_ratio(elems: u64, compressed_bits: u64) -> f64 {
+    if compressed_bits == 0 {
+        return f64::INFINITY;
+    }
+    dense_fp16_bits(elems) as f64 / compressed_bits as f64
+}
+
+/// Aggregate accounting across layers of a model.
+#[derive(Debug, Clone, Default)]
+pub struct RatioReport {
+    pub dense_bits: u64,
+    pub compressed_bits: u64,
+    pub total_elems: u64,
+    pub total_nnz: u64,
+}
+
+impl RatioReport {
+    pub fn add_layer(&mut self, elems: u64, nnz: u64, compressed_bits: u64) {
+        self.dense_bits += dense_fp16_bits(elems);
+        self.compressed_bits += compressed_bits;
+        self.total_elems += elems;
+        self.total_nnz += nnz;
+    }
+
+    /// Measured storage ratio over all layers.
+    pub fn storage_ratio(&self) -> f64 {
+        storage_ratio(self.total_elems, self.compressed_bits)
+    }
+
+    /// Measured density (nnz / elems).
+    pub fn density(&self) -> f64 {
+        if self.total_elems == 0 {
+            0.0
+        } else {
+            self.total_nnz as f64 / self.total_elems as f64
+        }
+    }
+
+    /// Compressed footprint in mebibytes.
+    pub fn compressed_mib(&self) -> f64 {
+        self.compressed_bits as f64 / 8.0 / 1024.0 / 1024.0
+    }
+
+    /// Dense fp16 footprint in mebibytes.
+    pub fn dense_mib(&self) -> f64 {
+        self.dense_bits as f64 / 8.0 / 1024.0 / 1024.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_ratio_paper_configs() {
+        // Table 1 @16x: dropout 8x + 8-bit m=1 quant -> 8 * 16/8 = 16
+        assert_eq!(nominal_ratio(8.0, Some((8, 1))), 16.0);
+        // §4.2: 128x on 7B = dropout 8x + (k=4, m=8) -> 1-bit parts
+        assert_eq!(nominal_ratio(8.0, Some((4, 8))), 128.0);
+        // §4.2: 512x on 70B = dropout 32x + (k=4, m=8)
+        assert_eq!(nominal_ratio(32.0, Some((4, 8))), 512.0);
+        // dropout-only rows
+        assert_eq!(nominal_ratio(4.0, None), 4.0);
+        // the "-" extreme: m = 2^k
+        assert!(nominal_ratio(8.0, Some((4, 16))).is_infinite());
+    }
+
+    #[test]
+    fn storage_ratio_basics() {
+        assert_eq!(storage_ratio(100, 1600), 1.0);
+        assert_eq!(storage_ratio(100, 800), 2.0);
+        assert!(storage_ratio(100, 0).is_infinite());
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut r = RatioReport::default();
+        r.add_layer(1000, 250, 250 * 32);
+        r.add_layer(1000, 250, 250 * 32);
+        assert_eq!(r.density(), 0.25);
+        assert_eq!(r.storage_ratio(), 2.0);
+        assert!((r.dense_mib() - 2000.0 * 16.0 / 8.0 / 1024.0 / 1024.0).abs() < 1e-12);
+    }
+}

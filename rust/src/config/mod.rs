@@ -1,0 +1,292 @@
+//! Configuration system (S12): a TOML-subset parser (no external deps)
+//! plus the typed configs for serving and experiments.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with
+//! string / integer / float / boolean / flat-array values, `#` comments.
+//! This covers every config the launcher ships; nested tables and
+//! multi-line values are intentionally out of scope.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar (or flat array) config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key → value` config map.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse from TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let parsed = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value for '{full_key}'", lineno + 1))?;
+            values.insert(full_key, parsed);
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Config::parse(&text)
+    }
+
+    /// Apply `key=value` CLI overrides on top of the file values.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for o in overrides {
+            let (key, value) = o
+                .split_once('=')
+                .with_context(|| format!("override '{o}' must be key=value"))?;
+            let parsed = parse_value(value.trim())?;
+            self.values.insert(key.trim().to_string(), parsed);
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let items: Result<Vec<Value>> = inner
+            .split(',')
+            .map(|p| p.trim())
+            .filter(|p| !p.is_empty())
+            .map(parse_value)
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+/// Typed serving configuration (consumed by the coordinator).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Model scale preset name.
+    pub model: String,
+    /// Directory holding `base.dqw` + `<tenant>.ddq` files.
+    pub artifacts_dir: String,
+    /// Max requests batched per tenant step.
+    pub max_batch: usize,
+    /// Batching window in microseconds.
+    pub batch_window_us: u64,
+    /// Dense-cache budget in MiB (0 = unbounded).
+    pub cache_budget_mib: u64,
+    /// Worker threads for the execution pool.
+    pub workers: usize,
+    /// Max queued requests per tenant before backpressure.
+    pub queue_depth: usize,
+    /// Use the PJRT runtime when artifacts are present.
+    pub use_pjrt: bool,
+}
+
+impl ServeConfig {
+    pub fn from_config(c: &Config) -> ServeConfig {
+        ServeConfig {
+            model: c.str_or("serve.model", "tiny"),
+            artifacts_dir: c.str_or("serve.artifacts_dir", "artifacts"),
+            max_batch: c.int_or("serve.max_batch", 8) as usize,
+            batch_window_us: c.int_or("serve.batch_window_us", 500) as u64,
+            cache_budget_mib: c.int_or("serve.cache_budget_mib", 64) as u64,
+            workers: c.int_or("serve.workers", 4) as usize,
+            queue_depth: c.int_or("serve.queue_depth", 256) as usize,
+            use_pjrt: c.bool_or("serve.use_pjrt", false),
+        }
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig::from_config(&Config::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(
+            r#"
+# top comment
+title = "deltadq"        # inline comment
+[serve]
+max_batch = 16
+window = 2.5
+use_pjrt = true
+ratios = [2, 4, 8]
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.str_or("title", ""), "deltadq");
+        assert_eq!(c.int_or("serve.max_batch", 0), 16);
+        assert_eq!(c.float_or("serve.window", 0.0), 2.5);
+        assert!(c.bool_or("serve.use_pjrt", false));
+        match c.get("serve.ratios").unwrap() {
+            Value::Array(items) => assert_eq!(items.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let c = Config::parse(r##"key = "a#b""##).unwrap();
+        assert_eq!(c.str_or("key", ""), "a#b");
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("[serve]\nmax_batch = 8").unwrap();
+        c.apply_overrides(&["serve.max_batch=32".to_string()]).unwrap();
+        assert_eq!(c.int_or("serve.max_batch", 0), 32);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("keyonly").is_err());
+        assert!(Config::parse("k = ").is_err());
+        assert!(Config::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn serve_config_defaults() {
+        let sc = ServeConfig::default();
+        assert_eq!(sc.model, "tiny");
+        assert_eq!(sc.max_batch, 8);
+        assert!(!sc.use_pjrt);
+    }
+
+    #[test]
+    fn serve_config_from_file_values() {
+        let c = Config::parse("[serve]\nmodel = \"base\"\nworkers = 2").unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.model, "base");
+        assert_eq!(sc.workers, 2);
+        assert_eq!(sc.max_batch, 8); // default fills the rest
+    }
+}

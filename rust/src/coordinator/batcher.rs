@@ -1,0 +1,273 @@
+//! Request types and the per-tenant dynamic batcher.
+//!
+//! Requests are routed into per-tenant FIFO queues (bounded →
+//! backpressure). Workers pull *tenant batches*: the batcher picks the
+//! tenant with the oldest head-of-line request (FIFO-fair across
+//! tenants, like vLLM's FCFS default), then holds the batch open for up
+//! to `batch_window` to let more same-tenant requests join — batching
+//! is per tenant because the whole point of the deployment scheme is
+//! that each tenant shares one (base, Δ) weight pair.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One generation request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tenant: String,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub submitted: Instant,
+    /// Channel the worker sends the response on.
+    pub respond: mpsc::Sender<Response>,
+}
+
+/// One generation response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tenant: String,
+    pub tokens: Vec<u32>,
+    pub queue_wait: Duration,
+    pub total: Duration,
+    /// Whether the tenant was Hot (dense cache) when executed.
+    pub served_hot: bool,
+}
+
+/// Submission failure modes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Per-tenant queue full — caller should back off.
+    Backpressure { tenant: String, depth: usize },
+    /// Tenant not registered.
+    UnknownTenant(String),
+    /// Batcher shut down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure { tenant, depth } => {
+                write!(f, "tenant '{tenant}' queue full (depth {depth})")
+            }
+            SubmitError::UnknownTenant(t) => write!(f, "unknown tenant '{t}'"),
+            SubmitError::Closed => write!(f, "batcher closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+struct Inner {
+    queues: BTreeMap<String, VecDeque<Request>>,
+    closed: bool,
+}
+
+/// Per-tenant dynamic batcher.
+pub struct Batcher {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub batch_window: Duration,
+    pub queue_depth: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, batch_window: Duration, queue_depth: usize) -> Batcher {
+        Batcher {
+            inner: Mutex::new(Inner { queues: BTreeMap::new(), closed: false }),
+            cv: Condvar::new(),
+            max_batch: max_batch.max(1),
+            batch_window,
+            queue_depth: queue_depth.max(1),
+        }
+    }
+
+    /// Declare a tenant (creates its queue).
+    pub fn add_tenant(&self, tenant: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.queues.entry(tenant.to_string()).or_default();
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(SubmitError::Closed);
+        }
+        let Some(q) = inner.queues.get_mut(&req.tenant) else {
+            return Err(SubmitError::UnknownTenant(req.tenant.clone()));
+        };
+        if q.len() >= self.queue_depth {
+            return Err(SubmitError::Backpressure {
+                tenant: req.tenant.clone(),
+                depth: self.queue_depth,
+            });
+        }
+        q.push_back(req);
+        drop(inner);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Total queued requests (all tenants).
+    pub fn queued(&self) -> usize {
+        self.inner.lock().unwrap().queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Pull the next tenant batch. Blocks until work arrives or the
+    /// batcher closes (then returns `None` once all queues drain).
+    pub fn next_batch(&self) -> Option<(String, Vec<Request>)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            // pick the tenant whose head request is oldest
+            let pick = inner
+                .queues
+                .iter()
+                .filter_map(|(t, q)| q.front().map(|r| (t.clone(), r.submitted)))
+                .min_by_key(|(_, at)| *at);
+            match pick {
+                Some((tenant, head_at)) => {
+                    let q_len = inner.queues[&tenant].len();
+                    let age = head_at.elapsed();
+                    if q_len < self.max_batch && age < self.batch_window {
+                        // hold the batch open for stragglers
+                        let wait = self.batch_window - age;
+                        let (guard, _timeout) = self.cv.wait_timeout(inner, wait).unwrap();
+                        inner = guard;
+                        continue;
+                    }
+                    let q = inner.queues.get_mut(&tenant).unwrap();
+                    let n = q.len().min(self.max_batch);
+                    let batch: Vec<Request> = q.drain(..n).collect();
+                    return Some((tenant, batch));
+                }
+                None if inner.closed => return None,
+                None => {
+                    inner = self.cv.wait(inner).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Shut down: wake all workers; `next_batch` drains then returns None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(tenant: &str, id: u64) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                tenant: tenant.into(),
+                prompt: vec![1, 2, 3],
+                max_new: 4,
+                submitted: Instant::now(),
+                respond: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_same_tenant_together() {
+        let b = Batcher::new(4, Duration::from_millis(5), 16);
+        b.add_tenant("a");
+        for i in 0..4 {
+            let (r, _rx) = req("a", i);
+            b.submit(r).unwrap();
+        }
+        let (tenant, batch) = b.next_batch().unwrap();
+        assert_eq!(tenant, "a");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn window_flushes_partial_batches() {
+        let b = Batcher::new(8, Duration::from_millis(10), 16);
+        b.add_tenant("a");
+        let (r, _rx) = req("a", 0);
+        b.submit(r).unwrap();
+        let t0 = Instant::now();
+        let (_, batch) = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(8), "waited the window");
+    }
+
+    #[test]
+    fn oldest_head_wins_across_tenants() {
+        let b = Batcher::new(4, Duration::from_millis(0), 16);
+        b.add_tenant("a");
+        b.add_tenant("z");
+        let (r1, _rx1) = req("z", 1);
+        b.submit(r1).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let (r2, _rx2) = req("a", 2);
+        b.submit(r2).unwrap();
+        let (tenant, _) = b.next_batch().unwrap();
+        assert_eq!(tenant, "z", "z submitted first");
+        let (tenant, _) = b.next_batch().unwrap();
+        assert_eq!(tenant, "a");
+    }
+
+    #[test]
+    fn backpressure_on_full_queue() {
+        let b = Batcher::new(4, Duration::from_millis(1), 2);
+        b.add_tenant("a");
+        let (r1, _x1) = req("a", 1);
+        let (r2, _x2) = req("a", 2);
+        let (r3, _x3) = req("a", 3);
+        b.submit(r1).unwrap();
+        b.submit(r2).unwrap();
+        match b.submit(r3) {
+            Err(SubmitError::Backpressure { depth, .. }) => assert_eq!(depth, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_tenant_rejected() {
+        let b = Batcher::new(4, Duration::from_millis(1), 4);
+        let (r, _rx) = req("ghost", 1);
+        assert_eq!(b.submit(r).unwrap_err(), SubmitError::UnknownTenant("ghost".into()));
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let b = Batcher::new(4, Duration::from_millis(0), 16);
+        b.add_tenant("a");
+        let (r, _rx) = req("a", 1);
+        b.submit(r).unwrap();
+        b.close();
+        assert!(b.next_batch().is_some(), "queued work still served");
+        assert!(b.next_batch().is_none(), "then shutdown");
+        // submissions after close fail
+        let (r2, _rx2) = req("a", 2);
+        assert_eq!(b.submit(r2).unwrap_err(), SubmitError::Closed);
+    }
+
+    #[test]
+    fn blocking_worker_wakes_on_submit() {
+        let b = std::sync::Arc::new(Batcher::new(2, Duration::from_millis(0), 8));
+        b.add_tenant("a");
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        let (r, _rx) = req("a", 7);
+        b.submit(r).unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got.unwrap().1[0].id, 7);
+    }
+}

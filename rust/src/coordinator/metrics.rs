@@ -1,0 +1,122 @@
+//! Serving metrics: lock-free counters plus latency accumulators,
+//! snapshot-able as JSON for the demo server's periodic report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::tensor::stats::Accumulator;
+use crate::util::json::Json;
+
+/// Coordinator-wide metrics. Cheap to update from any worker thread.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub batches_executed: AtomicU64,
+    pub promotions: AtomicU64,
+    pub evictions: AtomicU64,
+    /// End-to-end request latency (seconds).
+    latency: Mutex<Accumulator>,
+    /// Queue wait before batch pickup (seconds).
+    queue_wait: Mutex<Accumulator>,
+    /// Per-batch execution time (seconds).
+    batch_exec: Mutex<Accumulator>,
+    /// p50/p99 need raw samples; bounded ring of recent latencies.
+    recent_latencies: Mutex<Vec<f64>>,
+}
+
+const RECENT_CAP: usize = 4096;
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn observe_latency(&self, seconds: f64) {
+        self.latency.lock().unwrap().add(seconds);
+        let mut recent = self.recent_latencies.lock().unwrap();
+        if recent.len() >= RECENT_CAP {
+            let len = recent.len();
+            recent.copy_within(len / 2.., 0);
+            recent.truncate(len / 2);
+        }
+        recent.push(seconds);
+    }
+
+    pub fn observe_queue_wait(&self, seconds: f64) {
+        self.queue_wait.lock().unwrap().add(seconds);
+    }
+
+    pub fn observe_batch_exec(&self, seconds: f64) {
+        self.batch_exec.lock().unwrap().add(seconds);
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        self.latency.lock().unwrap().mean()
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let recent = self.recent_latencies.lock().unwrap();
+        crate::tensor::stats::percentile(&recent, p)
+    }
+
+    /// JSON snapshot (stable key order).
+    pub fn snapshot(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("requests_submitted", self.requests_submitted.load(Ordering::Relaxed));
+        o.set("requests_completed", self.requests_completed.load(Ordering::Relaxed));
+        o.set("requests_rejected", self.requests_rejected.load(Ordering::Relaxed));
+        o.set("tokens_generated", self.tokens_generated.load(Ordering::Relaxed));
+        o.set("batches_executed", self.batches_executed.load(Ordering::Relaxed));
+        o.set("promotions", self.promotions.load(Ordering::Relaxed));
+        o.set("evictions", self.evictions.load(Ordering::Relaxed));
+        o.set("latency_mean_s", self.mean_latency());
+        o.set("latency_p50_s", self.latency_percentile(50.0));
+        o.set("latency_p99_s", self.latency_percentile(99.0));
+        o.set("queue_wait_mean_s", self.queue_wait.lock().unwrap().mean());
+        o.set("batch_exec_mean_s", self.batch_exec.lock().unwrap().mean());
+        let completed = self.requests_completed.load(Ordering::Relaxed);
+        let batches = self.batches_executed.load(Ordering::Relaxed).max(1);
+        o.set("mean_batch_size", completed as f64 / batches as f64);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latency() {
+        let m = Metrics::new();
+        m.requests_submitted.fetch_add(3, Ordering::Relaxed);
+        m.requests_completed.fetch_add(2, Ordering::Relaxed);
+        m.observe_latency(0.1);
+        m.observe_latency(0.3);
+        assert!((m.mean_latency() - 0.2).abs() < 1e-12);
+        let snap = m.snapshot().to_string();
+        assert!(snap.contains("\"requests_submitted\":3"));
+        assert!(snap.contains("\"requests_completed\":2"));
+    }
+
+    #[test]
+    fn percentiles_from_recent() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_latency(i as f64);
+        }
+        assert!((m.latency_percentile(50.0) - 50.5).abs() < 1.0);
+        assert!(m.latency_percentile(99.0) > 95.0);
+    }
+
+    #[test]
+    fn recent_ring_stays_bounded() {
+        let m = Metrics::new();
+        for i in 0..(RECENT_CAP * 3) {
+            m.observe_latency(i as f64);
+        }
+        assert!(m.recent_latencies.lock().unwrap().len() <= RECENT_CAP);
+    }
+}

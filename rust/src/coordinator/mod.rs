@@ -1,0 +1,153 @@
+//! L3 serving coordinator (S10): multi-tenant request routing, dynamic
+//! batching, Hot/Cold tenant residency, and the demo-server driver used
+//! by `deltadq serve`.
+//!
+//! Architecture (vLLM-router-like, adapted to delta serving):
+//!
+//! ```text
+//!   submit() ─▶ Batcher (per-tenant FIFO queues, bounded)
+//!                 │  oldest-head-first tenant pick + batch window
+//!                 ▼
+//!   worker pool ──▶ TenantStore.acquire()  (Hot dense cache | Cold
+//!                 │  compressed deltas → separate computation)
+//!                 ▼
+//!   generate() per request ─▶ Response channel, Metrics
+//! ```
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod tenant;
+
+pub use batcher::{Batcher, Request, Response, SubmitError};
+pub use metrics::Metrics;
+pub use server::{Server, ServerOptions};
+pub use tenant::{TenantStore, TenantView};
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::ServeConfig;
+use crate::delta::format::load_delta_set;
+use crate::eval::tasks::{gen_dataset, TaskKind};
+use crate::model::load_weights;
+use crate::tensor::Pcg64;
+
+/// Load a server from artifacts (`base.dqw` + `<tenant>.ddq` per
+/// tenant); tenants without a `.ddq` fall back to an on-the-fly
+/// DeltaDQ compression of their `.dqw` fine-tune if present.
+pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
+    let dir = Path::new(&serve.artifacts_dir);
+    let scale_dir = dir.join(&serve.model);
+    let base_path = scale_dir.join("base.dqw");
+    let base = Arc::new(
+        load_weights(&base_path).with_context(|| format!("loading {base_path:?}"))?,
+    );
+    let options = ServerOptions {
+        max_batch: serve.max_batch,
+        batch_window: Duration::from_micros(serve.batch_window_us),
+        queue_depth: serve.queue_depth,
+        workers: serve.workers,
+        cache_budget: if serve.cache_budget_mib == 0 {
+            None
+        } else {
+            Some(serve.cache_budget_mib * 1024 * 1024)
+        },
+        promote_after: 8,
+    };
+    let server = Server::start(base.clone(), options);
+    for tenant in tenants {
+        let ddq = scale_dir.join(format!("{tenant}.ddq"));
+        let set = if ddq.exists() {
+            load_delta_set(&ddq)?
+        } else {
+            // compress on the fly from the fine-tuned weights
+            let dqw = scale_dir.join(format!("{tenant}.dqw"));
+            let ft = load_weights(&dqw)
+                .with_context(|| format!("tenant '{tenant}': no .ddq and no {dqw:?}"))?;
+            let deltas = crate::delta::extract_deltas(&base, &ft);
+            let dq = crate::compress::DeltaDq::new(
+                crate::compress::DeltaDqConfig::with_quant(8.0, Some(16), 8, 1),
+            );
+            let mut rng = Pcg64::seeded(7);
+            crate::compress::pipeline::compress_model_deltas(
+                &deltas,
+                &dq,
+                &Default::default(),
+                &mut rng,
+            )
+        };
+        server.register_tenant(tenant, set);
+    }
+    Ok(server)
+}
+
+/// `deltadq serve`: drive the coordinator with a Poisson open-loop
+/// request stream across tenants and print a throughput/latency report.
+pub fn run_demo_server(
+    serve: &ServeConfig,
+    tenants_csv: &str,
+    total_requests: usize,
+    rate_per_sec: f64,
+) -> Result<()> {
+    let tenants: Vec<String> = tenants_csv.split(',').map(|s| s.trim().to_string()).collect();
+    let server = load_server(serve, &tenants)?;
+    println!(
+        "serving {} tenants on '{}' preset: {:?}",
+        tenants.len(),
+        serve.model,
+        server.tenants()
+    );
+
+    let mut rng = Pcg64::seeded(99);
+    let prompts: Vec<(String, Vec<u32>)> = {
+        let mut v = Vec::new();
+        for tenant in &tenants {
+            let task = TaskKind::parse(tenant).unwrap_or(TaskKind::Math);
+            for s in gen_dataset(task, total_requests / tenants.len() + 1, 5) {
+                v.push((tenant.clone(), s.prompt));
+            }
+        }
+        v
+    };
+
+    let start = Instant::now();
+    let mut receivers = Vec::new();
+    for i in 0..total_requests {
+        let (tenant, prompt) = &prompts[i % prompts.len()];
+        // open-loop Poisson arrivals
+        let dt = rng.exponential(rate_per_sec);
+        std::thread::sleep(Duration::from_secs_f64(dt.min(0.05)));
+        match server.submit(tenant, prompt.clone(), 8) {
+            Ok(rx) => receivers.push(rx),
+            Err(e) => eprintln!("rejected: {e}"),
+        }
+    }
+    let mut hot = 0usize;
+    for rx in receivers {
+        if let Ok(resp) = rx.recv_timeout(Duration::from_secs(120)) {
+            if resp.served_hot {
+                hot += 1;
+            }
+        }
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let m = &server.metrics;
+    let completed = m.requests_completed.load(std::sync::atomic::Ordering::Relaxed);
+    println!("--- serving report ---");
+    println!("requests: {completed} completed, {hot} served hot");
+    println!("throughput: {:.1} req/s", completed as f64 / elapsed);
+    println!(
+        "latency: mean {:.2}ms p50 {:.2}ms p99 {:.2}ms",
+        m.mean_latency() * 1e3,
+        m.latency_percentile(50.0) * 1e3,
+        m.latency_percentile(99.0) * 1e3
+    );
+    println!("residency: {:?}", server.residency());
+    println!("metrics: {}", m.snapshot().to_string());
+    server.shutdown();
+    Ok(())
+}

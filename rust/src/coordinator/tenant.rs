@@ -1,0 +1,272 @@
+//! Serving-side tenant store: per-tenant compressed deltas with
+//! Hot/Cold residency, Arc-shared so worker threads execute without
+//! holding the store lock, and an LRU dense-cache budget.
+//!
+//! (The library-level [`crate::delta::registry::DeltaRegistry`] is the
+//! offline-facing registry; this store is the same idea optimized for
+//! concurrent serving.)
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::delta::format::DeltaSet;
+use crate::model::weights::ModelWeights;
+
+/// Execution view handed to a worker: everything needed to run one
+/// tenant's requests without any store locks.
+#[derive(Clone)]
+pub enum TenantView {
+    /// Dense `W_b + Δ` cache — one matmul per linear layer.
+    Hot(Arc<ModelWeights>),
+    /// Compressed deltas — separate computation per linear layer.
+    Cold(Arc<DeltaSet>),
+}
+
+struct TenantSlot {
+    deltas: Arc<DeltaSet>,
+    dense: Option<Arc<ModelWeights>>,
+    last_used: u64,
+    requests: u64,
+}
+
+/// Thread-safe tenant store with promotion policy and byte budget.
+pub struct TenantStore {
+    base: Arc<ModelWeights>,
+    slots: Mutex<BTreeMap<String, TenantSlot>>,
+    clock: AtomicU64,
+    /// Dense-cache byte budget (None = unbounded).
+    cache_budget: Option<u64>,
+    /// Promote a tenant to Hot once it has served this many requests.
+    pub promote_after: u64,
+}
+
+/// Outcome of an acquire: the view plus whether a promotion/evictions
+/// happened (for metrics).
+pub struct Acquired {
+    pub view: TenantView,
+    pub promoted: bool,
+    pub evicted: usize,
+}
+
+impl TenantStore {
+    pub fn new(
+        base: Arc<ModelWeights>,
+        cache_budget: Option<u64>,
+        promote_after: u64,
+    ) -> TenantStore {
+        TenantStore {
+            base,
+            slots: Mutex::new(BTreeMap::new()),
+            clock: AtomicU64::new(0),
+            cache_budget,
+            promote_after,
+        }
+    }
+
+    pub fn base(&self) -> &Arc<ModelWeights> {
+        &self.base
+    }
+
+    pub fn register(&self, tenant: &str, deltas: DeltaSet) {
+        let clock = self.clock.fetch_add(1, Ordering::Relaxed);
+        self.slots.lock().unwrap().insert(
+            tenant.to_string(),
+            TenantSlot { deltas: Arc::new(deltas), dense: None, last_used: clock, requests: 0 },
+        );
+    }
+
+    pub fn tenants(&self) -> Vec<String> {
+        self.slots.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn contains(&self, tenant: &str) -> bool {
+        self.slots.lock().unwrap().contains_key(tenant)
+    }
+
+    /// Total dense-cache bytes (under lock).
+    fn cache_bytes_locked(slots: &BTreeMap<String, TenantSlot>) -> u64 {
+        slots
+            .values()
+            .filter_map(|s| s.dense.as_ref())
+            .map(|w| w.param_count() as u64 * 4)
+            .sum()
+    }
+
+    /// Acquire an execution view for `batch_size` requests, applying the
+    /// promotion policy. Returns `None` for unknown tenants.
+    pub fn acquire(&self, tenant: &str, batch_size: u64) -> Option<Acquired> {
+        let clock = self.clock.fetch_add(1, Ordering::Relaxed);
+        let mut slots = self.slots.lock().unwrap();
+        // policy decision under lock (cheap), materialization outside
+        let slot = slots.get_mut(tenant)?;
+        slot.last_used = clock;
+        slot.requests += batch_size;
+        if let Some(dense) = &slot.dense {
+            return Some(Acquired { view: TenantView::Hot(dense.clone()), promoted: false, evicted: 0 });
+        }
+        let should_promote = slot.requests >= self.promote_after;
+        let deltas = slot.deltas.clone();
+        if !should_promote {
+            return Some(Acquired { view: TenantView::Cold(deltas), promoted: false, evicted: 0 });
+        }
+        drop(slots);
+
+        // Materialize W_b + Δ outside the lock (the expensive part).
+        let mut dense = (*self.base).clone();
+        for (name, delta) in &deltas.tensors {
+            delta.add_to_dense(dense.get_mut(name), 1.0);
+        }
+        let dense = Arc::new(dense);
+        let new_bytes = dense.param_count() as u64 * 4;
+
+        let mut slots = self.slots.lock().unwrap();
+        let mut evicted = 0usize;
+        if let Some(budget) = self.cache_budget {
+            if new_bytes > budget {
+                // can never fit: stay cold
+                return Some(Acquired { view: TenantView::Cold(deltas), promoted: false, evicted });
+            }
+            while Self::cache_bytes_locked(&slots) + new_bytes > budget {
+                let victim = slots
+                    .iter()
+                    .filter(|(id, s)| s.dense.is_some() && id.as_str() != tenant)
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(id, _)| id.clone());
+                match victim {
+                    Some(v) => {
+                        slots.get_mut(&v).unwrap().dense = None;
+                        evicted += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        if let Some(slot) = slots.get_mut(tenant) {
+            slot.dense = Some(dense.clone());
+        }
+        Some(Acquired { view: TenantView::Hot(dense), promoted: true, evicted })
+    }
+
+    /// Residency snapshot for reporting: (tenant, hot?, requests).
+    pub fn snapshot(&self) -> Vec<(String, bool, u64)> {
+        self.slots
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, s)| (id.clone(), s.dense.is_some(), s.requests))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, DeltaDq, DeltaDqConfig, LayerContext};
+    use crate::model::ModelConfig;
+    use crate::tensor::{Matrix, Pcg64};
+
+    fn base() -> Arc<ModelWeights> {
+        let mut rng = Pcg64::seeded(1);
+        Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng))
+    }
+
+    fn deltas(seed: u64) -> DeltaSet {
+        let mut rng = Pcg64::seeded(seed);
+        let dq = DeltaDq::new(DeltaDqConfig::dropout_only(8.0, Some(16)));
+        let c = ModelConfig::tiny();
+        let mut set = DeltaSet::new("DeltaDQ", 8.0);
+        for name in c.delta_tensor_names() {
+            let shape = if name.contains("mlp.gate") || name.contains("mlp.up") {
+                (c.ffn_hidden, c.hidden)
+            } else if name.contains("mlp.down") {
+                (c.hidden, c.ffn_hidden)
+            } else {
+                (c.hidden, c.hidden)
+            };
+            let d = Matrix::randn(shape.0, shape.1, 0.002, &mut rng);
+            set.tensors
+                .insert(name.clone(), dq.compress(&d, &LayerContext::data_free(0, &name), &mut rng));
+        }
+        set
+    }
+
+    #[test]
+    fn cold_until_promote_threshold() {
+        let store = TenantStore::new(base(), None, 4);
+        store.register("t", deltas(2));
+        let a = store.acquire("t", 1).unwrap();
+        assert!(matches!(a.view, TenantView::Cold(_)));
+        let a = store.acquire("t", 2).unwrap();
+        assert!(matches!(a.view, TenantView::Cold(_)));
+        // cumulative 3 + 1 >= 4 → promote
+        let a = store.acquire("t", 1).unwrap();
+        assert!(a.promoted);
+        assert!(matches!(a.view, TenantView::Hot(_)));
+        // stays hot
+        let a = store.acquire("t", 1).unwrap();
+        assert!(!a.promoted);
+        assert!(matches!(a.view, TenantView::Hot(_)));
+    }
+
+    #[test]
+    fn unknown_tenant_is_none() {
+        let store = TenantStore::new(base(), None, 1);
+        assert!(store.acquire("nope", 1).is_none());
+    }
+
+    #[test]
+    fn budget_evicts_lru_hot_tenant() {
+        let b = base();
+        let one = b.param_count() as u64 * 4;
+        let store = TenantStore::new(b, Some(one + 1024), 1);
+        store.register("a", deltas(3));
+        store.register("b", deltas(4));
+        let r = store.acquire("a", 1).unwrap();
+        assert!(r.promoted);
+        let r = store.acquire("b", 1).unwrap();
+        assert!(r.promoted);
+        assert_eq!(r.evicted, 1, "budget fits one cache; a must be evicted");
+        let snap = store.snapshot();
+        let hot: Vec<&str> = snap.iter().filter(|(_, h, _)| *h).map(|(id, _, _)| id.as_str()).collect();
+        assert_eq!(hot, vec!["b"]);
+    }
+
+    #[test]
+    fn hot_view_equals_base_plus_delta() {
+        let b = base();
+        let store = TenantStore::new(b.clone(), None, 1);
+        let set = deltas(5);
+        let name = "layers.0.attn.wq";
+        let mut want = b.get(name).clone();
+        set.tensors[name].add_to_dense(&mut want, 1.0);
+        store.register("t", set);
+        let a = store.acquire("t", 1).unwrap();
+        match a.view {
+            TenantView::Hot(w) => assert!(w.get(name).allclose(&want, 1e-6, 0.0)),
+            TenantView::Cold(_) => panic!("expected hot"),
+        }
+    }
+
+    #[test]
+    fn concurrent_acquires_are_safe() {
+        let store = Arc::new(TenantStore::new(base(), None, 8));
+        store.register("t", deltas(6));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let store = store.clone();
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        let a = store.acquire("t", 1).unwrap();
+                        match a.view {
+                            TenantView::Hot(w) => assert!(w.param_count() > 0),
+                            TenantView::Cold(d) => assert!(d.nnz() > 0),
+                        }
+                    }
+                });
+            }
+        });
+        let snap = store.snapshot();
+        assert_eq!(snap[0].2, 80);
+    }
+}

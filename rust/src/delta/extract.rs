@@ -1,0 +1,106 @@
+//! Step 1 of the pipeline (paper Fig. 2): **Split Weight** —
+//! `ΔW_i = W_i − W_b` for every compressible tensor.
+
+use std::collections::BTreeMap;
+
+use crate::model::weights::ModelWeights;
+use crate::tensor::Matrix;
+
+/// Extract per-tensor deltas between a fine-tuned model and its base.
+/// Only the linear-layer tensors (`config.delta_tensor_names()`) are
+/// extracted; embeddings and norms ride with the base (the paper
+/// compresses the Linear deltas).
+pub fn extract_deltas(base: &ModelWeights, finetuned: &ModelWeights) -> BTreeMap<String, Matrix> {
+    assert_eq!(base.config, finetuned.config, "mismatched configs");
+    let mut deltas = BTreeMap::new();
+    for name in base.config.delta_tensor_names() {
+        let d = finetuned.get(&name).sub(base.get(&name));
+        deltas.insert(name, d);
+    }
+    deltas
+}
+
+/// Summary of how large the deltas are relative to the base — the
+/// precondition for the whole method (`‖ΔW‖ ≪ ‖W‖`, DESIGN.md §2).
+#[derive(Debug, Clone)]
+pub struct DeltaNormReport {
+    /// Per-tensor (‖ΔW‖_F, ‖W_b‖_F).
+    pub per_tensor: Vec<(String, f64, f64)>,
+}
+
+impl DeltaNormReport {
+    pub fn compute(base: &ModelWeights, deltas: &BTreeMap<String, Matrix>) -> DeltaNormReport {
+        let per_tensor = deltas
+            .iter()
+            .map(|(name, d)| {
+                (
+                    name.clone(),
+                    d.frobenius_norm() as f64,
+                    base.get(name).frobenius_norm() as f64,
+                )
+            })
+            .collect();
+        DeltaNormReport { per_tensor }
+    }
+
+    /// Mean of per-tensor ‖Δ‖/‖W‖ ratios.
+    pub fn mean_relative_norm(&self) -> f64 {
+        if self.per_tensor.is_empty() {
+            return 0.0;
+        }
+        self.per_tensor.iter().map(|(_, d, b)| d / b.max(1e-12)).sum::<f64>()
+            / self.per_tensor.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::tensor::Pcg64;
+
+    #[test]
+    fn extract_then_apply_roundtrips() {
+        let mut rng = Pcg64::seeded(1);
+        let base = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+        let mut ft = base.clone();
+        // perturb a couple of tensors like fine-tuning would
+        ft.get_mut("layers.1.attn.wq").add_scaled(&Matrix::full(64, 64, 0.01), 1.0);
+        ft.get_mut("layers.1.mlp.up").add_scaled(&Matrix::full(128, 64, -0.02), 1.0);
+        let deltas = extract_deltas(&base, &ft);
+        assert_eq!(deltas.len(), base.config.n_layers * 7);
+        let rebuilt = base.apply_deltas(&deltas);
+        for (name, tensor) in ft.iter() {
+            assert!(rebuilt.get(name).allclose(tensor, 1e-6, 0.0), "{name}");
+        }
+    }
+
+    #[test]
+    fn untouched_tensors_have_zero_delta() {
+        let mut rng = Pcg64::seeded(2);
+        let base = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+        let ft = base.clone();
+        let deltas = extract_deltas(&base, &ft);
+        for (name, d) in &deltas {
+            assert_eq!(d.count_nonzeros(), 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn norm_report_reflects_scale() {
+        let mut rng = Pcg64::seeded(3);
+        let base = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+        let mut ft = base.clone();
+        for name in base.config.delta_tensor_names() {
+            let shape = ft.get(&name).shape();
+            let mut rng2 = Pcg64::seeded(4);
+            // deltas at 1% of init std
+            ft.get_mut(&name)
+                .add_assign(&Matrix::randn(shape.0, shape.1, 0.0002, &mut rng2));
+        }
+        let deltas = extract_deltas(&base, &ft);
+        let report = DeltaNormReport::compute(&base, &deltas);
+        let rel = report.mean_relative_norm();
+        assert!(rel > 0.0 && rel < 0.05, "relative norm {rel}");
+    }
+}

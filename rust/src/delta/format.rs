@@ -1,0 +1,372 @@
+//! On-disk format for compressed delta sets — the `.ddq` file.
+//!
+//! One file holds every compressed tensor of one fine-tuned model
+//! (tenant), plus metadata: method name, nominal ratio, and the original
+//! model scale. The coordinator memory-maps nothing fancy — files are
+//! small by construction (that is the point of the paper).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic    b"DDQD"
+//! version  u32 (=1)
+//! method   str16        (length-prefixed utf-8, u16 length)
+//! ratio    f64          nominal compression ratio
+//! count    u32          number of tensors
+//! tensor*:
+//!   name   str16
+//!   kind   u8           0 = Sparse CSR fp32, 1 = Quantized decomposed
+//!   Sparse:    rows u32 | cols u32 | nnz u32 | offsets u32[rows+1]
+//!              | cols u32[nnz] | values f32[nnz]
+//!   Quantized: rows u32 | cols u32 | k u32 | m u32 | scale f32 | zero i32
+//!              | per part: nnz u32 | offsets u32[rows+1] | cols u32[nnz]
+//!                | words u64: n_words u32 then u64[n_words]
+//! ```
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::CompressedDelta;
+use crate::quant::separate::{DecomposedDelta, QuantPart};
+use crate::quant::uniform::QuantParams;
+use crate::sparse::bitpack::PackedCodes;
+use crate::sparse::csr::CsrMatrix;
+
+const MAGIC: &[u8; 4] = b"DDQD";
+const VERSION: u32 = 1;
+
+/// A named set of compressed deltas plus provenance metadata.
+#[derive(Debug, Clone)]
+pub struct DeltaSet {
+    pub method: String,
+    pub nominal_ratio: f64,
+    pub tensors: BTreeMap<String, CompressedDelta>,
+}
+
+impl DeltaSet {
+    pub fn new(method: &str, nominal_ratio: f64) -> DeltaSet {
+        DeltaSet { method: method.to_string(), nominal_ratio, tensors: BTreeMap::new() }
+    }
+
+    /// Total measured storage (bits) across tensors.
+    pub fn storage_bits(&self) -> u64 {
+        self.tensors.values().map(|t| t.storage_bits()).sum()
+    }
+
+    /// Total stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.tensors.values().map(|t| t.nnz()).sum()
+    }
+
+    /// Total delta elements (dense count).
+    pub fn total_elems(&self) -> u64 {
+        self.tensors
+            .values()
+            .map(|t| {
+                let (r, c) = t.shape();
+                (r * c) as u64
+            })
+            .sum()
+    }
+
+    /// Measured storage compression ratio vs dense fp16.
+    pub fn measured_ratio(&self) -> f64 {
+        crate::compress::ratio::storage_ratio(self.total_elems(), self.storage_bits())
+    }
+}
+
+// ---------------------------------------------------------------- write
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_str16(w: &mut impl Write, s: &str) -> Result<()> {
+    let b = s.as_bytes();
+    if b.len() > u16::MAX as usize {
+        bail!("string too long");
+    }
+    w.write_all(&(b.len() as u16).to_le_bytes())?;
+    w.write_all(b)?;
+    Ok(())
+}
+
+fn w_u32_slice(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+    let bytes: Vec<u8> = xs.iter().flat_map(|v| v.to_le_bytes()).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn w_f32_slice(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let bytes: Vec<u8> = xs.iter().flat_map(|v| v.to_le_bytes()).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn write_csr(w: &mut impl Write, csr: &CsrMatrix) -> Result<()> {
+    w_u32(w, csr.rows() as u32)?;
+    w_u32(w, csr.cols() as u32)?;
+    w_u32(w, csr.nnz() as u32)?;
+    w_u32_slice(w, csr.row_offsets())?;
+    w_u32_slice(w, csr.col_indices())?;
+    w_f32_slice(w, csr.values())?;
+    Ok(())
+}
+
+fn write_quantized(w: &mut impl Write, d: &DecomposedDelta) -> Result<()> {
+    w_u32(w, d.rows() as u32)?;
+    w_u32(w, d.cols() as u32)?;
+    w_u32(w, d.params.bits)?;
+    w_u32(w, d.m)?;
+    w.write_all(&d.params.scale.to_le_bytes())?;
+    w.write_all(&d.params.zero_point.to_le_bytes())?;
+    for part in &d.parts {
+        w_u32(w, part.nnz() as u32)?;
+        w_u32_slice(w, &part.row_offsets)?;
+        w_u32_slice(w, &part.col_indices)?;
+        match &part.codes {
+            Some(codes) => {
+                w_u32(w, codes.words().len() as u32)?;
+                let bytes: Vec<u8> =
+                    codes.words().iter().flat_map(|v| v.to_le_bytes()).collect();
+                w.write_all(&bytes)?;
+            }
+            None => w_u32(w, 0)?,
+        }
+    }
+    Ok(())
+}
+
+/// Save a delta set to a `.ddq` file.
+pub fn save_delta_set(path: &Path, set: &DeltaSet) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION)?;
+    w_str16(&mut w, &set.method)?;
+    w.write_all(&set.nominal_ratio.to_le_bytes())?;
+    w_u32(&mut w, set.tensors.len() as u32)?;
+    for (name, tensor) in &set.tensors {
+        w_str16(&mut w, name)?;
+        match tensor {
+            CompressedDelta::Sparse(csr) => {
+                w.write_all(&[0u8])?;
+                write_csr(&mut w, csr)?;
+            }
+            CompressedDelta::Quantized(d) => {
+                w.write_all(&[1u8])?;
+                write_quantized(&mut w, d)?;
+            }
+            CompressedDelta::Dense(_) => {
+                bail!("dense deltas are not serializable (ablation-only)")
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ----------------------------------------------------------------- read
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_i32(r: &mut impl Read) -> Result<i32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(i32::from_le_bytes(b))
+}
+
+fn r_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+fn r_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn r_str16(r: &mut impl Read) -> Result<String> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    let len = u16::from_le_bytes(b) as usize;
+    let mut s = vec![0u8; len];
+    r.read_exact(&mut s)?;
+    Ok(String::from_utf8(s).context("utf-8")?)
+}
+
+fn r_u32_vec(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+}
+
+fn r_f32_vec(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+}
+
+fn read_csr(r: &mut impl Read) -> Result<CsrMatrix> {
+    let rows = r_u32(r)? as usize;
+    let cols = r_u32(r)? as usize;
+    let nnz = r_u32(r)? as usize;
+    let offsets = r_u32_vec(r, rows + 1)?;
+    let col_indices = r_u32_vec(r, nnz)?;
+    let values = r_f32_vec(r, nnz)?;
+    Ok(CsrMatrix::from_parts(rows, cols, offsets, col_indices, values))
+}
+
+fn read_quantized(r: &mut impl Read) -> Result<DecomposedDelta> {
+    let rows = r_u32(r)? as usize;
+    let cols = r_u32(r)? as usize;
+    let bits = r_u32(r)?;
+    let m = r_u32(r)?;
+    let scale = r_f32(r)?;
+    let zero_point = r_i32(r)?;
+    let params = QuantParams { scale, zero_point, bits };
+    let part_bits = bits - m.ilog2();
+    let mut parts = Vec::with_capacity(m as usize);
+    for j in 0..m {
+        let nnz = r_u32(r)? as usize;
+        let row_offsets = r_u32_vec(r, rows + 1)?;
+        let col_indices = r_u32_vec(r, nnz)?;
+        let n_words = r_u32(r)? as usize;
+        let codes = if part_bits == 0 {
+            if n_words != 0 {
+                bail!("zero-width part with code words");
+            }
+            None
+        } else {
+            let mut bytes = vec![0u8; n_words * 8];
+            r.read_exact(&mut bytes)?;
+            let words: Vec<u64> = bytes
+                .chunks_exact(8)
+                .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+                .collect();
+            Some(PackedCodes::from_words(part_bits, nnz, words))
+        };
+        parts.push(QuantPart { row_offsets, col_indices, codes, part_index: j });
+    }
+    Ok(DecomposedDelta::from_parts(rows, cols, params, m, parts))
+}
+
+/// Load a `.ddq` file.
+pub fn load_delta_set(path: &Path) -> Result<DeltaSet> {
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic (expected DDQD)");
+    }
+    let version = r_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{path:?}: unsupported version {version}");
+    }
+    let method = r_str16(&mut r)?;
+    let nominal_ratio = r_f64(&mut r)?;
+    let count = r_u32(&mut r)? as usize;
+    let mut set = DeltaSet::new(&method, nominal_ratio);
+    for _ in 0..count {
+        let name = r_str16(&mut r)?;
+        let mut kind = [0u8; 1];
+        r.read_exact(&mut kind)?;
+        let tensor = match kind[0] {
+            0 => CompressedDelta::Sparse(read_csr(&mut r)?),
+            1 => CompressedDelta::Quantized(read_quantized(&mut r)?),
+            k => bail!("unknown tensor kind {k}"),
+        };
+        set.tensors.insert(name, tensor);
+    }
+    Ok(set)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, DeltaDq, DeltaDqConfig, LayerContext};
+    use crate::tensor::{Matrix, Pcg64};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("deltadq-test-format");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_set(quant: Option<(u32, u32)>) -> DeltaSet {
+        let mut rng = Pcg64::seeded(1);
+        let dq = DeltaDq::new(DeltaDqConfig { alpha: 4.0, group_size: Some(8), quant });
+        let mut set = DeltaSet::new(&dq.name(), dq.nominal_ratio());
+        for i in 0..3 {
+            let d = Matrix::randn(16, 32, 0.01, &mut rng);
+            let name = format!("layers.{i}.attn.wq");
+            let c = dq.compress(&d, &LayerContext::data_free(i, &name), &mut rng);
+            set.tensors.insert(name, c);
+        }
+        set
+    }
+
+    #[test]
+    fn sparse_roundtrip_exact() {
+        let set = sample_set(None);
+        let path = tmpfile("sparse.ddq");
+        save_delta_set(&path, &set).unwrap();
+        let loaded = load_delta_set(&path).unwrap();
+        assert_eq!(loaded.method, set.method);
+        assert_eq!(loaded.nominal_ratio, set.nominal_ratio);
+        assert_eq!(loaded.tensors.len(), 3);
+        for (name, t) in &set.tensors {
+            assert_eq!(loaded.tensors[name].to_dense(), t.to_dense(), "{name}");
+        }
+    }
+
+    #[test]
+    fn quantized_roundtrip_exact() {
+        for (k, m) in [(8u32, 1u32), (8, 4), (4, 8), (2, 4)] {
+            let set = sample_set(Some((k, m)));
+            let path = tmpfile(&format!("quant-{k}-{m}.ddq"));
+            save_delta_set(&path, &set).unwrap();
+            let loaded = load_delta_set(&path).unwrap();
+            for (name, t) in &set.tensors {
+                assert_eq!(loaded.tensors[name].to_dense(), t.to_dense(), "k={k} m={m} {name}");
+            }
+        }
+    }
+
+    #[test]
+    fn measured_ratio_reported() {
+        let set = sample_set(Some((8, 1)));
+        // 4x dropout + 8-bit codes + 16-bit idx ≈ storage ratio near
+        // 16*2048 / (512*(8+16) + overhead) ≳ 2
+        let ratio = set.measured_ratio();
+        assert!(ratio > 2.0 && ratio < 16.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmpfile("garbage.ddq");
+        std::fs::write(&path, b"not a ddq file at all").unwrap();
+        assert!(load_delta_set(&path).is_err());
+    }
+
+    #[test]
+    fn dense_is_not_serializable() {
+        let mut set = DeltaSet::new("ablation", 1.0);
+        set.tensors
+            .insert("x".into(), CompressedDelta::Dense(Matrix::zeros(2, 2)));
+        let path = tmpfile("dense.ddq");
+        assert!(save_delta_set(&path, &set).is_err());
+    }
+}

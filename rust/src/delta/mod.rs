@@ -1,0 +1,11 @@
+//! Delta management (S7): extraction (`ΔW = W_ft − W_b`), the `.ddq`
+//! on-disk format for compressed delta sets, and the per-tenant
+//! registry with Hot/Cold residency and LRU dense-cache eviction.
+
+pub mod extract;
+pub mod format;
+pub mod registry;
+
+pub use extract::{extract_deltas, DeltaNormReport};
+pub use format::{load_delta_set, save_delta_set, DeltaSet};
+pub use registry::{DeltaRegistry, Residency, TenantEntry};

@@ -1,0 +1,294 @@
+//! In-memory registry of per-tenant compressed delta sets (S7).
+//!
+//! The serving coordinator keys tenants by id; each tenant owns one
+//! [`DeltaSet`] plus residency state. The registry enforces a byte
+//! budget with LRU eviction of *reconstruction caches* (the compressed
+//! deltas themselves are small and always resident — that is the
+//! paper's deployment story; what competes for memory is the densified
+//! `W_b + Δ` fast path).
+
+use std::collections::BTreeMap;
+
+use crate::delta::format::DeltaSet;
+use crate::model::weights::ModelWeights;
+
+/// Residency of a tenant's dense reconstruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// Compressed only; every request pays the separate-computation path.
+    Cold,
+    /// Dense `W_b + Δ` materialized and cached; requests use one matmul.
+    Hot,
+}
+
+/// One tenant's registered model delta.
+#[derive(Debug)]
+pub struct TenantEntry {
+    pub tenant_id: String,
+    pub deltas: DeltaSet,
+    /// Densified weights, present iff `Hot`.
+    pub dense_cache: Option<ModelWeights>,
+    /// Monotone counter of last use (LRU clock).
+    pub last_used: u64,
+    pub requests_served: u64,
+}
+
+impl TenantEntry {
+    /// Compressed resident bytes.
+    pub fn compressed_bytes(&self) -> u64 {
+        self.deltas.storage_bits() / 8
+    }
+
+    /// Dense-cache resident bytes (0 when cold).
+    pub fn cache_bytes(&self) -> u64 {
+        self.dense_cache
+            .as_ref()
+            .map(|w| w.param_count() as u64 * 4)
+            .unwrap_or(0)
+    }
+
+    pub fn residency(&self) -> Residency {
+        if self.dense_cache.is_some() {
+            Residency::Hot
+        } else {
+            Residency::Cold
+        }
+    }
+}
+
+/// Tenant registry with an optional dense-cache byte budget.
+#[derive(Debug)]
+pub struct DeltaRegistry {
+    tenants: BTreeMap<String, TenantEntry>,
+    clock: u64,
+    /// Max bytes of dense caches (None = unbounded).
+    cache_budget: Option<u64>,
+}
+
+impl DeltaRegistry {
+    pub fn new(cache_budget: Option<u64>) -> DeltaRegistry {
+        DeltaRegistry { tenants: BTreeMap::new(), clock: 0, cache_budget }
+    }
+
+    /// Register (or replace) a tenant's compressed deltas.
+    pub fn register(&mut self, tenant_id: &str, deltas: DeltaSet) {
+        self.clock += 1;
+        self.tenants.insert(
+            tenant_id.to_string(),
+            TenantEntry {
+                tenant_id: tenant_id.to_string(),
+                deltas,
+                dense_cache: None,
+                last_used: self.clock,
+                requests_served: 0,
+            },
+        );
+    }
+
+    pub fn unregister(&mut self, tenant_id: &str) -> bool {
+        self.tenants.remove(tenant_id).is_some()
+    }
+
+    pub fn get(&self, tenant_id: &str) -> Option<&TenantEntry> {
+        self.tenants.get(tenant_id)
+    }
+
+    /// Touch a tenant for a request: bumps LRU clock and counters.
+    pub fn touch(&mut self, tenant_id: &str) -> bool {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.tenants.get_mut(tenant_id) {
+            Some(e) => {
+                e.last_used = clock;
+                e.requests_served += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn tenant_ids(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Total compressed bytes across tenants.
+    pub fn compressed_bytes(&self) -> u64 {
+        self.tenants.values().map(|e| e.compressed_bytes()).sum()
+    }
+
+    /// Total dense-cache bytes across tenants.
+    pub fn cache_bytes(&self) -> u64 {
+        self.tenants.values().map(|e| e.cache_bytes()).sum()
+    }
+
+    /// Promote a tenant to Hot by materializing `W_b + Δ`, evicting LRU
+    /// dense caches if the budget would be exceeded. Returns the evicted
+    /// tenant ids.
+    pub fn promote(&mut self, tenant_id: &str, base: &ModelWeights) -> Vec<String> {
+        let mut evicted = Vec::new();
+        let Some(entry) = self.tenants.get(tenant_id) else {
+            return evicted;
+        };
+        if entry.dense_cache.is_some() {
+            return evicted;
+        }
+        // Materialize dense weights: base + delta per tensor.
+        let mut dense = base.clone();
+        for (name, delta) in &self.tenants[tenant_id].deltas.tensors {
+            delta.add_to_dense(dense.get_mut(name), 1.0);
+        }
+        let new_bytes = dense.param_count() as u64 * 4;
+        if let Some(budget) = self.cache_budget {
+            // LRU-evict other hot tenants until the new cache fits.
+            while self.cache_bytes() + new_bytes > budget {
+                let victim = self
+                    .tenants
+                    .values()
+                    .filter(|e| e.dense_cache.is_some() && e.tenant_id != tenant_id)
+                    .min_by_key(|e| e.last_used)
+                    .map(|e| e.tenant_id.clone());
+                match victim {
+                    Some(v) => {
+                        self.tenants.get_mut(&v).unwrap().dense_cache = None;
+                        evicted.push(v);
+                    }
+                    None => break, // nothing left to evict
+                }
+            }
+            if new_bytes > budget {
+                // cannot ever fit; stay cold
+                return evicted;
+            }
+        }
+        self.tenants.get_mut(tenant_id).unwrap().dense_cache = Some(dense);
+        evicted
+    }
+
+    /// Demote a tenant to Cold (drop its dense cache).
+    pub fn demote(&mut self, tenant_id: &str) {
+        if let Some(e) = self.tenants.get_mut(tenant_id) {
+            e.dense_cache = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, DeltaDq, DeltaDqConfig, LayerContext};
+    use crate::model::ModelConfig;
+    use crate::tensor::{Matrix, Pcg64};
+
+    fn base() -> ModelWeights {
+        let mut rng = Pcg64::seeded(1);
+        ModelWeights::init(ModelConfig::tiny(), &mut rng)
+    }
+
+    fn delta_set(seed: u64) -> DeltaSet {
+        let mut rng = Pcg64::seeded(seed);
+        let dq = DeltaDq::new(DeltaDqConfig::dropout_only(4.0, Some(16)));
+        let mut set = DeltaSet::new(&dq.name(), 4.0);
+        let c = ModelConfig::tiny();
+        for name in c.delta_tensor_names() {
+            let (r, cc) = if name.contains("mlp.gate") || name.contains("mlp.up") {
+                (c.ffn_hidden, c.hidden)
+            } else if name.contains("mlp.down") {
+                (c.hidden, c.ffn_hidden)
+            } else {
+                (c.hidden, c.hidden)
+            };
+            let d = Matrix::randn(r, cc, 0.002, &mut rng);
+            set.tensors
+                .insert(name.clone(), dq.compress(&d, &LayerContext::data_free(0, &name), &mut rng));
+        }
+        set
+    }
+
+    #[test]
+    fn register_and_touch() {
+        let mut reg = DeltaRegistry::new(None);
+        reg.register("math", delta_set(2));
+        assert_eq!(reg.len(), 1);
+        assert!(reg.touch("math"));
+        assert!(!reg.touch("nope"));
+        assert_eq!(reg.get("math").unwrap().requests_served, 1);
+    }
+
+    #[test]
+    fn promote_materializes_base_plus_delta() {
+        let b = base();
+        let mut reg = DeltaRegistry::new(None);
+        reg.register("t", delta_set(3));
+        reg.promote("t", &b);
+        let entry = reg.get("t").unwrap();
+        assert_eq!(entry.residency(), Residency::Hot);
+        let dense = entry.dense_cache.as_ref().unwrap();
+        // the cached weights differ from base exactly by the delta
+        let name = "layers.0.attn.wq";
+        let want = {
+            let mut w = b.get(name).clone();
+            entry.deltas.tensors[name].add_to_dense(&mut w, 1.0);
+            w
+        };
+        assert!(dense.get(name).allclose(&want, 1e-6, 0.0));
+    }
+
+    #[test]
+    fn budget_evicts_lru() {
+        let b = base();
+        let one_cache = b.param_count() as u64 * 4;
+        // room for exactly two dense caches
+        let mut reg = DeltaRegistry::new(Some(2 * one_cache + 1024));
+        reg.register("a", delta_set(4));
+        reg.register("b", delta_set(5));
+        reg.register("c", delta_set(6));
+        assert!(reg.promote("a", &b).is_empty());
+        assert!(reg.promote("b", &b).is_empty());
+        // touch a so b becomes LRU
+        reg.touch("a");
+        let evicted = reg.promote("c", &b);
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert_eq!(reg.get("b").unwrap().residency(), Residency::Cold);
+        assert_eq!(reg.get("a").unwrap().residency(), Residency::Hot);
+        assert_eq!(reg.get("c").unwrap().residency(), Residency::Hot);
+    }
+
+    #[test]
+    fn compressed_far_smaller_than_cache() {
+        let b = base();
+        let mut reg = DeltaRegistry::new(None);
+        reg.register("t", delta_set(7));
+        reg.promote("t", &b);
+        let e = reg.get("t").unwrap();
+        // the whole point: compressed deltas ≪ densified model
+        assert!(e.compressed_bytes() * 2 < e.cache_bytes());
+    }
+
+    #[test]
+    fn demote_frees_cache() {
+        let b = base();
+        let mut reg = DeltaRegistry::new(None);
+        reg.register("t", delta_set(8));
+        reg.promote("t", &b);
+        assert!(reg.cache_bytes() > 0);
+        reg.demote("t");
+        assert_eq!(reg.cache_bytes(), 0);
+    }
+
+    #[test]
+    fn unregister_removes() {
+        let mut reg = DeltaRegistry::new(None);
+        reg.register("t", delta_set(9));
+        assert!(reg.unregister("t"));
+        assert!(!reg.unregister("t"));
+        assert!(reg.is_empty());
+    }
+}

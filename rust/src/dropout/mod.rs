@@ -1,0 +1,257 @@
+//! Dropout-based sparsification of delta weights (S4; paper §3.3).
+//!
+//! Three mask granularities, all unbiased (`E[ΔŴ] = ΔW` via the ×α
+//! rescale):
+//!
+//! * **Global** — i.i.d. Bernoulli keep with p = 1/α over the whole
+//!   tensor (what DARE does).
+//! * **Row-wise** — each row keeps *exactly* `h_in/α` random elements
+//!   (paper's "Row-wise Drop": `1 − 1/α` of each mask vector is zero).
+//! * **Group-wise** — each row is split into groups of `h_g`; each group
+//!   keeps exactly `h_g/α` elements. `h_g = h_in` degenerates to
+//!   row-wise; `h_g` small pins the surviving mass evenly along the
+//!   matrix-computation dimension, which is what exploits the Balanced
+//!   Intermediate Results phenomenon.
+
+use crate::tensor::{Matrix, Pcg64};
+
+/// Mask granularity for [`dropout`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropoutKind {
+    /// I.i.d. Bernoulli over all elements (DARE-style).
+    Global,
+    /// Exact per-row keep counts.
+    RowWise,
+    /// Exact per-group keep counts with the given group size `h_g`.
+    GroupWise { group_size: usize },
+}
+
+/// Outcome of a dropout pass.
+#[derive(Debug, Clone)]
+pub struct DropoutResult {
+    /// Sparsified, rescaled delta (`α · (ΔW ⊙ M)`).
+    pub matrix: Matrix,
+    /// Fraction of elements kept (measured, not nominal).
+    pub kept_fraction: f64,
+}
+
+/// Apply dropout with compression ratio `alpha` (keep probability 1/α)
+/// and rescale survivors by ×α. Deterministic given `rng` state.
+pub fn dropout(delta: &Matrix, alpha: f64, kind: DropoutKind, rng: &mut Pcg64) -> DropoutResult {
+    assert!(alpha >= 1.0, "alpha {alpha} must be ≥ 1");
+    let (rows, cols) = delta.shape();
+    let mut out = delta.clone();
+    let scale = alpha as f32;
+    let mut kept = 0usize;
+    match kind {
+        DropoutKind::Global => {
+            let p = 1.0 / alpha;
+            for v in out.data_mut() {
+                if rng.bernoulli(p) {
+                    *v *= scale;
+                    kept += 1;
+                } else {
+                    *v = 0.0;
+                }
+            }
+        }
+        DropoutKind::RowWise => {
+            kept = dropout_grouped(&mut out, alpha, cols.max(1), rng);
+        }
+        DropoutKind::GroupWise { group_size } => {
+            assert!(group_size > 0, "group size must be positive");
+            kept = dropout_grouped(&mut out, alpha, group_size, rng);
+        }
+    }
+    let total = rows * cols;
+    DropoutResult {
+        matrix: out,
+        kept_fraction: if total == 0 { 0.0 } else { kept as f64 / total as f64 },
+    }
+}
+
+/// Exact-count dropout over contiguous groups of `group_size` within each
+/// row. Returns number of kept elements. Survivors are scaled ×α in place;
+/// dropped elements are zeroed.
+fn dropout_grouped(out: &mut Matrix, alpha: f64, group_size: usize, rng: &mut Pcg64) -> usize {
+    let cols = out.cols();
+    let scale = alpha as f32;
+    let mut keep_idx: Vec<usize> = Vec::new();
+    let mut keep_flags = vec![false; group_size.min(cols)];
+    let mut kept = 0usize;
+    for r in 0..out.rows() {
+        let row = out.row_mut(r);
+        let mut start = 0usize;
+        while start < cols {
+            let len = group_size.min(cols - start);
+            let group = &mut row[start..start + len];
+            let k = keep_count(len, alpha);
+            rng.sample_indices(len, k, &mut keep_idx);
+            let flags = &mut keep_flags[..len];
+            flags.iter_mut().for_each(|f| *f = false);
+            for &i in &keep_idx {
+                flags[i] = true;
+            }
+            for (v, &f) in group.iter_mut().zip(flags.iter()) {
+                if f {
+                    *v *= scale;
+                } else {
+                    *v = 0.0;
+                }
+            }
+            kept += k;
+            start += len;
+        }
+    }
+    kept
+}
+
+/// Number of survivors in a group of `len` at ratio `alpha`:
+/// `round(len/α)`, clamped to `[0, len]`.
+pub fn keep_count(len: usize, alpha: f64) -> usize {
+    ((len as f64 / alpha).round() as usize).min(len)
+}
+
+/// The valid group-size search grid for Group-wise Dropout (paper §3.3):
+/// `{α, 2α, 4α, …}` capped at `h_in` (always including `h_in` itself,
+/// the row-wise case). `alpha` is rounded up to an integer group seed.
+pub fn group_size_grid(h_in: usize, alpha: f64) -> Vec<usize> {
+    let mut grid = Vec::new();
+    let mut g = (alpha.ceil() as usize).max(1);
+    while g < h_in {
+        grid.push(g);
+        g *= 2;
+    }
+    grid.push(h_in);
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        Matrix::randn(rows, cols, 0.02, &mut rng)
+    }
+
+    #[test]
+    fn rowwise_keeps_exact_count_per_row() {
+        let d = delta(16, 64, 1);
+        let mut rng = Pcg64::seeded(2);
+        let r = dropout(&d, 4.0, DropoutKind::RowWise, &mut rng);
+        for row in r.matrix.rows_iter() {
+            let nnz = row.iter().filter(|v| **v != 0.0).count();
+            assert_eq!(nnz, 16, "exactly 64/4 survivors per row");
+        }
+        assert!((r.kept_fraction - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn groupwise_keeps_exact_count_per_group() {
+        let d = delta(8, 64, 3);
+        let mut rng = Pcg64::seeded(4);
+        let r = dropout(&d, 8.0, DropoutKind::GroupWise { group_size: 16 }, &mut rng);
+        for row in r.matrix.rows_iter() {
+            for group in row.chunks(16) {
+                let nnz = group.iter().filter(|v| **v != 0.0).count();
+                assert_eq!(nnz, 2, "16/8 survivors per group");
+            }
+        }
+    }
+
+    #[test]
+    fn survivors_are_rescaled_by_alpha() {
+        let d = Matrix::full(4, 32, 1.0);
+        let mut rng = Pcg64::seeded(5);
+        let r = dropout(&d, 2.0, DropoutKind::GroupWise { group_size: 8 }, &mut rng);
+        for &v in r.matrix.data() {
+            assert!(v == 0.0 || (v - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unbiasedness_expectation_preserved() {
+        // Mean of many dropout draws converges to the original delta.
+        let d = delta(4, 32, 6);
+        let mut rng = Pcg64::seeded(7);
+        let trials = 600;
+        let mut acc = Matrix::zeros(4, 32);
+        for _ in 0..trials {
+            let r = dropout(&d, 4.0, DropoutKind::GroupWise { group_size: 8 }, &mut rng);
+            acc.add_assign(&r.matrix);
+        }
+        acc.scale(1.0 / trials as f32);
+        // elementwise close to original (statistical tolerance)
+        let err = acc.sq_distance(&d).sqrt() / d.frobenius_norm() as f64;
+        assert!(err < 0.25, "relative error {err}");
+    }
+
+    #[test]
+    fn global_matches_nominal_rate() {
+        let d = delta(64, 64, 8);
+        let mut rng = Pcg64::seeded(9);
+        let r = dropout(&d, 8.0, DropoutKind::Global, &mut rng);
+        assert!((r.kept_fraction - 0.125).abs() < 0.02);
+    }
+
+    #[test]
+    fn groupsize_equal_hin_matches_rowwise_structure() {
+        let d = delta(8, 32, 10);
+        let mut rng1 = Pcg64::seeded(11);
+        let mut rng2 = Pcg64::seeded(11);
+        let a = dropout(&d, 4.0, DropoutKind::RowWise, &mut rng1);
+        let b = dropout(&d, 4.0, DropoutKind::GroupWise { group_size: 32 }, &mut rng2);
+        assert_eq!(a.matrix, b.matrix, "same rng, same masks");
+    }
+
+    #[test]
+    fn alpha_one_keeps_everything() {
+        let d = delta(4, 16, 12);
+        let mut rng = Pcg64::seeded(13);
+        let r = dropout(&d, 1.0, DropoutKind::GroupWise { group_size: 4 }, &mut rng);
+        assert_eq!(r.matrix, d);
+        assert_eq!(r.kept_fraction, 1.0);
+    }
+
+    #[test]
+    fn ragged_last_group_handled() {
+        // cols=50, group=16 -> groups of 16,16,16,2
+        let d = delta(4, 50, 14);
+        let mut rng = Pcg64::seeded(15);
+        let r = dropout(&d, 2.0, DropoutKind::GroupWise { group_size: 16 }, &mut rng);
+        for row in r.matrix.rows_iter() {
+            let nnz = row.iter().filter(|v| **v != 0.0).count();
+            assert_eq!(nnz, 8 + 8 + 8 + 1);
+        }
+    }
+
+    #[test]
+    fn keep_count_rounds() {
+        assert_eq!(keep_count(64, 4.0), 16);
+        assert_eq!(keep_count(2, 8.0), 0);
+        assert_eq!(keep_count(16, 3.0), 5);
+        assert_eq!(keep_count(10, 1.0), 10);
+    }
+
+    #[test]
+    fn group_grid_shape() {
+        let g = group_size_grid(1024, 8.0);
+        assert_eq!(g, vec![8, 16, 32, 64, 128, 256, 512, 1024]);
+        let g2 = group_size_grid(100, 8.0);
+        assert_eq!(g2, vec![8, 16, 32, 64, 100]);
+        // alpha larger than h_in: just the row itself
+        let g3 = group_size_grid(4, 8.0);
+        assert_eq!(g3, vec![4]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = delta(8, 32, 16);
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        let ra = dropout(&d, 4.0, DropoutKind::GroupWise { group_size: 8 }, &mut a);
+        let rb = dropout(&d, 4.0, DropoutKind::GroupWise { group_size: 8 }, &mut b);
+        assert_eq!(ra.matrix, rb.matrix);
+    }
+}

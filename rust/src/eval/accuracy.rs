@@ -1,0 +1,102 @@
+//! Exact-match accuracy — the stand-in for GSM8k answer accuracy and
+//! HumanEval pass@1. A sample scores 1 iff greedy decoding reproduces
+//! the reference completion exactly (and stops at EOS).
+
+use crate::eval::tasks::{vocab, Sample};
+use crate::model::forward::{generate, WeightSource};
+
+/// Evaluation result over a dataset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccuracyReport {
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl AccuracyReport {
+    /// Accuracy in percent (paper tables report e.g. "55.49").
+    pub fn percent(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            100.0 * self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+/// Greedy-decode each prompt and exact-match the completion.
+pub fn evaluate<S: WeightSource>(source: &S, samples: &[Sample]) -> AccuracyReport {
+    let mut correct = 0;
+    for s in samples {
+        // allow a couple of extra tokens so an over-generation fails the
+        // match rather than being silently truncated to a "pass"
+        let out = generate(source, &s.prompt, s.completion.len() + 2, Some(vocab::EOS));
+        if out == s.completion {
+            correct += 1;
+        }
+    }
+    AccuracyReport { correct, total: samples.len() }
+}
+
+/// Evaluate in parallel across OS threads (samples are independent).
+pub fn evaluate_parallel<S: WeightSource + Sync>(
+    source: &S,
+    samples: &[Sample],
+    threads: usize,
+) -> AccuracyReport {
+    let threads = threads.max(1).min(samples.len().max(1));
+    if threads <= 1 {
+        return evaluate(source, samples);
+    }
+    let chunk = samples.len().div_ceil(threads);
+    let correct = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for block in samples.chunks(chunk) {
+            let correct = &correct;
+            scope.spawn(move || {
+                let r = evaluate(source, block);
+                correct.fetch_add(r.correct, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+    });
+    AccuracyReport {
+        correct: correct.load(std::sync::atomic::Ordering::Relaxed),
+        total: samples.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::tasks::{gen_dataset, TaskKind};
+    use crate::model::{ModelConfig, ModelWeights};
+    use crate::tensor::Pcg64;
+
+    #[test]
+    fn random_model_scores_near_zero_on_math() {
+        let mut rng = Pcg64::seeded(1);
+        let w = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+        let data = gen_dataset(TaskKind::Math, 40, 2);
+        let r = evaluate(&w, &data);
+        assert_eq!(r.total, 40);
+        // untrained: ~1/256 chance per sample
+        assert!(r.percent() < 15.0, "{}", r.percent());
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Pcg64::seeded(3);
+        let w = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+        let data = gen_dataset(TaskKind::Code, 24, 4);
+        let serial = evaluate(&w, &data);
+        for threads in [2, 4] {
+            let par = evaluate_parallel(&w, &data, threads);
+            assert_eq!(par, serial);
+        }
+    }
+
+    #[test]
+    fn percent_math() {
+        assert_eq!(AccuracyReport { correct: 1, total: 2 }.percent(), 50.0);
+        assert_eq!(AccuracyReport { correct: 0, total: 0 }.percent(), 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation harness (S9): synthetic downstream tasks, exact-match
+//! accuracy (the GSM8k / HumanEval stand-in metric), and perplexity.
+
+pub mod accuracy;
+pub mod perplexity;
+pub mod tasks;
+
+pub use accuracy::{evaluate, evaluate_parallel, AccuracyReport};
+pub use perplexity::{evaluate_completion_ce, evaluate_perplexity, PerplexityReport};
+pub use tasks::{gen_dataset, load_dataset, save_dataset, Sample, TaskKind};

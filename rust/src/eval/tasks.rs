@@ -1,0 +1,335 @@
+//! Synthetic downstream tasks (S9) — the GSM8k / HumanEval / chat
+//! stand-ins (DESIGN.md §2 substitution table).
+//!
+//! All tasks share one vocabulary and produce (prompt, completion)
+//! pairs scored by exact match of the completion — the same eval shape
+//! as the paper's GSM8k answer-match and HumanEval pass@1.
+//!
+//! * **Math** (`WizardMath` stand-in): `a ⊕ b =` → result token, with
+//!   `⊕ ∈ {+, −, ×}` over `Z_256`.
+//! * **Code** (`WizardCoder` stand-in): a prefix of nested brackets →
+//!   the exact closing sequence.
+//! * **Chat** (`WizardLM` stand-in): echo the payload through a fixed
+//!   token permutation (the "style" the fine-tune learns).
+
+use crate::tensor::Pcg64;
+
+/// Shared vocabulary layout (vocab_size ≥ 272).
+pub mod vocab {
+    pub const PAD: u32 = 0;
+    pub const BOS: u32 = 1;
+    pub const EOS: u32 = 2;
+    pub const EQ: u32 = 3;
+    pub const PLUS: u32 = 4;
+    pub const MINUS: u32 = 5;
+    pub const TIMES: u32 = 6;
+    pub const OPEN_P: u32 = 7;
+    pub const CLOSE_P: u32 = 8;
+    pub const OPEN_B: u32 = 9;
+    pub const CLOSE_B: u32 = 10;
+    pub const SEP: u32 = 11;
+    /// Numbers 0..=255 map to tokens NUM0..NUM0+255.
+    pub const NUM0: u32 = 16;
+    pub const NUM_COUNT: u32 = 256;
+
+    pub fn num(v: u32) -> u32 {
+        assert!(v < NUM_COUNT);
+        NUM0 + v
+    }
+}
+
+/// Which downstream task a tenant model is fine-tuned for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Math,
+    Code,
+    Chat,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Math => "math",
+            TaskKind::Code => "code",
+            TaskKind::Chat => "chat",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TaskKind> {
+        match s {
+            "math" => Some(TaskKind::Math),
+            "code" => Some(TaskKind::Code),
+            "chat" => Some(TaskKind::Chat),
+            _ => None,
+        }
+    }
+}
+
+/// One evaluation sample.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Sample {
+    pub prompt: Vec<u32>,
+    pub completion: Vec<u32>,
+}
+
+impl Sample {
+    /// Full sequence (prompt ++ completion ++ EOS) for LM training /
+    /// perplexity.
+    pub fn full_sequence(&self) -> Vec<u32> {
+        let mut s = self.prompt.clone();
+        s.extend_from_slice(&self.completion);
+        s.push(vocab::EOS);
+        s
+    }
+}
+
+/// Operand / result modulus of the math task. Kept at 64 so the
+/// combinatorial space (3 · 64² ≈ 12k problems) is learnable by the
+/// tiny-scale models in a few thousand CPU training steps while still
+/// requiring real structure (modular add/sub/mul).
+pub const MATH_MOD: u32 = 64;
+
+/// Generate one math sample: `BOS a ⊕ b EQ` → `c EOS` over `Z_64` with
+/// `⊕ ∈ {+, −}`. (Modular multiplication is a grokking-regime task that
+/// the tiny CPU-trainable models cannot reach in a few hundred steps;
+/// add/sub keeps the eval discriminative — see DESIGN.md §2.)
+pub fn gen_math(rng: &mut Pcg64) -> Sample {
+    let a = rng.below(MATH_MOD as u64) as u32;
+    let b = rng.below(MATH_MOD as u64) as u32;
+    let (op_tok, c) = match rng.below(2) {
+        0 => (vocab::PLUS, (a + b) % MATH_MOD),
+        _ => (vocab::MINUS, (a + MATH_MOD - b) % MATH_MOD),
+    };
+    Sample {
+        prompt: vec![vocab::BOS, vocab::num(a), op_tok, vocab::num(b), vocab::EQ],
+        completion: vec![vocab::num(c)],
+    }
+}
+
+/// Generate one code sample: a random well-formed bracket prefix with
+/// `depth ≥ 1` unclosed brackets → the exact closing sequence.
+pub fn gen_code(rng: &mut Pcg64, max_len: usize) -> Sample {
+    let mut prompt = vec![vocab::BOS];
+    let mut stack: Vec<u32> = Vec::new();
+    let target_len = 4 + rng.below_usize(max_len.saturating_sub(4).max(1));
+    while prompt.len() < target_len {
+        let can_close = !stack.is_empty();
+        // bias toward opening early, closing late
+        let open = !can_close || rng.bernoulli(0.55);
+        if open && stack.len() < 8 {
+            if rng.bernoulli(0.5) {
+                prompt.push(vocab::OPEN_P);
+                stack.push(vocab::CLOSE_P);
+            } else {
+                prompt.push(vocab::OPEN_B);
+                stack.push(vocab::CLOSE_B);
+            }
+        } else if can_close {
+            prompt.push(stack.pop().unwrap());
+        }
+    }
+    // ensure at least one unclosed bracket so the completion is nonempty
+    if stack.is_empty() {
+        prompt.push(vocab::OPEN_P);
+        stack.push(vocab::CLOSE_P);
+    }
+    let completion: Vec<u32> = stack.iter().rev().copied().collect();
+    Sample { prompt, completion }
+}
+
+/// Value space of the chat payload (kept small so the 64-entry style
+/// table is learnable in a few hundred SFT steps).
+pub const CHAT_MOD: u32 = 64;
+
+/// The chat "style" permutation over number tokens: an affine map
+/// `v ↦ (5·v + 7) mod 64` (odd multiplier → invertible). Fixed
+/// constants — the *task* is fixed; models learn it from data.
+pub fn chat_permute(v: u32) -> u32 {
+    (v * 5 + 7) % CHAT_MOD
+}
+
+/// Generate one chat sample: `BOS SEP t1..tk SEP` → permuted payload.
+pub fn gen_chat(rng: &mut Pcg64, payload_len: usize) -> Sample {
+    let k = 1 + rng.below_usize(payload_len.max(1));
+    let payload: Vec<u32> = (0..k).map(|_| rng.below(CHAT_MOD as u64) as u32).collect();
+    let mut prompt = vec![vocab::BOS, vocab::SEP];
+    prompt.extend(payload.iter().map(|&v| vocab::num(v)));
+    prompt.push(vocab::SEP);
+    let completion = payload.iter().map(|&v| vocab::num(chat_permute(v))).collect();
+    Sample { prompt, completion }
+}
+
+/// Generate a dataset of `n` samples for a task, deterministically.
+pub fn gen_dataset(task: TaskKind, n: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = Pcg64::new(seed, task as u64 + 100);
+    (0..n)
+        .map(|_| match task {
+            TaskKind::Math => gen_math(&mut rng),
+            TaskKind::Code => gen_code(&mut rng, 24),
+            TaskKind::Chat => gen_chat(&mut rng, 6),
+        })
+        .collect()
+}
+
+/// Serialize a dataset to the binary `.dqt` format the python trainer
+/// reads (u32 count; per sample u16 prompt_len, u16 completion_len,
+/// u16 tokens...).
+pub fn save_dataset(path: &std::path::Path, samples: &[Sample]) -> anyhow::Result<()> {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(b"DDQT")?;
+    w.write_all(&(samples.len() as u32).to_le_bytes())?;
+    for s in samples {
+        w.write_all(&(s.prompt.len() as u16).to_le_bytes())?;
+        w.write_all(&(s.completion.len() as u16).to_le_bytes())?;
+        for &t in s.prompt.iter().chain(&s.completion) {
+            w.write_all(&(t as u16).to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a `.dqt` dataset.
+pub fn load_dataset(path: &std::path::Path) -> anyhow::Result<Vec<Sample>> {
+    use anyhow::{bail, Context};
+    use std::io::Read;
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != b"DDQT" {
+        bail!("bad dataset magic");
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let count = u32::from_le_bytes(b4) as usize;
+    let mut out = Vec::with_capacity(count);
+    let mut b2 = [0u8; 2];
+    for i in 0..count {
+        r.read_exact(&mut b2).with_context(|| format!("sample {i}"))?;
+        let plen = u16::from_le_bytes(b2) as usize;
+        r.read_exact(&mut b2)?;
+        let clen = u16::from_le_bytes(b2) as usize;
+        let mut toks = Vec::with_capacity(plen + clen);
+        for _ in 0..plen + clen {
+            r.read_exact(&mut b2)?;
+            toks.push(u16::from_le_bytes(b2) as u32);
+        }
+        let completion = toks.split_off(plen);
+        out.push(Sample { prompt: toks, completion });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn math_answers_are_correct() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..200 {
+            let s = gen_math(&mut rng);
+            assert_eq!(s.prompt.len(), 5);
+            assert_eq!(s.completion.len(), 1);
+            let a = s.prompt[1] - vocab::NUM0;
+            let b = s.prompt[3] - vocab::NUM0;
+            let c = s.completion[0] - vocab::NUM0;
+            assert!(a < MATH_MOD && b < MATH_MOD && c < MATH_MOD);
+            let want = match s.prompt[2] {
+                vocab::PLUS => (a + b) % MATH_MOD,
+                vocab::MINUS => (a + MATH_MOD - b) % MATH_MOD,
+                vocab::TIMES => (a * b) % MATH_MOD,
+                t => panic!("bad op {t}"),
+            };
+            assert_eq!(c, want);
+        }
+    }
+
+    #[test]
+    fn code_completions_close_brackets() {
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..200 {
+            let s = gen_code(&mut rng, 24);
+            assert!(!s.completion.is_empty());
+            // simulate: the full bracket string must be balanced
+            let mut stack = Vec::new();
+            for &t in s.prompt[1..].iter().chain(&s.completion) {
+                match t {
+                    vocab::OPEN_P => stack.push(vocab::CLOSE_P),
+                    vocab::OPEN_B => stack.push(vocab::CLOSE_B),
+                    close => assert_eq!(Some(close), stack.pop(), "mismatched close"),
+                }
+            }
+            assert!(stack.is_empty(), "unbalanced after completion");
+        }
+    }
+
+    #[test]
+    fn chat_permutation_is_bijective() {
+        let mut seen = [false; CHAT_MOD as usize];
+        for v in 0..CHAT_MOD {
+            let p = chat_permute(v) as usize;
+            assert!(!seen[p], "collision at {v}");
+            seen[p] = true;
+        }
+    }
+
+    #[test]
+    fn chat_samples_apply_permutation() {
+        let mut rng = Pcg64::seeded(3);
+        let s = gen_chat(&mut rng, 6);
+        let payload: Vec<u32> = s.prompt[2..s.prompt.len() - 1]
+            .iter()
+            .map(|&t| t - vocab::NUM0)
+            .collect();
+        assert_eq!(s.completion.len(), payload.len());
+        for (p, c) in payload.iter().zip(&s.completion) {
+            assert_eq!(c - vocab::NUM0, chat_permute(*p));
+        }
+    }
+
+    #[test]
+    fn datasets_are_deterministic() {
+        let a = gen_dataset(TaskKind::Math, 50, 7);
+        let b = gen_dataset(TaskKind::Math, 50, 7);
+        assert_eq!(a, b);
+        let c = gen_dataset(TaskKind::Math, 50, 8);
+        assert_ne!(a, c);
+        // different tasks use different streams
+        let m = gen_dataset(TaskKind::Math, 10, 7);
+        let ch = gen_dataset(TaskKind::Chat, 10, 7);
+        assert_ne!(m, ch);
+    }
+
+    #[test]
+    fn dataset_file_roundtrip() {
+        let dir = std::env::temp_dir().join("deltadq-test-tasks");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("math.dqt");
+        let samples = gen_dataset(TaskKind::Math, 64, 9);
+        save_dataset(&path, &samples).unwrap();
+        let loaded = load_dataset(&path).unwrap();
+        assert_eq!(loaded, samples);
+    }
+
+    #[test]
+    fn tokens_fit_tiny_vocab() {
+        for task in [TaskKind::Math, TaskKind::Code, TaskKind::Chat] {
+            for s in gen_dataset(task, 100, 11) {
+                for &t in s.prompt.iter().chain(&s.completion) {
+                    assert!(t < 512, "token {t} exceeds vocab");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequences_fit_max_seq() {
+        for task in [TaskKind::Math, TaskKind::Code, TaskKind::Chat] {
+            for s in gen_dataset(task, 200, 13) {
+                assert!(s.full_sequence().len() <= 64, "{task:?} too long");
+            }
+        }
+    }
+}

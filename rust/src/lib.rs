@@ -1,0 +1,33 @@
+//! # DeltaDQ
+//!
+//! Production-oriented reproduction of *"DeltaDQ: Ultra-High Delta
+//! Compression for Fine-Tuned LLMs via Group-wise Dropout and Separate
+//! Quantization"* (Jiang et al., 2024), built as a three-layer stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: multi-tenant request
+//!   routing, dynamic batching, per-tenant compressed-delta registry, and
+//!   the full native implementation of the compression algorithms
+//!   (DeltaDQ plus the Magnitude / DARE / DELTAZIP baselines).
+//! * **L2 (python/compile/model.py)** — the JAX transformer forward pass
+//!   with separate base+delta computation, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   base+delta matmul and m-part dequantization.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench_harness;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod delta;
+pub mod dropout;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod search;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

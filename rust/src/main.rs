@@ -1,0 +1,314 @@
+//! `deltadq` — the launcher (S12).
+//!
+//! Subcommands:
+//!
+//! * `gen-data`   — generate the synthetic task datasets (`.dqt`)
+//! * `compress`   — compress a fine-tuned model's delta (`.ddq` out)
+//! * `eval`       — task accuracy of base / fine-tuned / compressed
+//! * `search`     — group-size search (direct vs proxy)
+//! * `serve`      — multi-tenant serving coordinator
+//! * `bench`      — regenerate a paper table/figure (table1..4, fig4..8)
+//!
+//! CLI parsing is hand-rolled (the container vendors no clap); flags are
+//! `--key value` pairs after the subcommand.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use deltadq::bench_harness;
+use deltadq::compress::pipeline::{capture_calibration, compress_model_deltas};
+use deltadq::compress::{Compressor, Dare, DeltaDq, DeltaDqConfig, DeltaZip, DeltaZipConfig, Magnitude};
+use deltadq::config::{Config, ServeConfig};
+use deltadq::coordinator;
+use deltadq::delta::{extract_deltas, load_delta_set, save_delta_set};
+use deltadq::eval::{evaluate_parallel, gen_dataset, save_dataset, TaskKind};
+use deltadq::model::load_weights;
+use deltadq::search::{search_direct, search_proxy};
+use deltadq::tensor::Pcg64;
+
+/// Minimal `--key value` flag map.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let key = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{}'", argv[i]))?;
+            let value = argv
+                .get(i + 1)
+                .with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), value.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "gen-data" => cmd_gen_data(&args),
+        "compress" => cmd_compress(&args),
+        "eval" => cmd_eval(&args),
+        "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `deltadq help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "deltadq — ultra-high delta compression for fine-tuned LLMs\n\
+         \n\
+         USAGE: deltadq <command> [--flag value]...\n\
+         \n\
+         COMMANDS:\n\
+           gen-data  --out DIR [--train N] [--eval N] [--seed S]\n\
+           compress  --base F.dqw --finetuned F.dqw --out F.ddq\n\
+                     [--method deltadq|dare|magnitude|deltazip]\n\
+                     [--ratio R] [--group-size G] [--bits K] [--parts M]\n\
+                     [--data DIR]\n\
+           eval      --base F.dqw [--delta F.ddq | --finetuned F.dqw]\n\
+                     --data F.dqt [--threads N]\n\
+           search    --base F.dqw --finetuned F.dqw --data F.dqt\n\
+                     [--ratio R] [--method proxy|direct|both]\n\
+           serve     [--config F.toml] [--models DIR] [--requests N]\n\
+                     [--tenants LIST] [--rate R]\n\
+           bench     --name table1|table2|table3|table4|fig4|fig5|fig6|\n\
+                     fig7|fig8|ablations [--models DIR] [--out FILE]"
+    );
+}
+
+// ------------------------------------------------------------ gen-data
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.str_or("out", "artifacts/data"));
+    std::fs::create_dir_all(&out)?;
+    let n_train = args.usize_or("train", 20_000)?;
+    let n_eval = args.usize_or("eval", 400)?;
+    let seed = args.u64_or("seed", 20240701)?;
+    for task in [TaskKind::Math, TaskKind::Code, TaskKind::Chat] {
+        let train = gen_dataset(task, n_train, seed);
+        let eval = gen_dataset(task, n_eval, seed ^ 0xEEEE);
+        save_dataset(&out.join(format!("{}_train.dqt", task.name())), &train)?;
+        save_dataset(&out.join(format!("{}_eval.dqt", task.name())), &eval)?;
+        println!(
+            "wrote {}_train.dqt ({n_train} samples) and {}_eval.dqt ({n_eval})",
+            task.name(),
+            task.name()
+        );
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ compress
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let base = load_weights(Path::new(
+        args.get("base").context("--base required")?,
+    ))?;
+    let ft = load_weights(Path::new(
+        args.get("finetuned").context("--finetuned required")?,
+    ))?;
+    let out = PathBuf::from(args.get("out").context("--out required")?);
+    let method = args.str_or("method", "deltadq");
+    let ratio = args.f64_or("ratio", 16.0)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    let deltas = extract_deltas(&base, &ft);
+    let mut rng = Pcg64::seeded(seed);
+
+    let group_size = args.get("group-size").map(|v| v.parse()).transpose()?;
+    let compressor: Box<dyn Compressor> = match method.as_str() {
+        "deltadq" => {
+            let cfg = match (args.get("bits"), args.get("parts")) {
+                (Some(k), m) => DeltaDqConfig::with_quant(
+                    args.f64_or("alpha", ratio)?,
+                    group_size,
+                    k.parse()?,
+                    m.map(|v| v.parse()).transpose()?.unwrap_or(1),
+                ),
+                (None, _) => DeltaDqConfig::for_total_ratio(ratio, group_size),
+            };
+            Box::new(DeltaDq::new(cfg))
+        }
+        "dare" => Box::new(Dare::new(ratio)),
+        "magnitude" => Box::new(Magnitude::new(ratio)),
+        "deltazip" => Box::new(DeltaZip::new(DeltaZipConfig::for_total_ratio(ratio))),
+        other => bail!("unknown method '{other}'"),
+    };
+
+    // calibration for second-order methods
+    let calibration = if method == "deltazip" {
+        let data_dir = PathBuf::from(args.str_or("data", "artifacts/data"));
+        let samples = deltadq::eval::load_dataset(&data_dir.join("math_eval.dqt"))?;
+        capture_calibration(&ft, &samples[..samples.len().min(16)], 256)
+    } else {
+        BTreeMap::new()
+    };
+
+    let set = compress_model_deltas(&deltas, compressor.as_ref(), &calibration, &mut rng);
+    save_delta_set(&out, &set)?;
+    println!(
+        "compressed with {}: nominal {}x, measured storage {:.1}x, {} -> {} bytes",
+        set.method,
+        set.nominal_ratio,
+        set.measured_ratio(),
+        set.total_elems() * 2,
+        set.storage_bits() / 8
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------- eval
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let base = load_weights(Path::new(
+        args.get("base").context("--base required")?,
+    ))?;
+    let data = deltadq::eval::load_dataset(Path::new(
+        args.get("data").context("--data required")?,
+    ))?;
+    let threads = args.usize_or("threads", 4)?;
+    let weights = match (args.get("delta"), args.get("finetuned")) {
+        (Some(ddq), _) => {
+            let set = load_delta_set(Path::new(ddq))?;
+            deltadq::compress::pipeline::reconstruct_weights(&base, &set)
+        }
+        (None, Some(ft)) => load_weights(Path::new(ft))?,
+        (None, None) => base.clone(),
+    };
+    let report = evaluate_parallel(&weights, &data, threads);
+    println!(
+        "accuracy: {:.2}% ({}/{})",
+        report.percent(),
+        report.correct,
+        report.total
+    );
+    Ok(())
+}
+
+// -------------------------------------------------------------- search
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let base = load_weights(Path::new(
+        args.get("base").context("--base required")?,
+    ))?;
+    let ft = load_weights(Path::new(
+        args.get("finetuned").context("--finetuned required")?,
+    ))?;
+    let data = deltadq::eval::load_dataset(Path::new(
+        args.get("data").context("--data required")?,
+    ))?;
+    let ratio = args.f64_or("ratio", 8.0)?;
+    let seed = args.u64_or("seed", 42)?;
+    let method = args.str_or("method", "both");
+    let deltas = extract_deltas(&base, &ft);
+    if method == "proxy" || method == "both" {
+        let r = search_proxy(&base, &deltas, ratio, &data, 0.01, seed);
+        println!(
+            "proxy:  h_g* = {} in {:.2}s  {:?}",
+            r.best_group_size,
+            r.elapsed.as_secs_f64(),
+            r.candidates
+        );
+    }
+    if method == "direct" || method == "both" {
+        let r = search_direct(&base, &deltas, ratio, &data, seed);
+        println!(
+            "direct: h_g* = {} in {:.2}s  {:?}",
+            r.best_group_size,
+            r.elapsed.as_secs_f64(),
+            r.candidates
+        );
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- serve
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut config = match args.get("config") {
+        Some(path) => Config::load(Path::new(path))?,
+        None => Config::default(),
+    };
+    let overrides: Vec<String> = args
+        .flags
+        .iter()
+        .filter(|(k, _)| k.starts_with("serve."))
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect();
+    config.apply_overrides(&overrides)?;
+    let mut serve = ServeConfig::from_config(&config);
+    if let Some(dir) = args.get("models") {
+        serve.artifacts_dir = dir.to_string();
+    }
+    let requests = args.usize_or("requests", 64)?;
+    let rate = args.f64_or("rate", 200.0)?;
+    let tenants = args.str_or("tenants", "math,code,chat");
+    coordinator::run_demo_server(&serve, &tenants, requests, rate)
+}
+
+// --------------------------------------------------------------- bench
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let name = args.get("name").context("--name required")?;
+    let models_dir = PathBuf::from(args.str_or("models", "artifacts/models"));
+    let data_dir = PathBuf::from(args.str_or("data", "artifacts/data"));
+    let out = args.get("out").map(PathBuf::from);
+    let report = bench_harness::run(name, &models_dir, &data_dir)?;
+    match out {
+        Some(path) => {
+            std::fs::write(&path, &report)?;
+            println!("wrote {path:?}");
+        }
+        None => println!("{report}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Transformer model configuration and the scale presets standing in
+//! for the paper's WizardMath/WizardCoder parameter scales.
+//!
+//! The paper evaluates {7B, 13B, 70B} (math) and {7B, 13B, 34B} (code).
+//! On this CPU-only testbed we map those to {tiny, small, base} presets
+//! (DESIGN.md §2) and keep a `large` (~95M) preset for the end-to-end
+//! driver. The *trend the paper reports across scales* ("larger models
+//! are easier to compress") is what the mapping must preserve, not the
+//! absolute parameter counts.
+
+/// Architecture hyperparameters (Llama-style block: RMSNorm, multi-head
+/// causal attention, SwiGLU MLP, learned positional embeddings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_hidden: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    /// ~0.16M params — stands in for the 7B tier.
+    pub fn tiny() -> ModelConfig {
+        ModelConfig { vocab_size: 512, hidden: 64, n_layers: 2, n_heads: 4, ffn_hidden: 128, max_seq: 64 }
+    }
+
+    /// ~0.64M params — stands in for the 13B tier.
+    pub fn small() -> ModelConfig {
+        ModelConfig { vocab_size: 512, hidden: 128, n_layers: 3, n_heads: 8, ffn_hidden: 256, max_seq: 64 }
+    }
+
+    /// ~2M params — stands in for the 70B (34B) tier.
+    pub fn base() -> ModelConfig {
+        ModelConfig { vocab_size: 512, hidden: 192, n_layers: 4, n_heads: 8, ffn_hidden: 512, max_seq: 64 }
+    }
+
+    /// ~95M params — the end-to-end driver scale (system prompt's ~100M).
+    pub fn large() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 2048,
+            hidden: 768,
+            n_layers: 12,
+            n_heads: 12,
+            ffn_hidden: 2304,
+            max_seq: 256,
+        }
+    }
+
+    /// Preset by name ("tiny" | "small" | "base" | "large").
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        match name {
+            "tiny" => Some(ModelConfig::tiny()),
+            "small" => Some(ModelConfig::small()),
+            "base" => Some(ModelConfig::base()),
+            "large" => Some(ModelConfig::large()),
+            _ => None,
+        }
+    }
+
+    /// Head dimension; `hidden` must divide evenly.
+    pub fn head_dim(&self) -> usize {
+        assert_eq!(self.hidden % self.n_heads, 0, "hidden % heads");
+        self.hidden / self.n_heads
+    }
+
+    /// Total parameter count (embeddings + blocks + head + norms).
+    pub fn param_count(&self) -> usize {
+        let h = self.hidden;
+        let emb = self.vocab_size * h + self.max_seq * h;
+        let per_layer = 4 * h * h          // wq wk wv wo
+            + 3 * h * self.ffn_hidden      // gate, up, down
+            + 2 * h;                       // two RMSNorm gains
+        let head = self.vocab_size * h + h; // lm head + final norm
+        emb + self.n_layers * per_layer + head
+    }
+
+    /// Names of the seven weight *matrices* per layer that carry deltas
+    /// (norm vectors are kept in fp and excluded from compression, like
+    /// the paper's focus on Linear-layer weights).
+    pub fn layer_tensor_names(layer: usize) -> Vec<String> {
+        ["attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.gate", "mlp.up", "mlp.down"]
+            .iter()
+            .map(|t| format!("layers.{layer}.{t}"))
+            .collect()
+    }
+
+    /// All compressible tensor names for this config, in canonical order.
+    pub fn delta_tensor_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for l in 0..self.n_layers {
+            names.extend(Self::layer_tensor_names(l));
+        }
+        names
+    }
+
+    /// Delta tensor names in sorted order — the AOT argument convention
+    /// shared with `python/compile/aot.py::delta_specs`.
+    pub fn delta_tensor_names_sorted(&self) -> Vec<String> {
+        let mut names = self.delta_tensor_names();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["tiny", "small", "base", "large"] {
+            assert!(ModelConfig::preset(name).is_some());
+        }
+        assert!(ModelConfig::preset("7B").is_none());
+    }
+
+    #[test]
+    fn scales_are_ordered() {
+        let t = ModelConfig::tiny().param_count();
+        let s = ModelConfig::small().param_count();
+        let b = ModelConfig::base().param_count();
+        let l = ModelConfig::large().param_count();
+        assert!(t < s && s < b && b < l, "{t} {s} {b} {l}");
+        assert!(l > 50_000_000, "large preset should be ~100M, got {l}");
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        assert_eq!(ModelConfig::tiny().head_dim(), 16);
+        assert_eq!(ModelConfig::large().head_dim(), 64);
+    }
+
+    #[test]
+    fn tensor_names_enumerate_all_layers() {
+        let c = ModelConfig::tiny();
+        let names = c.delta_tensor_names();
+        assert_eq!(names.len(), c.n_layers * 7);
+        assert_eq!(names[0], "layers.0.attn.wq");
+        assert!(names.contains(&"layers.1.mlp.down".to_string()));
+    }
+}

@@ -1,0 +1,334 @@
+//! Transformer forward pass, generic over the weight source so the same
+//! code path serves both dense fine-tuned weights and the paper's
+//! **separate computation** scheme (Fig. 3): `X·W_bᵀ + X·ΔŴᵀ` with the
+//! delta kept compressed.
+
+use std::collections::BTreeMap;
+
+use crate::compress::CompressedDelta;
+use crate::model::config::ModelConfig;
+use crate::model::kvcache::KvCache;
+use crate::model::weights::ModelWeights;
+use crate::tensor::ops;
+use crate::tensor::Matrix;
+
+/// Where a layer's weights come from.
+pub trait WeightSource {
+    fn config(&self) -> ModelConfig;
+
+    /// Direct tensor access (norm gains, embeddings — never compressed).
+    fn dense(&self, name: &str) -> &Matrix;
+
+    /// Linear projection `X·Wᵀ` for the named weight matrix. Dense
+    /// sources do one matmul; delta sources do the separate computation.
+    fn linear(&self, name: &str, x: &Matrix) -> Matrix;
+}
+
+impl WeightSource for ModelWeights {
+    fn config(&self) -> ModelConfig {
+        self.config
+    }
+
+    fn dense(&self, name: &str) -> &Matrix {
+        self.get(name)
+    }
+
+    fn linear(&self, name: &str, x: &Matrix) -> Matrix {
+        x.matmul_nt(self.get(name))
+    }
+}
+
+/// Separate-computation view: a shared base model plus one tenant's
+/// compressed deltas. `Y = X·W_bᵀ + X·ΔŴᵀ` per linear layer — the delta
+/// term runs on the compressed representation (CSR / decomposed parts),
+/// exactly the deployment scheme of §3.1.
+pub struct DeltaView<'a> {
+    pub base: &'a ModelWeights,
+    pub deltas: &'a BTreeMap<String, CompressedDelta>,
+}
+
+impl<'a> WeightSource for DeltaView<'a> {
+    fn config(&self) -> ModelConfig {
+        self.base.config
+    }
+
+    fn dense(&self, name: &str) -> &Matrix {
+        self.base.get(name)
+    }
+
+    fn linear(&self, name: &str, x: &Matrix) -> Matrix {
+        let mut out = x.matmul_nt(self.base.get(name));
+        if let Some(delta) = self.deltas.get(name) {
+            let delta_out = delta.matmul_nt_from_dense(x);
+            out.add_assign(&delta_out);
+        }
+        out
+    }
+}
+
+/// Multi-head causal self-attention over a full sequence.
+/// `x: t×h` → `t×h`. Also returns (K, V) for cache priming.
+fn attention<S: WeightSource>(
+    source: &S,
+    layer: usize,
+    x: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    let c = source.config();
+    let (t, h) = x.shape();
+    let d = c.head_dim();
+    let p = |tname: &str| format!("layers.{layer}.{tname}");
+    let q = source.linear(&p("attn.wq"), x);
+    let k = source.linear(&p("attn.wk"), x);
+    let v = source.linear(&p("attn.wv"), x);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut ctx = Matrix::zeros(t, h);
+    for head in 0..c.n_heads {
+        let lo = head * d;
+        let hi = lo + d;
+        let qh = q.slice_cols(lo, hi);
+        let kh = k.slice_cols(lo, hi);
+        let vh = v.slice_cols(lo, hi);
+        let mut scores = qh.matmul_nt(&kh);
+        scores.scale(scale);
+        ops::apply_causal_mask(&mut scores);
+        ops::softmax_rows(&mut scores);
+        let out = scores.matmul_nn(&vh);
+        ctx.set_cols(lo, &out);
+    }
+    (source.linear(&p("attn.wo"), &ctx), k, v)
+}
+
+/// SwiGLU MLP: `down( silu(gate(x)) ⊙ up(x) )`.
+fn mlp<S: WeightSource>(source: &S, layer: usize, x: &Matrix) -> Matrix {
+    let p = |tname: &str| format!("layers.{layer}.{tname}");
+    let mut gate = source.linear(&p("mlp.gate"), x);
+    ops::silu(&mut gate);
+    let up = source.linear(&p("mlp.up"), x);
+    let fused = gate.hadamard(&up);
+    source.linear(&p("mlp.down"), &fused)
+}
+
+/// Full-sequence forward: token ids → logits (`t × vocab`).
+pub fn forward<S: WeightSource>(source: &S, tokens: &[u32]) -> Matrix {
+    let c = source.config();
+    assert!(!tokens.is_empty(), "empty sequence");
+    assert!(tokens.len() <= c.max_seq, "sequence {} > max_seq {}", tokens.len(), c.max_seq);
+    let mut x = ops::embed(source.dense("tok_emb"), tokens);
+    let pos = source.dense("pos_emb");
+    for (i, row) in x.data_mut().chunks_exact_mut(c.hidden).enumerate() {
+        for (a, b) in row.iter_mut().zip(pos.row(i)) {
+            *a += b;
+        }
+    }
+    for layer in 0..c.n_layers {
+        let p = |tname: &str| format!("layers.{layer}.{tname}");
+        let mut normed = x.clone();
+        ops::rmsnorm_rows(&mut normed, source.dense(&p("attn_norm")).row(0), 1e-6);
+        let (attn_out, _, _) = attention(source, layer, &normed);
+        x.add_assign(&attn_out);
+        let mut normed = x.clone();
+        ops::rmsnorm_rows(&mut normed, source.dense(&p("mlp_norm")).row(0), 1e-6);
+        let mlp_out = mlp(source, layer, &normed);
+        x.add_assign(&mlp_out);
+    }
+    ops::rmsnorm_rows(&mut x, source.dense("final_norm").row(0), 1e-6);
+    source.linear("lm_head", &x)
+}
+
+/// Single-token decode step with KV cache. `pos` is the absolute
+/// position of `token`; the cache must hold positions `0..pos`.
+/// Returns logits (`1 × vocab`).
+pub fn forward_step<S: WeightSource>(
+    source: &S,
+    token: u32,
+    pos: usize,
+    cache: &mut KvCache,
+) -> Matrix {
+    let c = source.config();
+    assert!(pos < c.max_seq, "position {pos} ≥ max_seq {}", c.max_seq);
+    assert_eq!(cache.len(), pos, "cache holds {} positions, expected {pos}", cache.len());
+    let d = c.head_dim();
+    let mut x = ops::embed(source.dense("tok_emb"), &[token]);
+    for (a, b) in x.data_mut().iter_mut().zip(source.dense("pos_emb").row(pos)) {
+        *a += b;
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    for layer in 0..c.n_layers {
+        let p = |tname: &str| format!("layers.{layer}.{tname}");
+        let mut normed = x.clone();
+        ops::rmsnorm_rows(&mut normed, source.dense(&p("attn_norm")).row(0), 1e-6);
+        let q = source.linear(&p("attn.wq"), &normed);
+        let k = source.linear(&p("attn.wk"), &normed);
+        let v = source.linear(&p("attn.wv"), &normed);
+        cache.append(layer, k.row(0), v.row(0));
+        let (k_all, v_all) = cache.layer(layer);
+        let t = k_all.rows();
+        let mut ctx = Matrix::zeros(1, c.hidden);
+        for head in 0..c.n_heads {
+            let lo = head * d;
+            let hi = lo + d;
+            let qh = q.slice_cols(lo, hi);
+            let kh = k_all.slice_cols(lo, hi);
+            let vh = v_all.slice_cols(lo, hi);
+            let mut scores = qh.matmul_nt(&kh); // 1×t
+            scores.scale(scale);
+            ops::softmax_rows(&mut scores);
+            let out = scores.matmul_nn(&vh); // 1×d
+            ctx.set_cols(lo, &out);
+        }
+        let _ = t;
+        let attn_out = source.linear(&p("attn.wo"), &ctx);
+        x.add_assign(&attn_out);
+        let mut normed = x.clone();
+        ops::rmsnorm_rows(&mut normed, source.dense(&p("mlp_norm")).row(0), 1e-6);
+        let mlp_out = mlp(source, layer, &normed);
+        x.add_assign(&mlp_out);
+    }
+    ops::rmsnorm_rows(&mut x, source.dense("final_norm").row(0), 1e-6);
+    source.linear("lm_head", &x)
+}
+
+/// Greedy decode: feed `prompt`, then generate up to `max_new` tokens
+/// (stopping at `eos` if given). Returns only the generated tokens.
+pub fn generate<S: WeightSource>(
+    source: &S,
+    prompt: &[u32],
+    max_new: usize,
+    eos: Option<u32>,
+) -> Vec<u32> {
+    let c = source.config();
+    let mut cache = KvCache::new(c.n_layers, c.hidden);
+    let mut out = Vec::new();
+    let mut last_logits = Matrix::zeros(1, c.vocab_size);
+    for (pos, &tok) in prompt.iter().enumerate() {
+        last_logits = forward_step(source, tok, pos, &mut cache);
+    }
+    let mut pos = prompt.len();
+    for _ in 0..max_new {
+        if pos >= c.max_seq {
+            break;
+        }
+        let next = ops::argmax_rows(&last_logits)[0];
+        if Some(next) == eos {
+            break;
+        }
+        out.push(next);
+        last_logits = forward_step(source, next, pos, &mut cache);
+        pos += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, DeltaDq, DeltaDqConfig, LayerContext};
+    use crate::tensor::Pcg64;
+
+    fn model(seed: u64) -> ModelWeights {
+        let mut rng = Pcg64::seeded(seed);
+        ModelWeights::init(ModelConfig::tiny(), &mut rng)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let w = model(1);
+        let logits = forward(&w, &[1, 2, 3, 4, 5]);
+        assert_eq!(logits.shape(), (5, 512));
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // logits at position i must not depend on tokens after i
+        let w = model(2);
+        let full = forward(&w, &[5, 6, 7, 8]);
+        let prefix = forward(&w, &[5, 6]);
+        for c in 0..512 {
+            assert!((full.get(0, c) - prefix.get(0, c)).abs() < 1e-4);
+            assert!((full.get(1, c) - prefix.get(1, c)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn cached_decode_matches_full_forward() {
+        let w = model(3);
+        let tokens = [3u32, 1, 4, 1, 5, 9];
+        let full = forward(&w, &tokens);
+        let mut cache = KvCache::new(w.config.n_layers, w.config.hidden);
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let step = forward_step(&w, tok, pos, &mut cache);
+            for c in 0..512 {
+                assert!(
+                    (full.get(pos, c) - step.get(0, c)).abs() < 1e-3,
+                    "pos {pos} col {c}: {} vs {}",
+                    full.get(pos, c),
+                    step.get(0, c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn delta_view_identity_when_no_deltas() {
+        let w = model(4);
+        let deltas = BTreeMap::new();
+        let view = DeltaView { base: &w, deltas: &deltas };
+        let a = forward(&w, &[1, 2, 3]);
+        let b = forward(&view, &[1, 2, 3]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn delta_view_separate_computation_matches_merged() {
+        // Build a fine-tuned model = base + dense deltas; check that the
+        // separate-computation path (base + CSR delta) gives the same
+        // logits as merging the delta into the weights.
+        let base = model(5);
+        let c = base.config;
+        let mut rng = Pcg64::seeded(6);
+        let mut dense_deltas = BTreeMap::new();
+        let mut compressed = BTreeMap::new();
+        for name in c.delta_tensor_names() {
+            let shape = base.get(&name).shape();
+            let d = Matrix::randn(shape.0, shape.1, 0.002, &mut rng);
+            // keep every element: alpha=1 dropout => exact CSR of delta
+            let dq = DeltaDq::new(DeltaDqConfig::dropout_only(1.0, None));
+            let cd = dq.compress(&d, &LayerContext::data_free(0, &name), &mut rng);
+            dense_deltas.insert(name.clone(), d);
+            compressed.insert(name, cd);
+        }
+        let merged = base.apply_deltas(&dense_deltas);
+        let view = DeltaView { base: &base, deltas: &compressed };
+        let a = forward(&merged, &[7, 8, 9, 10]);
+        let b = forward(&view, &[7, 8, 9, 10]);
+        assert!(a.allclose(&b, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_bounded() {
+        let w = model(7);
+        let g1 = generate(&w, &[1, 2, 3], 8, None);
+        let g2 = generate(&w, &[1, 2, 3], 8, None);
+        assert_eq!(g1, g2);
+        assert_eq!(g1.len(), 8);
+        assert!(g1.iter().all(|&t| (t as usize) < w.config.vocab_size));
+    }
+
+    #[test]
+    fn generate_respects_eos() {
+        let w = model(8);
+        let free = generate(&w, &[1, 2], 16, None);
+        // using the first generated token as EOS must stop immediately
+        let stopped = generate(&w, &[1, 2], 16, Some(free[0]));
+        assert!(stopped.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "max_seq")]
+    fn over_length_sequence_panics() {
+        let w = model(9);
+        let tokens: Vec<u32> = (0..200).map(|i| i % 16).collect();
+        let _ = forward(&w, &tokens);
+    }
+}

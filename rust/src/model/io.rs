@@ -1,0 +1,182 @@
+//! Binary weight file I/O — the `.dqw` format shared with the python
+//! training pipeline (`python/compile/train.py` writes it, this module
+//! reads and writes it).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   b"DDQW"
+//! version u32 (=1)
+//! config  u32 ×6: vocab, hidden, n_layers, n_heads, ffn, max_seq
+//! count   u32 number of tensors
+//! tensor* name_len u16 | name utf-8 | rows u32 | cols u32 | f32 data
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::config::ModelConfig;
+use crate::model::weights::ModelWeights;
+use crate::tensor::Matrix;
+
+const MAGIC: &[u8; 4] = b"DDQW";
+const VERSION: u32 = 1;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut buf = [0u8; 2];
+    r.read_exact(&mut buf)?;
+    Ok(u16::from_le_bytes(buf))
+}
+
+/// Save weights to a `.dqw` file.
+pub fn save_weights(path: &Path, weights: &ModelWeights) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    let c = weights.config;
+    for v in [c.vocab_size, c.hidden, c.n_layers, c.n_heads, c.ffn_hidden, c.max_seq] {
+        write_u32(&mut w, v as u32)?;
+    }
+    write_u32(&mut w, weights.len() as u32)?;
+    for (name, tensor) in weights.iter() {
+        let name_bytes = name.as_bytes();
+        if name_bytes.len() > u16::MAX as usize {
+            bail!("tensor name too long: {name}");
+        }
+        w.write_all(&(name_bytes.len() as u16).to_le_bytes())?;
+        w.write_all(name_bytes)?;
+        write_u32(&mut w, tensor.rows() as u32)?;
+        write_u32(&mut w, tensor.cols() as u32)?;
+        // bulk-write the row data
+        let data = tensor.data();
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        w.write_all(&bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load weights from a `.dqw` file, validating completeness and shapes.
+pub fn load_weights(path: &Path) -> Result<ModelWeights> {
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?} (expected DDQW)");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{path:?}: unsupported version {version}");
+    }
+    let config = ModelConfig {
+        vocab_size: read_u32(&mut r)? as usize,
+        hidden: read_u32(&mut r)? as usize,
+        n_layers: read_u32(&mut r)? as usize,
+        n_heads: read_u32(&mut r)? as usize,
+        ffn_hidden: read_u32(&mut r)? as usize,
+        max_seq: read_u32(&mut r)? as usize,
+    };
+    let count = read_u32(&mut r)? as usize;
+    let mut weights = ModelWeights::empty(config);
+    for _ in 0..count {
+        let name_len = read_u16(&mut r)? as usize;
+        let mut name_bytes = vec![0u8; name_len];
+        r.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).context("tensor name utf-8")?;
+        let rows = read_u32(&mut r)? as usize;
+        let cols = read_u32(&mut r)? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .with_context(|| format!("tensor '{name}' size overflow"))?;
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)
+            .with_context(|| format!("tensor '{name}' data truncated"))?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        weights.insert(&name, Matrix::from_vec(rows, cols, data));
+    }
+    let problems = weights.validate();
+    if !problems.is_empty() {
+        bail!("{path:?}: invalid weights: {}", problems.join("; "));
+    }
+    Ok(weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("deltadq-test-io");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg64::seeded(1);
+        let w = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+        let path = tmpfile("roundtrip.dqw");
+        save_weights(&path, &w).unwrap();
+        let loaded = load_weights(&path).unwrap();
+        assert_eq!(loaded.config, w.config);
+        assert_eq!(loaded.len(), w.len());
+        for (name, tensor) in w.iter() {
+            assert_eq!(loaded.get(name), tensor, "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("bad-magic.dqw");
+        std::fs::write(&path, b"NOPE0000").unwrap();
+        let err = load_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let mut rng = Pcg64::seeded(2);
+        let w = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+        let path = tmpfile("truncated.dqw");
+        save_weights(&path, &w).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_weights(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_incomplete_tensor_set() {
+        // write a file with a valid header but zero tensors
+        let path = tmpfile("incomplete.dqw");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"DDQW");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        for v in [512u32, 64, 4, 4, 192, 128] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("missing tensor"), "{err}");
+    }
+}

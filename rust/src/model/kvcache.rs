@@ -1,0 +1,112 @@
+//! Per-sequence KV cache for incremental decoding.
+
+use crate::tensor::Matrix;
+
+/// Keys and values for every layer of one sequence. Rows grow as tokens
+/// are appended; all layers always hold the same number of positions.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    keys: Vec<Matrix>,
+    values: Vec<Matrix>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, hidden: usize) -> KvCache {
+        KvCache {
+            keys: (0..n_layers).map(|_| Matrix::zeros(0, hidden)).collect(),
+            values: (0..n_layers).map(|_| Matrix::zeros(0, hidden)).collect(),
+            len: 0,
+        }
+    }
+
+    /// Number of cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Append one position's K/V rows to `layer`. The final layer's
+    /// append advances the cache length (layers are appended in order
+    /// 0..n_layers during a step).
+    pub fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        self.keys[layer].push_row(k);
+        self.values[layer].push_row(v);
+        if layer == self.keys.len() - 1 {
+            self.len += 1;
+        }
+        debug_assert_eq!(self.keys[layer].rows(), self.values[layer].rows());
+    }
+
+    /// (K, V) matrices of a layer: `len × hidden`.
+    pub fn layer(&self, layer: usize) -> (&Matrix, &Matrix) {
+        (&self.keys[layer], &self.values[layer])
+    }
+
+    /// Approximate resident bytes (coordinator memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.keys
+            .iter()
+            .chain(self.values.iter())
+            .map(|m| m.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Drop all cached positions (sequence reset), keeping capacity.
+    pub fn clear(&mut self) {
+        let hidden = self.keys.first().map(|m| m.cols()).unwrap_or(0);
+        for m in self.keys.iter_mut().chain(self.values.iter_mut()) {
+            *m = Matrix::zeros(0, hidden);
+        }
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_advances_on_last_layer() {
+        let mut c = KvCache::new(2, 4);
+        let row = [1.0f32, 2.0, 3.0, 4.0];
+        c.append(0, &row, &row);
+        assert_eq!(c.len(), 0, "only layer 0 appended");
+        c.append(1, &row, &row);
+        assert_eq!(c.len(), 1);
+        let (k, v) = c.layer(0);
+        assert_eq!(k.rows(), 1);
+        assert_eq!(v.row(0), &row);
+    }
+
+    #[test]
+    fn bytes_grow_linearly() {
+        let mut c = KvCache::new(3, 8);
+        assert_eq!(c.bytes(), 0);
+        let row = [0.0f32; 8];
+        for l in 0..3 {
+            c.append(l, &row, &row);
+        }
+        assert_eq!(c.bytes(), 3 * 2 * 8 * 4);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = KvCache::new(1, 2);
+        c.append(0, &[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.bytes(), 0);
+        // usable after clear
+        c.append(0, &[5.0, 6.0], &[7.0, 8.0]);
+        assert_eq!(c.len(), 1);
+    }
+}

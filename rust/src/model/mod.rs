@@ -1,0 +1,15 @@
+//! Transformer model substrate (S6): configuration presets, weight
+//! containers, the forward pass (full-sequence and KV-cached decode),
+//! and `.dqw` weight-file I/O shared with the python trainer.
+
+pub mod config;
+pub mod forward;
+pub mod io;
+pub mod kvcache;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use forward::{forward, forward_step, generate, DeltaView, WeightSource};
+pub use io::{load_weights, save_weights};
+pub use kvcache::KvCache;
+pub use weights::ModelWeights;

@@ -1,0 +1,197 @@
+//! Model weight container with named-tensor access.
+//!
+//! Layout convention: every linear weight is `h_out × h_in` (the layer
+//! computes `X·Wᵀ`), norm gains are `1 × h` matrices. Names follow
+//! `layers.<i>.<block>.<tensor>` plus the globals `tok_emb`, `pos_emb`,
+//! `final_norm`, `lm_head`.
+
+use std::collections::BTreeMap;
+
+use crate::model::config::ModelConfig;
+use crate::tensor::{Matrix, Pcg64};
+
+/// All weights of one model, addressable by name.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    tensors: BTreeMap<String, Matrix>,
+}
+
+impl ModelWeights {
+    /// Random initialization (same scheme the python trainer uses:
+    /// N(0, 0.02) for embeddings and projections, ones for norm gains).
+    pub fn init(config: ModelConfig, rng: &mut Pcg64) -> ModelWeights {
+        let mut w = ModelWeights { config, tensors: BTreeMap::new() };
+        let h = config.hidden;
+        let std = 0.02f32;
+        w.insert("tok_emb", Matrix::randn(config.vocab_size, h, std, rng));
+        w.insert("pos_emb", Matrix::randn(config.max_seq, h, std, rng));
+        for l in 0..config.n_layers {
+            let p = |t: &str| format!("layers.{l}.{t}");
+            w.insert(&p("attn_norm"), Matrix::full(1, h, 1.0));
+            w.insert(&p("attn.wq"), Matrix::randn(h, h, std, rng));
+            w.insert(&p("attn.wk"), Matrix::randn(h, h, std, rng));
+            w.insert(&p("attn.wv"), Matrix::randn(h, h, std, rng));
+            w.insert(&p("attn.wo"), Matrix::randn(h, h, std, rng));
+            w.insert(&p("mlp_norm"), Matrix::full(1, h, 1.0));
+            w.insert(&p("mlp.gate"), Matrix::randn(config.ffn_hidden, h, std, rng));
+            w.insert(&p("mlp.up"), Matrix::randn(config.ffn_hidden, h, std, rng));
+            w.insert(&p("mlp.down"), Matrix::randn(h, config.ffn_hidden, std, rng));
+        }
+        w.insert("final_norm", Matrix::full(1, h, 1.0));
+        w.insert("lm_head", Matrix::randn(config.vocab_size, h, std, rng));
+        w
+    }
+
+    /// Empty container (filled by the loader).
+    pub fn empty(config: ModelConfig) -> ModelWeights {
+        ModelWeights { config, tensors: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, tensor: Matrix) {
+        self.tensors.insert(name.to_string(), tensor);
+    }
+
+    /// Named tensor (panics if missing — loading validates completeness).
+    pub fn get(&self, name: &str) -> &Matrix {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("missing tensor '{name}'"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Matrix {
+        self.tensors
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("missing tensor '{name}'"))
+    }
+
+    pub fn try_get(&self, name: &str) -> Option<&Matrix> {
+        self.tensors.get(name)
+    }
+
+    /// Iterate (name, tensor) in sorted name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Matrix)> {
+        self.tensors.iter()
+    }
+
+    pub fn tensor_names(&self) -> Vec<String> {
+        self.tensors.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total scalar parameters stored.
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+
+    /// Check that every tensor the config requires is present with the
+    /// right shape; returns the list of problems (empty = valid).
+    pub fn validate(&self) -> Vec<String> {
+        let c = self.config;
+        let h = c.hidden;
+        let mut problems = Vec::new();
+        let mut expect = vec![
+            ("tok_emb".to_string(), (c.vocab_size, h)),
+            ("pos_emb".to_string(), (c.max_seq, h)),
+            ("final_norm".to_string(), (1, h)),
+            ("lm_head".to_string(), (c.vocab_size, h)),
+        ];
+        for l in 0..c.n_layers {
+            let p = |t: &str| format!("layers.{l}.{t}");
+            expect.push((p("attn_norm"), (1, h)));
+            expect.push((p("attn.wq"), (h, h)));
+            expect.push((p("attn.wk"), (h, h)));
+            expect.push((p("attn.wv"), (h, h)));
+            expect.push((p("attn.wo"), (h, h)));
+            expect.push((p("mlp_norm"), (1, h)));
+            expect.push((p("mlp.gate"), (c.ffn_hidden, h)));
+            expect.push((p("mlp.up"), (c.ffn_hidden, h)));
+            expect.push((p("mlp.down"), (h, c.ffn_hidden)));
+        }
+        for (name, shape) in expect {
+            match self.tensors.get(&name) {
+                None => problems.push(format!("missing tensor '{name}'")),
+                Some(t) if t.shape() != shape => problems.push(format!(
+                    "tensor '{name}' has shape {:?}, expected {shape:?}",
+                    t.shape()
+                )),
+                _ => {}
+            }
+        }
+        problems
+    }
+
+    /// Fine-tuned-weight reconstruction: `W_i = W_b + ΔW_i` applied to
+    /// every delta tensor (norms/embeddings stay at base values unless
+    /// the delta set includes them).
+    pub fn apply_deltas(&self, deltas: &BTreeMap<String, Matrix>) -> ModelWeights {
+        let mut out = self.clone();
+        for (name, d) in deltas {
+            let t = out.get_mut(name);
+            t.add_assign(d);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_valid_and_counts_match_config() {
+        let mut rng = Pcg64::seeded(1);
+        let c = ModelConfig::tiny();
+        let w = ModelWeights::init(c, &mut rng);
+        assert!(w.validate().is_empty());
+        assert_eq!(w.param_count(), c.param_count());
+    }
+
+    #[test]
+    fn missing_tensor_reported() {
+        let c = ModelConfig::tiny();
+        let w = ModelWeights::empty(c);
+        let problems = w.validate();
+        assert!(problems.iter().any(|p| p.contains("tok_emb")));
+    }
+
+    #[test]
+    fn wrong_shape_reported() {
+        let mut rng = Pcg64::seeded(2);
+        let c = ModelConfig::tiny();
+        let mut w = ModelWeights::init(c, &mut rng);
+        w.insert("lm_head", Matrix::zeros(2, 2));
+        assert!(w.validate().iter().any(|p| p.contains("lm_head")));
+    }
+
+    #[test]
+    #[should_panic(expected = "missing tensor")]
+    fn get_missing_panics() {
+        let w = ModelWeights::empty(ModelConfig::tiny());
+        let _ = w.get("nope");
+    }
+
+    #[test]
+    fn apply_deltas_adds() {
+        let mut rng = Pcg64::seeded(3);
+        let c = ModelConfig::tiny();
+        let base = ModelWeights::init(c, &mut rng);
+        let mut deltas = BTreeMap::new();
+        deltas.insert(
+            "layers.0.attn.wq".to_string(),
+            Matrix::full(c.hidden, c.hidden, 0.5),
+        );
+        let ft = base.apply_deltas(&deltas);
+        let diff = ft.get("layers.0.attn.wq").sub(base.get("layers.0.attn.wq"));
+        assert!(diff.allclose(&Matrix::full(c.hidden, c.hidden, 0.5), 1e-6, 0.0));
+        // untouched tensors identical
+        assert_eq!(ft.get("lm_head"), base.get("lm_head"));
+    }
+}

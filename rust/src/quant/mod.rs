@@ -1,0 +1,11 @@
+//! Quantization substrate (S3): per-tensor uniform quantization
+//! (paper Eq. 6–8), Separate Quantization decomposition (Eq. 9–12),
+//! and the group-wise quantizer used by the DELTAZIP baseline.
+
+pub mod groupwise;
+pub mod separate;
+pub mod uniform;
+
+pub use groupwise::{group_fake_quantize, group_fake_quantize_sparse, GroupQuantized};
+pub use separate::{DecomposedDelta, QuantPart};
+pub use uniform::{fake_quantize, QuantParams};

@@ -1,0 +1,187 @@
+//! Per-tensor asymmetric uniform quantization (paper Eq. 6–8).
+//!
+//! ```text
+//!   Q = clip(⌊ΔŴ / s⌉ + z, 0, 2^k − 1)
+//!   s = (max(ΔŴ) − min(ΔŴ)) / (2^k − 1)
+//!   z = ⌊−min(ΔŴ) / s⌉
+//! ```
+
+use crate::tensor::Matrix;
+
+/// Quantization parameters: scale `s`, zero point `z`, bit width `k`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: i32,
+    pub bits: u32,
+}
+
+impl QuantParams {
+    /// Fit per-tensor min/max parameters over the given values
+    /// (non-zero entries of the sparse delta).
+    pub fn fit(values: &[f32], bits: u32) -> QuantParams {
+        assert!((1..=16).contains(&bits), "bits {bits}");
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in values {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if values.is_empty() || !lo.is_finite() {
+            return QuantParams { scale: 1.0, zero_point: 0, bits };
+        }
+        // Degenerate constant tensors: any positive scale quantizes
+        // everything to the zero point exactly.
+        let levels = ((1u32 << bits) - 1) as f32;
+        let range = hi - lo;
+        // Degenerate constant tensor: pick scale = |v| so the single value
+        // maps exactly onto one level (code 0 with z = 1 for v < 0 etc.).
+        let scale = if range > 0.0 {
+            range / levels
+        } else if lo != 0.0 {
+            lo.abs()
+        } else {
+            1.0
+        };
+        let zero_point = (-lo / scale).round() as i32;
+        QuantParams { scale, zero_point, bits }
+    }
+
+    /// Number of representable levels `2^k`.
+    #[inline]
+    pub fn levels(&self) -> u32 {
+        1u32 << self.bits
+    }
+
+    /// Quantize one value to its code.
+    #[inline]
+    pub fn quantize(&self, v: f32) -> u32 {
+        let q = (v / self.scale).round() as i64 + self.zero_point as i64;
+        q.clamp(0, (self.levels() - 1) as i64) as u32
+    }
+
+    /// Dequantize one code (Eq. 12 with offset 0).
+    #[inline]
+    pub fn dequantize(&self, code: u32) -> f32 {
+        self.scale * (code as i64 - self.zero_point as i64) as f32
+    }
+}
+
+/// Quantize a slice of values; returns codes.
+pub fn quantize_values(values: &[f32], params: &QuantParams) -> Vec<u32> {
+    values.iter().map(|&v| params.quantize(v)).collect()
+}
+
+/// Dequantize codes back to values.
+pub fn dequantize_values(codes: &[u32], params: &QuantParams) -> Vec<f32> {
+    codes.iter().map(|&c| params.dequantize(c)).collect()
+}
+
+/// Quantize-dequantize a full dense matrix (analysis / fake-quant path —
+/// figure 6 uses this to show the delta distribution after quantization).
+pub fn fake_quantize(m: &Matrix, bits: u32) -> (Matrix, QuantParams) {
+    let params = QuantParams::fit(m.data(), bits);
+    let data = m.data().iter().map(|&v| params.dequantize(params.quantize(v))).collect();
+    (Matrix::from_vec(m.rows(), m.cols(), data), params)
+}
+
+/// Worst-case round-trip error bound for a fitted quantizer: half a step.
+pub fn max_roundtrip_error(params: &QuantParams) -> f32 {
+    0.5 * params.scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    #[test]
+    fn fit_covers_min_max() {
+        let vals = [-0.3f32, 0.1, 0.7];
+        let p = QuantParams::fit(&vals, 8);
+        // endpoints must be representable (codes 0 and 255)
+        assert_eq!(p.quantize(-0.3), 0);
+        assert_eq!(p.quantize(0.7), 255);
+        assert!((p.dequantize(0) - -0.3).abs() < p.scale);
+        assert!((p.dequantize(255) - 0.7).abs() < p.scale);
+    }
+
+    #[test]
+    fn roundtrip_error_within_half_step() {
+        let mut rng = Pcg64::seeded(1);
+        for bits in [2u32, 4, 8] {
+            let vals: Vec<f32> = (0..1000).map(|_| rng.normal() * 0.01).collect();
+            let p = QuantParams::fit(&vals, bits);
+            let bound = max_roundtrip_error(&p) * 1.0001;
+            for &v in &vals {
+                let rt = p.dequantize(p.quantize(v));
+                assert!((rt - v).abs() <= bound, "bits={bits} v={v} rt={rt}");
+            }
+        }
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Pcg64::seeded(2);
+        let vals: Vec<f32> = (0..500).map(|_| rng.normal()).collect();
+        for bits in 1..=8u32 {
+            let p = QuantParams::fit(&vals, bits);
+            for &v in &vals {
+                assert!(p.quantize(v) < p.levels());
+            }
+        }
+    }
+
+    #[test]
+    fn constant_tensor_is_exact() {
+        let vals = vec![0.42f32; 64];
+        let p = QuantParams::fit(&vals, 4);
+        for &v in &vals {
+            let rt = p.dequantize(p.quantize(v));
+            assert!((rt - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_values_are_safe() {
+        let p = QuantParams::fit(&[], 8);
+        assert_eq!(p.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn all_zero_values() {
+        let p = QuantParams::fit(&[0.0, 0.0], 8);
+        let rt = p.dequantize(p.quantize(0.0));
+        assert_eq!(rt, 0.0);
+    }
+
+    #[test]
+    fn one_bit_keeps_extremes() {
+        let vals = [-1.0f32, 1.0];
+        let p = QuantParams::fit(&vals, 1);
+        assert_eq!(p.quantize(-1.0), 0);
+        assert_eq!(p.quantize(1.0), 1);
+    }
+
+    #[test]
+    fn fake_quantize_shrinks_with_more_bits() {
+        let mut rng = Pcg64::seeded(3);
+        let m = Matrix::randn(16, 16, 0.02, &mut rng);
+        let (q2, _) = fake_quantize(&m, 2);
+        let (q8, _) = fake_quantize(&m, 8);
+        let e2 = m.sq_distance(&q2);
+        let e8 = m.sq_distance(&q8);
+        assert!(e8 < e2 * 0.01, "e2={e2} e8={e8}");
+    }
+
+    #[test]
+    fn slice_helpers_roundtrip() {
+        let vals = [0.1f32, -0.2, 0.3, 0.0];
+        let p = QuantParams::fit(&vals, 8);
+        let codes = quantize_values(&vals, &p);
+        let back = dequantize_values(&codes, &p);
+        for (v, b) in vals.iter().zip(&back) {
+            assert!((v - b).abs() <= max_roundtrip_error(&p) * 1.0001);
+        }
+    }
+}

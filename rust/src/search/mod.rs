@@ -1,0 +1,314 @@
+//! Optimal group-size search for Group-wise Dropout (S8; paper §3.3,
+//! Eq. 5, Table 4).
+//!
+//! Two selection methods over the grid `{α, 2α, 4α, …, h_in}`:
+//!
+//! * **Direct** — compress the whole model at each candidate `h_g`,
+//!   run full task-accuracy evaluation, keep the best. Expensive.
+//! * **Proxy** — compress only the first layer's `wq`/`wk`, measure the
+//!   attention-score error `‖Q₁K₁ᵀ − Q̂₁K̂₁ᵀ‖²` on ~1 % of the eval
+//!   data, keep the `h_g` with the smallest error. The shallow layers
+//!   are the most compression-sensitive (Yin et al. 2023), so layer 1
+//!   is the signal-richest cheap probe.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::compress::pipeline::{compress_model_deltas, reconstruct_weights};
+use crate::compress::{DeltaDq, DeltaDqConfig};
+use crate::dropout::group_size_grid;
+use crate::eval::accuracy::evaluate;
+use crate::eval::tasks::Sample;
+use crate::model::weights::ModelWeights;
+use crate::tensor::ops;
+use crate::tensor::{Matrix, Pcg64};
+
+/// Result of one group-size search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// The winning group size `h_g*`.
+    pub best_group_size: usize,
+    /// (h_g, score) for every candidate. Score semantics depend on the
+    /// method: accuracy-% for Direct (higher better), attention error
+    /// for Proxy (lower better).
+    pub candidates: Vec<(usize, f64)>,
+    /// Wall-clock time of the search.
+    pub elapsed: Duration,
+}
+
+/// Selection method (Table 4 compares both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMethod {
+    Direct,
+    Proxy,
+}
+
+/// Direct search: full compression + full task-accuracy eval per
+/// candidate group size.
+pub fn search_direct(
+    base: &ModelWeights,
+    deltas: &BTreeMap<String, Matrix>,
+    alpha: f64,
+    eval_data: &[Sample],
+    seed: u64,
+) -> SearchResult {
+    let start = Instant::now();
+    let h_in = base.config.hidden;
+    let mut candidates = Vec::new();
+    let mut best = (0usize, f64::NEG_INFINITY);
+    for h_g in group_size_grid(h_in, alpha) {
+        let mut rng = Pcg64::new(seed, h_g as u64);
+        let dq = DeltaDq::new(DeltaDqConfig::dropout_only(alpha, Some(h_g)));
+        let set = compress_model_deltas(deltas, &dq, &BTreeMap::new(), &mut rng);
+        let weights = reconstruct_weights(base, &set);
+        let acc = evaluate(&weights, eval_data).percent();
+        candidates.push((h_g, acc));
+        if acc > best.1 {
+            best = (h_g, acc);
+        }
+    }
+    SearchResult { best_group_size: best.0, candidates, elapsed: start.elapsed() }
+}
+
+/// Attention-score error of layer `layer` under compressed q/k deltas
+/// (Eq. 5): `Σ_samples ‖Q Kᵀ − Q̂ K̂ᵀ‖²`, summed per head.
+pub fn attention_error(
+    base: &ModelWeights,
+    deltas: &BTreeMap<String, Matrix>,
+    compressed_q: &Matrix,
+    compressed_k: &Matrix,
+    layer: usize,
+    eval_data: &[Sample],
+) -> f64 {
+    let c = base.config;
+    let d = c.head_dim();
+    let wq_name = format!("layers.{layer}.attn.wq");
+    let wk_name = format!("layers.{layer}.attn.wk");
+    // Original fine-tuned projections: base + exact delta.
+    let wq = base.get(&wq_name).add(&deltas[&wq_name]);
+    let wk = base.get(&wk_name).add(&deltas[&wk_name]);
+    // Compressed: base + compressed delta.
+    let wq_hat = base.get(&wq_name).add(compressed_q);
+    let wk_hat = base.get(&wk_name).add(compressed_k);
+    let mut err = 0.0f64;
+    for s in eval_data {
+        let seq = s.full_sequence();
+        let x = layer_input(base, deltas, layer, &seq);
+        let q = x.matmul_nt(&wq);
+        let k = x.matmul_nt(&wk);
+        let q_hat = x.matmul_nt(&wq_hat);
+        let k_hat = x.matmul_nt(&wk_hat);
+        for head in 0..c.n_heads {
+            let lo = head * d;
+            let hi = lo + d;
+            let scores = q.slice_cols(lo, hi).matmul_nt(&k.slice_cols(lo, hi));
+            let scores_hat = q_hat.slice_cols(lo, hi).matmul_nt(&k_hat.slice_cols(lo, hi));
+            err += scores.sq_distance(&scores_hat);
+        }
+    }
+    err
+}
+
+/// Input activations feeding layer `layer`'s attention block for one
+/// sequence, computed through the *fine-tuned* model (base+deltas).
+/// For `layer = 0` (the proxy's choice) this is embeddings + norm only.
+fn layer_input(
+    base: &ModelWeights,
+    deltas: &BTreeMap<String, Matrix>,
+    layer: usize,
+    seq: &[u32],
+) -> Matrix {
+    let c = base.config;
+    let mut x = ops::embed(base.get("tok_emb"), seq);
+    let pos = base.get("pos_emb");
+    for (i, row) in x.data_mut().chunks_exact_mut(c.hidden).enumerate() {
+        for (a, b) in row.iter_mut().zip(pos.row(i)) {
+            *a += b;
+        }
+    }
+    for l in 0..layer {
+        let merged = merged_layer_weights(base, deltas, l);
+        x = merged.block_forward(&x);
+    }
+    let mut normed = x;
+    ops::rmsnorm_rows(&mut normed, base.get(&format!("layers.{layer}.attn_norm")).row(0), 1e-6);
+    normed
+}
+
+/// Dense per-layer weights for walking prefix layers in the proxy.
+struct MergedLayer {
+    wq: Matrix,
+    wk: Matrix,
+    wv: Matrix,
+    wo: Matrix,
+    gate: Matrix,
+    up: Matrix,
+    down: Matrix,
+    attn_norm: Vec<f32>,
+    mlp_norm: Vec<f32>,
+    n_heads: usize,
+}
+
+fn merged_layer_weights(
+    base: &ModelWeights,
+    deltas: &BTreeMap<String, Matrix>,
+    l: usize,
+) -> MergedLayer {
+    let g = |t: &str| {
+        let name = format!("layers.{l}.{t}");
+        match deltas.get(&name) {
+            Some(d) => base.get(&name).add(d),
+            None => base.get(&name).clone(),
+        }
+    };
+    MergedLayer {
+        wq: g("attn.wq"),
+        wk: g("attn.wk"),
+        wv: g("attn.wv"),
+        wo: g("attn.wo"),
+        gate: g("mlp.gate"),
+        up: g("mlp.up"),
+        down: g("mlp.down"),
+        attn_norm: base.get(&format!("layers.{l}.attn_norm")).row(0).to_vec(),
+        mlp_norm: base.get(&format!("layers.{l}.mlp_norm")).row(0).to_vec(),
+        n_heads: base.config.n_heads,
+    }
+}
+
+impl MergedLayer {
+    fn block_forward(&self, x: &Matrix) -> Matrix {
+        let (t, h) = x.shape();
+        let d = h / self.n_heads;
+        let mut normed = x.clone();
+        ops::rmsnorm_rows(&mut normed, &self.attn_norm, 1e-6);
+        let q = normed.matmul_nt(&self.wq);
+        let k = normed.matmul_nt(&self.wk);
+        let v = normed.matmul_nt(&self.wv);
+        let mut ctx = Matrix::zeros(t, h);
+        let scale = 1.0 / (d as f32).sqrt();
+        for head in 0..self.n_heads {
+            let lo = head * d;
+            let hi = lo + d;
+            let mut scores = q.slice_cols(lo, hi).matmul_nt(&k.slice_cols(lo, hi));
+            scores.scale(scale);
+            ops::apply_causal_mask(&mut scores);
+            ops::softmax_rows(&mut scores);
+            ctx.set_cols(lo, &scores.matmul_nn(&v.slice_cols(lo, hi)));
+        }
+        let mut out = x.clone();
+        out.add_assign(&ctx.matmul_nt(&self.wo));
+        let mut normed = out.clone();
+        ops::rmsnorm_rows(&mut normed, &self.mlp_norm, 1e-6);
+        let mut gate = normed.matmul_nt(&self.gate);
+        ops::silu(&mut gate);
+        let fused = gate.hadamard(&normed.matmul_nt(&self.up));
+        out.add_assign(&fused.matmul_nt(&self.down));
+        out
+    }
+}
+
+/// Proxy search: per candidate `h_g`, compress only layer-0 `wq`/`wk`
+/// and score by attention error on `proxy_fraction` of the eval data.
+pub fn search_proxy(
+    base: &ModelWeights,
+    deltas: &BTreeMap<String, Matrix>,
+    alpha: f64,
+    eval_data: &[Sample],
+    proxy_fraction: f64,
+    seed: u64,
+) -> SearchResult {
+    let start = Instant::now();
+    let n_proxy = ((eval_data.len() as f64 * proxy_fraction).ceil() as usize)
+        .clamp(1, eval_data.len().max(1));
+    let proxy_data = &eval_data[..n_proxy];
+    let h_in = base.config.hidden;
+    let wq_name = "layers.0.attn.wq".to_string();
+    let wk_name = "layers.0.attn.wk".to_string();
+    let mut candidates = Vec::new();
+    let mut best = (0usize, f64::INFINITY);
+    for h_g in group_size_grid(h_in, alpha) {
+        let mut rng = Pcg64::new(seed, h_g as u64);
+        let dq = DeltaDq::new(DeltaDqConfig::dropout_only(alpha, Some(h_g)));
+        let cq = dq.sparsify(&deltas[&wq_name], &mut rng).to_dense();
+        let ck = dq.sparsify(&deltas[&wk_name], &mut rng).to_dense();
+        let err = attention_error(base, deltas, &cq, &ck, 0, proxy_data);
+        candidates.push((h_g, err));
+        if err < best.1 {
+            best = (h_g, err);
+        }
+    }
+    SearchResult { best_group_size: best.0, candidates, elapsed: start.elapsed() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::extract::extract_deltas;
+    use crate::eval::tasks::{gen_dataset, TaskKind};
+    use crate::model::ModelConfig;
+
+    fn setup() -> (ModelWeights, BTreeMap<String, Matrix>) {
+        let mut rng = Pcg64::seeded(1);
+        let base = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+        let mut ft = base.clone();
+        let mut rng2 = Pcg64::seeded(2);
+        for name in base.config.delta_tensor_names() {
+            let (r, c) = ft.get(&name).shape();
+            ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, &mut rng2));
+        }
+        let deltas = extract_deltas(&base, &ft);
+        (base, deltas)
+    }
+
+    #[test]
+    fn grids_match_between_methods() {
+        let (base, deltas) = setup();
+        let data = gen_dataset(TaskKind::Math, 8, 3);
+        let d = search_direct(&base, &deltas, 4.0, &data[..2], 42);
+        let p = search_proxy(&base, &deltas, 4.0, &data, 0.25, 42);
+        let dg: Vec<usize> = d.candidates.iter().map(|(g, _)| *g).collect();
+        let pg: Vec<usize> = p.candidates.iter().map(|(g, _)| *g).collect();
+        assert_eq!(dg, pg);
+        assert_eq!(dg, vec![4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn proxy_is_faster_than_direct() {
+        let (base, deltas) = setup();
+        let data = gen_dataset(TaskKind::Math, 32, 4);
+        let d = search_direct(&base, &deltas, 8.0, &data, 42);
+        let p = search_proxy(&base, &deltas, 8.0, &data, 0.05, 42);
+        assert!(
+            p.elapsed < d.elapsed,
+            "proxy {:?} should beat direct {:?}",
+            p.elapsed,
+            d.elapsed
+        );
+    }
+
+    #[test]
+    fn proxy_error_zero_for_lossless_compression() {
+        let (base, deltas) = setup();
+        let data = gen_dataset(TaskKind::Math, 4, 5);
+        // alpha = 1 keeps everything: attention error must be ~0
+        let p = search_proxy(&base, &deltas, 1.0, &data, 1.0, 42);
+        for (g, err) in &p.candidates {
+            assert!(*err < 1e-6, "h_g={g} err={err}");
+        }
+    }
+
+    #[test]
+    fn attention_error_increases_with_alpha() {
+        let (base, deltas) = setup();
+        let data = gen_dataset(TaskKind::Math, 4, 6);
+        let mut errs = Vec::new();
+        for alpha in [2.0, 8.0, 32.0] {
+            let mut rng = Pcg64::seeded(7);
+            let dq = DeltaDq::new(DeltaDqConfig::dropout_only(alpha, Some(16)));
+            let cq = dq.sparsify(&deltas["layers.0.attn.wq"], &mut rng).to_dense();
+            let ck = dq.sparsify(&deltas["layers.0.attn.wk"], &mut rng).to_dense();
+            errs.push(attention_error(&base, &deltas, &cq, &ck, 0, &data));
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+}

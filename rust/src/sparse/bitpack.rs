@@ -1,0 +1,186 @@
+//! Bit-packed storage for low-bit quantization codes.
+//!
+//! Separate Quantization stores each decomposed part at `k − log₂ m`
+//! bits (paper §3.4) — down to 1 bit. Codes are packed little-endian
+//! into `u64` words; supported widths are 1, 2, 4, 8 and any width
+//! ≤ 16 (non-power-of-two widths pack across word boundaries).
+
+/// A vector of `n` unsigned integers, each `bits` wide, packed into u64s.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedCodes {
+    bits: u32,
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl PackedCodes {
+    /// Pack `codes`; every code must fit in `bits`.
+    pub fn pack(codes: &[u32], bits: u32) -> PackedCodes {
+        assert!((1..=16).contains(&bits), "unsupported width {bits}");
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        let total_bits = codes.len() as u64 * bits as u64;
+        let n_words = total_bits.div_ceil(64) as usize;
+        let mut words = vec![0u64; n_words];
+        for (i, &c) in codes.iter().enumerate() {
+            assert!(c <= mask, "code {c} does not fit in {bits} bits");
+            let bit_pos = i as u64 * bits as u64;
+            let word = (bit_pos / 64) as usize;
+            let off = (bit_pos % 64) as u32;
+            words[word] |= (c as u64) << off;
+            // spill into the next word when the code straddles a boundary
+            if off + bits > 64 {
+                words[word + 1] |= (c as u64) >> (64 - off);
+            }
+        }
+        PackedCodes { bits, len: codes.len(), words }
+    }
+
+    /// Number of stored codes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Code width in bits.
+    #[inline]
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Raw packed words (serialization).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from raw parts (deserialization).
+    pub fn from_words(bits: u32, len: usize, words: Vec<u64>) -> PackedCodes {
+        let need = (len as u64 * bits as u64).div_ceil(64) as usize;
+        assert_eq!(words.len(), need, "word count for {len} codes @ {bits}b");
+        PackedCodes { bits, len, words }
+    }
+
+    /// Extract code `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len);
+        let bits = self.bits;
+        let mask = (1u64 << bits) - 1;
+        let bit_pos = i as u64 * bits as u64;
+        let word = (bit_pos / 64) as usize;
+        let off = (bit_pos % 64) as u32;
+        let mut v = self.words[word] >> off;
+        if off + bits > 64 {
+            v |= self.words[word + 1] << (64 - off);
+        }
+        (v & mask) as u32
+    }
+
+    /// Unpack all codes.
+    pub fn unpack(&self) -> Vec<u32> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Unpack into an existing buffer (hot-path dequantization; no alloc).
+    pub fn unpack_into(&self, out: &mut [u32]) {
+        assert_eq!(out.len(), self.len);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.get(i);
+        }
+    }
+
+    /// Actual in-memory payload size in bits (whole words).
+    pub fn storage_bits(&self) -> u64 {
+        self.words.len() as u64 * 64
+    }
+
+    /// Ideal payload size in bits (`len * bits` — the accounting number).
+    pub fn ideal_bits(&self) -> u64 {
+        self.len as u64 * self.bits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Pcg64::seeded(1);
+        for bits in 1..=16u32 {
+            let max = (1u64 << bits) as u64;
+            let codes: Vec<u32> = (0..517).map(|_| rng.below(max) as u32).collect();
+            let packed = PackedCodes::pack(&codes, bits);
+            assert_eq!(packed.unpack(), codes, "bits={bits}");
+            assert_eq!(packed.len(), codes.len());
+        }
+    }
+
+    #[test]
+    fn boundary_straddling_widths() {
+        // widths that don't divide 64 force codes across word boundaries
+        for bits in [3u32, 5, 6, 7, 9, 11, 13, 15] {
+            let max = 1u32 << bits;
+            let codes: Vec<u32> =
+                (0..200u32).map(|i| i.wrapping_mul(2654435761) % max).collect();
+            let packed = PackedCodes::pack(&codes, bits);
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(packed.get(i), c, "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_bit_codes() {
+        let codes = vec![1, 0, 1, 1, 0, 0, 1, 0];
+        let p = PackedCodes::pack(&codes, 1);
+        assert_eq!(p.words().len(), 1);
+        assert_eq!(p.unpack(), codes);
+        assert_eq!(p.ideal_bits(), 8);
+    }
+
+    #[test]
+    fn empty_codes() {
+        let p = PackedCodes::pack(&[], 4);
+        assert!(p.is_empty());
+        assert_eq!(p.unpack(), Vec::<u32>::new());
+        assert_eq!(p.storage_bits(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_code_panics() {
+        let _ = PackedCodes::pack(&[4], 2);
+    }
+
+    #[test]
+    fn storage_vs_ideal_bits() {
+        let codes = vec![0u32; 100];
+        let p = PackedCodes::pack(&codes, 2);
+        assert_eq!(p.ideal_bits(), 200);
+        assert_eq!(p.storage_bits(), 256); // 4 words
+    }
+
+    #[test]
+    fn unpack_into_no_alloc() {
+        let codes: Vec<u32> = (0..33).map(|i| i % 4).collect();
+        let p = PackedCodes::pack(&codes, 2);
+        let mut buf = vec![0u32; 33];
+        p.unpack_into(&mut buf);
+        assert_eq!(buf, codes);
+    }
+
+    #[test]
+    fn from_words_roundtrip() {
+        let codes = vec![7, 0, 3, 5, 1];
+        let p = PackedCodes::pack(&codes, 3);
+        let q = PackedCodes::from_words(p.bits(), p.len(), p.words().to_vec());
+        assert_eq!(q.unpack(), codes);
+    }
+}

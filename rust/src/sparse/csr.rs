@@ -1,0 +1,278 @@
+//! Compressed Sparse Row storage for delta weights.
+//!
+//! The paper stores the sparsified delta `ΔŴ` in CSR (§3.4): row offsets,
+//! column indices, and non-zero values. Separate Quantization then
+//! decomposes the value array into `m` parts — only the row-offset array
+//! is replicated, which is the "negligible increase" the paper argues.
+
+use crate::tensor::Matrix;
+
+/// CSR sparse matrix with `f32` values.
+///
+/// Column indices are stored as `u32` in memory; the *accounted* storage
+/// cost (compression-ratio bookkeeping) uses the paper's 16-bit-index
+/// convention via [`CsrMatrix::storage_bits`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// len = rows + 1; `row_offsets[r]..row_offsets[r+1]` indexes the
+    /// nnz of row r within `col_indices` / `values`.
+    row_offsets: Vec<u32>,
+    col_indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from a dense matrix, keeping exact non-zeros.
+    pub fn from_dense(m: &Matrix) -> CsrMatrix {
+        let (rows, cols) = m.shape();
+        let mut row_offsets = Vec::with_capacity(rows + 1);
+        let mut col_indices = Vec::new();
+        let mut values = Vec::new();
+        row_offsets.push(0u32);
+        for r in 0..rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    col_indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            row_offsets.push(col_indices.len() as u32);
+        }
+        CsrMatrix { rows, cols, row_offsets, col_indices, values }
+    }
+
+    /// Build from raw parts (validated).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        row_offsets: Vec<u32>,
+        col_indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> CsrMatrix {
+        assert_eq!(row_offsets.len(), rows + 1, "row_offsets length");
+        assert_eq!(col_indices.len(), values.len(), "indices/values length");
+        assert_eq!(*row_offsets.last().unwrap() as usize, values.len(), "final offset");
+        debug_assert!(row_offsets.windows(2).all(|w| w[0] <= w[1]), "offsets monotone");
+        debug_assert!(col_indices.iter().all(|&c| (c as usize) < cols), "col bounds");
+        CsrMatrix { rows, cols, row_offsets, col_indices, values }
+    }
+
+    /// Empty matrix with no stored entries.
+    pub fn empty(rows: usize, cols: usize) -> CsrMatrix {
+        CsrMatrix {
+            rows,
+            cols,
+            row_offsets: vec![0; rows + 1],
+            col_indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Stored density = nnz / (rows·cols).
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    #[inline]
+    pub fn row_offsets(&self) -> &[u32] {
+        &self.row_offsets
+    }
+
+    #[inline]
+    pub fn col_indices(&self) -> &[u32] {
+        &self.col_indices
+    }
+
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    #[inline]
+    pub fn values_mut(&mut self) -> &mut [f32] {
+        &mut self.values
+    }
+
+    /// (column indices, values) of row r.
+    #[inline]
+    pub fn row_entries(&self, r: usize) -> (&[u32], &[f32]) {
+        let lo = self.row_offsets[r] as usize;
+        let hi = self.row_offsets[r + 1] as usize;
+        (&self.col_indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row_entries(r);
+            let orow = out.row_mut(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                orow[c as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Densify *into* an existing dense buffer, adding `scale * value`.
+    /// This is the serving-path primitive: reconstruct `W_b + ΔŴ` without
+    /// allocating (the buffer already holds a copy of the base weight).
+    pub fn add_to_dense(&self, out: &mut Matrix, scale: f32) {
+        assert_eq!(out.shape(), self.shape());
+        for r in 0..self.rows {
+            let (cols, vals) = self.row_entries(r);
+            let orow = out.row_mut(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                orow[c as usize] += scale * v;
+            }
+        }
+    }
+
+    /// Sparse-dense product `A = X · selfᵀ` (`X: t×h_in`, `self: h_out×h_in`
+    /// → `t×h_out`). This is the separate-computation delta path
+    /// `X·ΔŴᵀ` (paper Fig. 3): each output column q gathers X's columns at
+    /// the nnz positions of delta row q.
+    pub fn matmul_nt_from_dense(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.cols, "inner dims");
+        let t = x.rows();
+        let mut out = Matrix::zeros(t, self.rows);
+        for q in 0..self.rows {
+            let (cols, vals) = self.row_entries(q);
+            for p in 0..t {
+                let xrow = x.row(p);
+                let mut acc = 0.0f32;
+                for (&c, &v) in cols.iter().zip(vals) {
+                    acc += xrow[c as usize] * v;
+                }
+                out.set(p, q, acc);
+            }
+        }
+        out
+    }
+
+    /// Storage cost in bits under the paper's accounting: each nnz costs
+    /// `value_bits + index_bits`, each row costs one `offset_bits` entry
+    /// (plus one terminal offset).
+    pub fn storage_bits(&self, value_bits: u32, index_bits: u32, offset_bits: u32) -> u64 {
+        let nnz = self.nnz() as u64;
+        nnz * (value_bits as u64 + index_bits as u64)
+            + (self.rows as u64 + 1) * offset_bits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Matrix, Pcg64};
+
+    fn sparse_random(rows: usize, cols: usize, density: f64, rng: &mut Pcg64) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| {
+            if rng.bernoulli(density) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let m = sparse_random(13, 29, 0.2, &mut rng);
+        let csr = CsrMatrix::from_dense(&m);
+        assert_eq!(csr.to_dense(), m);
+        assert_eq!(csr.nnz(), m.count_nonzeros());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let csr = CsrMatrix::empty(4, 7);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.to_dense(), Matrix::zeros(4, 7));
+        assert_eq!(csr.density(), 0.0);
+    }
+
+    #[test]
+    fn row_entries_are_ordered() {
+        let m = Matrix::from_vec(2, 4, vec![0.0, 1.0, 0.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        let csr = CsrMatrix::from_dense(&m);
+        let (c0, v0) = csr.row_entries(0);
+        assert_eq!(c0, &[1, 3]);
+        assert_eq!(v0, &[1.0, 2.0]);
+        let (c1, v1) = csr.row_entries(1);
+        assert_eq!(c1, &[0]);
+        assert_eq!(v1, &[3.0]);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Pcg64::seeded(2);
+        let dw = sparse_random(9, 17, 0.15, &mut rng);
+        let x = Matrix::randn(5, 17, 1.0, &mut rng);
+        let csr = CsrMatrix::from_dense(&dw);
+        let sparse = csr.matmul_nt_from_dense(&x);
+        let dense = x.matmul_nt(&dw);
+        assert!(sparse.allclose(&dense, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn add_to_dense_reconstructs() {
+        let mut rng = Pcg64::seeded(3);
+        let base = Matrix::randn(6, 8, 1.0, &mut rng);
+        let delta = sparse_random(6, 8, 0.3, &mut rng);
+        let csr = CsrMatrix::from_dense(&delta);
+        let mut w = base.clone();
+        csr.add_to_dense(&mut w, 1.0);
+        assert!(w.allclose(&base.add(&delta), 1e-6, 0.0));
+        // scale = 2 applies twice the delta
+        let mut w2 = base.clone();
+        csr.add_to_dense(&mut w2, 2.0);
+        assert!(w2.allclose(&base.add(&delta.scaled(2.0)), 1e-6, 0.0));
+    }
+
+    #[test]
+    fn storage_bits_accounting() {
+        // 2x4 matrix with 3 nnz: 3*(16+16) + 3*32 = 96 + 96 = 192 bits
+        let m = Matrix::from_vec(2, 4, vec![0.0, 1.0, 0.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        let csr = CsrMatrix::from_dense(&m);
+        assert_eq!(csr.storage_bits(16, 16, 32), 3 * 32 + 3 * 32);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        let csr = CsrMatrix::from_parts(2, 3, vec![0, 1, 2], vec![0, 2], vec![1.0, 2.0]);
+        assert_eq!(csr.to_dense(), Matrix::from_vec(2, 3, vec![1.0, 0.0, 0.0, 0.0, 0.0, 2.0]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_parts_bad_offsets_panics() {
+        let _ = CsrMatrix::from_parts(2, 3, vec![0, 1], vec![0], vec![1.0]);
+    }
+}

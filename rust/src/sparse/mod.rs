@@ -1,0 +1,8 @@
+//! Sparse storage substrate (S2): CSR matrices and bit-packed code
+//! arrays — the paper's deployment storage format (§3.4).
+
+pub mod bitpack;
+pub mod csr;
+
+pub use bitpack::PackedCodes;
+pub use csr::CsrMatrix;

@@ -1,0 +1,510 @@
+//! Dense row-major `f32` matrix — the core numeric container.
+//!
+//! Weight matrices follow the paper's convention `W ∈ R^{h_out × h_in}`
+//! and activations `X ∈ R^{t × h_in}`, so the linear layer computes
+//! `A = X Wᵀ` (`matmul_nt`). All hot loops are written to autovectorize;
+//! the blocked/parallel variants live in [`super::ops`].
+
+use crate::tensor::rng::Pcg64;
+
+/// Dense row-major matrix of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, value: f32) -> Self {
+        Matrix { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// Build from an existing buffer (must have `rows*cols` elements).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer {} != {rows}x{cols}", data.len());
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// I.i.d. normal entries with the given std (weight init / test data).
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal() * std);
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform entries in `[lo, hi)`.
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Pcg64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.uniform(lo, hi));
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the underlying buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Iterate rows as slices.
+    pub fn rows_iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.cols)
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// `self + other`, elementwise.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self - other`, elementwise. Delta extraction: `ΔW = W_ft − W_b`.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self += other`.
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// In-place `self += scale * other` (delta application).
+    pub fn add_scaled(&mut self, other: &Matrix, scale: f32) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += scale * b;
+        }
+    }
+
+    /// Elementwise product (Hadamard) — used to apply dropout masks
+    /// (`ΔŴ = ΔW ⊙ M`, paper §3.3).
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Scale every element in place (rescaling step of dropout).
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Scaled copy.
+    pub fn scaled(&self, s: f32) -> Matrix {
+        let mut out = self.clone();
+        out.scale(s);
+        out
+    }
+
+    /// `A = self · otherᵀ` — the layer computation `X Wᵀ` with
+    /// `self: t×h_in`, `other: h_out×h_in` → `t×h_out`. The NT layout
+    /// makes both inner loops stride-1, which is why weights are stored
+    /// `h_out×h_in` throughout.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(
+            self.cols, other.cols,
+            "matmul_nt inner dims: {}x{} · ({}x{})ᵀ",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        for p in 0..self.rows {
+            let xrow = self.row(p);
+            let orow = out.row_mut(p);
+            for (q, o) in orow.iter_mut().enumerate() {
+                let wrow = other.row(q);
+                *o = dot(xrow, wrow);
+            }
+        }
+        out
+    }
+
+    /// `A = self · other` (plain layout) — used for attention `P·V`.
+    pub fn matmul_nn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul_nn inner dims: {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for p in 0..self.rows {
+            let xrow = self.row(p);
+            let orow = &mut out.data[p * other.cols..(p + 1) * other.cols];
+            for (k, &x) in xrow.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += x * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Squared L2 distance to another matrix — the paper's layer loss
+    /// `‖A − Â‖²` (Eq. 2–3) and attention-error proxy (Eq. 5).
+    pub fn sq_distance(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// Number of exactly-zero entries (sparsity accounting).
+    pub fn count_zeros(&self) -> usize {
+        self.data.iter().filter(|v| **v == 0.0).count()
+    }
+
+    /// Number of nonzero entries.
+    pub fn count_nonzeros(&self) -> usize {
+        self.len() - self.count_zeros()
+    }
+
+    /// Max |v|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// (min, max) over all entries; (0, 0) for empty.
+    pub fn min_max(&self) -> (f32, f32) {
+        if self.data.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    }
+
+    /// Mean of all entries.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&v| v as f64).sum::<f64>() / self.data.len() as f64) as f32
+    }
+
+    /// Copy of columns `[lo, hi)` (multi-head attention head slicing).
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.cols, "col slice {lo}..{hi} of {}", self.cols);
+        let width = hi - lo;
+        let mut data = Vec::with_capacity(self.rows * width);
+        for r in 0..self.rows {
+            data.extend_from_slice(&self.data[r * self.cols + lo..r * self.cols + hi]);
+        }
+        Matrix { rows: self.rows, cols: width, data }
+    }
+
+    /// Write `block` into columns `[lo, lo+block.cols)` (head concat).
+    pub fn set_cols(&mut self, lo: usize, block: &Matrix) {
+        assert_eq!(self.rows, block.rows);
+        assert!(lo + block.cols <= self.cols);
+        for r in 0..self.rows {
+            let dst = &mut self.data[r * self.cols + lo..r * self.cols + lo + block.cols];
+            dst.copy_from_slice(block.row(r));
+        }
+    }
+
+    /// Append one row (KV-cache growth). O(cols) amortized.
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "row width");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Take a copy of the first `n` rows (used to slice calibration data).
+    pub fn take_rows(&self, n: usize) -> Matrix {
+        let n = n.min(self.rows);
+        Matrix { rows: n, cols: self.cols, data: self.data[..n * self.cols].to_vec() }
+    }
+
+    /// Approximate elementwise equality (test helper).
+    pub fn allclose(&self, other: &Matrix, atol: f32, rtol: f32) -> bool {
+        if self.shape() != other.shape() {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+/// Stride-1 dot product (§Perf L3 iter 2): two 8-lane `[f32; 8]`
+/// accumulator arrays over `chunks_exact(16)` — the pattern LLVM
+/// reliably turns into AVX2 FMA with `-C target-cpu=native` (the
+/// scalar 8-accumulator unroll it refused to vectorize).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = [0.0f32; 8];
+    let mut acc1 = [0.0f32; 8];
+    let mut ca = a.chunks_exact(16);
+    let mut cb = b.chunks_exact(16);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for i in 0..8 {
+            acc0[i] += xa[i] * xb[i];
+            acc1[i] += xa[i + 8] * xb[i + 8];
+        }
+    }
+    let mut s = 0.0f32;
+    for i in 0..8 {
+        s += acc0[i] + acc1[i];
+    }
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        let _ = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let m = Matrix::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn matmul_nt_matches_naive() {
+        let mut rng = Pcg64::seeded(2);
+        let x = Matrix::randn(4, 6, 1.0, &mut rng);
+        let w = Matrix::randn(3, 6, 1.0, &mut rng);
+        let a = x.matmul_nt(&w);
+        assert_eq!(a.shape(), (4, 3));
+        for p in 0..4 {
+            for q in 0..3 {
+                let want: f32 = (0..6).map(|k| x.get(p, k) * w.get(q, k)).sum();
+                assert!((a.get(p, q) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nn_matches_nt_of_transpose() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Matrix::randn(4, 5, 1.0, &mut rng);
+        let b = Matrix::randn(5, 3, 1.0, &mut rng);
+        let nn = a.matmul_nn(&b);
+        let nt = a.matmul_nt(&b.transpose());
+        assert!(nn.allclose(&nt, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::seeded(4);
+        let x = Matrix::randn(3, 3, 1.0, &mut rng);
+        let i = Matrix::eye(3);
+        assert!(x.matmul_nn(&i).allclose(&x, 1e-6, 0.0));
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut rng = Pcg64::seeded(5);
+        let base = Matrix::randn(8, 8, 1.0, &mut rng);
+        let ft = Matrix::randn(8, 8, 1.0, &mut rng);
+        let delta = ft.sub(&base);
+        let rebuilt = base.add(&delta);
+        assert!(rebuilt.allclose(&ft, 1e-6, 0.0));
+    }
+
+    #[test]
+    fn add_scaled_applies_alpha() {
+        let base = Matrix::full(2, 2, 1.0);
+        let delta = Matrix::full(2, 2, 0.5);
+        let mut w = base.clone();
+        w.add_scaled(&delta, 2.0);
+        assert_eq!(w, Matrix::full(2, 2, 2.0));
+    }
+
+    #[test]
+    fn hadamard_masks() {
+        let w = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let m = Matrix::from_vec(1, 4, vec![1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(w.hadamard(&m).data(), &[1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn sq_distance_zero_iff_equal() {
+        let mut rng = Pcg64::seeded(6);
+        let a = Matrix::randn(4, 4, 1.0, &mut rng);
+        assert_eq!(a.sq_distance(&a), 0.0);
+        let mut b = a.clone();
+        b.set(0, 0, b.get(0, 0) + 1.0);
+        assert!((a.sq_distance(&b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_counting() {
+        let m = Matrix::from_vec(2, 3, vec![0.0, 1.0, 0.0, 2.0, 0.0, 3.0]);
+        assert_eq!(m.count_zeros(), 3);
+        assert_eq!(m.count_nonzeros(), 3);
+    }
+
+    #[test]
+    fn min_max_and_mean() {
+        let m = Matrix::from_vec(1, 4, vec![-2.0, 0.0, 1.0, 5.0]);
+        assert_eq!(m.min_max(), (-2.0, 5.0));
+        assert_eq!(m.mean(), 1.0);
+        assert_eq!(m.abs_max(), 5.0);
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for n in [0usize, 1, 7, 8, 9, 31, 64] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5).collect();
+            let want: f32 = (0..n).map(|i| (i * i) as f32 * 0.5).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn take_rows_slices_prefix() {
+        let m = Matrix::from_fn(4, 2, |r, _| r as f32);
+        let t = m.take_rows(2);
+        assert_eq!(t.shape(), (2, 2));
+        assert_eq!(t.row(1), &[1.0, 1.0]);
+        // asking for more rows than exist clamps
+        assert_eq!(m.take_rows(10).rows(), 4);
+    }
+}

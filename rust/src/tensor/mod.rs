@@ -1,0 +1,14 @@
+//! Dense tensor substrate (S1): matrices, deterministic RNG, NN ops,
+//! and distribution statistics.
+//!
+//! Everything downstream — compression, the transformer forward pass,
+//! the eval harness, the serving coordinator — is built on this module.
+
+pub mod matrix;
+pub mod ops;
+pub mod rng;
+pub mod stats;
+
+pub use matrix::{dot, Matrix};
+pub use rng::Pcg64;
+pub use stats::{Accumulator, Histogram, IntermediateStats, SampleStats};

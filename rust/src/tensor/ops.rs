@@ -1,0 +1,278 @@
+//! Neural-net operations over [`Matrix`]: softmax, layernorm, GELU,
+//! embedding lookup, plus a thread-parallel blocked matmul used on the
+//! serving hot path.
+
+use crate::tensor::matrix::{dot, Matrix};
+
+/// Row-wise numerically-stable softmax (attention probabilities).
+pub fn softmax_rows(m: &mut Matrix) {
+    let cols = m.cols();
+    for row in m.data_mut().chunks_exact_mut(cols) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Row-wise LayerNorm with learned gain/bias.
+pub fn layernorm_rows(m: &mut Matrix, gain: &[f32], bias: &[f32], eps: f32) {
+    let cols = m.cols();
+    assert_eq!(gain.len(), cols);
+    assert_eq!(bias.len(), cols);
+    for row in m.data_mut().chunks_exact_mut(cols) {
+        let mean = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (v, (g, b)) in row.iter_mut().zip(gain.iter().zip(bias)) {
+            *v = (*v - mean) * inv * g + b;
+        }
+    }
+}
+
+/// RMSNorm (Llama-family normalization — our models mirror Llama blocks).
+pub fn rmsnorm_rows(m: &mut Matrix, gain: &[f32], eps: f32) {
+    let cols = m.cols();
+    assert_eq!(gain.len(), cols);
+    for row in m.data_mut().chunks_exact_mut(cols) {
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (v, g) in row.iter_mut().zip(gain) {
+            *v = *v * inv * g;
+        }
+    }
+}
+
+/// Tanh-approximation GELU, elementwise in place.
+pub fn gelu(m: &mut Matrix) {
+    for v in m.data_mut() {
+        let x = *v;
+        let c = 0.797_884_56_f32; // sqrt(2/pi)
+        let inner = c * (x + 0.044_715 * x * x * x);
+        *v = 0.5 * x * (1.0 + inner.tanh());
+    }
+}
+
+/// SiLU (x * sigmoid(x)) elementwise in place — Llama MLP activation.
+pub fn silu(m: &mut Matrix) {
+    for v in m.data_mut() {
+        let x = *v;
+        *v = x / (1.0 + (-x).exp());
+    }
+}
+
+/// Embedding lookup: rows of `table` gathered by token id.
+pub fn embed(table: &Matrix, tokens: &[u32]) -> Matrix {
+    let mut out = Matrix::zeros(tokens.len(), table.cols());
+    for (i, &t) in tokens.iter().enumerate() {
+        let t = t as usize;
+        assert!(t < table.rows(), "token id {t} out of vocab {}", table.rows());
+        out.row_mut(i).copy_from_slice(table.row(t));
+    }
+    out
+}
+
+/// Causal mask applied to a `t×t` score matrix: positions `c > r` get
+/// `-inf` before softmax.
+pub fn apply_causal_mask(scores: &mut Matrix) {
+    let (rows, cols) = scores.shape();
+    assert_eq!(rows, cols, "causal mask expects square scores");
+    for r in 0..rows {
+        for c in (r + 1)..cols {
+            scores.set(r, c, f32::NEG_INFINITY);
+        }
+    }
+}
+
+/// Argmax of each row (greedy decoding).
+pub fn argmax_rows(m: &Matrix) -> Vec<u32> {
+    m.rows_iter()
+        .map(|row| {
+            let mut best = 0usize;
+            let mut bv = f32::NEG_INFINITY;
+            for (i, &v) in row.iter().enumerate() {
+                if v > bv {
+                    bv = v;
+                    best = i;
+                }
+            }
+            best as u32
+        })
+        .collect()
+}
+
+/// `X · Wᵀ` split across `threads` OS threads by output row blocks of X.
+///
+/// This is the L3 fallback compute path (when the PJRT executable is not
+/// used, e.g. in pure-rust eval of many compressed variants). Scoped
+/// threads keep it allocation-free apart from the output buffer.
+pub fn matmul_nt_parallel(x: &Matrix, w: &Matrix, threads: usize) -> Matrix {
+    assert_eq!(x.cols(), w.cols(), "inner dims");
+    let t = x.rows();
+    let h_out = w.rows();
+    let threads = threads.max(1).min(t.max(1));
+    let mut out = Matrix::zeros(t, h_out);
+    if threads <= 1 || t < 4 {
+        return x.matmul_nt(w);
+    }
+    let chunk = t.div_ceil(threads);
+    {
+        let out_chunks: Vec<&mut [f32]> = out.data_mut().chunks_mut(chunk * h_out).collect();
+        std::thread::scope(|scope| {
+            for (b, out_block) in out_chunks.into_iter().enumerate() {
+                let x = &x;
+                let w = &w;
+                scope.spawn(move || {
+                    let row0 = b * chunk;
+                    for (i, orow) in out_block.chunks_exact_mut(h_out).enumerate() {
+                        let xrow = x.row(row0 + i);
+                        for (q, o) in orow.iter_mut().enumerate() {
+                            *o = dot(xrow, w.row(q));
+                        }
+                    }
+                });
+            }
+        });
+    }
+    out
+}
+
+/// Cross-entropy loss (mean over positions) of logits vs target ids.
+pub fn cross_entropy(logits: &Matrix, targets: &[u32]) -> f64 {
+    assert_eq!(logits.rows(), targets.len());
+    let mut total = 0.0f64;
+    for (row, &t) in logits.rows_iter().zip(targets) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let logsum = row.iter().map(|v| ((v - max) as f64).exp()).sum::<f64>().ln();
+        total += logsum - (row[t as usize] - max) as f64;
+    }
+    total / targets.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg64;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Pcg64::seeded(1);
+        let mut m = Matrix::randn(5, 9, 3.0, &mut rng);
+        softmax_rows(&mut m);
+        for row in m.rows_iter() {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(1, 3, vec![1001.0, 1002.0, 1003.0]);
+        let (mut a, mut b) = (a, b);
+        softmax_rows(&mut a);
+        softmax_rows(&mut b);
+        assert!(a.allclose(&b, 1e-6, 0.0));
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Pcg64::seeded(2);
+        let mut m = Matrix::randn(4, 64, 5.0, &mut rng);
+        let gain = vec![1.0; 64];
+        let bias = vec![0.0; 64];
+        layernorm_rows(&mut m, &gain, &bias, 1e-5);
+        for row in m.rows_iter() {
+            let mean: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let mut rng = Pcg64::seeded(3);
+        let mut m = Matrix::randn(3, 32, 2.0, &mut rng);
+        rmsnorm_rows(&mut m, &vec![1.0; 32], 1e-6);
+        for row in m.rows_iter() {
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / 32.0;
+            assert!((ms - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        let mut m = Matrix::from_vec(1, 3, vec![0.0, 1.0, -1.0]);
+        gelu(&mut m);
+        assert!((m.get(0, 0) - 0.0).abs() < 1e-6);
+        assert!((m.get(0, 1) - 0.8412).abs() < 1e-3);
+        assert!((m.get(0, 2) + 0.1588).abs() < 1e-3);
+    }
+
+    #[test]
+    fn silu_known_values() {
+        let mut m = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        silu(&mut m);
+        assert!((m.get(0, 0)).abs() < 1e-7);
+        assert!((m.get(0, 1) - 0.73106).abs() < 1e-4);
+    }
+
+    #[test]
+    fn embed_gathers_rows() {
+        let table = Matrix::from_fn(4, 2, |r, _| r as f32);
+        let e = embed(&table, &[2, 0, 3]);
+        assert_eq!(e.row(0), &[2.0, 2.0]);
+        assert_eq!(e.row(1), &[0.0, 0.0]);
+        assert_eq!(e.row(2), &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn causal_mask_blocks_future() {
+        let mut s = Matrix::full(3, 3, 1.0);
+        apply_causal_mask(&mut s);
+        softmax_rows(&mut s);
+        assert!((s.get(0, 0) - 1.0).abs() < 1e-6);
+        assert_eq!(s.get(0, 1), 0.0);
+        assert_eq!(s.get(0, 2), 0.0);
+        assert!((s.get(1, 0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let m = Matrix::from_vec(2, 3, vec![0.1, 0.9, 0.2, 3.0, -1.0, 2.0]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        let mut rng = Pcg64::seeded(4);
+        let x = Matrix::randn(33, 48, 1.0, &mut rng);
+        let w = Matrix::randn(17, 48, 1.0, &mut rng);
+        let serial = x.matmul_nt(&w);
+        for threads in [1, 2, 4, 8] {
+            let par = matmul_nt_parallel(&x, &w, threads);
+            assert!(par.allclose(&serial, 1e-5, 1e-5), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction_near_zero() {
+        let mut logits = Matrix::zeros(2, 4);
+        logits.set(0, 1, 50.0);
+        logits.set(1, 3, 50.0);
+        let ce = cross_entropy(&logits, &[1, 3]);
+        assert!(ce < 1e-6);
+        // uniform logits -> ln(vocab)
+        let uniform = Matrix::zeros(2, 4);
+        let ce_u = cross_entropy(&uniform, &[0, 2]);
+        assert!((ce_u - (4.0f64).ln()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,328 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! All stochastic steps in the library (dropout masks, synthetic data,
+//! weight init, request arrival processes) draw from [`Pcg64`], a
+//! permuted-congruential generator with 128-bit state. Determinism is a
+//! design requirement (DESIGN.md §7): every table and figure regenerates
+//! bit-identically from the seed recorded in the experiment config.
+
+/// PCG-XSL-RR 128/64 generator (O'Neill 2014).
+///
+/// 128-bit LCG state, 64-bit output via xor-shift-low + random rotation.
+/// Not cryptographic; chosen for speed, tiny state, and excellent
+/// statistical quality for simulation workloads.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id.
+    ///
+    /// Distinct `stream` values yield statistically independent sequences
+    /// for the same seed — used to give each layer / tenant / worker its
+    /// own stream without coordinating draws.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng
+    }
+
+    /// Convenience constructor on stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child generator; used to fan a single
+    /// experiment seed out to per-layer / per-row streams.
+    pub fn fork(&mut self, stream: u64) -> Self {
+        let seed = self.next_u64();
+        Self::new(seed, stream)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform `u32`.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform float in `[0, 1)` with 53 bits of entropy.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / ((1u64 << 53) as f64))
+    }
+
+    /// Uniform float in `[0, 1)` (f32).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / ((1u32 << 24) as f32))
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's rejection method
+    /// (unbiased).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "below(0) is undefined");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    #[inline]
+    pub fn below_usize(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box–Muller (cached second draw discarded for
+    /// simplicity — init/data-gen paths are not hot).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    pub fn normal_with(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// Bernoulli draw with probability `p` of `true`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.below_usize(i + 1);
+            slice.swap(i, j);
+        }
+    }
+
+    /// Sample exactly `k` distinct indices from `[0, n)`, in arbitrary
+    /// order. This is the primitive behind group-wise dropout: each group
+    /// keeps exactly `k = group_size / alpha` survivors (paper §3.3's
+    /// "1 − 1/α of the elements in each vector are set to 0").
+    pub fn sample_indices(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        assert!(k <= n, "cannot sample {k} of {n}");
+        out.clear();
+        if k == 0 {
+            return;
+        }
+        // Partial Fisher–Yates over a scratch index vec for small n;
+        // Floyd's algorithm avoids the O(n) scratch for large n / small k.
+        if k * 4 >= n {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.below_usize(n - i);
+                idx.swap(i, j);
+            }
+            out.extend_from_slice(&idx[..k]);
+        } else {
+            // Floyd's: for j in n-k..n, pick t in [0, j]; insert t or j.
+            for j in (n - k)..n {
+                let t = self.below_usize(j + 1);
+                if out.contains(&t) {
+                    out.push(j);
+                } else {
+                    out.push(t);
+                }
+            }
+        }
+    }
+
+    /// Poisson draw (Knuth's method; fine for small lambda used by the
+    /// request arrival generator).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            // Normal approximation for large lambda.
+            let x = lambda + lambda.sqrt() * self.normal() as f64;
+            return x.max(0.0).round() as u64;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Exponential inter-arrival time with the given rate (per second).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg64::new(7, 0);
+        let mut b = Pcg64::new(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Pcg64::seeded(3);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Pcg64::seeded(5);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(11);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sample_indices_exact_and_distinct() {
+        let mut r = Pcg64::seeded(13);
+        let mut out = Vec::new();
+        for &(n, k) in &[(10, 3), (16, 16), (1000, 5), (8, 0), (64, 60)] {
+            r.sample_indices(n, k, &mut out);
+            assert_eq!(out.len(), k);
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates for n={n} k={k}");
+            assert!(sorted.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn sample_indices_uniform_coverage() {
+        // Every index should be picked with roughly equal frequency.
+        let mut r = Pcg64::seeded(17);
+        let mut hits = [0u32; 16];
+        let mut out = Vec::new();
+        for _ in 0..8_000 {
+            r.sample_indices(16, 4, &mut out);
+            for &i in &out {
+                hits[i] += 1;
+            }
+        }
+        // expected 2000 per slot
+        for &h in &hits {
+            assert!((1_700..2_300).contains(&h), "hit count {h}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(19);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Pcg64::seeded(23);
+        let n = 20_000;
+        let total: u64 = (0..n).map(|_| r.poisson(4.0)).sum();
+        let mean = total as f64 / n as f64;
+        assert!((mean - 4.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::seeded(29);
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| r.exponential(2.0)).sum();
+        let mean = total / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+}

@@ -1,0 +1,364 @@
+//! Distribution statistics for the paper's analysis figures.
+//!
+//! Figure 4 (Balanced Intermediate Results) compares, per output element
+//! `a_{p,q} = Σ_k x_{p,k} w_{q,k}`, the **variance** and **min-max range**
+//! of the partial products `x_{p,k}·w_{q,k}` between the delta weight and
+//! the fine-tuned weight. Figure 6 histograms the delta-weight value
+//! distribution before/after uniform quantization.
+
+use crate::tensor::matrix::Matrix;
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampleStats {
+    pub mean: f64,
+    pub variance: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl SampleStats {
+    /// One-pass (Welford) statistics over a slice.
+    pub fn from_slice(xs: &[f32]) -> SampleStats {
+        let mut mean = 0.0f64;
+        let mut m2 = 0.0f64;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for (i, &x) in xs.iter().enumerate() {
+            let x = x as f64;
+            let d = x - mean;
+            mean += d / (i + 1) as f64;
+            m2 += d * (x - mean);
+            min = min.min(x);
+            max = max.max(x);
+        }
+        let n = xs.len();
+        SampleStats {
+            mean: if n == 0 { 0.0 } else { mean },
+            variance: if n < 2 { 0.0 } else { m2 / n as f64 },
+            min: if n == 0 { 0.0 } else { min },
+            max: if n == 0 { 0.0 } else { max },
+        }
+    }
+
+    /// max − min.
+    pub fn range(&self) -> f64 {
+        self.max - self.min
+    }
+}
+
+/// Per-output-element intermediate-result statistics for `A = X·Wᵀ`
+/// (paper Fig. 4). For each `(p, q)` we form the h_in partial products
+/// and record their variance and min-max range; the caller aggregates
+/// across a sample of `(p, q)` pairs.
+#[derive(Debug, Clone, Default)]
+pub struct IntermediateStats {
+    /// Variance of partial products, one entry per sampled output element.
+    pub variances: Vec<f64>,
+    /// Min-max range of partial products per sampled output element.
+    pub ranges: Vec<f64>,
+}
+
+impl IntermediateStats {
+    /// Compute over up to `max_elems` output elements of `X·Wᵀ`, sampled
+    /// on a regular lattice (deterministic, no RNG needed).
+    pub fn compute(x: &Matrix, w: &Matrix, max_elems: usize) -> IntermediateStats {
+        assert_eq!(x.cols(), w.cols(), "inner dims");
+        let t = x.rows();
+        let h_out = w.rows();
+        let total = t * h_out;
+        let step = (total / max_elems.max(1)).max(1);
+        let mut out = IntermediateStats::default();
+        let mut scratch = vec![0.0f32; x.cols()];
+        let mut idx = 0usize;
+        while idx < total {
+            let p = idx / h_out;
+            let q = idx % h_out;
+            let xr = x.row(p);
+            let wr = w.row(q);
+            for ((s, &a), &b) in scratch.iter_mut().zip(xr).zip(wr) {
+                *s = a * b;
+            }
+            let st = SampleStats::from_slice(&scratch);
+            out.variances.push(st.variance);
+            out.ranges.push(st.range());
+            idx += step;
+        }
+        out
+    }
+
+    /// Median of the per-element variances.
+    pub fn median_variance(&self) -> f64 {
+        median(&self.variances)
+    }
+
+    /// Median of the per-element min-max ranges.
+    pub fn median_range(&self) -> f64 {
+        median(&self.ranges)
+    }
+}
+
+/// Median of a (possibly unsorted) f64 slice; 0 for empty.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Percentile (0..=100) with linear interpolation; 0 for empty.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Fixed-width histogram over `[lo, hi]` (figure 6 weight distributions).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
+    }
+
+    /// Histogram of a matrix's entries with automatic symmetric bounds.
+    pub fn of_matrix(m: &Matrix, bins: usize) -> Histogram {
+        let absmax = m.abs_max().max(f32::MIN_POSITIVE) as f64;
+        let mut h = Histogram::new(-absmax, absmax, bins);
+        for &v in m.data() {
+            h.add(v as f64);
+        }
+        h
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x > self.hi {
+            self.overflow += 1;
+        } else {
+            let bins = self.counts.len();
+            let mut b = ((x - self.lo) / (self.hi - self.lo) * bins as f64) as usize;
+            if b >= bins {
+                b = bins - 1; // x == hi
+            }
+            self.counts[b] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Bin centers for plotting.
+    pub fn centers(&self) -> Vec<f64> {
+        let bins = self.counts.len();
+        let w = (self.hi - self.lo) / bins as f64;
+        (0..bins).map(|i| self.lo + w * (i as f64 + 0.5)).collect()
+    }
+
+    /// Render a compact ASCII sparkline (used by the figure benches to
+    /// print distributions into EXPERIMENTS.md).
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        self.counts
+            .iter()
+            .map(|&c| {
+                let g = (c as f64 / max as f64 * (GLYPHS.len() - 1) as f64).round() as usize;
+                GLYPHS[g]
+            })
+            .collect()
+    }
+}
+
+/// Online mean/min/max/var accumulator for streaming metrics (latency).
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Accumulator {
+        Accumulator { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg64;
+
+    #[test]
+    fn sample_stats_known() {
+        let s = SampleStats::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.variance - 1.25).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.range(), 3.0);
+    }
+
+    #[test]
+    fn sample_stats_empty_and_single() {
+        let e = SampleStats::from_slice(&[]);
+        assert_eq!(e.mean, 0.0);
+        assert_eq!(e.variance, 0.0);
+        let s = SampleStats::from_slice(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.variance, 0.0);
+        assert_eq!(s.range(), 0.0);
+    }
+
+    #[test]
+    fn intermediate_stats_smaller_for_smaller_weights() {
+        // The core Fig. 4 phenomenon in miniature: scaling W down by 100x
+        // scales partial-product variance down by 1e4 and range by 1e2.
+        let mut rng = Pcg64::seeded(1);
+        let x = Matrix::randn(8, 64, 1.0, &mut rng);
+        let w = Matrix::randn(16, 64, 1.0, &mut rng);
+        let dw = w.scaled(0.01);
+        let big = IntermediateStats::compute(&x, &w, 128);
+        let small = IntermediateStats::compute(&x, &dw, 128);
+        assert!(small.median_variance() < big.median_variance() * 1e-3);
+        assert!(small.median_range() < big.median_range() * 1e-1);
+    }
+
+    #[test]
+    fn median_and_percentile() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(median(&[1.0, 2.0]), 1.5);
+    }
+
+    #[test]
+    fn histogram_bins_and_edges() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.0, 0.5, 5.0, 9.99, 10.0, -1.0, 11.0] {
+            h.add(x);
+        }
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts[0], 2); // 0.0 and 0.5
+        assert_eq!(h.counts[5], 1);
+        assert_eq!(h.counts[9], 2); // 9.99 and the hi-edge 10.0
+        assert_eq!(h.total(), 7);
+        assert_eq!(h.centers().len(), 10);
+        assert!((h.centers()[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_of_matrix_is_symmetric() {
+        let m = Matrix::from_vec(1, 4, vec![-2.0, -1.0, 1.0, 2.0]);
+        let h = Histogram::of_matrix(&m, 4);
+        assert_eq!(h.lo, -2.0);
+        assert_eq!(h.hi, 2.0);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.underflow + h.overflow, 0);
+    }
+
+    #[test]
+    fn sparkline_length_matches_bins() {
+        let mut h = Histogram::new(0.0, 1.0, 16);
+        h.add(0.5);
+        assert_eq!(h.sparkline().chars().count(), 16);
+    }
+
+    #[test]
+    fn accumulator_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut acc = Accumulator::new();
+        for &x in &xs {
+            acc.add(x);
+        }
+        let batch = SampleStats::from_slice(&xs.map(|v| v as f32));
+        assert!((acc.mean() - batch.mean).abs() < 1e-9);
+        assert!((acc.variance() - batch.variance).abs() < 1e-9);
+        assert_eq!(acc.min(), 1.0);
+        assert_eq!(acc.max(), 9.0);
+        assert_eq!(acc.count(), 8);
+    }
+}

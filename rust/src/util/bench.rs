@@ -1,0 +1,109 @@
+//! Minimal benchmarking harness (criterion is not vendored in this
+//! container): warmup + timed iterations with mean/p50/p95 reporting.
+//! Used by the `cargo bench` drivers in `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// "name  mean 1.23ms  p50 1.20ms  p95 1.40ms (n=100)"
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  (n={})",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            self.iters
+        )
+    }
+
+    /// Throughput line given a per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64, unit: &str) -> String {
+        let per_sec = items_per_iter / self.mean.as_secs_f64();
+        format!("{:<44} {:>12.1} {unit}/s", self.name, per_sec)
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs. The closure's
+/// return value is black-boxed to keep the work alive.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+        min: samples[0],
+    }
+}
+
+/// Time a closure once (for expensive whole-table runs).
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, BenchResult) {
+    let t0 = Instant::now();
+    let out = f();
+    let d = t0.elapsed();
+    (
+        out,
+        BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean: d,
+            p50: d,
+            p95: d,
+            min: d,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 2, 20, || 1 + 1);
+        assert_eq!(r.iters, 20);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, r) = bench_once("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(r.iters, 1);
+    }
+}

@@ -1,0 +1,181 @@
+//! Small dense linear-algebra helpers: Cholesky factorization and
+//! SPD inversion. Used by the DELTAZIP baseline's SparseGPT-style
+//! sparsifier, which needs `H⁻¹` of the calibration Hessian
+//! `H = XᵀX + λI` (per layer, `h_in × h_in`).
+
+use crate::tensor::Matrix;
+
+/// Lower-triangular Cholesky factor `L` with `L·Lᵀ = A`.
+///
+/// Returns `None` if `A` is not (numerically) positive definite.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j) as f64;
+            for k in 0..j {
+                sum -= l.get(i, k) as f64 * l.get(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l.set(i, j, sum.sqrt() as f32);
+            } else {
+                l.set(i, j, (sum / l.get(j, j) as f64) as f32);
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L·y = b` (forward substitution) for lower-triangular `L`.
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l.get(i, k) as f64 * y[k] as f64;
+        }
+        y[i] = (sum / l.get(i, i) as f64) as f32;
+    }
+    y
+}
+
+/// Solve `Lᵀ·x = y` (back substitution).
+pub fn solve_lower_transpose(l: &Matrix, y: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for k in (i + 1)..n {
+            sum -= l.get(k, i) as f64 * x[k] as f64;
+        }
+        x[i] = (sum / l.get(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Invert a symmetric positive-definite matrix via Cholesky.
+///
+/// Returns `None` if not SPD. O(n³) with small constants; our layer
+/// dimensions (≤ a few hundred) make this cheap.
+pub fn spd_inverse(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for col in 0..n {
+        e.iter_mut().for_each(|v| *v = 0.0);
+        e[col] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_transpose(&l, &y);
+        for row in 0..n {
+            inv.set(row, col, x[row]);
+        }
+    }
+    Some(inv)
+}
+
+/// `XᵀX + λI` — the calibration Hessian used by SparseGPT/DELTAZIP.
+/// `x: t×h_in` → `h_in×h_in`. `lambda` is the damping term (relative to
+/// the mean diagonal, as in the SparseGPT reference implementation).
+pub fn damped_gram(x: &Matrix, lambda_rel: f32) -> Matrix {
+    let h = x.cols();
+    let mut g = Matrix::zeros(h, h);
+    for p in 0..x.rows() {
+        let row = x.row(p);
+        for i in 0..h {
+            let xi = row[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let grow = g.row_mut(i);
+            for (j, &xj) in row.iter().enumerate() {
+                grow[j] += xi * xj;
+            }
+        }
+    }
+    let mean_diag = (0..h).map(|i| g.get(i, i) as f64).sum::<f64>() / h as f64;
+    let damp = (lambda_rel as f64 * mean_diag).max(1e-8) as f32;
+    for i in 0..h {
+        g.set(i, i, g.get(i, i) + damp);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        // AᵀA + I is SPD
+        let mut g = a.transpose().matmul_nn(&a);
+        for i in 0..n {
+            g.set(i, i, g.get(i, i) + 1.0);
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let rebuilt = l.matmul_nt(&l); // L·Lᵀ
+        assert!(rebuilt.allclose(&a, 1e-2, 1e-3));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Matrix::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solves_invert_triangular() {
+        let a = random_spd(6, 2);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f32> = (0..6).map(|i| i as f32 + 1.0).collect();
+        let y = solve_lower(&l, &b);
+        // L·y should be b
+        for i in 0..6 {
+            let got: f32 = (0..=i).map(|k| l.get(i, k) * y[k]).sum();
+            assert!((got - b[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let a = random_spd(10, 3);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = a.matmul_nn(&inv);
+        assert!(prod.allclose(&Matrix::eye(10), 5e-2, 1e-2));
+    }
+
+    #[test]
+    fn damped_gram_is_spd_and_symmetric() {
+        let mut rng = Pcg64::seeded(4);
+        let x = Matrix::randn(20, 12, 1.0, &mut rng);
+        let g = damped_gram(&x, 0.01);
+        assert!(g.allclose(&g.transpose(), 1e-4, 1e-4));
+        assert!(cholesky(&g).is_some());
+    }
+
+    #[test]
+    fn damped_gram_handles_degenerate_inputs() {
+        // fewer samples than dims would make XᵀX singular; damping fixes it
+        let mut rng = Pcg64::seeded(5);
+        let x = Matrix::randn(2, 16, 1.0, &mut rng);
+        let g = damped_gram(&x, 0.01);
+        assert!(cholesky(&g).is_some(), "damping must make the Gram SPD");
+    }
+}

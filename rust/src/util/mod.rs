@@ -1,0 +1,9 @@
+//! Shared utilities: small linear algebra, JSON emission, table
+//! rendering, and timing — all in-tree because the container vendors
+//! only the `xla` dependency tree (see Cargo.toml).
+
+pub mod bench;
+pub mod json;
+pub mod linalg;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,77 @@
+//! Wall-clock timing helpers used across the bench harness and the
+//! coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+/// Measure one closure invocation.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// A stopwatch that accumulates named segments (profiling the
+/// compression pipeline stages).
+#[derive(Debug, Default)]
+pub struct SegmentTimer {
+    segments: Vec<(String, Duration)>,
+}
+
+impl SegmentTimer {
+    pub fn new() -> SegmentTimer {
+        SegmentTimer::default()
+    }
+
+    /// Time `f` and record it under `name` (accumulating repeats).
+    pub fn run<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time_it(f);
+        if let Some(seg) = self.segments.iter_mut().find(|(n, _)| n == name) {
+            seg.1 += dt;
+        } else {
+            self.segments.push((name.to_string(), dt));
+        }
+        out
+    }
+
+    pub fn segments(&self) -> &[(String, Duration)] {
+        &self.segments
+    }
+
+    pub fn total(&self) -> Duration {
+        self.segments.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Render a one-line summary "a=1.2ms b=0.3ms (total 1.5ms)".
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .segments
+            .iter()
+            .map(|(n, d)| format!("{n}={:.1}ms", d.as_secs_f64() * 1e3))
+            .collect();
+        format!("{} (total {:.1}ms)", parts.join(" "), self.total().as_secs_f64() * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, d) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() < 1_000_000_000);
+    }
+
+    #[test]
+    fn segments_accumulate() {
+        let mut t = SegmentTimer::new();
+        t.run("a", || std::thread::sleep(Duration::from_millis(1)));
+        t.run("a", || std::thread::sleep(Duration::from_millis(1)));
+        t.run("b", || ());
+        assert_eq!(t.segments().len(), 2);
+        assert!(t.segments()[0].1 >= Duration::from_millis(2));
+        assert!(t.total() >= Duration::from_millis(2));
+        assert!(t.summary().contains("a="));
+    }
+}

@@ -1,0 +1,174 @@
+//! Integration: the serving coordinator under concurrency — multiple
+//! tenants, backpressure, promotion/eviction, and shutdown semantics.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deltadq::compress::pipeline::compress_model_deltas;
+use deltadq::compress::{DeltaDq, DeltaDqConfig};
+use deltadq::coordinator::{Server, ServerOptions, SubmitError};
+use deltadq::delta::extract_deltas;
+use deltadq::delta::format::DeltaSet;
+use deltadq::eval::{gen_dataset, TaskKind};
+use deltadq::model::{ModelConfig, ModelWeights};
+use deltadq::tensor::{Matrix, Pcg64};
+
+fn base() -> Arc<ModelWeights> {
+    let mut rng = Pcg64::seeded(1);
+    Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng))
+}
+
+fn deltas_for(base: &ModelWeights, seed: u64) -> DeltaSet {
+    let mut rng = Pcg64::seeded(seed);
+    let mut ft = base.clone();
+    for name in base.config.delta_tensor_names() {
+        let (r, c) = ft.get(&name).shape();
+        ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, &mut rng));
+    }
+    let d = extract_deltas(base, &ft);
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(16)));
+    compress_model_deltas(&d, &dq, &Default::default(), &mut rng)
+}
+
+#[test]
+fn many_tenants_many_threads() {
+    let b = base();
+    let server = Arc::new(Server::start(
+        b.clone(),
+        ServerOptions {
+            workers: 3,
+            max_batch: 4,
+            batch_window: Duration::from_micros(200),
+            ..Default::default()
+        },
+    ));
+    for i in 0..4 {
+        server.register_tenant(&format!("t{i}"), deltas_for(&b, 10 + i));
+    }
+    let prompts: Vec<Vec<u32>> = gen_dataset(TaskKind::Math, 16, 5)
+        .into_iter()
+        .map(|s| s.prompt)
+        .collect();
+    // 4 submitter threads × 12 requests
+    let completed = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for th in 0..4 {
+            let server = server.clone();
+            let prompts = &prompts;
+            let completed = &completed;
+            scope.spawn(move || {
+                for i in 0..12 {
+                    let tenant = format!("t{}", (th + i) % 4);
+                    let rx = server
+                        .submit(&tenant, prompts[i % prompts.len()].clone(), 4)
+                        .unwrap();
+                    let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                    assert_eq!(resp.tenant, tenant);
+                    completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    assert_eq!(completed.load(std::sync::atomic::Ordering::Relaxed), 48);
+    let m = Arc::try_unwrap(server).ok().unwrap();
+    assert_eq!(
+        m.metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
+        48
+    );
+    m.shutdown();
+}
+
+#[test]
+fn backpressure_surfaces_to_caller() {
+    let b = base();
+    // zero workers cannot exist; use 1 worker + long window to keep the
+    // queue busy, depth 2 to trigger backpressure fast
+    let server = Server::start(
+        b.clone(),
+        ServerOptions {
+            workers: 1,
+            max_batch: 1,
+            batch_window: Duration::from_millis(50),
+            queue_depth: 2,
+            ..Default::default()
+        },
+    );
+    server.register_tenant("t", deltas_for(&b, 2));
+    let mut saw_backpressure = false;
+    let mut rxs = Vec::new();
+    for _ in 0..20 {
+        match server.submit("t", vec![1, 20, 4, 21, 3], 2) {
+            Ok(rx) => rxs.push(rx),
+            Err(SubmitError::Backpressure { .. }) => {
+                saw_backpressure = true;
+                break;
+            }
+            Err(e) => panic!("unexpected error {e}"),
+        }
+    }
+    assert!(saw_backpressure, "queue depth 2 must reject a burst of 20");
+    for rx in rxs {
+        let _ = rx.recv_timeout(Duration::from_secs(60));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn cache_budget_bounds_dense_memory() {
+    let b = base();
+    let one_cache = b.param_count() as u64 * 4;
+    let server = Server::start(
+        b.clone(),
+        ServerOptions {
+            workers: 1,
+            promote_after: 1,
+            cache_budget: Some(one_cache + 4096),
+            batch_window: Duration::from_micros(100),
+            ..Default::default()
+        },
+    );
+    for i in 0..3 {
+        server.register_tenant(&format!("t{i}"), deltas_for(&b, 20 + i));
+    }
+    // hit each tenant; only one dense cache can be resident at a time
+    for i in 0..3 {
+        let rx = server
+            .submit(&format!("t{i}"), vec![1, 20, 4, 21, 3], 2)
+            .unwrap();
+        rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    }
+    let hot_count = server.residency().iter().filter(|(_, hot, _)| *hot).count();
+    assert!(hot_count <= 1, "budget allows one dense cache, saw {hot_count}");
+    assert!(
+        server
+            .metrics
+            .evictions
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 1
+    );
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_completes_inflight_requests() {
+    let b = base();
+    let server = Server::start(
+        b.clone(),
+        ServerOptions {
+            workers: 2,
+            batch_window: Duration::from_micros(100),
+            ..Default::default()
+        },
+    );
+    server.register_tenant("t", deltas_for(&b, 3));
+    let rxs: Vec<_> = (0..6)
+        .map(|_| server.submit("t", vec![1, 20, 4, 21, 3], 3).unwrap())
+        .collect();
+    server.shutdown(); // close() drains queues before workers exit
+    for rx in rxs {
+        assert!(
+            rx.recv_timeout(Duration::from_secs(10)).is_ok(),
+            "queued request must be served during drain"
+        );
+    }
+}
