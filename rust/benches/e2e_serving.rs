@@ -2,18 +2,36 @@
 //! benchmarks: throughput/latency under different batching policies,
 //! Hot vs Cold residency, and tenant counts (the batching and
 //! residency ablations of DESIGN.md §5).
+//!
+//! Backend selection: set `DELTADQ_BACKEND=pjrt` (requires a build with
+//! `--features pjrt` plus real artifacts) to run the same workload
+//! through the PJRT backend; default is native.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use deltadq::compress::pipeline::compress_model_deltas;
 use deltadq::compress::{DeltaDq, DeltaDqConfig};
+use deltadq::config::ServeConfig;
 use deltadq::coordinator::{Server, ServerOptions};
 use deltadq::delta::extract_deltas;
 use deltadq::delta::format::DeltaSet;
 use deltadq::eval::{gen_dataset, TaskKind};
 use deltadq::model::{load_weights, ModelConfig, ModelWeights};
+use deltadq::runtime::{backend_from_name, ExecutionBackend, NativeBackend};
 use deltadq::tensor::{Matrix, Pcg64};
+
+/// Resolve the backend from `DELTADQ_BACKEND` (default: native).
+fn backend() -> Arc<dyn ExecutionBackend> {
+    let name = std::env::var("DELTADQ_BACKEND").unwrap_or_else(|_| "native".to_string());
+    match backend_from_name(&name, &ServeConfig::default()) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("backend '{name}' unavailable ({e:#}); falling back to native");
+            Arc::new(NativeBackend::default())
+        }
+    }
+}
 
 /// Load the trained tiny base if present, else synthesize one.
 fn base_model() -> Arc<ModelWeights> {
@@ -49,11 +67,17 @@ struct RunReport {
 }
 
 /// Drive `n` closed-loop-ish requests through a server config.
-fn drive(options: ServerOptions, tenants: usize, n: usize, promote: bool) -> RunReport {
+fn drive(
+    backend: &Arc<dyn ExecutionBackend>,
+    options: ServerOptions,
+    tenants: usize,
+    n: usize,
+    promote: bool,
+) -> RunReport {
     let base = base_model();
     let mut options = options;
     options.promote_after = if promote { 1 } else { u64::MAX };
-    let server = Server::start(base.clone(), options);
+    let server = Server::with_backend(base.clone(), options, backend.clone());
     for i in 0..tenants {
         server.register_tenant(&format!("t{i}"), make_deltas(&base, 100 + i as u64));
     }
@@ -90,7 +114,11 @@ fn drive(options: ServerOptions, tenants: usize, n: usize, promote: bool) -> Run
 
 fn main() {
     let n = 96;
-    println!("== E10 end-to-end serving benchmarks (tiny model, {n} requests) ==\n");
+    let backend = backend(); // resolve DELTADQ_BACKEND once for the whole run
+    println!(
+        "== E10 end-to-end serving benchmarks (tiny model, {n} requests, '{}' backend) ==\n",
+        backend.name()
+    );
 
     println!("-- batching ablation (2 tenants, cold) --");
     println!(
@@ -104,6 +132,7 @@ fn main() {
         ("batch 16, 2ms window", 16, 2000),
     ] {
         let r = drive(
+            &backend,
             ServerOptions {
                 max_batch,
                 batch_window: Duration::from_micros(window_us),
@@ -123,6 +152,7 @@ fn main() {
     println!("\n-- residency ablation (2 tenants, batch 8) --");
     for (name, promote) in [("cold: separate computation", false), ("hot: dense cache", true)] {
         let r = drive(
+            &backend,
             ServerOptions { max_batch: 8, workers: 1, ..Default::default() },
             2,
             n,
@@ -137,6 +167,7 @@ fn main() {
     println!("\n-- tenant-count scaling (batch 8, hot) --");
     for tenants in [1usize, 2, 4, 8] {
         let r = drive(
+            &backend,
             ServerOptions { max_batch: 8, workers: 1, ..Default::default() },
             tenants,
             n,

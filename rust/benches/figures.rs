@@ -3,8 +3,10 @@
 //! artifacts. Skips gracefully when `make artifacts` has not run.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use deltadq::bench_harness;
+use deltadq::runtime::{ExecutionBackend, NativeBackend};
 use deltadq::util::bench::bench_once;
 
 fn main() {
@@ -14,8 +16,10 @@ fn main() {
         eprintln!("figures bench skipped: run `make artifacts` first");
         return;
     }
-    for name in ["fig4", "fig5", "fig6", "fig7", "fig8", "ablations"] {
-        let (result, timing) = bench_once(name, || bench_harness::run(name, models, data));
+    let backend: Arc<dyn ExecutionBackend> = Arc::new(NativeBackend::default());
+    for name in ["fig4", "fig5", "fig6", "fig7", "fig8", "ablations", "serving"] {
+        let (result, timing) =
+            bench_once(name, || bench_harness::run(name, models, data, &backend));
         match result {
             Ok(report) => {
                 println!("{report}");

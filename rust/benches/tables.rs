@@ -3,8 +3,10 @@
 //! when `make artifacts` has not run.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use deltadq::bench_harness;
+use deltadq::runtime::{ExecutionBackend, NativeBackend};
 use deltadq::util::bench::bench_once;
 
 fn main() {
@@ -14,8 +16,10 @@ fn main() {
         eprintln!("tables bench skipped: run `make artifacts` first");
         return;
     }
+    let backend: Arc<dyn ExecutionBackend> = Arc::new(NativeBackend::default());
     for name in ["table1", "table2", "table3", "table4"] {
-        let (result, timing) = bench_once(name, || bench_harness::run(name, models, data));
+        let (result, timing) =
+            bench_once(name, || bench_harness::run(name, models, data, &backend));
         match result {
             Ok(report) => {
                 println!("{report}");

@@ -19,9 +19,49 @@ use deltadq::coordinator::{Server, ServerOptions};
 use deltadq::delta::extract_deltas;
 use deltadq::eval::tasks::vocab;
 use deltadq::eval::{gen_dataset, TaskKind};
-use deltadq::model::{forward, load_weights};
-use deltadq::runtime;
+use deltadq::model::{load_weights, ModelWeights};
+use deltadq::runtime::NativeBackend;
 use deltadq::tensor::Pcg64;
+
+/// Cross-check the native forward pass against the PJRT prefill
+/// artifact — only meaningful when built with a real xla-rs runtime.
+#[cfg(feature = "pjrt")]
+fn pjrt_crosscheck(base: &ModelWeights) -> anyhow::Result<()> {
+    use deltadq::model::forward;
+    use deltadq::runtime::pjrt;
+
+    let hlo = Path::new("artifacts/base_prefill_tiny_t48.hlo.txt");
+    if !hlo.exists() {
+        println!("(no HLO artifact; skipping PJRT cross-check)");
+        return Ok(());
+    }
+    let rt = match pjrt::PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("(PJRT unavailable: {e:#}; skipping cross-check)");
+            return Ok(());
+        }
+    };
+    let graph = rt.load(hlo)?;
+    let tokens = vec![1u32, 20, 4, 21, 3];
+    let args = pjrt::base_prefill_args(&tokens, 48, base)?;
+    let pjrt_logits = graph.execute_to_matrix(&args, (48, base.config.vocab_size))?;
+    let native = forward(base, &tokens);
+    let mut max_err = 0f32;
+    for p in 0..tokens.len() {
+        for c in 0..base.config.vocab_size {
+            max_err = max_err.max((pjrt_logits.get(p, c) - native.get(p, c)).abs());
+        }
+    }
+    println!("PJRT prefill vs native forward: max |Δlogit| = {max_err:.2e}");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_crosscheck(_base: &ModelWeights) -> anyhow::Result<()> {
+    println!("(pjrt feature disabled; skipping PJRT cross-check)");
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let models = Path::new("artifacts/models/tiny");
@@ -38,27 +78,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- optional: PJRT artifact cross-check (L3 ↔ L2 ↔ L1 compose) ---
-    let hlo = Path::new("artifacts/base_prefill_tiny_t48.hlo.txt");
-    if hlo.exists() {
-        let rt = runtime::PjrtRuntime::cpu()?;
-        let graph = rt.load(hlo)?;
-        let tokens = vec![1u32, 20, 4, 21, 3];
-        let args = runtime::base_prefill_args(&tokens, 48, &base)?;
-        let pjrt_logits = graph.execute_to_matrix(&args, (48, base.config.vocab_size))?;
-        let native = forward(base.as_ref(), &tokens);
-        let mut max_err = 0f32;
-        for p in 0..tokens.len() {
-            for c in 0..base.config.vocab_size {
-                max_err = max_err.max((pjrt_logits.get(p, c) - native.get(p, c)).abs());
-            }
-        }
-        println!("PJRT prefill vs native forward: max |Δlogit| = {max_err:.2e}");
-    } else {
-        println!("(no HLO artifact; skipping PJRT cross-check)");
-    }
+    pjrt_crosscheck(&base)?;
 
     // --- register tenants: compress each fine-tune at 16x ------------
-    let server = Server::start(
+    let server = Server::with_backend(
         base.clone(),
         ServerOptions {
             max_batch: 8,
@@ -67,7 +90,9 @@ fn main() -> anyhow::Result<()> {
             promote_after: 16,
             ..Default::default()
         },
+        Arc::new(NativeBackend::new(2)),
     );
+    println!("serving through the '{}' backend", server.backend_name());
     let mut total_compressed = 0u64;
     for task in ["math", "code", "chat"] {
         let ft = load_weights(&models.join(format!("{task}.dqw")))?;

@@ -1,4 +1,5 @@
-//! The per-table / per-figure experiment drivers (E1–E9).
+//! The per-table / per-figure experiment drivers (E1–E9) plus the
+//! backend-parameterized serving run (E10).
 //!
 //! Every driver prints rows with the same structure as the paper's
 //! artifact. Determinism: all randomness derives from fixed seeds, so
@@ -6,6 +7,8 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -16,10 +19,12 @@ use crate::compress::pipeline::{
 use crate::compress::{
     Compressor, Dare, DeltaDq, DeltaDqConfig, DeltaZip, DeltaZipConfig, Magnitude,
 };
+use crate::coordinator::{Server, ServerOptions};
 use crate::delta::extract_deltas;
 use crate::dropout::{dropout, DropoutKind};
-use crate::eval::{evaluate, load_dataset, Sample};
-use crate::model::{forward, generate, load_weights, ModelWeights};
+use crate::eval::{evaluate, gen_dataset, load_dataset, Sample, TaskKind};
+use crate::model::{forward, load_weights, ModelConfig, ModelWeights};
+use crate::runtime::ExecutionBackend;
 use crate::search::{search_direct, search_proxy};
 use crate::sparse::CsrMatrix;
 use crate::tensor::{Matrix, Pcg64};
@@ -397,20 +402,26 @@ pub fn fig7(models_dir: &Path, data_dir: &Path) -> Result<String> {
 /// scale (90% → 10% at a mere 4×; EXPERIMENTS.md §Brittleness), whereas
 /// the paper's WizardLM-7B has the redundancy to survive 128× — code
 /// is the task in that regime here.
-pub fn fig8(models_dir: &Path, data_dir: &Path) -> Result<String> {
+pub fn fig8(
+    models_dir: &Path,
+    data_dir: &Path,
+    backend: &Arc<dyn ExecutionBackend>,
+) -> Result<String> {
     let (base, ft) = load_pair(models_dir, "tiny", "code")?;
     let eval_data = load_eval(data_dir, "code", 64)?;
     let dq = DeltaDq::new(DeltaDqConfig::with_quant(8.0, Some(DEFAULT_GROUP), 4, 8));
     let mut rng = Pcg64::seeded(SEED);
     let set = compress_model_deltas(&extract_deltas(&base, &ft), &dq, &BTreeMap::new(), &mut rng);
-    let compressed = reconstruct_weights(&base, &set);
     let mut agree_tokens = 0usize;
     let mut total_tokens = 0usize;
     let mut identical = 0usize;
     let mut examples = String::new();
     for (i, s) in eval_data.iter().enumerate() {
-        let before = generate(&ft, &s.prompt, s.completion.len() + 2, Some(crate::eval::tasks::vocab::EOS));
-        let after = generate(&compressed, &s.prompt, s.completion.len() + 2, Some(crate::eval::tasks::vocab::EOS));
+        // "before" = the dense fine-tune; "after" = the compressed delta
+        // served separately (the backend's Cold path)
+        let eos = Some(crate::eval::tasks::vocab::EOS);
+        let before = backend.generate(&ft, None, &s.prompt, s.completion.len() + 2, eos)?;
+        let after = backend.generate(&base, Some(&set), &s.prompt, s.completion.len() + 2, eos)?;
         let n = before.len().max(after.len());
         let agree = before.iter().zip(&after).filter(|(a, b)| a == b).count();
         agree_tokens += agree;
@@ -523,5 +534,87 @@ pub fn ablations(models_dir: &Path, data_dir: &Path) -> Result<String> {
     let orig = evaluate(&ft, &eval_data).percent();
     out.push_str(&format!("(original fine-tuned accuracy: {orig:.2}%)\n"));
     let _ = forward(&ft, &[1, 2, 3]); // keep forward linked in release builds
+    Ok(out)
+}
+
+// ------------------------------------------------------------- serving
+
+/// E10: the coordinator end-to-end through a pluggable execution
+/// backend. Tenants are pinned Cold (`promote_after = MAX`) so the run
+/// exercises the separate-computation path — on the native backend that
+/// is the fused sparse kernel with zero dense-`Δ` materialization.
+/// Falls back to a synthesized tiny base when artifacts are absent, so
+/// this experiment runs in any environment (CI included).
+pub fn serving(
+    models_dir: &Path,
+    _data_dir: &Path,
+    backend: &Arc<dyn ExecutionBackend>,
+) -> Result<String> {
+    let base = match load_weights(&models_dir.join("tiny/base.dqw")) {
+        Ok(w) => Arc::new(w),
+        Err(_) => {
+            let mut rng = Pcg64::seeded(1);
+            Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng))
+        }
+    };
+    let options = ServerOptions {
+        workers: 2,
+        max_batch: 4,
+        batch_window: Duration::from_micros(200),
+        promote_after: u64::MAX,
+        ..Default::default()
+    };
+    let server = Server::with_backend(base.clone(), options, backend.clone());
+    let tenants = ["math", "code"];
+    for (i, tenant) in tenants.iter().enumerate() {
+        // synthesize a fine-tune, compress its delta at 16x
+        let mut rng = Pcg64::seeded(40 + i as u64);
+        let mut ft = (*base).clone();
+        for name in base.config.delta_tensor_names() {
+            let (r, c) = ft.get(&name).shape();
+            let d = Matrix::randn(r, c, 0.001, &mut rng);
+            ft.get_mut(&name).add_assign(&d);
+        }
+        let deltas = extract_deltas(&base, &ft);
+        let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(DEFAULT_GROUP)));
+        let set = compress_model_deltas(&deltas, &dq, &BTreeMap::new(), &mut rng);
+        server.register_tenant(tenant, set);
+    }
+
+    let prompts: Vec<Vec<u32>> = gen_dataset(TaskKind::Math, 16, 5)
+        .into_iter()
+        .map(|s| s.prompt)
+        .collect();
+    let n = 24usize;
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..n)
+        .filter_map(|i| {
+            server
+                .submit(tenants[i % tenants.len()], prompts[i % prompts.len()].clone(), 4)
+                .ok()
+        })
+        .collect();
+    for rx in &receivers {
+        let _ = rx.recv_timeout(Duration::from_secs(60));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = &server.metrics;
+    let completed = m.requests_completed.load(std::sync::atomic::Ordering::Relaxed);
+    let errors = m.backend_errors.load(std::sync::atomic::Ordering::Relaxed);
+    let mut out = format!(
+        "## Serving — coordinator e2e through the '{}' backend (Cold residency)\n",
+        server.backend_name()
+    );
+    out.push_str(&format!(
+        "requests: {completed}/{n} completed ({errors} backend errors), {:.1} req/s\n",
+        completed as f64 / elapsed.max(1e-9)
+    ));
+    out.push_str(&format!(
+        "latency p50 {:.2}ms p99 {:.2}ms\n",
+        m.latency_percentile(50.0) * 1e3,
+        m.latency_percentile(99.0) * 1e3
+    ));
+    out.push_str(&format!("residency: {:?}\n", server.residency()));
+    server.shutdown();
     Ok(out)
 }

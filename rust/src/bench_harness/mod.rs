@@ -1,16 +1,26 @@
-//! Bench harness (experiment index E1–E9 in DESIGN.md): one entry per
-//! paper table/figure, each printing the same rows/series the paper
-//! reports. Invoked by `deltadq bench --name <exp>` and by the
-//! `cargo bench` drivers.
+//! Bench harness (experiment index E1–E10 in DESIGN.md): one entry per
+//! paper table/figure plus the e2e serving run, each printing the same
+//! rows/series the paper reports. Invoked by `deltadq bench --name
+//! <exp> [--backend native|pjrt]` and by the `cargo bench` drivers —
+//! every experiment that executes a model does so through the supplied
+//! [`ExecutionBackend`].
 
 pub mod experiments;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::runtime::ExecutionBackend;
+
 /// Run one named experiment; returns the rendered report text.
-pub fn run(name: &str, models_dir: &Path, data_dir: &Path) -> Result<String> {
+pub fn run(
+    name: &str,
+    models_dir: &Path,
+    data_dir: &Path,
+    backend: &Arc<dyn ExecutionBackend>,
+) -> Result<String> {
     match name {
         "table1" => experiments::table1(models_dir, data_dir),
         "table2" => experiments::table2(models_dir, data_dir),
@@ -20,15 +30,16 @@ pub fn run(name: &str, models_dir: &Path, data_dir: &Path) -> Result<String> {
         "fig5" => experiments::fig5(models_dir, data_dir),
         "fig6" => experiments::fig6(models_dir, data_dir),
         "fig7" => experiments::fig7(models_dir, data_dir),
-        "fig8" => experiments::fig8(models_dir, data_dir),
+        "fig8" => experiments::fig8(models_dir, data_dir, backend),
         "ablations" => experiments::ablations(models_dir, data_dir),
+        "serving" => experiments::serving(models_dir, data_dir, backend),
         "all" => {
             let mut out = String::new();
             for exp in [
                 "fig4", "fig5", "fig6", "fig7", "fig8", "table1", "table2", "table3", "table4",
-                "ablations",
+                "ablations", "serving",
             ] {
-                out.push_str(&run(exp, models_dir, data_dir)?);
+                out.push_str(&run(exp, models_dir, data_dir, backend)?);
                 out.push('\n');
             }
             Ok(out)

@@ -21,6 +21,25 @@ use crate::quant::separate::DecomposedDelta;
 use crate::sparse::csr::CsrMatrix;
 use crate::tensor::{Matrix, Pcg64};
 
+/// Densification telemetry: a process-wide count of every dense-`Δ`
+/// materialization from a compressed delta. The fused Cold serving path
+/// guarantees it never densifies — integration tests pin that guarantee
+/// by asserting this counter stays flat across a served request stream.
+pub mod densify {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static EVENTS: AtomicU64 = AtomicU64::new(0);
+
+    pub(crate) fn record() {
+        EVENTS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total dense-`Δ` materializations since process start.
+    pub fn events() -> u64 {
+        EVENTS.load(Ordering::Relaxed)
+    }
+}
+
 /// A compressed per-layer delta weight, ready for storage or the
 /// separate-computation serving path.
 #[derive(Debug, Clone)]
@@ -38,6 +57,7 @@ pub enum CompressedDelta {
 impl CompressedDelta {
     /// Reconstruct the (approximate) dense delta.
     pub fn to_dense(&self) -> Matrix {
+        densify::record();
         match self {
             CompressedDelta::Sparse(csr) => csr.to_dense(),
             CompressedDelta::Quantized(d) => d.to_dense(),
@@ -45,8 +65,10 @@ impl CompressedDelta {
         }
     }
 
-    /// Accumulate `scale · Δ` into a dense weight buffer (serving path).
+    /// Accumulate `scale · Δ` into a dense weight buffer (Hot-promotion
+    /// path — counted by [`densify`]).
     pub fn add_to_dense(&self, out: &mut Matrix, scale: f32) {
+        densify::record();
         match self {
             CompressedDelta::Sparse(csr) => csr.add_to_dense(out, scale),
             CompressedDelta::Quantized(d) => d.add_to_dense(out, scale),

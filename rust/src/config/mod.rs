@@ -199,8 +199,13 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Max queued requests per tenant before backpressure.
     pub queue_depth: usize,
-    /// Use the PJRT runtime when artifacts are present.
-    pub use_pjrt: bool,
+    /// Execution backend: "native" (default) or "pjrt" (requires the
+    /// `pjrt` cargo feature and AOT artifacts).
+    pub backend: String,
+    /// Row-parallel threads of the native fused sparse kernel (1 = off).
+    pub fused_threads: usize,
+    /// Fixed sequence length of the AOT prefill artifacts (pjrt only).
+    pub pjrt_seq_len: usize,
 }
 
 impl ServeConfig {
@@ -213,7 +218,9 @@ impl ServeConfig {
             cache_budget_mib: c.int_or("serve.cache_budget_mib", 64) as u64,
             workers: c.int_or("serve.workers", 4) as usize,
             queue_depth: c.int_or("serve.queue_depth", 256) as usize,
-            use_pjrt: c.bool_or("serve.use_pjrt", false),
+            backend: c.str_or("serve.backend", "native"),
+            fused_threads: c.int_or("serve.fused_threads", 1) as usize,
+            pjrt_seq_len: c.int_or("serve.pjrt_seq_len", 48) as usize,
         }
     }
 }
@@ -278,7 +285,17 @@ ratios = [2, 4, 8]
         let sc = ServeConfig::default();
         assert_eq!(sc.model, "tiny");
         assert_eq!(sc.max_batch, 8);
-        assert!(!sc.use_pjrt);
+        assert_eq!(sc.backend, "native");
+        assert_eq!(sc.fused_threads, 1);
+        assert_eq!(sc.pjrt_seq_len, 48);
+    }
+
+    #[test]
+    fn serve_config_reads_backend_selection() {
+        let c = Config::parse("[serve]\nbackend = \"pjrt\"\nfused_threads = 4").unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.backend, "pjrt");
+        assert_eq!(sc.fused_threads, 4);
     }
 
     #[test]

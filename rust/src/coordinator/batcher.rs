@@ -35,6 +35,9 @@ pub struct Response {
     pub total: Duration,
     /// Whether the tenant was Hot (dense cache) when executed.
     pub served_hot: bool,
+    /// Execution-backend failure, if any (`tokens` is empty then —
+    /// distinguishable from a legitimate immediate-EOS generation).
+    pub error: Option<String>,
 }
 
 /// Submission failure modes.

@@ -17,6 +17,8 @@ pub struct Metrics {
     pub batches_executed: AtomicU64,
     pub promotions: AtomicU64,
     pub evictions: AtomicU64,
+    /// Requests whose execution backend returned an error.
+    pub backend_errors: AtomicU64,
     /// End-to-end request latency (seconds).
     latency: Mutex<Accumulator>,
     /// Queue wait before batch pickup (seconds).
@@ -72,6 +74,7 @@ impl Metrics {
         o.set("batches_executed", self.batches_executed.load(Ordering::Relaxed));
         o.set("promotions", self.promotions.load(Ordering::Relaxed));
         o.set("evictions", self.evictions.load(Ordering::Relaxed));
+        o.set("backend_errors", self.backend_errors.load(Ordering::Relaxed));
         o.set("latency_mean_s", self.mean_latency());
         o.set("latency_p50_s", self.latency_percentile(50.0));
         o.set("latency_p99_s", self.latency_percentile(99.0));

@@ -38,7 +38,9 @@ use crate::tensor::Pcg64;
 
 /// Load a server from artifacts (`base.dqw` + `<tenant>.ddq` per
 /// tenant); tenants without a `.ddq` fall back to an on-the-fly
-/// DeltaDQ compression of their `.dqw` fine-tune if present.
+/// DeltaDQ compression of their `.dqw` fine-tune if present. The
+/// execution backend is resolved from `serve.backend`
+/// ("native" | "pjrt").
 pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
     let dir = Path::new(&serve.artifacts_dir);
     let scale_dir = dir.join(&serve.model);
@@ -58,7 +60,8 @@ pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
         },
         promote_after: 8,
     };
-    let server = Server::start(base.clone(), options);
+    let backend = crate::runtime::backend_from_name(&serve.backend, serve)?;
+    let server = Server::with_backend(base.clone(), options, backend);
     for tenant in tenants {
         let ddq = scale_dir.join(format!("{tenant}.ddq"));
         let set = if ddq.exists() {
@@ -96,9 +99,10 @@ pub fn run_demo_server(
     let tenants: Vec<String> = tenants_csv.split(',').map(|s| s.trim().to_string()).collect();
     let server = load_server(serve, &tenants)?;
     println!(
-        "serving {} tenants on '{}' preset: {:?}",
+        "serving {} tenants on '{}' preset via '{}' backend: {:?}",
         tenants.len(),
         serve.model,
+        server.backend_name(),
         server.tenants()
     );
 

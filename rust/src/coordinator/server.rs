@@ -1,5 +1,6 @@
-//! The serving coordinator: worker pool executing tenant batches with
-//! separate computation (Cold) or dense caches (Hot).
+//! The serving coordinator: worker pool executing tenant batches through
+//! a pluggable [`ExecutionBackend`] — fused separate computation for
+//! Cold tenants, dense caches for Hot ones.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -11,8 +12,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::tenant::{TenantStore, TenantView};
 use crate::delta::format::DeltaSet;
 use crate::eval::tasks::vocab;
-use crate::model::forward::{generate, DeltaView};
 use crate::model::weights::ModelWeights;
+use crate::runtime::{ExecutionBackend, NativeBackend};
 
 /// Server construction knobs (a subset of [`crate::config::ServeConfig`]
 /// resolved to concrete values).
@@ -48,11 +49,23 @@ pub struct Server {
     pub metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    backend: Arc<dyn ExecutionBackend>,
 }
 
 impl Server {
-    /// Start the worker pool over a base model.
+    /// Start the worker pool over a base model with the default
+    /// [`NativeBackend`].
     pub fn start(base: Arc<ModelWeights>, options: ServerOptions) -> Server {
+        Server::with_backend(base, options, Arc::new(NativeBackend::default()))
+    }
+
+    /// Start the worker pool over a base model with an explicit
+    /// execution backend.
+    pub fn with_backend(
+        base: Arc<ModelWeights>,
+        options: ServerOptions,
+        backend: Arc<dyn ExecutionBackend>,
+    ) -> Server {
         let store = Arc::new(TenantStore::new(
             base,
             options.cache_budget,
@@ -69,11 +82,17 @@ impl Server {
             let store = store.clone();
             let batcher = batcher.clone();
             let metrics = metrics.clone();
+            let backend = backend.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(&store, &batcher, &metrics);
+                worker_loop(&store, &batcher, &metrics, backend.as_ref());
             }));
         }
-        Server { store, batcher, metrics, workers, next_id: AtomicU64::new(1) }
+        Server { store, batcher, metrics, workers, next_id: AtomicU64::new(1), backend }
+    }
+
+    /// Name of the execution backend serving requests.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Register a tenant's compressed deltas.
@@ -127,7 +146,12 @@ impl Server {
     }
 }
 
-fn worker_loop(store: &TenantStore, batcher: &Batcher, metrics: &Metrics) {
+fn worker_loop(
+    store: &TenantStore,
+    batcher: &Batcher,
+    metrics: &Metrics,
+    backend: &dyn ExecutionBackend,
+) {
     while let Some((tenant, batch)) = batcher.next_batch() {
         let exec_start = Instant::now();
         let Some(acquired) = store.acquire(&tenant, batch.len() as u64) else {
@@ -141,16 +165,35 @@ fn worker_loop(store: &TenantStore, batcher: &Batcher, metrics: &Metrics) {
         for req in batch {
             let queue_wait = exec_start.duration_since(req.submitted);
             metrics.observe_queue_wait(queue_wait.as_secs_f64());
-            let tokens = match &acquired.view {
-                TenantView::Hot(weights) => {
-                    generate(weights.as_ref(), &req.prompt, req.max_new, Some(vocab::EOS))
-                }
-                TenantView::Cold(deltas) => {
-                    let view = DeltaView {
-                        base: store.base().as_ref(),
-                        deltas: &deltas.tensors,
-                    };
-                    generate(&view, &req.prompt, req.max_new, Some(vocab::EOS))
+            let result = match &acquired.view {
+                // Hot: merged dense weights, no delta term.
+                TenantView::Hot(weights) => backend.generate(
+                    weights.as_ref(),
+                    None,
+                    &req.prompt,
+                    req.max_new,
+                    Some(vocab::EOS),
+                ),
+                // Cold: separate computation over the compressed deltas
+                // (the native backend's fused sparse path).
+                TenantView::Cold(deltas) => backend.generate(
+                    store.base().as_ref(),
+                    Some(deltas.as_ref()),
+                    &req.prompt,
+                    req.max_new,
+                    Some(vocab::EOS),
+                ),
+            };
+            let (tokens, error) = match result {
+                Ok(tokens) => (tokens, None),
+                Err(e) => {
+                    metrics.backend_errors.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "backend '{}' failed for tenant '{tenant}' request {}: {e:#}",
+                        backend.name(),
+                        req.id
+                    );
+                    (Vec::new(), Some(format!("{e:#}")))
                 }
             };
             metrics.tokens_generated.fetch_add(tokens.len() as u64, Ordering::Relaxed);
@@ -164,6 +207,7 @@ fn worker_loop(store: &TenantStore, batcher: &Batcher, metrics: &Metrics) {
                 queue_wait,
                 total,
                 served_hot,
+                error,
             });
         }
         metrics.observe_batch_exec(exec_start.elapsed().as_secs_f64());
@@ -295,6 +339,44 @@ mod tests {
         hot_server.shutdown();
 
         assert_eq!(cold.tokens, hot.tokens, "separate computation == merged");
+    }
+
+    #[test]
+    fn explicit_backend_matches_default_bit_for_bit() {
+        // every fused output element is computed independently, so the
+        // row-parallel backend must reproduce the default exactly
+        let b = base();
+        let set = delta_set(9);
+        let prompt = vec![1u32, 20, 4, 21, 3];
+        let opts = ServerOptions {
+            promote_after: u64::MAX,
+            workers: 1,
+            batch_window: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let default_server = Server::start(b.clone(), opts.clone());
+        assert_eq!(default_server.backend_name(), "native");
+        default_server.register_tenant("t", set.clone());
+        let d = default_server
+            .submit("t", prompt.clone(), 6)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        default_server.shutdown();
+
+        let threaded_server = Server::with_backend(
+            b,
+            opts,
+            Arc::new(crate::runtime::NativeBackend::new(3)),
+        );
+        threaded_server.register_tenant("t", set);
+        let t = threaded_server
+            .submit("t", prompt, 6)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        threaded_server.shutdown();
+        assert_eq!(d.tokens, t.tokens);
     }
 
     #[test]

@@ -218,21 +218,49 @@ fn r_f32_vec(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
     Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
 }
 
+/// Upper bounds on header fields read from a `.ddq` file. Far above any
+/// real model tensor; they exist so corrupt headers fail with an error
+/// instead of attempting a multi-GiB allocation.
+const MAX_TENSOR_DIM: usize = 1 << 24;
+const MAX_TENSOR_NNZ: usize = 1 << 26;
+
+fn check_tensor_header(rows: usize, cols: usize, nnz: usize) -> Result<()> {
+    if rows > MAX_TENSOR_DIM || cols > MAX_TENSOR_DIM {
+        bail!("corrupt tensor header: {rows}x{cols} exceeds the dimension cap");
+    }
+    if nnz > MAX_TENSOR_NNZ {
+        bail!("corrupt tensor header: nnz {nnz} exceeds the nnz cap");
+    }
+    if nnz as u64 > rows as u64 * cols as u64 {
+        bail!("corrupt tensor header: nnz {nnz} > rows*cols = {}", rows as u64 * cols as u64);
+    }
+    Ok(())
+}
+
 fn read_csr(r: &mut impl Read) -> Result<CsrMatrix> {
     let rows = r_u32(r)? as usize;
     let cols = r_u32(r)? as usize;
     let nnz = r_u32(r)? as usize;
+    check_tensor_header(rows, cols, nnz)?;
     let offsets = r_u32_vec(r, rows + 1)?;
     let col_indices = r_u32_vec(r, nnz)?;
     let values = r_f32_vec(r, nnz)?;
-    Ok(CsrMatrix::from_parts(rows, cols, offsets, col_indices, values))
+    CsrMatrix::from_parts(rows, cols, offsets, col_indices, values)
+        .context("corrupt CSR tensor")
 }
 
 fn read_quantized(r: &mut impl Read) -> Result<DecomposedDelta> {
     let rows = r_u32(r)? as usize;
     let cols = r_u32(r)? as usize;
+    check_tensor_header(rows, cols, 0)?;
     let bits = r_u32(r)?;
     let m = r_u32(r)?;
+    if !(1..=16).contains(&bits) {
+        bail!("corrupt quantized tensor: bit width {bits}");
+    }
+    if m == 0 || !m.is_power_of_two() || m > (1u32 << bits) {
+        bail!("corrupt quantized tensor: m={m} for k={bits}");
+    }
     let scale = r_f32(r)?;
     let zero_point = r_i32(r)?;
     let params = QuantParams { scale, zero_point, bits };
@@ -240,6 +268,7 @@ fn read_quantized(r: &mut impl Read) -> Result<DecomposedDelta> {
     let mut parts = Vec::with_capacity(m as usize);
     for j in 0..m {
         let nnz = r_u32(r)? as usize;
+        check_tensor_header(rows, cols, nnz)?;
         let row_offsets = r_u32_vec(r, rows + 1)?;
         let col_indices = r_u32_vec(r, nnz)?;
         let n_words = r_u32(r)? as usize;
@@ -249,6 +278,13 @@ fn read_quantized(r: &mut impl Read) -> Result<DecomposedDelta> {
             }
             None
         } else {
+            let expect_words = (nnz as u64 * part_bits as u64).div_ceil(64) as usize;
+            if n_words != expect_words {
+                bail!(
+                    "corrupt quantized tensor: part {j} has {n_words} code words, \
+                     expected {expect_words}"
+                );
+            }
             let mut bytes = vec![0u8; n_words * 8];
             r.read_exact(&mut bytes)?;
             let words: Vec<u64> = bytes
@@ -259,7 +295,8 @@ fn read_quantized(r: &mut impl Read) -> Result<DecomposedDelta> {
         };
         parts.push(QuantPart { row_offsets, col_indices, codes, part_index: j });
     }
-    Ok(DecomposedDelta::from_parts(rows, cols, params, m, parts))
+    DecomposedDelta::from_parts(rows, cols, params, m, parts)
+        .context("corrupt quantized tensor")
 }
 
 /// Load a `.ddq` file.
@@ -358,6 +395,88 @@ mod tests {
     fn rejects_garbage() {
         let path = tmpfile("garbage.ddq");
         std::fs::write(&path, b"not a ddq file at all").unwrap();
+        assert!(load_delta_set(&path).is_err());
+    }
+
+    /// A structurally valid file whose CSR payload is internally
+    /// inconsistent must fail with an error — in release builds too.
+    #[test]
+    fn rejects_corrupt_csr_payload() {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        w_u32(&mut buf, VERSION).unwrap();
+        w_str16(&mut buf, "DeltaDQ").unwrap();
+        buf.extend_from_slice(&4.0f64.to_le_bytes());
+        w_u32(&mut buf, 1).unwrap(); // one tensor
+        w_str16(&mut buf, "layers.0.attn.wq").unwrap();
+        buf.push(0u8); // kind: sparse CSR
+        w_u32(&mut buf, 2).unwrap(); // rows
+        w_u32(&mut buf, 3).unwrap(); // cols
+        w_u32(&mut buf, 2).unwrap(); // nnz
+        w_u32_slice(&mut buf, &[0, 2, 1]).unwrap(); // non-monotone offsets...
+        w_u32_slice(&mut buf, &[0, 1]).unwrap(); // col indices
+        w_f32_slice(&mut buf, &[1.0, 2.0]).unwrap(); // values
+        let path = tmpfile("corrupt-csr.ddq");
+        std::fs::write(&path, &buf).unwrap();
+        let err = load_delta_set(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+    }
+
+    /// Absurd header dimensions must error before any buffer is sized
+    /// from them (no multi-GiB allocation attempt on corrupt files).
+    #[test]
+    fn rejects_absurd_header_without_allocating() {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        w_u32(&mut buf, VERSION).unwrap();
+        w_str16(&mut buf, "DeltaDQ").unwrap();
+        buf.extend_from_slice(&4.0f64.to_le_bytes());
+        w_u32(&mut buf, 1).unwrap();
+        w_str16(&mut buf, "x").unwrap();
+        buf.push(0u8); // kind: sparse CSR
+        w_u32(&mut buf, u32::MAX).unwrap(); // rows: absurd
+        w_u32(&mut buf, 3).unwrap();
+        w_u32(&mut buf, 1).unwrap();
+        let path = tmpfile("absurd.ddq");
+        std::fs::write(&path, &buf).unwrap();
+        assert!(load_delta_set(&path).is_err());
+
+        // plausible dims but absurd nnz must be caught by the nnz cap
+        // (rows*cols alone would admit it)
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        w_u32(&mut buf, VERSION).unwrap();
+        w_str16(&mut buf, "DeltaDQ").unwrap();
+        buf.extend_from_slice(&4.0f64.to_le_bytes());
+        w_u32(&mut buf, 1).unwrap();
+        w_str16(&mut buf, "x").unwrap();
+        buf.push(0u8);
+        w_u32(&mut buf, 1 << 23).unwrap(); // rows: under the dim cap
+        w_u32(&mut buf, 1 << 23).unwrap(); // cols: under the dim cap
+        w_u32(&mut buf, u32::MAX).unwrap(); // nnz: ~17 GiB of values
+        let path = tmpfile("absurd-nnz.ddq");
+        std::fs::write(&path, &buf).unwrap();
+        assert!(load_delta_set(&path).is_err());
+    }
+
+    /// Same for the quantized payload: an invalid (k, m) pair errors
+    /// instead of panicking on bit arithmetic.
+    #[test]
+    fn rejects_corrupt_quantized_header() {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        w_u32(&mut buf, VERSION).unwrap();
+        w_str16(&mut buf, "DeltaDQ").unwrap();
+        buf.extend_from_slice(&64.0f64.to_le_bytes());
+        w_u32(&mut buf, 1).unwrap();
+        w_str16(&mut buf, "layers.0.attn.wq").unwrap();
+        buf.push(1u8); // kind: quantized
+        w_u32(&mut buf, 2).unwrap(); // rows
+        w_u32(&mut buf, 3).unwrap(); // cols
+        w_u32(&mut buf, 4).unwrap(); // k = 4
+        w_u32(&mut buf, 32).unwrap(); // m = 32 > 2^k — invalid
+        let path = tmpfile("corrupt-quant.ddq");
+        std::fs::write(&path, &buf).unwrap();
         assert!(load_delta_set(&path).is_err());
     }
 

@@ -5,7 +5,9 @@
 //! Quantization"* (Jiang et al., 2024), built as a three-layer stack:
 //!
 //! * **L3 (this crate)** — the serving coordinator: multi-tenant request
-//!   routing, dynamic batching, per-tenant compressed-delta registry, and
+//!   routing, dynamic batching, per-tenant compressed-delta registry,
+//!   pluggable execution backends ([`runtime::ExecutionBackend`]: the
+//!   native fused sparse path, or PJRT behind `--features pjrt`), and
 //!   the full native implementation of the compression algorithms
 //!   (DeltaDQ plus the Magnitude / DARE / DELTAZIP baselines).
 //! * **L2 (python/compile/model.py)** — the JAX transformer forward pass
@@ -13,8 +15,11 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
 //!   base+delta matmul and m-part dequantization.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `rust/README.md` for the build/feature matrix and quickstart.
+
+// Index loops over matrix rows/columns are the house style of the
+// numeric kernels (they mirror the math and autovectorize fine).
+#![allow(clippy::needless_range_loop)]
 
 pub mod analysis;
 pub mod bench_harness;

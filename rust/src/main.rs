@@ -119,9 +119,11 @@ fn print_usage() {
            search    --base F.dqw --finetuned F.dqw --data F.dqt\n\
                      [--ratio R] [--method proxy|direct|both]\n\
            serve     [--config F.toml] [--models DIR] [--requests N]\n\
-                     [--tenants LIST] [--rate R]\n\
+                     [--tenants LIST] [--rate R] [--backend native|pjrt]\n\
            bench     --name table1|table2|table3|table4|fig4|fig5|fig6|\n\
-                     fig7|fig8|ablations [--models DIR] [--out FILE]"
+                     fig7|fig8|ablations|serving [--models DIR]\n\
+                     [--out FILE] [--backend native|pjrt]\n\
+                     [--fused-threads N] [--artifacts DIR]"
     );
 }
 
@@ -289,6 +291,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(dir) = args.get("models") {
         serve.artifacts_dir = dir.to_string();
     }
+    if let Some(backend) = args.get("backend") {
+        serve.backend = backend.to_string();
+    }
     let requests = args.usize_or("requests", 64)?;
     let rate = args.f64_or("rate", 200.0)?;
     let tenants = args.str_or("tenants", "math,code,chat");
@@ -302,7 +307,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let models_dir = PathBuf::from(args.str_or("models", "artifacts/models"));
     let data_dir = PathBuf::from(args.str_or("data", "artifacts/data"));
     let out = args.get("out").map(PathBuf::from);
-    let report = bench_harness::run(name, &models_dir, &data_dir)?;
+    let serve = ServeConfig {
+        backend: args.str_or("backend", "native"),
+        fused_threads: args.usize_or("fused-threads", 1)?,
+        // pjrt prefill artifacts live at the artifacts root, not under
+        // --models (which points at the .dqw directory)
+        artifacts_dir: args.str_or("artifacts", "artifacts"),
+        ..ServeConfig::default()
+    };
+    let backend = deltadq::runtime::backend_from_name(&serve.backend, &serve)?;
+    let report = bench_harness::run(name, &models_dir, &data_dir, &backend)?;
     match out {
         Some(path) => {
             std::fs::write(&path, &report)?;

@@ -12,6 +12,8 @@
 //! every part's codes are identical (`0` bits/code) — only the part id,
 //! the shared quant params, and the CSR structure remain.
 
+use anyhow::{ensure, Result};
+
 use crate::quant::uniform::QuantParams;
 use crate::sparse::bitpack::PackedCodes;
 use crate::sparse::csr::CsrMatrix;
@@ -99,25 +101,64 @@ impl DecomposedDelta {
         DecomposedDelta { rows: delta.rows(), cols: delta.cols(), params, m, parts }
     }
 
-    /// Rebuild from deserialized parts (validated).
+    /// Rebuild from deserialized parts, validating the full structure —
+    /// the `.ddq` read path, so corrupt files fail loudly (with an
+    /// error, not a panic or silent mis-read) in release builds.
     pub fn from_parts(
         rows: usize,
         cols: usize,
         params: QuantParams,
         m: u32,
         parts: Vec<QuantPart>,
-    ) -> DecomposedDelta {
-        assert!(m.is_power_of_two() && m <= (1u32 << params.bits));
-        assert_eq!(parts.len(), m as usize, "part count");
+    ) -> Result<DecomposedDelta> {
+        ensure!((1..=16).contains(&params.bits), "bit width k={} out of range", params.bits);
+        ensure!(
+            m >= 1 && m.is_power_of_two() && m <= (1u32 << params.bits),
+            "m={m} must be a power of two ≤ 2^k (k={})",
+            params.bits
+        );
+        ensure!(parts.len() == m as usize, "have {} parts, expected m={m}", parts.len());
+        let part_bits = params.bits - m.ilog2();
         for (j, p) in parts.iter().enumerate() {
-            assert_eq!(p.part_index as usize, j, "part index order");
-            assert_eq!(p.row_offsets.len(), rows + 1, "part {j} offsets");
-            assert_eq!(*p.row_offsets.last().unwrap() as usize, p.nnz(), "part {j} nnz");
-            if let Some(codes) = &p.codes {
-                assert_eq!(codes.len(), p.nnz(), "part {j} code count");
+            ensure!(p.part_index as usize == j, "part {j} carries index {}", p.part_index);
+            ensure!(
+                p.row_offsets.len() == rows + 1,
+                "part {j}: {} row offsets, expected rows + 1 = {}",
+                p.row_offsets.len(),
+                rows + 1
+            );
+            ensure!(p.row_offsets[0] == 0, "part {j}: first row offset must be 0");
+            ensure!(
+                p.row_offsets.windows(2).all(|w| w[0] <= w[1]),
+                "part {j}: row offsets are not monotone non-decreasing"
+            );
+            ensure!(
+                *p.row_offsets.last().unwrap() as usize == p.nnz(),
+                "part {j}: final offset {} != nnz {}",
+                p.row_offsets.last().unwrap(),
+                p.nnz()
+            );
+            ensure!(
+                p.col_indices.iter().all(|&c| (c as usize) < cols),
+                "part {j}: column index out of bounds (cols = {cols})"
+            );
+            match &p.codes {
+                Some(codes) => {
+                    ensure!(part_bits > 0, "part {j}: zero-width part stores code words");
+                    ensure!(
+                        codes.len() == p.nnz(),
+                        "part {j}: {} codes for {} entries",
+                        codes.len(),
+                        p.nnz()
+                    );
+                }
+                None => ensure!(
+                    part_bits == 0 || p.nnz() == 0,
+                    "part {j}: missing codes at width {part_bits}"
+                ),
             }
         }
-        DecomposedDelta { rows, cols, params, m, parts }
+        Ok(DecomposedDelta { rows, cols, params, m, parts })
     }
 
     #[inline]
@@ -147,8 +188,12 @@ impl DecomposedDelta {
 
     /// Dequantize one part's entry (Eq. 12):
     /// `DQ = s · (Q_j − z − o_j) = s · (stored + step·j − z)`.
+    ///
+    /// `pub(crate)` so the fused serving kernel
+    /// ([`crate::runtime::fused`]) shares this exact formula — any
+    /// change to quant semantics lands in one place.
     #[inline]
-    fn dequant_entry(&self, part: &QuantPart, idx: usize) -> f32 {
+    pub(crate) fn dequant_entry(&self, part: &QuantPart, idx: usize) -> f32 {
         let step = (1u32 << self.params.bits) / self.m;
         let stored = match &part.codes {
             Some(c) => c.get(idx),
@@ -385,6 +430,36 @@ mod tests {
         let d = DecomposedDelta::compress(&delta, 8, 4);
         assert_eq!(d.nnz(), 0);
         assert_eq!(d.to_dense(), Matrix::zeros(3, 5));
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_rejects_corruption() {
+        let delta = sparse_delta(6, 10, 0.5, 0.02, 20);
+        let d = DecomposedDelta::compress(&delta, 4, 4);
+        let rebuilt =
+            DecomposedDelta::from_parts(6, 10, d.params, d.m, d.parts.clone()).unwrap();
+        assert_eq!(rebuilt.to_dense(), d.to_dense());
+
+        // shuffled part order
+        let mut parts = d.parts.clone();
+        parts.swap(0, 1);
+        assert!(DecomposedDelta::from_parts(6, 10, d.params, d.m, parts).is_err());
+
+        // column index out of bounds
+        let mut parts = d.parts.clone();
+        let victim = parts.iter_mut().find(|p| p.nnz() > 0).unwrap();
+        victim.col_indices[0] = 10;
+        assert!(DecomposedDelta::from_parts(6, 10, d.params, d.m, parts).is_err());
+
+        // non-monotone row offsets
+        let mut parts = d.parts.clone();
+        let victim = parts.iter_mut().find(|p| p.nnz() > 0).unwrap();
+        let last = *victim.row_offsets.last().unwrap();
+        victim.row_offsets[1] = last + 1;
+        assert!(DecomposedDelta::from_parts(6, 10, d.params, d.m, parts).is_err());
+
+        // m not a power of two / part count mismatch
+        assert!(DecomposedDelta::from_parts(6, 10, d.params, 3, d.parts.clone()).is_err());
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! The fused sparse serving kernel: `A = X·(W_b + ΔŴ)ᵀ` evaluated
+//! directly from the compressed delta representation.
+//!
+//! The Cold serving path used to compute the base term and the delta
+//! term as two separate matmuls plus an elementwise add. This kernel
+//! fuses them: each output element `A[p][q]` accumulates the dense base
+//! dot product and the sparse delta contribution of weight row `q` in
+//! one pass. Decomposed deltas (§3.4 Separate Quantization) are
+//! dequantized **per part, on the fly** — `DQ = s·(code + step·j − z)`
+//! (Eq. 12), decoded once per weight row, never materialized densely.
+//!
+//! Work is partitioned across output rows `q` (weight rows) and run on
+//! scoped threads — each thread owns a disjoint column block of the
+//! output, so no synchronization is needed beyond the final assembly.
+
+use crate::compress::CompressedDelta;
+use crate::quant::separate::DecomposedDelta;
+use crate::sparse::CsrMatrix;
+use crate::tensor::matrix::dot;
+use crate::tensor::Matrix;
+
+/// Fused `X·(W + Δ)ᵀ` (`X: t×h_in`, `W, Δ: h_out×h_in` → `t×h_out`)
+/// without densifying `Δ`. `threads ≤ 1` runs single-threaded;
+/// otherwise output rows are split across `std::thread::scope` workers.
+pub fn fused_matmul_nt(x: &Matrix, w: &Matrix, delta: &CompressedDelta, threads: usize) -> Matrix {
+    let (h_out, h_in) = w.shape();
+    assert_eq!(x.cols(), h_in, "fused inner dims: x is {}x{}", x.rows(), x.cols());
+    assert_eq!(delta.shape(), (h_out, h_in), "delta shape vs w {h_out}x{h_in}");
+    let t = x.rows();
+    let threads = threads.clamp(1, h_out.max(1));
+    if threads == 1 || h_out < 2 * threads {
+        let mut out = Matrix::zeros(t, h_out);
+        fused_block(x, w, delta, 0, h_out, &mut out);
+        return out;
+    }
+    let chunk = h_out.div_ceil(threads);
+    let mut blocks: Vec<(usize, Matrix)> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .filter_map(|b| {
+                let q0 = b * chunk;
+                if q0 >= h_out {
+                    return None;
+                }
+                let q1 = (q0 + chunk).min(h_out);
+                Some(scope.spawn(move || {
+                    let mut block = Matrix::zeros(t, q1 - q0);
+                    fused_block(x, w, delta, q0, q1, &mut block);
+                    (q0, block)
+                }))
+            })
+            .collect();
+        for h in handles {
+            blocks.push(h.join().expect("fused worker panicked"));
+        }
+    });
+    let mut out = Matrix::zeros(t, h_out);
+    for (q0, block) in blocks {
+        out.set_cols(q0, &block);
+    }
+    out
+}
+
+/// Fill `block` (t × (q1−q0)) with `X·(W + Δ)ᵀ` restricted to weight
+/// rows `[q0, q1)`.
+fn fused_block(
+    x: &Matrix,
+    w: &Matrix,
+    delta: &CompressedDelta,
+    q0: usize,
+    q1: usize,
+    block: &mut Matrix,
+) {
+    let t = x.rows();
+    for q in q0..q1 {
+        let wrow = w.row(q);
+        for p in 0..t {
+            block.set(p, q - q0, dot(x.row(p), wrow));
+        }
+    }
+    match delta {
+        CompressedDelta::Sparse(csr) => add_csr_rows(x, csr, q0, q1, block),
+        CompressedDelta::Quantized(d) => add_decomposed_rows(x, d, q0, q1, block),
+        CompressedDelta::Dense(m) => {
+            for q in q0..q1 {
+                let drow = m.row(q);
+                for p in 0..t {
+                    let v = block.get(p, q - q0) + dot(x.row(p), drow);
+                    block.set(p, q - q0, v);
+                }
+            }
+        }
+    }
+}
+
+/// Accumulate the CSR delta contribution for weight rows `[q0, q1)`.
+fn add_csr_rows(x: &Matrix, csr: &CsrMatrix, q0: usize, q1: usize, block: &mut Matrix) {
+    let t = x.rows();
+    for q in q0..q1 {
+        let (cols, vals) = csr.row_entries(q);
+        if cols.is_empty() {
+            continue;
+        }
+        for p in 0..t {
+            let xrow = x.row(p);
+            let mut acc = 0.0f32;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += xrow[c as usize] * v;
+            }
+            let cur = block.get(p, q - q0);
+            block.set(p, q - q0, cur + acc);
+        }
+    }
+}
+
+/// Accumulate the decomposed-delta contribution for weight rows
+/// `[q0, q1)`, dequantizing each part's entries on the fly (codes are
+/// decoded once per weight row, then reused across all `t` activation
+/// rows).
+fn add_decomposed_rows(x: &Matrix, d: &DecomposedDelta, q0: usize, q1: usize, block: &mut Matrix) {
+    let t = x.rows();
+    let mut vals: Vec<f32> = Vec::new();
+    for part in &d.parts {
+        for q in q0..q1 {
+            let lo = part.row_offsets[q] as usize;
+            let hi = part.row_offsets[q + 1] as usize;
+            if lo == hi {
+                continue;
+            }
+            // decode once per weight row via the shared Eq. 12 formula
+            vals.clear();
+            vals.extend((lo..hi).map(|e| d.dequant_entry(part, e)));
+            let cols = &part.col_indices[lo..hi];
+            for p in 0..t {
+                let xrow = x.row(p);
+                let mut acc = 0.0f32;
+                for (&c, &v) in cols.iter().zip(&vals) {
+                    acc += xrow[c as usize] * v;
+                }
+                let cur = block.get(p, q - q0);
+                block.set(p, q - q0, cur + acc);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    fn sparse_random(rows: usize, cols: usize, density: f64, rng: &mut Pcg64) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| {
+            if rng.bernoulli(density) {
+                rng.normal() * 0.02
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn fused_csr_matches_densified() {
+        let mut rng = Pcg64::seeded(1);
+        let w = Matrix::randn(17, 24, 0.02, &mut rng);
+        let dm = sparse_random(17, 24, 0.2, &mut rng);
+        let x = Matrix::randn(5, 24, 1.0, &mut rng);
+        let delta = CompressedDelta::Sparse(CsrMatrix::from_dense(&dm));
+        let want = x.matmul_nt(&w.add(&dm));
+        for threads in [1usize, 2, 4, 8] {
+            let got = fused_matmul_nt(&x, &w, &delta, threads);
+            assert!(got.allclose(&want, 1e-5, 1e-5), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_decomposed_matches_densified() {
+        let mut rng = Pcg64::seeded(2);
+        let w = Matrix::randn(19, 32, 0.02, &mut rng);
+        let dm = sparse_random(19, 32, 0.25, &mut rng);
+        let x = Matrix::randn(4, 32, 1.0, &mut rng);
+        let csr = CsrMatrix::from_dense(&dm);
+        for (k, m) in [(8u32, 1u32), (8, 4), (4, 8), (2, 4)] {
+            let dec = DecomposedDelta::compress(&csr, k, m);
+            let want = x.matmul_nt(&w.add(&dec.to_dense()));
+            for threads in [1usize, 3] {
+                let got = fused_matmul_nt(&x, &w, &CompressedDelta::Quantized(dec.clone()), threads);
+                assert!(got.allclose(&want, 1e-5, 1e-5), "k={k} m={m} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_dense_variant_matches() {
+        let mut rng = Pcg64::seeded(3);
+        let w = Matrix::randn(9, 16, 0.02, &mut rng);
+        let dm = Matrix::randn(9, 16, 0.01, &mut rng);
+        let x = Matrix::randn(3, 16, 1.0, &mut rng);
+        let got = fused_matmul_nt(&x, &w, &CompressedDelta::Dense(dm.clone()), 2);
+        let want = x.matmul_nt(&w.add(&dm));
+        assert!(got.allclose(&want, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        // each output element is computed independently, so results are
+        // identical (not just close) across thread counts
+        let mut rng = Pcg64::seeded(4);
+        let w = Matrix::randn(33, 40, 0.02, &mut rng);
+        let dm = sparse_random(33, 40, 0.15, &mut rng);
+        let x = Matrix::randn(7, 40, 1.0, &mut rng);
+        let dec = DecomposedDelta::compress(&CsrMatrix::from_dense(&dm), 4, 4);
+        let delta = CompressedDelta::Quantized(dec);
+        let one = fused_matmul_nt(&x, &w, &delta, 1);
+        for threads in [2usize, 3, 5, 16] {
+            assert_eq!(fused_matmul_nt(&x, &w, &delta, threads), one, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn single_row_activation_decode_shape() {
+        let mut rng = Pcg64::seeded(5);
+        let w = Matrix::randn(12, 8, 0.02, &mut rng);
+        let dm = sparse_random(12, 8, 0.4, &mut rng);
+        let x = Matrix::randn(1, 8, 1.0, &mut rng);
+        let delta = CompressedDelta::Sparse(CsrMatrix::from_dense(&dm));
+        let got = fused_matmul_nt(&x, &w, &delta, 4);
+        assert_eq!(got.shape(), (1, 12));
+        assert!(got.allclose(&x.matmul_nt(&w.add(&dm)), 1e-5, 1e-5));
+    }
+}

@@ -1,192 +1,117 @@
-//! PJRT runtime (S11): loads the AOT artifacts (`artifacts/*.hlo.txt`,
-//! produced once by `python/compile/aot.py`) and executes them on the
-//! CPU PJRT client from the serving hot path. Python never runs at
-//! request time.
+//! Execution backends (S11): how a `(base, Δ)` pair turns tokens into
+//! logits on the serving path.
 //!
-//! Interchange is HLO **text** — xla_extension 0.5.1 rejects jax ≥ 0.5
-//! serialized protos (64-bit instruction ids); the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! * [`NativeBackend`] — pure-Rust forward pass. Hot tenants run one
+//!   dense matmul per linear layer; Cold tenants run the **fused sparse
+//!   path** ([`fused`]): every linear layer evaluates `X·(W_b + ΔŴ)ᵀ`
+//!   directly from the compressed CSR / decomposed representation with
+//!   per-part on-the-fly dequantization (`s·(code + step·j − z)`,
+//!   Eq. 12) — the dense `Δ` is never materialized.
+//! * [`pjrt::PjrtBackend`] (`--features pjrt`) — executes the
+//!   AOT-lowered HLO artifacts on a PJRT client (xla-rs). The default
+//!   build carries no XLA dependency at all; the feature pulls in the
+//!   in-tree `xla-stub` unless a real xla-rs build is substituted.
+//!
+//! The coordinator ([`crate::coordinator`]), the launcher's `serve
+//! --backend` flag, and the bench harness all accept any
+//! [`ExecutionBackend`].
 
-use std::path::Path;
-use std::sync::Mutex;
+pub mod fused;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use anyhow::{Context, Result};
+pub use fused::fused_matmul_nt;
+pub use native::{FusedDeltaView, NativeBackend};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{PjrtBackend, PjrtRuntime};
 
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::ServeConfig;
+use crate::delta::format::DeltaSet;
 use crate::model::weights::ModelWeights;
 use crate::tensor::Matrix;
 
-/// A PJRT CPU client plus a cache of compiled executables.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    /// (path, executable) cache — compile once per artifact.
-    cache: Mutex<Vec<(String, std::sync::Arc<xla::PjRtLoadedExecutable>)>>,
+/// A pluggable execution engine for prefill and greedy decoding.
+///
+/// `delta = None` is the dense path (the base model, or a merged Hot
+/// tenant's weights); `delta = Some(set)` is the separate-computation
+/// Cold path over one tenant's compressed deltas.
+pub trait ExecutionBackend: Send + Sync {
+    /// Short display name ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Full-sequence prefill: logits for every position (`t × vocab`).
+    fn prefill(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        tokens: &[u32],
+    ) -> Result<Matrix>;
+
+    /// Greedy decode of up to `max_new` tokens after `prompt`, stopping
+    /// at `eos` if given. Returns only the generated tokens.
+    fn generate(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        prompt: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> Result<Vec<u32>>;
 }
 
-impl PjrtRuntime {
-    /// Create a CPU-backed runtime.
-    pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(PjrtRuntime { client, cache: Mutex::new(Vec::new()) })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load(&self, path: &Path) -> Result<LoadedGraph> {
-        let key = path.to_string_lossy().to_string();
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some((_, exe)) = cache.iter().find(|(k, _)| *k == key) {
-                return Ok(LoadedGraph { exe: exe.clone() });
+/// Resolve a backend by name ("native" | "pjrt") against serve settings.
+///
+/// "pjrt" fails fast with a clear message when the crate was built
+/// without the `pjrt` feature.
+pub fn backend_from_name(name: &str, serve: &ServeConfig) -> Result<Arc<dyn ExecutionBackend>> {
+    match name {
+        "native" => Ok(Arc::new(NativeBackend::new(serve.fused_threads))),
+        "pjrt" => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Arc::new(pjrt::PjrtBackend::new(
+                    std::path::Path::new(&serve.artifacts_dir),
+                    &serve.model,
+                    serve.pjrt_seq_len,
+                )?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                bail!("backend 'pjrt' requires a build with `--features pjrt`")
             }
         }
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf-8")?)
-            .with_context(|| format!("parse HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
-            self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?,
-        );
-        self.cache.lock().unwrap().push((key, exe.clone()));
-        Ok(LoadedGraph { exe })
+        other => bail!("unknown backend '{other}' (expected 'native' or 'pjrt')"),
     }
-}
-
-/// A compiled executable ready to run.
-pub struct LoadedGraph {
-    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
-}
-
-impl LoadedGraph {
-    /// Execute with positional literals; expects a 1-tuple result whose
-    /// element is a rank-2 f32 array of `shape`.
-    pub fn execute_to_matrix(
-        &self,
-        args: &[xla::Literal],
-        shape: (usize, usize),
-    ) -> Result<Matrix> {
-        let result = self.exe.execute::<xla::Literal>(args)?[0][0]
-            .to_literal_sync()
-            .context("fetch result")?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-        let out = result.to_tuple1().context("unwrap result tuple")?;
-        let values = out.to_vec::<f32>().context("result to f32 vec")?;
-        anyhow::ensure!(
-            values.len() == shape.0 * shape.1,
-            "result has {} elements, expected {}x{}",
-            values.len(),
-            shape.0,
-            shape.1
-        );
-        Ok(Matrix::from_vec(shape.0, shape.1, values))
-    }
-}
-
-/// Build the literal for a token sequence padded to `seq_len`
-/// (i32, PAD = 0 — matches the python-side fixed-shape lowering).
-pub fn tokens_literal(tokens: &[u32], seq_len: usize) -> Result<xla::Literal> {
-    anyhow::ensure!(tokens.len() <= seq_len, "{} tokens > seq_len {seq_len}", tokens.len());
-    let mut padded = vec![0i32; seq_len];
-    for (i, &t) in tokens.iter().enumerate() {
-        padded[i] = t as i32;
-    }
-    Ok(xla::Literal::vec1(&padded))
-}
-
-/// Matrix → rank-2 f32 literal.
-pub fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(m.data()).reshape(&[m.rows() as i64, m.cols() as i64])?)
-}
-
-/// Argument literals for the `base_prefill` graph: tokens then every
-/// weight tensor in sorted-name order (the python/rust shared
-/// convention — `aot.py::weight_specs`).
-pub fn base_prefill_args(
-    tokens: &[u32],
-    seq_len: usize,
-    weights: &ModelWeights,
-) -> Result<Vec<xla::Literal>> {
-    let mut args = vec![tokens_literal(tokens, seq_len)?];
-    for (_, tensor) in weights.iter() {
-        args.push(matrix_literal(tensor)?);
-    }
-    Ok(args)
-}
-
-/// Argument literals for the `delta_prefill` graph: tokens, weights
-/// (sorted), then the densified delta tensors (sorted delta names).
-pub fn delta_prefill_args(
-    tokens: &[u32],
-    seq_len: usize,
-    weights: &ModelWeights,
-    deltas: &std::collections::BTreeMap<String, Matrix>,
-) -> Result<Vec<xla::Literal>> {
-    let mut args = base_prefill_args(tokens, seq_len, weights)?;
-    for name in weights.config.delta_tensor_names_sorted() {
-        let delta = deltas
-            .get(&name)
-            .with_context(|| format!("missing delta tensor '{name}'"))?;
-        args.push(matrix_literal(delta)?);
-    }
-    Ok(args)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    /// Plumbing test without artifacts: build a computation with the
-    /// XlaBuilder, run it through the same execute path.
     #[test]
-    fn client_compiles_and_runs_builder_computation() {
-        let rt = PjrtRuntime::cpu().unwrap();
-        assert!(!rt.platform().is_empty());
-        let builder = xla::XlaBuilder::new("t");
-        let x = builder
-            .parameter_s(0, &xla::Shape::array::<f32>(vec![2, 2]), "x")
-            .unwrap();
-        let comp = (x.clone() + x).unwrap().build().unwrap();
-        let exe = rt.client.compile(&comp).unwrap();
-        let lit = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).unwrap();
-        let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
-            .to_literal_sync()
-            .unwrap();
-        assert_eq!(out.to_vec::<f32>().unwrap(), vec![2f32, 4., 6., 8.]);
+    fn factory_resolves_native() {
+        let serve = ServeConfig::default();
+        let b = backend_from_name("native", &serve).unwrap();
+        assert_eq!(b.name(), "native");
     }
 
     #[test]
-    fn tokens_literal_pads() {
-        let lit = tokens_literal(&[5, 6], 4).unwrap();
-        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![5, 6, 0, 0]);
-        assert!(tokens_literal(&[1, 2, 3], 2).is_err());
+    fn factory_rejects_unknown() {
+        let serve = ServeConfig::default();
+        let err = backend_from_name("tpu", &serve).unwrap_err();
+        assert!(err.to_string().contains("unknown backend"));
     }
 
-    /// Full artifact round-trip — runs only when `make artifacts` has
-    /// produced the tiny prefill graph.
+    #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn base_prefill_artifact_matches_native_forward() {
-        let art = std::path::Path::new("artifacts/base_prefill_tiny_t48.hlo.txt");
-        let weights_path = std::path::Path::new("artifacts/models/tiny/base.dqw");
-        if !art.exists() || !weights_path.exists() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let rt = PjrtRuntime::cpu().unwrap();
-        let graph = rt.load(art).unwrap();
-        let weights = crate::model::load_weights(weights_path).unwrap();
-        let tokens = vec![1u32, 20, 4, 21, 3];
-        let args = base_prefill_args(&tokens, 48, &weights).unwrap();
-        let logits = graph
-            .execute_to_matrix(&args, (48, weights.config.vocab_size))
-            .unwrap();
-        let native = crate::model::forward(&weights, &tokens);
-        for (p, _) in tokens.iter().enumerate() {
-            for c in 0..weights.config.vocab_size {
-                let a = logits.get(p, c);
-                let b = native.get(p, c);
-                assert!((a - b).abs() < 2e-2, "pos {p} col {c}: {a} vs {b}");
-            }
-        }
+    fn pjrt_without_feature_is_a_clear_error() {
+        let serve = ServeConfig::default();
+        let err = backend_from_name("pjrt", &serve).unwrap_err();
+        assert!(err.to_string().contains("--features pjrt"), "{err}");
     }
 }

@@ -1,0 +1,174 @@
+//! The default pure-Rust [`ExecutionBackend`]: dense forward for the
+//! base/Hot path, the fused sparse kernel for the Cold path.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::compress::CompressedDelta;
+use crate::delta::format::DeltaSet;
+use crate::model::forward::{forward, generate, WeightSource};
+use crate::model::weights::ModelWeights;
+use crate::model::ModelConfig;
+use crate::runtime::fused::fused_matmul_nt;
+use crate::runtime::ExecutionBackend;
+use crate::tensor::{ops, Matrix};
+
+/// Weight source that evaluates `X·(W_b + ΔŴ)ᵀ` per linear layer via
+/// the fused sparse kernel — the Cold serving path with zero dense-`Δ`
+/// materialization (contrast [`crate::model::forward::DeltaView`],
+/// which runs base and delta as two separate matmuls).
+pub struct FusedDeltaView<'a> {
+    pub base: &'a ModelWeights,
+    pub deltas: &'a BTreeMap<String, CompressedDelta>,
+    /// Row-parallelism of the fused kernel (1 = single-threaded).
+    pub threads: usize,
+}
+
+impl WeightSource for FusedDeltaView<'_> {
+    fn config(&self) -> ModelConfig {
+        self.base.config
+    }
+
+    fn dense(&self, name: &str) -> &Matrix {
+        self.base.get(name)
+    }
+
+    fn linear(&self, name: &str, x: &Matrix) -> Matrix {
+        let w = self.base.get(name);
+        match self.deltas.get(name) {
+            Some(delta) => fused_matmul_nt(x, w, delta, self.threads),
+            None if self.threads > 1 => ops::matmul_nt_parallel(x, w, self.threads),
+            None => x.matmul_nt(w),
+        }
+    }
+}
+
+/// Pure-Rust execution backend over `model::forward` — always
+/// available, no external dependencies.
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    threads: usize,
+}
+
+impl Default for NativeBackend {
+    fn default() -> NativeBackend {
+        NativeBackend { threads: 1 }
+    }
+}
+
+impl NativeBackend {
+    /// `threads ≤ 1` disables row parallelism in the fused kernel.
+    pub fn new(threads: usize) -> NativeBackend {
+        NativeBackend { threads: threads.max(1) }
+    }
+
+    fn view<'a>(&self, base: &'a ModelWeights, set: &'a DeltaSet) -> FusedDeltaView<'a> {
+        FusedDeltaView { base, deltas: &set.tensors, threads: self.threads }
+    }
+}
+
+impl ExecutionBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn prefill(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        tokens: &[u32],
+    ) -> Result<Matrix> {
+        Ok(match delta {
+            None => forward(base, tokens),
+            Some(set) => forward(&self.view(base, set), tokens),
+        })
+    }
+
+    fn generate(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        prompt: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> Result<Vec<u32>> {
+        Ok(match delta {
+            None => generate(base, prompt, max_new, eos),
+            Some(set) => generate(&self.view(base, set), prompt, max_new, eos),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, DeltaDq, DeltaDqConfig, LayerContext};
+    use crate::tensor::Pcg64;
+
+    fn base(seed: u64) -> ModelWeights {
+        let mut rng = Pcg64::seeded(seed);
+        ModelWeights::init(ModelConfig::tiny(), &mut rng)
+    }
+
+    fn delta_set(base: &ModelWeights, seed: u64, quant: Option<(u32, u32)>) -> DeltaSet {
+        let mut rng = Pcg64::seeded(seed);
+        let dq = DeltaDq::new(DeltaDqConfig { alpha: 4.0, group_size: Some(16), quant });
+        let mut set = DeltaSet::new("DeltaDQ", 4.0);
+        for name in base.config.delta_tensor_names() {
+            let (r, c) = base.get(&name).shape();
+            let d = Matrix::randn(r, c, 0.002, &mut rng);
+            set.tensors
+                .insert(name.clone(), dq.compress(&d, &LayerContext::data_free(0, &name), &mut rng));
+        }
+        set
+    }
+
+    #[test]
+    fn dense_prefill_matches_forward() {
+        let w = base(1);
+        let b = NativeBackend::default();
+        let tokens = [1u32, 20, 4, 21, 3];
+        let logits = b.prefill(&w, None, &tokens).unwrap();
+        assert_eq!(logits, forward(&w, &tokens));
+    }
+
+    #[test]
+    fn empty_delta_set_is_identity() {
+        let w = base(2);
+        let set = DeltaSet::new("none", 1.0);
+        let b = NativeBackend::new(2);
+        let tokens = [3u32, 1, 4];
+        let a = b.prefill(&w, None, &tokens).unwrap();
+        let c = b.prefill(&w, Some(&set), &tokens).unwrap();
+        assert!(a.allclose(&c, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn cold_prefill_close_to_merged_forward() {
+        let w = base(3);
+        let set = delta_set(&w, 4, Some((4, 8)));
+        // merge the *quantized* reconstruction so only summation order differs
+        let mut merged = w.clone();
+        for (name, d) in &set.tensors {
+            let dense = d.to_dense();
+            merged.get_mut(name).add_assign(&dense);
+        }
+        let b = NativeBackend::new(3);
+        let tokens = [1u32, 20, 4, 21, 3, 7];
+        let got = b.prefill(&w, Some(&set), &tokens).unwrap();
+        let want = forward(&merged, &tokens);
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn generate_is_deterministic_across_threads() {
+        let w = base(5);
+        let set = delta_set(&w, 6, Some((8, 4)));
+        let prompt = [1u32, 20, 4, 21, 3];
+        let one = NativeBackend::new(1).generate(&w, Some(&set), &prompt, 6, None).unwrap();
+        let four = NativeBackend::new(4).generate(&w, Some(&set), &prompt, 6, None).unwrap();
+        assert_eq!(one, four);
+        assert_eq!(one.len(), 6);
+    }
+}

@@ -1,0 +1,303 @@
+//! PJRT runtime (feature `pjrt`): loads the AOT artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`) and
+//! executes them on the CPU PJRT client from the serving hot path.
+//! Python never runs at request time.
+//!
+//! Interchange is HLO **text** — xla_extension 0.5.1 rejects jax ≥ 0.5
+//! serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The default build of this crate does not compile this module at all;
+//! `--features pjrt` compiles it against the in-tree `xla-stub` (type
+//! surface only — client construction errors at runtime) unless the
+//! `xla` dependency points at a real xla-rs build.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::delta::format::DeltaSet;
+use crate::model::weights::ModelWeights;
+use crate::runtime::ExecutionBackend;
+use crate::tensor::Matrix;
+
+/// A PJRT CPU client plus a cache of compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    /// (path, executable) cache — compile once per artifact.
+    cache: Mutex<Vec<(String, std::sync::Arc<xla::PjRtLoadedExecutable>)>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU-backed runtime.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtRuntime { client, cache: Mutex::new(Vec::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: &Path) -> Result<LoadedGraph> {
+        let key = path.to_string_lossy().to_string();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some((_, exe)) = cache.iter().find(|(k, _)| *k == key) {
+                return Ok(LoadedGraph { exe: exe.clone() });
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf-8")?)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?,
+        );
+        self.cache.lock().unwrap().push((key, exe.clone()));
+        Ok(LoadedGraph { exe })
+    }
+}
+
+/// A compiled executable ready to run.
+pub struct LoadedGraph {
+    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl LoadedGraph {
+    /// Execute with positional literals; expects a 1-tuple result whose
+    /// element is a rank-2 f32 array of `shape`.
+    pub fn execute_to_matrix(
+        &self,
+        args: &[xla::Literal],
+        shape: (usize, usize),
+    ) -> Result<Matrix> {
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1().context("unwrap result tuple")?;
+        let values = out.to_vec::<f32>().context("result to f32 vec")?;
+        anyhow::ensure!(
+            values.len() == shape.0 * shape.1,
+            "result has {} elements, expected {}x{}",
+            values.len(),
+            shape.0,
+            shape.1
+        );
+        Ok(Matrix::from_vec(shape.0, shape.1, values))
+    }
+}
+
+/// Build the literal for a token sequence padded to `seq_len`
+/// (i32, PAD = 0 — matches the python-side fixed-shape lowering).
+pub fn tokens_literal(tokens: &[u32], seq_len: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(tokens.len() <= seq_len, "{} tokens > seq_len {seq_len}", tokens.len());
+    let mut padded = vec![0i32; seq_len];
+    for (i, &t) in tokens.iter().enumerate() {
+        padded[i] = t as i32;
+    }
+    Ok(xla::Literal::vec1(&padded))
+}
+
+/// Matrix → rank-2 f32 literal.
+pub fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(m.data()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+/// Argument literals for the `base_prefill` graph: tokens then every
+/// weight tensor in sorted-name order (the python/rust shared
+/// convention — `aot.py::weight_specs`).
+pub fn base_prefill_args(
+    tokens: &[u32],
+    seq_len: usize,
+    weights: &ModelWeights,
+) -> Result<Vec<xla::Literal>> {
+    let mut args = vec![tokens_literal(tokens, seq_len)?];
+    for (_, tensor) in weights.iter() {
+        args.push(matrix_literal(tensor)?);
+    }
+    Ok(args)
+}
+
+/// Argument literals for the `delta_prefill` graph: tokens, weights
+/// (sorted), then the densified delta tensors (sorted delta names).
+pub fn delta_prefill_args(
+    tokens: &[u32],
+    seq_len: usize,
+    weights: &ModelWeights,
+    deltas: &BTreeMap<String, Matrix>,
+) -> Result<Vec<xla::Literal>> {
+    let mut args = base_prefill_args(tokens, seq_len, weights)?;
+    for name in weights.config.delta_tensor_names_sorted() {
+        let delta = deltas
+            .get(&name)
+            .with_context(|| format!("missing delta tensor '{name}'"))?;
+        args.push(matrix_literal(delta)?);
+    }
+    Ok(args)
+}
+
+/// [`ExecutionBackend`] that executes the AOT prefill artifacts on PJRT.
+///
+/// Artifact naming convention (shared with `python/compile/aot.py`):
+/// `{base|delta}_prefill_<preset>_t<seq>.hlo.txt` inside the artifacts
+/// directory. The Cold path densifies the compressed deltas into
+/// literals at call time — the no-densify guarantee belongs to
+/// [`crate::runtime::NativeBackend`]'s fused path only.
+pub struct PjrtBackend {
+    runtime: PjrtRuntime,
+    artifacts_dir: PathBuf,
+    preset: String,
+    seq_len: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &Path, preset: &str, seq_len: usize) -> Result<PjrtBackend> {
+        anyhow::ensure!(seq_len > 0, "pjrt seq_len must be positive");
+        Ok(PjrtBackend {
+            runtime: PjrtRuntime::cpu()?,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            preset: preset.to_string(),
+            seq_len,
+        })
+    }
+
+    fn artifact(&self, kind: &str) -> PathBuf {
+        self.artifacts_dir
+            .join(format!("{kind}_prefill_{}_t{}.hlo.txt", self.preset, self.seq_len))
+    }
+
+    /// Prefill against pre-densified deltas (so decode loops densify
+    /// the set once, not once per generated token).
+    fn prefill_dense(
+        &self,
+        base: &ModelWeights,
+        dense: Option<&BTreeMap<String, Matrix>>,
+        tokens: &[u32],
+    ) -> Result<Matrix> {
+        anyhow::ensure!(!tokens.is_empty(), "empty token sequence");
+        anyhow::ensure!(
+            tokens.len() <= self.seq_len,
+            "{} tokens > artifact seq_len {}",
+            tokens.len(),
+            self.seq_len
+        );
+        let logits = match dense {
+            None => {
+                let graph = self.runtime.load(&self.artifact("base"))?;
+                let args = base_prefill_args(tokens, self.seq_len, base)?;
+                graph.execute_to_matrix(&args, (self.seq_len, base.config.vocab_size))?
+            }
+            Some(deltas) => {
+                let graph = self.runtime.load(&self.artifact("delta"))?;
+                let args = delta_prefill_args(tokens, self.seq_len, base, deltas)?;
+                graph.execute_to_matrix(&args, (self.seq_len, base.config.vocab_size))?
+            }
+        };
+        Ok(logits.take_rows(tokens.len()))
+    }
+}
+
+/// Densify a compressed delta set into per-tensor matrices (the PJRT
+/// graphs take dense delta literals; see the struct-level note).
+fn densify_set(set: &DeltaSet) -> BTreeMap<String, Matrix> {
+    set.tensors.iter().map(|(n, d)| (n.clone(), d.to_dense())).collect()
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prefill(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        tokens: &[u32],
+    ) -> Result<Matrix> {
+        let dense = delta.map(densify_set);
+        self.prefill_dense(base, dense.as_ref(), tokens)
+    }
+
+    fn generate(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        prompt: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> Result<Vec<u32>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        // No decode-step artifact exists: re-run the fixed-shape prefill
+        // per generated token (correct, O(n²) — PJRT serves the
+        // prefill-heavy path; native is the decode-heavy backend). The
+        // delta set is densified once for the whole decode loop.
+        let dense = delta.map(densify_set);
+        let limit = self.seq_len.min(base.config.max_seq);
+        let mut ctx = prompt.to_vec();
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            if ctx.len() >= limit {
+                break;
+            }
+            let logits = self.prefill_dense(base, dense.as_ref(), &ctx)?;
+            let next = crate::tensor::ops::argmax_rows(&logits)[ctx.len() - 1];
+            if Some(next) == eos {
+                break;
+            }
+            out.push(next);
+            ctx.push(next);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_literal_pads() {
+        let lit = tokens_literal(&[5, 6], 4).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![5, 6, 0, 0]);
+        assert!(tokens_literal(&[1, 2, 3], 2).is_err());
+    }
+
+    /// Full artifact round-trip — runs only when a real PJRT runtime is
+    /// linked (the stub errors at client creation) AND `make artifacts`
+    /// has produced the tiny prefill graph.
+    #[test]
+    fn base_prefill_artifact_matches_native_forward() {
+        let art = std::path::Path::new("artifacts/base_prefill_tiny_t48.hlo.txt");
+        let weights_path = std::path::Path::new("artifacts/models/tiny/base.dqw");
+        if !art.exists() || !weights_path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = match PjrtRuntime::cpu() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: no real PJRT runtime ({e:#})");
+                return;
+            }
+        };
+        let graph = rt.load(art).unwrap();
+        let weights = crate::model::load_weights(weights_path).unwrap();
+        let tokens = vec![1u32, 20, 4, 21, 3];
+        let args = base_prefill_args(&tokens, 48, &weights).unwrap();
+        let logits = graph
+            .execute_to_matrix(&args, (48, weights.config.vocab_size))
+            .unwrap();
+        let native = crate::model::forward(&weights, &tokens);
+        for (p, _) in tokens.iter().enumerate() {
+            for c in 0..weights.config.vocab_size {
+                let a = logits.get(p, c);
+                let b = native.get(p, c);
+                assert!((a - b).abs() < 2e-2, "pos {p} col {c}: {a} vs {b}");
+            }
+        }
+    }
+}

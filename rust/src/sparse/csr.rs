@@ -5,6 +5,8 @@
 //! decomposes the value array into `m` parts — only the row-offset array
 //! is replicated, which is the "negligible increase" the paper argues.
 
+use anyhow::{ensure, Result};
+
 use crate::tensor::Matrix;
 
 /// CSR sparse matrix with `f32` values.
@@ -43,20 +45,44 @@ impl CsrMatrix {
         CsrMatrix { rows, cols, row_offsets, col_indices, values }
     }
 
-    /// Build from raw parts (validated).
+    /// Build from raw parts, validating the full CSR structure — the
+    /// deserialization entry point, so corrupt `.ddq` files fail loudly
+    /// (with an error, not UB or a silent mis-read) in release builds.
     pub fn from_parts(
         rows: usize,
         cols: usize,
         row_offsets: Vec<u32>,
         col_indices: Vec<u32>,
         values: Vec<f32>,
-    ) -> CsrMatrix {
-        assert_eq!(row_offsets.len(), rows + 1, "row_offsets length");
-        assert_eq!(col_indices.len(), values.len(), "indices/values length");
-        assert_eq!(*row_offsets.last().unwrap() as usize, values.len(), "final offset");
-        debug_assert!(row_offsets.windows(2).all(|w| w[0] <= w[1]), "offsets monotone");
-        debug_assert!(col_indices.iter().all(|&c| (c as usize) < cols), "col bounds");
-        CsrMatrix { rows, cols, row_offsets, col_indices, values }
+    ) -> Result<CsrMatrix> {
+        ensure!(
+            row_offsets.len() == rows + 1,
+            "row_offsets has {} entries, expected rows + 1 = {}",
+            row_offsets.len(),
+            rows + 1
+        );
+        ensure!(
+            col_indices.len() == values.len(),
+            "col_indices ({}) and values ({}) lengths differ",
+            col_indices.len(),
+            values.len()
+        );
+        ensure!(row_offsets[0] == 0, "first row offset is {}, expected 0", row_offsets[0]);
+        ensure!(
+            *row_offsets.last().unwrap() as usize == values.len(),
+            "final row offset {} != nnz {}",
+            row_offsets.last().unwrap(),
+            values.len()
+        );
+        ensure!(
+            row_offsets.windows(2).all(|w| w[0] <= w[1]),
+            "row offsets are not monotone non-decreasing"
+        );
+        ensure!(
+            col_indices.iter().all(|&c| (c as usize) < cols),
+            "column index out of bounds (cols = {cols})"
+        );
+        Ok(CsrMatrix { rows, cols, row_offsets, col_indices, values })
     }
 
     /// Empty matrix with no stored entries.
@@ -266,13 +292,25 @@ mod tests {
 
     #[test]
     fn from_parts_validates() {
-        let csr = CsrMatrix::from_parts(2, 3, vec![0, 1, 2], vec![0, 2], vec![1.0, 2.0]);
+        let csr = CsrMatrix::from_parts(2, 3, vec![0, 1, 2], vec![0, 2], vec![1.0, 2.0]).unwrap();
         assert_eq!(csr.to_dense(), Matrix::from_vec(2, 3, vec![1.0, 0.0, 0.0, 0.0, 0.0, 2.0]));
     }
 
     #[test]
-    #[should_panic]
-    fn from_parts_bad_offsets_panics() {
-        let _ = CsrMatrix::from_parts(2, 3, vec![0, 1], vec![0], vec![1.0]);
+    fn from_parts_rejects_corruption_in_release_builds() {
+        // wrong offsets length
+        assert!(CsrMatrix::from_parts(2, 3, vec![0, 1], vec![0], vec![1.0]).is_err());
+        // indices/values length mismatch
+        assert!(CsrMatrix::from_parts(2, 3, vec![0, 1, 2], vec![0], vec![1.0, 2.0]).is_err());
+        // nonzero first offset
+        assert!(CsrMatrix::from_parts(2, 3, vec![1, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_err());
+        // final offset != nnz
+        assert!(CsrMatrix::from_parts(2, 3, vec![0, 1, 3], vec![0, 1], vec![1.0, 2.0]).is_err());
+        // non-monotone offsets (with a matching final offset)
+        assert!(
+            CsrMatrix::from_parts(3, 3, vec![0, 2, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_err()
+        );
+        // column index out of bounds
+        assert!(CsrMatrix::from_parts(2, 3, vec![0, 1, 2], vec![0, 3], vec![1.0, 2.0]).is_err());
     }
 }

@@ -1,6 +1,7 @@
 //! Shared utilities: small linear algebra, JSON emission, table
-//! rendering, and timing — all in-tree because the container vendors
-//! only the `xla` dependency tree (see Cargo.toml).
+//! rendering, and timing — all in-tree because the crate's only default
+//! dependency is `anyhow` (see Cargo.toml; the `xla` stub rides behind
+//! the optional `pjrt` feature).
 
 pub mod bench;
 pub mod json;

@@ -1,0 +1,110 @@
+//! Property tests for the fused sparse serving path: `NativeBackend`'s
+//! Cold-path logits must match densify-then-forward within 1e-5 for
+//! random `DecomposedDelta`s at m = 1, m = 2^{k-1}, and the m = 2^k
+//! zero-bit extreme (no stored codes at all).
+
+use deltadq::compress::CompressedDelta;
+use deltadq::delta::format::DeltaSet;
+use deltadq::model::{forward, ModelConfig, ModelWeights};
+use deltadq::quant::separate::DecomposedDelta;
+use deltadq::runtime::{fused_matmul_nt, ExecutionBackend, NativeBackend};
+use deltadq::sparse::CsrMatrix;
+use deltadq::tensor::{Matrix, Pcg64};
+
+fn sparse_random(rows: usize, cols: usize, density: f64, std: f32, rng: &mut Pcg64) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| {
+        if rng.bernoulli(density) {
+            rng.normal() * std
+        } else {
+            0.0
+        }
+    })
+}
+
+/// The m-sweep for one k: plain quantization (m=1), the half split, and
+/// the zero-bit extreme where parts carry no code payload.
+fn m_grid(k: u32) -> [u32; 3] {
+    [1, 1 << (k - 1), 1 << k]
+}
+
+/// Kernel-level property: fused `X·(W + ΔŴ)ᵀ` equals the matmul against
+/// the densified `W + ΔŴ` within 1e-5, across random shapes, bit
+/// widths, decompositions, and thread counts.
+#[test]
+fn prop_fused_kernel_matches_densify_within_1e5() {
+    let mut rng = Pcg64::seeded(101);
+    for case in 0..40u32 {
+        let k = [2u32, 4, 8][(case % 3) as usize];
+        let rows = 2 + rng.below_usize(30);
+        let cols = 2 + rng.below_usize(30);
+        let t = 1 + rng.below_usize(6);
+        let w = Matrix::randn(rows, cols, 0.02, &mut rng);
+        let dm = sparse_random(rows, cols, 0.3, 0.02, &mut rng);
+        let x = Matrix::randn(t, cols, 1.0, &mut rng);
+        let csr = CsrMatrix::from_dense(&dm);
+        for m in m_grid(k) {
+            let dec = DecomposedDelta::compress(&csr, k, m);
+            let mut densified = w.clone();
+            dec.add_to_dense(&mut densified, 1.0);
+            let want = x.matmul_nt(&densified);
+            for threads in [1usize, 4] {
+                let got =
+                    fused_matmul_nt(&x, &w, &CompressedDelta::Quantized(dec.clone()), threads);
+                assert!(
+                    got.allclose(&want, 1e-5, 0.0),
+                    "case {case} k={k} m={m} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+fn base_and_quantized_set(k: u32, m: u32, seed: u64) -> (ModelWeights, DeltaSet, ModelWeights) {
+    let mut rng = Pcg64::seeded(seed);
+    let base = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+    let mut set = DeltaSet::new("DeltaDQ", 8.0);
+    let mut merged = base.clone();
+    for name in base.config.delta_tensor_names() {
+        let (r, c) = base.get(&name).shape();
+        let dm = sparse_random(r, c, 0.12, 0.002, &mut rng);
+        let dec = DecomposedDelta::compress(&CsrMatrix::from_dense(&dm), k, m);
+        merged.get_mut(&name).add_assign(&dec.to_dense());
+        set.tensors.insert(name, CompressedDelta::Quantized(dec));
+    }
+    (base, set, merged)
+}
+
+/// End-to-end: full-model Cold prefill through the fused path vs the
+/// same quantized deltas densified into the weights, at every m regime.
+#[test]
+fn fused_cold_logits_match_densify_then_forward() {
+    let tokens = [1u32, 20, 4, 21, 3, 7];
+    for (i, m) in m_grid(4).into_iter().enumerate() {
+        let (base, set, merged) = base_and_quantized_set(4, m, 7 + i as u64);
+        let backend = NativeBackend::new(4);
+        let got = backend.prefill(&base, Some(&set), &tokens).unwrap();
+        let want = forward(&merged, &tokens);
+        assert!(got.allclose(&want, 1e-5, 1e-5), "k=4 m={m}");
+    }
+}
+
+/// Same end-to-end agreement for dropout-only tenants (CSR fp32 deltas
+/// exercise the kernel's sparse arm).
+#[test]
+fn fused_cold_csr_logits_match_densify_then_forward() {
+    let mut rng = Pcg64::seeded(55);
+    let base = ModelWeights::init(ModelConfig::tiny(), &mut rng);
+    let mut set = DeltaSet::new("DeltaDQ", 8.0);
+    let mut merged = base.clone();
+    for name in base.config.delta_tensor_names() {
+        let (r, c) = base.get(&name).shape();
+        let dm = sparse_random(r, c, 0.12, 0.002, &mut rng);
+        merged.get_mut(&name).add_assign(&dm);
+        set.tensors.insert(name, CompressedDelta::Sparse(CsrMatrix::from_dense(&dm)));
+    }
+    let tokens = [1u32, 30, 5, 40, 3];
+    let backend = NativeBackend::new(2);
+    let got = backend.prefill(&base, Some(&set), &tokens).unwrap();
+    let want = forward(&merged, &tokens);
+    assert!(got.allclose(&want, 1e-5, 1e-5));
+}

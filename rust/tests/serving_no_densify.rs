@@ -1,0 +1,78 @@
+//! Integration: the coordinator serves a Cold tenant end-to-end through
+//! `NativeBackend`'s fused sparse path with **no dense `Δ`
+//! materialization** — pinned by the process-global densify counter.
+//!
+//! This file intentionally holds a single test: the counter is global,
+//! and any sibling test that legitimately densifies (Hot promotion,
+//! `reconstruct_weights`) would race the assertion.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deltadq::compress::{densify, CompressedDelta};
+use deltadq::coordinator::{Server, ServerOptions};
+use deltadq::delta::format::DeltaSet;
+use deltadq::eval::tasks::vocab;
+use deltadq::model::{ModelConfig, ModelWeights};
+use deltadq::quant::separate::DecomposedDelta;
+use deltadq::runtime::{ExecutionBackend, NativeBackend};
+use deltadq::sparse::CsrMatrix;
+use deltadq::tensor::{Matrix, Pcg64};
+
+#[test]
+fn cold_tenant_serves_end_to_end_without_densifying() {
+    let mut rng = Pcg64::seeded(3);
+    let base = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+    let mut set = DeltaSet::new("DeltaDQ", 64.0);
+    for name in base.config.delta_tensor_names() {
+        let (r, c) = base.get(&name).shape();
+        let dm = Matrix::from_fn(r, c, |_, _| {
+            if rng.bernoulli(0.12) {
+                rng.normal() * 0.002
+            } else {
+                0.0
+            }
+        });
+        let dec = DecomposedDelta::compress(&CsrMatrix::from_dense(&dm), 4, 8);
+        set.tensors.insert(name, CompressedDelta::Quantized(dec));
+    }
+
+    // reference token stream straight through the backend (no server) —
+    // the fused path itself never densifies, so this stays outside the
+    // counted window only for clarity
+    let backend = Arc::new(NativeBackend::new(2));
+    let prompt = vec![1u32, 20, 4, 21, 3];
+    let expected =
+        backend.generate(&base, Some(&set), &prompt, 6, Some(vocab::EOS)).unwrap();
+
+    let before = densify::events();
+    let server = Server::with_backend(
+        base.clone(),
+        ServerOptions {
+            workers: 2,
+            promote_after: u64::MAX, // pin the tenant Cold
+            batch_window: Duration::from_micros(100),
+            ..Default::default()
+        },
+        backend,
+    );
+    server.register_tenant("t", set);
+    let receivers: Vec<_> = (0..6)
+        .map(|_| server.submit("t", prompt.clone(), 6).unwrap())
+        .collect();
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(!resp.served_hot, "tenant must stay Cold");
+        assert_eq!(resp.error, None);
+        assert_eq!(resp.tokens, expected, "fused cold serving must match direct backend output");
+    }
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(server.metrics.requests_completed.load(ord), 6);
+    assert_eq!(server.metrics.backend_errors.load(ord), 0);
+    server.shutdown();
+    assert_eq!(
+        densify::events(),
+        before,
+        "fused Cold serving path must not materialize a dense delta"
+    );
+}

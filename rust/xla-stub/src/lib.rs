@@ -1,0 +1,202 @@
+//! Offline stand-in for the `xla` crate (xla-rs over PJRT).
+//!
+//! The real dependency needs the `xla_extension` C++ distribution, which
+//! most build environments (CI included) do not ship. This stub provides
+//! the exact type surface that `deltadq`'s `pjrt` feature compiles
+//! against: [`Literal`] is a fully functional host-side container, while
+//! client construction returns a descriptive error — so binaries built
+//! against the stub fail gracefully at *runtime*, never at compile time.
+//!
+//! To execute real HLO artifacts, replace the `xla` path dependency in
+//! `rust/Cargo.toml` with an xla-rs checkout that links xla_extension.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: built against the in-tree xla stub (no PJRT runtime linked); \
+         point the `xla` dependency at a real xla-rs build to execute"
+    )))
+}
+
+/// Element storage for [`Literal`].
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types the stub literal can store.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(values: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(values: Vec<f32>) -> Data {
+        Data::F32(values)
+    }
+
+    fn unwrap(data: &Data) -> Option<Vec<f32>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            Data::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(values: Vec<i32>) -> Data {
+        Data::I32(values)
+    }
+
+    fn unwrap(data: &Data) -> Option<Vec<i32>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            Data::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side literal: typed buffer plus dimensions. Fully functional.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal { data: T::wrap(values.to_vec()), dims: vec![values.len() as i64] }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.element_count() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Unwrap a 1-tuple result (identity in the stub).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    /// Copy out the elements, checked against the stored type.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+}
+
+/// Parsed HLO module (stub: file readability is checked, nothing parsed).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        match std::fs::metadata(path) {
+            Ok(_) => Ok(HloModuleProto),
+            Err(e) => Err(Error(format!("read {path}: {e}"))),
+        }
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always errors in the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_both_types() {
+        let f = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(f.to_vec::<i32>().is_err());
+        let i = Literal::vec1(&[5i32, 6]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![5, 6]);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let f = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert!(f.reshape(&[2, 2]).is_ok());
+        assert!(f.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn client_reports_stub() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("stub"));
+    }
+}
