@@ -1,106 +1,22 @@
-//! Micro-benchmarks of the L3 hot paths: dense vs separate-computation
-//! matmul, decomposed dequantization, dropout and quantization
-//! throughput. Feeds EXPERIMENTS.md §Perf (L3 rows).
+//! `cargo bench --bench kernels` — the serving compute-core microbench.
+//!
+//! Thin wrapper over the shared `bench --name kernels` experiment
+//! (`deltadq::bench_harness::experiments::kernels`): times the dense
+//! blocked matmul and the fused CSR / decomposed kernels at
+//! serving-realistic shapes against the PR-1 scalar reference, prints
+//! the report, and writes machine-readable `BENCH_kernels.json` so the
+//! perf trajectory is tracked run-over-run.
+//!
+//! Env:
+//! * `DELTADQ_KERNELS_JSON` — output path (default `BENCH_kernels.json`)
+//! * `DELTADQ_BENCH_QUICK=1` — CI mode: small shapes, one rep
 
-use deltadq::compress::CompressedDelta;
-use deltadq::dropout::{dropout, DropoutKind};
-use deltadq::quant::separate::DecomposedDelta;
-use deltadq::sparse::CsrMatrix;
-use deltadq::tensor::ops::matmul_nt_parallel;
-use deltadq::tensor::{Matrix, Pcg64};
-use deltadq::util::bench::bench;
+use std::path::Path;
 
-fn sparse_delta(rows: usize, cols: usize, density: f64, rng: &mut Pcg64) -> Matrix {
-    Matrix::from_fn(rows, cols, |_, _| {
-        if rng.bernoulli(density) {
-            rng.normal() * 0.01
-        } else {
-            0.0
-        }
-    })
-}
-
-fn main() {
-    println!("== kernel micro-benchmarks (t=32, h=192 base-preset scale) ==");
-    let mut rng = Pcg64::seeded(1);
-    let t = 32;
-    let h = 192;
-    let x = Matrix::randn(t, h, 1.0, &mut rng);
-    let w = Matrix::randn(h, h, 0.02, &mut rng);
-    let delta_dense = sparse_delta(h, h, 0.125, &mut rng); // alpha=8
-    let csr = CsrMatrix::from_dense(&delta_dense);
-    let decomposed = DecomposedDelta::compress(&csr, 4, 8);
-
-    // flops of one dense matmul
-    let flops = (2 * t * h * h) as f64;
-
-    let r = bench("dense matmul X*W^T", 10, 200, || x.matmul_nt(&w));
-    println!("{}", r.report());
-    println!("{}", r.throughput(flops / 1e9, "GFLOP"));
-
-    let r = bench("dense matmul (2 threads)", 10, 200, || matmul_nt_parallel(&x, &w, 2));
-    println!("{}", r.report());
-
-    let r = bench("base + CSR delta (separate computation)", 10, 200, || {
-        let mut out = x.matmul_nt(&w);
-        out.add_assign(&csr.matmul_nt_from_dense(&x));
-        out
-    });
-    println!("{}", r.report());
-
-    let r = bench("base + decomposed delta (m=8, 1-bit)", 10, 100, || {
-        let mut out = x.matmul_nt(&w);
-        out.add_assign(&decomposed.matmul_nt_from_dense(&x));
-        out
-    });
-    println!("{}", r.report());
-
-    let r = bench("densify: dequant decomposed into buffer", 10, 200, || {
-        let mut buf = w.clone();
-        decomposed.add_to_dense(&mut buf, 1.0);
-        buf
-    });
-    println!("{}", r.report());
-
-    println!("\n== compression-stage throughput (512x512 tensor) ==");
-    let big = Matrix::randn(512, 512, 0.01, &mut rng);
-    let elems = big.len() as f64;
-
-    let mut rng2 = Pcg64::seeded(2);
-    let r = bench("group-wise dropout a=8 h_g=16", 3, 50, || {
-        dropout(&big, 8.0, DropoutKind::GroupWise { group_size: 16 }, &mut rng2)
-    });
-    println!("{}", r.report());
-    println!("{}", r.throughput(elems / 1e6, "Melem"));
-
-    let mut rng3 = Pcg64::seeded(3);
-    let r = bench("global dropout (DARE) a=8", 3, 50, || {
-        dropout(&big, 8.0, DropoutKind::Global, &mut rng3)
-    });
-    println!("{}", r.report());
-
-    let sparse_big = sparse_delta(512, 512, 0.125, &mut rng);
-    let csr_big = CsrMatrix::from_dense(&sparse_big);
-    let r = bench("separate quantization k=4 m=8", 3, 50, || {
-        DecomposedDelta::compress(&csr_big, 4, 8)
-    });
-    println!("{}", r.report());
-    println!("{}", r.throughput(csr_big.nnz() as f64 / 1e6, "Mnnz"));
-
-    let dec_big = DecomposedDelta::compress(&csr_big, 4, 8);
-    let r = bench("dequantize k=4 m=8 to dense", 3, 100, || dec_big.to_dense());
-    println!("{}", r.report());
-
-    println!("\n== storage formats ==");
-    for (name, c) in [
-        ("CSR fp16", CompressedDelta::Sparse(csr_big.clone())),
-        ("decomposed 1-bit", CompressedDelta::Quantized(dec_big.clone())),
-    ] {
-        println!(
-            "{:<44} {:>10.1} KiB ({:.1}x vs dense fp16)",
-            name,
-            c.storage_bits() as f64 / 8.0 / 1024.0,
-            (512.0 * 512.0 * 16.0) / c.storage_bits() as f64
-        );
-    }
+fn main() -> anyhow::Result<()> {
+    let json =
+        std::env::var("DELTADQ_KERNELS_JSON").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    let report = deltadq::bench_harness::experiments::kernels(Path::new(&json))?;
+    println!("{report}");
+    Ok(())
 }

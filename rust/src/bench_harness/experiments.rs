@@ -17,17 +17,21 @@ use crate::compress::pipeline::{
     capture_calibration, compress_model_deltas, reconstruct_weights,
 };
 use crate::compress::{
-    Compressor, Dare, DeltaDq, DeltaDqConfig, DeltaZip, DeltaZipConfig, Magnitude,
+    CompressedDelta, Compressor, Dare, DeltaDq, DeltaDqConfig, DeltaZip, DeltaZipConfig, Magnitude,
 };
 use crate::coordinator::{Server, ServerOptions};
 use crate::delta::extract_deltas;
 use crate::dropout::{dropout, DropoutKind};
 use crate::eval::{evaluate, gen_dataset, load_dataset, Sample, TaskKind};
 use crate::model::{forward, load_weights, ModelConfig, ModelWeights};
-use crate::runtime::ExecutionBackend;
+use crate::quant::separate::DecomposedDelta;
+use crate::runtime::pool::{resolve_threads, ThreadPool};
+use crate::runtime::{fused_matmul_nt, ExecutionBackend};
 use crate::search::{search_direct, search_proxy};
 use crate::sparse::CsrMatrix;
-use crate::tensor::{Matrix, Pcg64};
+use crate::tensor::{dot, Matrix, Pcg64};
+use crate::util::bench::{bench, BenchResult};
+use crate::util::json::Json;
 use crate::util::table::{fmt, fmt_ratio, Table};
 
 const SEED: u64 = 20240701;
@@ -617,4 +621,271 @@ pub fn serving(
     out.push_str(&format!("residency: {:?}\n", server.residency()));
     server.shutdown();
     Ok(out)
+}
+
+// ------------------------------------------------------------- kernels
+
+/// E11: serving-kernel microbench — the tracked perf trajectory of the
+/// compute core. Times the dense blocked matmul and the fused kernel
+/// (CSR and decomposed deltas at several k/m points) at
+/// serving-realistic shapes, each against the PR-1-era scalar reference
+/// kept in [`ref_fused_scalar`], and writes machine-readable
+/// `BENCH_kernels.json` (schema documented in `rust/README.md`).
+///
+/// `DELTADQ_BENCH_QUICK=1` switches to CI mode: small shapes, one rep —
+/// enough to validate the bench path and the emitted JSON.
+pub fn kernels(json_path: &Path) -> Result<String> {
+    let quick = std::env::var("DELTADQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    // (h, t, full case set?) — the h=2048/t=8/CSR@0.5 row is the pinned
+    // acceptance shape; h=4096 tracks scaling on the dense+CSR pair only.
+    let (shapes, reps, warmup): (Vec<(usize, usize, bool)>, usize, usize) = if quick {
+        (vec![(192, 1, true), (192, 8, true)], 1, 0)
+    } else {
+        (vec![(2048, 1, true), (2048, 8, true), (2048, 32, true), (4096, 8, false)], 5, 1)
+    };
+    let ref_reps = reps.div_ceil(2).max(1);
+    // pooled-case parallelism: DELTADQ_BENCH_THREADS (0 = auto) wins,
+    // else auto-detect clamped to the serving-typical 2..=4 range
+    let pool_threads = std::env::var("DELTADQ_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(resolve_threads)
+        .unwrap_or_else(|| resolve_threads(0).clamp(2, 4));
+    let pool1 = ThreadPool::serial();
+    // quick mode never runs the pooled case — don't spawn its workers
+    let pool_n = if quick { None } else { Some(ThreadPool::new(pool_threads)) };
+
+    let mut rep = KernelReport {
+        cases: Vec::new(),
+        table: Table::new(
+            "Kernels microbench — blocked/pooled compute core vs PR-1 scalar reference",
+            &["case", "h", "t", "thr", "mean(ms)", "p50(ms)", "GFLOP/s", "speedup"],
+        ),
+    };
+    let mut rng = Pcg64::seeded(0xBE7C);
+    let sparse = |h: usize, density: f64, rng: &mut Pcg64| {
+        Matrix::from_fn(h, h, |_, _| {
+            if rng.bernoulli(density) {
+                rng.normal() * 0.01
+            } else {
+                0.0
+            }
+        })
+    };
+
+    for &(h, t, full) in &shapes {
+        let x = Matrix::randn(t, h, 1.0, &mut rng);
+        let w = Matrix::randn(h, h, 0.02, &mut rng);
+        let dense_flops = (2 * t * h * h) as f64;
+
+        let r_ref = bench("dense naive", warmup, ref_reps, || x.matmul_nt_naive(&w));
+        let ref_dense = r_ref.mean.as_secs_f64();
+        rep.push("dense_naive_ref", h, t, None, None, 1, &r_ref, None, dense_flops);
+        let r = bench("dense blocked", warmup, reps, || x.matmul_nt(&w));
+        rep.push("dense_blocked", h, t, None, None, 1, &r, Some(ref_dense), dense_flops);
+
+        // CSR @ 50% density — the pinned acceptance case at h=2048, t=8
+        let csr_half_m = CsrMatrix::from_dense(&sparse(h, 0.5, &mut rng));
+        let csr_flops = dense_flops + 2.0 * t as f64 * csr_half_m.nnz() as f64;
+        let csr_half = CompressedDelta::Sparse(csr_half_m);
+        let r_ref = bench("fused csr.5 ref", warmup, ref_reps, || {
+            ref_fused_scalar(&x, &w, &csr_half)
+        });
+        let ref_csr = r_ref.mean.as_secs_f64();
+        rep.push("fused_csr_scalar_ref", h, t, Some(0.5), None, 1, &r_ref, None, csr_flops);
+        let r = bench("fused csr.5", warmup, reps, || fused_matmul_nt(&x, &w, &csr_half, &pool1));
+        rep.push("fused_csr", h, t, Some(0.5), None, 1, &r, Some(ref_csr), csr_flops);
+        if let Some(pool_n) = &pool_n {
+            let r = bench("fused csr.5 pooled", warmup, reps, || {
+                fused_matmul_nt(&x, &w, &csr_half, pool_n)
+            });
+            let thr = pool_threads;
+            rep.push("fused_csr_pooled", h, t, Some(0.5), None, thr, &r, Some(ref_csr), csr_flops);
+        }
+
+        if full {
+            // alpha=8-style density plus two decomposition points
+            let d8 = sparse(h, 0.125, &mut rng);
+            let csr8 = CsrMatrix::from_dense(&d8);
+            let nnz = csr8.nnz() as f64;
+            let d8_flops = dense_flops + 2.0 * t as f64 * nnz;
+            let csr8_delta = CompressedDelta::Sparse(csr8.clone());
+            let r_ref = bench("fused csr.125 ref", warmup, ref_reps, || {
+                ref_fused_scalar(&x, &w, &csr8_delta)
+            });
+            let ref_c8 = r_ref.mean.as_secs_f64();
+            rep.push("fused_csr_scalar_ref", h, t, Some(0.125), None, 1, &r_ref, None, d8_flops);
+            let r = bench("fused csr.125", warmup, reps, || {
+                fused_matmul_nt(&x, &w, &csr8_delta, &pool1)
+            });
+            rep.push("fused_csr", h, t, Some(0.125), None, 1, &r, Some(ref_c8), d8_flops);
+
+            for (k, m) in [(8u32, 1u32), (4, 8)] {
+                let dec = CompressedDelta::Quantized(DecomposedDelta::compress(&csr8, k, m));
+                let r_ref = bench("fused dec ref", warmup, ref_reps, || {
+                    ref_fused_scalar(&x, &w, &dec)
+                });
+                let ref_d = r_ref.mean.as_secs_f64();
+                let km = Some((k, m));
+                let name = "fused_decomposed_scalar_ref";
+                rep.push(name, h, t, Some(0.125), km, 1, &r_ref, None, d8_flops);
+                let r = bench("fused dec", warmup, reps, || fused_matmul_nt(&x, &w, &dec, &pool1));
+                rep.push("fused_decomposed", h, t, Some(0.125), km, 1, &r, Some(ref_d), d8_flops);
+            }
+        }
+    }
+
+    let KernelReport { cases, table } = rep;
+    let mut root = Json::obj();
+    root.set("bench", "kernels")
+        .set("schema", 1u64)
+        .set("quick", quick)
+        .set("reps", reps)
+        .set("pool_threads", pool_threads)
+        .set("cases", Json::Arr(cases));
+    std::fs::write(json_path, root.to_string())
+        .with_context(|| format!("write {json_path:?}"))?;
+
+    let mut out = table.render();
+    out.push_str("speedup = scalar-reference mean / kernel mean at the same shape\n");
+
+    // Compression-stage throughput (kept from the PR-1 bench so those
+    // paths stay measured; report-only — the JSON tracks kernels).
+    let c_reps = if quick { 2 } else { 20 };
+    out.push_str("\n== compression-stage throughput (512x512 tensor) ==\n");
+    let big = Matrix::randn(512, 512, 0.01, &mut rng);
+    let mut drop_rng = Pcg64::seeded(2);
+    let r = bench("group-wise dropout a=8 h_g=16", 1, c_reps, || {
+        dropout(&big, 8.0, DropoutKind::GroupWise { group_size: 16 }, &mut drop_rng)
+    });
+    out.push_str(&format!("{}\n", r.report()));
+    let sparse_big = sparse(512, 0.125, &mut rng);
+    let csr_big = CsrMatrix::from_dense(&sparse_big);
+    let r = bench("separate quantization k=4 m=8", 1, c_reps, || {
+        DecomposedDelta::compress(&csr_big, 4, 8)
+    });
+    out.push_str(&format!("{}\n", r.report()));
+    let dec_big = DecomposedDelta::compress(&csr_big, 4, 8);
+    let r = bench("dequantize k=4 m=8 to dense", 1, c_reps, || dec_big.to_dense());
+    out.push_str(&format!("{}\n", r.report()));
+
+    out.push_str(&format!("wrote {}\n", json_path.display()));
+    Ok(out)
+}
+
+/// Accumulates the kernels-bench output: JSON cases + the text table.
+struct KernelReport {
+    cases: Vec<Json>,
+    table: Table,
+}
+
+impl KernelReport {
+    /// One measured kernel → one JSON case + one report row.
+    #[allow(clippy::too_many_arguments)]
+    fn push(
+        &mut self,
+        name: &str,
+        h: usize,
+        t: usize,
+        density: Option<f64>,
+        km: Option<(u32, u32)>,
+        threads: usize,
+        r: &BenchResult,
+        ref_mean_s: Option<f64>,
+        flops: f64,
+    ) {
+        let mean = r.mean.as_secs_f64();
+        let gflops = flops / mean.max(1e-12) / 1e9;
+        let speedup = ref_mean_s.map(|m| m / mean.max(1e-12));
+        let mut o = Json::obj();
+        o.set("case", name)
+            .set("h", h)
+            .set("t", t)
+            .set("threads", threads)
+            .set("density", density.map(Json::Num).unwrap_or(Json::Null))
+            .set("k", km.map(|(k, _)| Json::from(k)).unwrap_or(Json::Null))
+            .set("m", km.map(|(_, m)| Json::from(m)).unwrap_or(Json::Null))
+            .set("iters", r.iters)
+            .set("mean_s", mean)
+            .set("p50_s", r.p50.as_secs_f64())
+            .set("p95_s", r.p95.as_secs_f64())
+            .set("min_s", r.min.as_secs_f64())
+            .set("gflops", gflops)
+            .set("ref_mean_s", ref_mean_s.map(Json::Num).unwrap_or(Json::Null))
+            .set("speedup_vs_scalar_ref", speedup.map(Json::Num).unwrap_or(Json::Null));
+        self.cases.push(o);
+        self.table.add_row(vec![
+            name.to_string(),
+            h.to_string(),
+            t.to_string(),
+            threads.to_string(),
+            fmt(mean * 1e3, 3),
+            fmt(r.p50.as_secs_f64() * 1e3, 3),
+            fmt(gflops, 2),
+            speedup.map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+}
+
+/// The PR-1 fused kernel, kept verbatim as the speedup baseline: scalar
+/// `dot` per output element for the base term, per-activation-row
+/// gathers for the delta term, fresh decode buffer per weight row.
+fn ref_fused_scalar(x: &Matrix, w: &Matrix, delta: &CompressedDelta) -> Matrix {
+    let t = x.rows();
+    let h_out = w.rows();
+    let mut out = Matrix::zeros(t, h_out);
+    for q in 0..h_out {
+        let wrow = w.row(q);
+        for p in 0..t {
+            out.set(p, q, dot(x.row(p), wrow));
+        }
+    }
+    match delta {
+        CompressedDelta::Sparse(csr) => {
+            for q in 0..h_out {
+                let (cols, vals) = csr.row_entries(q);
+                if cols.is_empty() {
+                    continue;
+                }
+                for p in 0..t {
+                    let xrow = x.row(p);
+                    let mut acc = 0.0f32;
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        acc += xrow[c as usize] * v;
+                    }
+                    out.set(p, q, out.get(p, q) + acc);
+                }
+            }
+        }
+        CompressedDelta::Quantized(d) => {
+            for part in &d.parts {
+                for q in 0..h_out {
+                    let lo = part.row_offsets[q] as usize;
+                    let hi = part.row_offsets[q + 1] as usize;
+                    if lo == hi {
+                        continue;
+                    }
+                    let vals: Vec<f32> = (lo..hi).map(|e| d.dequant_entry(part, e)).collect();
+                    let cols = &part.col_indices[lo..hi];
+                    for p in 0..t {
+                        let xrow = x.row(p);
+                        let mut acc = 0.0f32;
+                        for (&c, &v) in cols.iter().zip(&vals) {
+                            acc += xrow[c as usize] * v;
+                        }
+                        out.set(p, q, out.get(p, q) + acc);
+                    }
+                }
+            }
+        }
+        CompressedDelta::Dense(m) => {
+            for q in 0..h_out {
+                let drow = m.row(q);
+                for p in 0..t {
+                    out.set(p, q, out.get(p, q) + dot(x.row(p), drow));
+                }
+            }
+        }
+    }
+    out
 }

@@ -33,6 +33,10 @@ pub fn run(
         "fig8" => experiments::fig8(models_dir, data_dir, backend),
         "ablations" => experiments::ablations(models_dir, data_dir),
         "serving" => experiments::serving(models_dir, data_dir, backend),
+        // kernel microbench: no models/backend needed; writes the
+        // machine-readable trajectory file next to the report
+        // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
+        "kernels" => experiments::kernels(Path::new("BENCH_kernels.json")),
         "all" => {
             let mut out = String::new();
             for exp in [

@@ -202,7 +202,11 @@ pub struct ServeConfig {
     /// Execution backend: "native" (default) or "pjrt" (requires the
     /// `pjrt` cargo feature and AOT artifacts).
     pub backend: String,
-    /// Row-parallel threads of the native fused sparse kernel (1 = off).
+    /// Parallelism of the native backend's persistent compute pool
+    /// (shared by the fused sparse kernel and the dense Hot path).
+    /// `1` = inline/serial, `0` = auto-detect hardware parallelism.
+    /// The pool is constructed once per backend/`Server`, never per
+    /// request. Results are bit-identical across any setting.
     pub fused_threads: usize,
     /// Fixed sequence length of the AOT prefill artifacts (pjrt only).
     pub pjrt_seq_len: usize,

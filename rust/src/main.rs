@@ -121,9 +121,11 @@ fn print_usage() {
            serve     [--config F.toml] [--models DIR] [--requests N]\n\
                      [--tenants LIST] [--rate R] [--backend native|pjrt]\n\
            bench     --name table1|table2|table3|table4|fig4|fig5|fig6|\n\
-                     fig7|fig8|ablations|serving [--models DIR]\n\
+                     fig7|fig8|ablations|serving|kernels [--models DIR]\n\
                      [--out FILE] [--backend native|pjrt]\n\
-                     [--fused-threads N] [--artifacts DIR]"
+                     [--fused-threads N] [--artifacts DIR]\n\
+                     (kernels writes BENCH_kernels.json; set\n\
+                     DELTADQ_BENCH_QUICK=1 for the CI-sized run)"
     );
 }
 

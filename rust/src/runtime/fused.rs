@@ -3,145 +3,215 @@
 //!
 //! The Cold serving path used to compute the base term and the delta
 //! term as two separate matmuls plus an elementwise add. This kernel
-//! fuses them: each output element `A[p][q]` accumulates the dense base
-//! dot product and the sparse delta contribution of weight row `q` in
-//! one pass. Decomposed deltas (§3.4 Separate Quantization) are
-//! dequantized **per part, on the fly** — `DQ = s·(code + step·j − z)`
-//! (Eq. 12), decoded once per weight row, never materialized densely.
+//! fuses them: each output stripe accumulates the dense base product
+//! (via the register-tiled panel kernel in [`crate::tensor::ops`]) and
+//! the sparse delta contribution in one pass. Decomposed deltas (§3.4
+//! Separate Quantization) are dequantized **per part, on the fly** —
+//! `DQ = s·(code + step·j − z)` (Eq. 12), decoded once per weight row
+//! into a per-worker scratch buffer, never materialized densely.
 //!
-//! Work is partitioned across output rows `q` (weight rows) and run on
-//! scoped threads — each thread owns a disjoint column block of the
-//! output, so no synchronization is needed beyond the final assembly.
+//! Work is partitioned across weight rows `q` (output columns) and run
+//! on the backend's persistent [`ThreadPool`]; each chunk writes its
+//! disjoint column stripe of the preallocated output directly (no
+//! per-worker block + `set_cols` assembly, no thread spawns).
+//!
+//! Delta accumulation streams `Xᵀ` (transposed once per call): delta
+//! row `q`'s entries each touch one *contiguous* length-`t` column of
+//! `X`, so the inner loop is a `t`-wide FMA instead of `t` scattered
+//! gathers — the activation matrix is streamed once per row-block
+//! rather than gathered per activation row.
+
+use std::cell::RefCell;
 
 use crate::compress::CompressedDelta;
 use crate::quant::separate::DecomposedDelta;
+use crate::runtime::pool::{SharedSliceMut, ThreadPool};
 use crate::sparse::CsrMatrix;
-use crate::tensor::matrix::dot;
-use crate::tensor::Matrix;
+use crate::tensor::{ops, Matrix};
+
+thread_local! {
+    /// Per-worker scratch: (decoded values, t-length column accumulator).
+    /// Hoisted out of the per-weight-row loop — one allocation per pool
+    /// worker for the life of the process, not one `Vec` per row.
+    static SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Chunk the `[0, h_out)` weight-row range for the pool: ~4 chunks per
+/// thread for load balance, panel-aligned, never below one panel.
+fn stripe_width(h_out: usize, threads: usize) -> usize {
+    if threads <= 1 {
+        return h_out.max(1);
+    }
+    let target = h_out.div_ceil(threads * 4).max(ops::TILE_NR);
+    // round up to a panel multiple so stripes don't split panels
+    target.div_ceil(ops::TILE_NR) * ops::TILE_NR
+}
+
+/// Shared stripe driver: chunk `[0, h_out)` into panel-aligned column
+/// stripes and run `f(q0, q1, shared)` over the pool, each chunk owning
+/// its disjoint stripe of `out`. Every pooled kernel goes through this,
+/// so the chunking/safety contract lives in one place.
+fn run_striped(
+    pool: &ThreadPool,
+    h_out: usize,
+    out: &mut Matrix,
+    f: impl Fn(usize, usize, &SharedSliceMut<'_, f32>) + Sync,
+) {
+    let chunk = stripe_width(h_out, pool.threads());
+    let n_chunks = h_out.div_ceil(chunk);
+    let shared = SharedSliceMut::new(out.data_mut());
+    pool.run(n_chunks, &|i| {
+        let q0 = i * chunk;
+        let q1 = (q0 + chunk).min(h_out);
+        f(q0, q1, &shared);
+    });
+}
 
 /// Fused `X·(W + Δ)ᵀ` (`X: t×h_in`, `W, Δ: h_out×h_in` → `t×h_out`)
-/// without densifying `Δ`. `threads ≤ 1` runs single-threaded;
-/// otherwise output rows are split across `std::thread::scope` workers.
-pub fn fused_matmul_nt(x: &Matrix, w: &Matrix, delta: &CompressedDelta, threads: usize) -> Matrix {
+/// without densifying `Δ`, parallelized over the persistent `pool`.
+///
+/// Results are bit-identical for any pool size: each output element is
+/// an order-fixed sum computed entirely within one chunk, and chunk
+/// boundaries never change summation order.
+pub fn fused_matmul_nt(
+    x: &Matrix,
+    w: &Matrix,
+    delta: &CompressedDelta,
+    pool: &ThreadPool,
+) -> Matrix {
     let (h_out, h_in) = w.shape();
     assert_eq!(x.cols(), h_in, "fused inner dims: x is {}x{}", x.rows(), x.cols());
     assert_eq!(delta.shape(), (h_out, h_in), "delta shape vs w {h_out}x{h_in}");
     let t = x.rows();
-    let threads = threads.clamp(1, h_out.max(1));
-    if threads == 1 || h_out < 2 * threads {
-        let mut out = Matrix::zeros(t, h_out);
-        fused_block(x, w, delta, 0, h_out, &mut out);
+    let mut out = Matrix::zeros(t, h_out);
+    if t == 0 || h_out == 0 {
         return out;
     }
-    let chunk = h_out.div_ceil(threads);
-    let mut blocks: Vec<(usize, Matrix)> = Vec::with_capacity(threads);
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..threads)
-            .filter_map(|b| {
-                let q0 = b * chunk;
-                if q0 >= h_out {
-                    return None;
-                }
-                let q1 = (q0 + chunk).min(h_out);
-                Some(scope.spawn(move || {
-                    let mut block = Matrix::zeros(t, q1 - q0);
-                    fused_block(x, w, delta, q0, q1, &mut block);
-                    (q0, block)
-                }))
-            })
-            .collect();
-        for h in handles {
-            blocks.push(h.join().expect("fused worker panicked"));
+    // Xᵀ is streamed by the sparse delta paths (t-contiguous columns);
+    // the Dense arm never reads it, so skip the copy there.
+    let xt = match delta {
+        CompressedDelta::Dense(_) => None,
+        _ => Some(x.transpose()),
+    };
+    run_striped(pool, h_out, &mut out, |q0, q1, shared| {
+        // SAFETY: this chunk exclusively owns columns [q0, q1) of every
+        // output row; chunks are pairwise disjoint.
+        unsafe { ops::matmul_nt_block_raw(x, w, q0, q1, shared.as_ptr(), h_out, false) };
+        match (delta, &xt) {
+            (CompressedDelta::Sparse(csr), Some(xt)) => {
+                add_csr_rows(xt, csr, q0, q1, shared, h_out)
+            }
+            (CompressedDelta::Quantized(d), Some(xt)) => {
+                add_decomposed_rows(xt, d, q0, q1, shared, h_out)
+            }
+            // Dense deltas reuse the blocked kernel in accumulate mode —
+            // no scalar dot loop, no temporary.
+            (CompressedDelta::Dense(m), _) => unsafe {
+                ops::matmul_nt_block_raw(x, m, q0, q1, shared.as_ptr(), h_out, true)
+            },
+            // xt is Some for every non-Dense delta by construction.
+            _ => unreachable!("xt missing for sparse delta"),
         }
     });
-    let mut out = Matrix::zeros(t, h_out);
-    for (q0, block) in blocks {
-        out.set_cols(q0, &block);
-    }
     out
 }
 
-/// Fill `block` (t × (q1−q0)) with `X·(W + Δ)ᵀ` restricted to weight
-/// rows `[q0, q1)`.
-fn fused_block(
-    x: &Matrix,
-    w: &Matrix,
-    delta: &CompressedDelta,
-    q0: usize,
-    q1: usize,
-    block: &mut Matrix,
-) {
+/// Dense `X·Wᵀ` over the persistent pool (the Hot / no-delta serving
+/// path). Same stripe decomposition and kernels as the fused path, so
+/// it is likewise bit-identical across pool sizes.
+pub fn matmul_nt_pooled(x: &Matrix, w: &Matrix, pool: &ThreadPool) -> Matrix {
+    assert_eq!(x.cols(), w.cols(), "inner dims");
     let t = x.rows();
-    for q in q0..q1 {
-        let wrow = w.row(q);
-        for p in 0..t {
-            block.set(p, q - q0, dot(x.row(p), wrow));
-        }
+    let h_out = w.rows();
+    let mut out = Matrix::zeros(t, h_out);
+    if t == 0 || h_out == 0 {
+        return out;
     }
-    match delta {
-        CompressedDelta::Sparse(csr) => add_csr_rows(x, csr, q0, q1, block),
-        CompressedDelta::Quantized(d) => add_decomposed_rows(x, d, q0, q1, block),
-        CompressedDelta::Dense(m) => {
-            for q in q0..q1 {
-                let drow = m.row(q);
-                for p in 0..t {
-                    let v = block.get(p, q - q0) + dot(x.row(p), drow);
-                    block.set(p, q - q0, v);
-                }
-            }
-        }
-    }
+    run_striped(pool, h_out, &mut out, |q0, q1, shared| {
+        // SAFETY: disjoint column stripes per chunk.
+        unsafe { ops::matmul_nt_block_raw(x, w, q0, q1, shared.as_ptr(), h_out, false) };
+    });
+    out
 }
 
-/// Accumulate the CSR delta contribution for weight rows `[q0, q1)`.
-fn add_csr_rows(x: &Matrix, csr: &CsrMatrix, q0: usize, q1: usize, block: &mut Matrix) {
-    let t = x.rows();
-    for q in q0..q1 {
-        let (cols, vals) = csr.row_entries(q);
-        if cols.is_empty() {
-            continue;
-        }
-        for p in 0..t {
-            let xrow = x.row(p);
-            let mut acc = 0.0f32;
-            for (&c, &v) in cols.iter().zip(vals) {
-                acc += xrow[c as usize] * v;
+/// Accumulate the CSR delta contribution for weight rows `[q0, q1)`
+/// into the output stripe. `xt` is `Xᵀ` (`h_in × t`): entry `(q, c)`
+/// contributes `v · xt[c][·]` to output column `q`, a contiguous
+/// `t`-wide FMA per stored non-zero.
+fn add_csr_rows(
+    xt: &Matrix,
+    csr: &CsrMatrix,
+    q0: usize,
+    q1: usize,
+    out: &SharedSliceMut<'_, f32>,
+    stride: usize,
+) {
+    let t = xt.cols();
+    SCRATCH.with(|s| {
+        let (_, acc) = &mut *s.borrow_mut();
+        acc.resize(t, 0.0);
+        for q in q0..q1 {
+            let (cols, vals) = csr.row_entries(q);
+            if cols.is_empty() {
+                continue;
             }
-            let cur = block.get(p, q - q0);
-            block.set(p, q - q0, cur + acc);
+            acc.fill(0.0);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let xcol = xt.row(c as usize);
+                for (a, &xv) in acc.iter_mut().zip(xcol) {
+                    *a += xv * v;
+                }
+            }
+            for (p, &a) in acc.iter().enumerate() {
+                // SAFETY: column q lies in this chunk's stripe.
+                unsafe { out.slice_mut(p * stride + q, 1)[0] += a };
+            }
         }
-    }
+    });
 }
 
 /// Accumulate the decomposed-delta contribution for weight rows
-/// `[q0, q1)`, dequantizing each part's entries on the fly (codes are
-/// decoded once per weight row, then reused across all `t` activation
-/// rows).
-fn add_decomposed_rows(x: &Matrix, d: &DecomposedDelta, q0: usize, q1: usize, block: &mut Matrix) {
-    let t = x.rows();
-    let mut vals: Vec<f32> = Vec::new();
-    for part in &d.parts {
-        for q in q0..q1 {
-            let lo = part.row_offsets[q] as usize;
-            let hi = part.row_offsets[q + 1] as usize;
-            if lo == hi {
-                continue;
-            }
-            // decode once per weight row via the shared Eq. 12 formula
-            vals.clear();
-            vals.extend((lo..hi).map(|e| d.dequant_entry(part, e)));
-            let cols = &part.col_indices[lo..hi];
-            for p in 0..t {
-                let xrow = x.row(p);
-                let mut acc = 0.0f32;
-                for (&c, &v) in cols.iter().zip(&vals) {
-                    acc += xrow[c as usize] * v;
+/// `[q0, q1)`, dequantizing each part's entries on the fly. Codes are
+/// decoded once per weight row into the worker's scratch buffer, then
+/// applied with the same `t`-wide `Xᵀ` streaming as the CSR path.
+fn add_decomposed_rows(
+    xt: &Matrix,
+    d: &DecomposedDelta,
+    q0: usize,
+    q1: usize,
+    out: &SharedSliceMut<'_, f32>,
+    stride: usize,
+) {
+    let t = xt.cols();
+    SCRATCH.with(|s| {
+        let (vals, acc) = &mut *s.borrow_mut();
+        acc.resize(t, 0.0);
+        for part in &d.parts {
+            for q in q0..q1 {
+                let lo = part.row_offsets[q] as usize;
+                let hi = part.row_offsets[q + 1] as usize;
+                if lo == hi {
+                    continue;
                 }
-                let cur = block.get(p, q - q0);
-                block.set(p, q - q0, cur + acc);
+                // decode once per weight row via the shared Eq. 12 formula
+                vals.clear();
+                vals.extend((lo..hi).map(|e| d.dequant_entry(part, e)));
+                let cols = &part.col_indices[lo..hi];
+                acc.fill(0.0);
+                for (&c, v) in cols.iter().zip(vals.iter()) {
+                    let xcol = xt.row(c as usize);
+                    for (a, &xv) in acc.iter_mut().zip(xcol) {
+                        *a += xv * v;
+                    }
+                }
+                for (p, &a) in acc.iter().enumerate() {
+                    // SAFETY: column q lies in this chunk's stripe.
+                    unsafe { out.slice_mut(p * stride + q, 1)[0] += a };
+                }
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]
@@ -168,7 +238,8 @@ mod tests {
         let delta = CompressedDelta::Sparse(CsrMatrix::from_dense(&dm));
         let want = x.matmul_nt(&w.add(&dm));
         for threads in [1usize, 2, 4, 8] {
-            let got = fused_matmul_nt(&x, &w, &delta, threads);
+            let pool = ThreadPool::new(threads);
+            let got = fused_matmul_nt(&x, &w, &delta, &pool);
             assert!(got.allclose(&want, 1e-5, 1e-5), "threads={threads}");
         }
     }
@@ -184,7 +255,9 @@ mod tests {
             let dec = DecomposedDelta::compress(&csr, k, m);
             let want = x.matmul_nt(&w.add(&dec.to_dense()));
             for threads in [1usize, 3] {
-                let got = fused_matmul_nt(&x, &w, &CompressedDelta::Quantized(dec.clone()), threads);
+                let pool = ThreadPool::new(threads);
+                let got =
+                    fused_matmul_nt(&x, &w, &CompressedDelta::Quantized(dec.clone()), &pool);
                 assert!(got.allclose(&want, 1e-5, 1e-5), "k={k} m={m} threads={threads}");
             }
         }
@@ -196,24 +269,42 @@ mod tests {
         let w = Matrix::randn(9, 16, 0.02, &mut rng);
         let dm = Matrix::randn(9, 16, 0.01, &mut rng);
         let x = Matrix::randn(3, 16, 1.0, &mut rng);
-        let got = fused_matmul_nt(&x, &w, &CompressedDelta::Dense(dm.clone()), 2);
+        let pool = ThreadPool::new(2);
+        let got = fused_matmul_nt(&x, &w, &CompressedDelta::Dense(dm.clone()), &pool);
         let want = x.matmul_nt(&w.add(&dm));
         assert!(got.allclose(&want, 1e-5, 1e-5));
     }
 
     #[test]
     fn thread_count_does_not_change_bits() {
-        // each output element is computed independently, so results are
-        // identical (not just close) across thread counts
+        // each output element is an order-fixed sum computed within one
+        // chunk, so results are identical (not just close) across pool
+        // sizes — including sizes that don't divide the row count
         let mut rng = Pcg64::seeded(4);
         let w = Matrix::randn(33, 40, 0.02, &mut rng);
         let dm = sparse_random(33, 40, 0.15, &mut rng);
         let x = Matrix::randn(7, 40, 1.0, &mut rng);
         let dec = DecomposedDelta::compress(&CsrMatrix::from_dense(&dm), 4, 4);
         let delta = CompressedDelta::Quantized(dec);
-        let one = fused_matmul_nt(&x, &w, &delta, 1);
+        let one = fused_matmul_nt(&x, &w, &delta, &ThreadPool::new(1));
         for threads in [2usize, 3, 5, 16] {
-            assert_eq!(fused_matmul_nt(&x, &w, &delta, threads), one, "threads={threads}");
+            let pool = ThreadPool::new(threads);
+            assert_eq!(fused_matmul_nt(&x, &w, &delta, &pool), one, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pooled_dense_matmul_is_bit_stable_and_correct() {
+        let mut rng = Pcg64::seeded(6);
+        for (t, h_in, h_out) in [(1usize, 48usize, 31usize), (8, 64, 29), (13, 37, 53)] {
+            let x = Matrix::randn(t, h_in, 1.0, &mut rng);
+            let w = Matrix::randn(h_out, h_in, 0.1, &mut rng);
+            let serial = matmul_nt_pooled(&x, &w, &ThreadPool::new(1));
+            assert!(serial.allclose(&x.matmul_nt_naive(&w), 1e-4, 1e-4));
+            for threads in [2usize, 3, 7] {
+                let pool = ThreadPool::new(threads);
+                assert_eq!(matmul_nt_pooled(&x, &w, &pool), serial, "t={t} threads={threads}");
+            }
         }
     }
 
@@ -224,8 +315,25 @@ mod tests {
         let dm = sparse_random(12, 8, 0.4, &mut rng);
         let x = Matrix::randn(1, 8, 1.0, &mut rng);
         let delta = CompressedDelta::Sparse(CsrMatrix::from_dense(&dm));
-        let got = fused_matmul_nt(&x, &w, &delta, 4);
+        let pool = ThreadPool::new(4);
+        let got = fused_matmul_nt(&x, &w, &delta, &pool);
         assert_eq!(got.shape(), (1, 12));
         assert!(got.allclose(&x.matmul_nt(&w.add(&dm)), 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn empty_delta_rows_and_empty_activation() {
+        // rows of Δ with no entries contribute nothing; t=0 short-circuits
+        let mut rng = Pcg64::seeded(7);
+        let w = Matrix::randn(6, 10, 0.02, &mut rng);
+        let mut dm = Matrix::zeros(6, 10);
+        dm.set(2, 3, 0.5); // single populated delta row
+        let delta = CompressedDelta::Sparse(CsrMatrix::from_dense(&dm));
+        let pool = ThreadPool::new(3);
+        let x = Matrix::randn(4, 10, 1.0, &mut rng);
+        let got = fused_matmul_nt(&x, &w, &delta, &pool);
+        assert!(got.allclose(&x.matmul_nt(&w.add(&dm)), 1e-5, 1e-5));
+        let empty = fused_matmul_nt(&Matrix::zeros(0, 10), &w, &delta, &pool);
+        assert_eq!(empty.shape(), (0, 6));
     }
 }

@@ -20,9 +20,11 @@ pub mod fused;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod pool;
 
-pub use fused::fused_matmul_nt;
+pub use fused::{fused_matmul_nt, matmul_nt_pooled};
 pub use native::{FusedDeltaView, NativeBackend};
+pub use pool::{SharedSliceMut, ThreadPool};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{PjrtBackend, PjrtRuntime};
 
@@ -65,6 +67,10 @@ pub trait ExecutionBackend: Send + Sync {
 }
 
 /// Resolve a backend by name ("native" | "pjrt") against serve settings.
+///
+/// The native backend's persistent worker pool is constructed here,
+/// once — every tenant, layer, and request served through the returned
+/// backend shares it (`serve.fused_threads`; `0` = auto-detect).
 ///
 /// "pjrt" fails fast with a clear message when the crate was built
 /// without the `pjrt` feature.

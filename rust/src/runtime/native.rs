@@ -2,6 +2,7 @@
 //! base/Hot path, the fused sparse kernel for the Cold path.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -10,9 +11,10 @@ use crate::delta::format::DeltaSet;
 use crate::model::forward::{forward, generate, WeightSource};
 use crate::model::weights::ModelWeights;
 use crate::model::ModelConfig;
-use crate::runtime::fused::fused_matmul_nt;
+use crate::runtime::fused::{fused_matmul_nt, matmul_nt_pooled};
+use crate::runtime::pool::ThreadPool;
 use crate::runtime::ExecutionBackend;
-use crate::tensor::{ops, Matrix};
+use crate::tensor::Matrix;
 
 /// Weight source that evaluates `X·(W_b + ΔŴ)ᵀ` per linear layer via
 /// the fused sparse kernel — the Cold serving path with zero dense-`Δ`
@@ -21,8 +23,9 @@ use crate::tensor::{ops, Matrix};
 pub struct FusedDeltaView<'a> {
     pub base: &'a ModelWeights,
     pub deltas: &'a BTreeMap<String, CompressedDelta>,
-    /// Row-parallelism of the fused kernel (1 = single-threaded).
-    pub threads: usize,
+    /// The backend's persistent worker pool — shared by every tenant,
+    /// layer, and request (no per-call thread spawns).
+    pub pool: &'a ThreadPool,
 }
 
 impl WeightSource for FusedDeltaView<'_> {
@@ -37,34 +40,68 @@ impl WeightSource for FusedDeltaView<'_> {
     fn linear(&self, name: &str, x: &Matrix) -> Matrix {
         let w = self.base.get(name);
         match self.deltas.get(name) {
-            Some(delta) => fused_matmul_nt(x, w, delta, self.threads),
-            None if self.threads > 1 => ops::matmul_nt_parallel(x, w, self.threads),
-            None => x.matmul_nt(w),
+            Some(delta) => fused_matmul_nt(x, w, delta, self.pool),
+            None => matmul_nt_pooled(x, w, self.pool),
         }
     }
 }
 
 /// Pure-Rust execution backend over `model::forward` — always
-/// available, no external dependencies.
+/// available, no external dependencies. Owns the persistent worker
+/// pool: constructed once (per [`crate::coordinator::Server`] in
+/// serving) and reused for every request on the hot path.
 #[derive(Debug, Clone)]
 pub struct NativeBackend {
-    threads: usize,
+    pool: Arc<ThreadPool>,
 }
 
 impl Default for NativeBackend {
     fn default() -> NativeBackend {
-        NativeBackend { threads: 1 }
+        NativeBackend::new(1)
     }
 }
 
 impl NativeBackend {
-    /// `threads ≤ 1` disables row parallelism in the fused kernel.
+    /// `threads ≤ 1` runs the kernels inline on the calling worker;
+    /// `0` auto-detects hardware parallelism.
     pub fn new(threads: usize) -> NativeBackend {
-        NativeBackend { threads: threads.max(1) }
+        NativeBackend { pool: Arc::new(ThreadPool::new(threads)) }
     }
 
-    fn view<'a>(&self, base: &'a ModelWeights, set: &'a DeltaSet) -> FusedDeltaView<'a> {
-        FusedDeltaView { base, deltas: &set.tensors, threads: self.threads }
+    /// Share an existing pool (e.g. one pool across several backends).
+    pub fn with_pool(pool: Arc<ThreadPool>) -> NativeBackend {
+        NativeBackend { pool }
+    }
+
+    /// The backend's persistent worker pool.
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    fn view<'a>(&'a self, base: &'a ModelWeights, set: &'a DeltaSet) -> FusedDeltaView<'a> {
+        FusedDeltaView { base, deltas: &set.tensors, pool: &self.pool }
+    }
+}
+
+/// Dense weights routed through the pooled matmul — the Hot / no-delta
+/// path. Bit-identical to the single-threaded forward for any pool
+/// size (same stripe kernels as the fused path).
+struct PooledWeights<'a> {
+    weights: &'a ModelWeights,
+    pool: &'a ThreadPool,
+}
+
+impl WeightSource for PooledWeights<'_> {
+    fn config(&self) -> ModelConfig {
+        self.weights.config
+    }
+
+    fn dense(&self, name: &str) -> &Matrix {
+        self.weights.get(name)
+    }
+
+    fn linear(&self, name: &str, x: &Matrix) -> Matrix {
+        matmul_nt_pooled(x, self.weights.get(name), self.pool)
     }
 }
 
@@ -80,7 +117,7 @@ impl ExecutionBackend for NativeBackend {
         tokens: &[u32],
     ) -> Result<Matrix> {
         Ok(match delta {
-            None => forward(base, tokens),
+            None => forward(&PooledWeights { weights: base, pool: &self.pool }, tokens),
             Some(set) => forward(&self.view(base, set), tokens),
         })
     }
@@ -94,7 +131,9 @@ impl ExecutionBackend for NativeBackend {
         eos: Option<u32>,
     ) -> Result<Vec<u32>> {
         Ok(match delta {
-            None => generate(base, prompt, max_new, eos),
+            None => {
+                generate(&PooledWeights { weights: base, pool: &self.pool }, prompt, max_new, eos)
+            }
             Some(set) => generate(&self.view(base, set), prompt, max_new, eos),
         })
     }

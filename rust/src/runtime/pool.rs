@@ -1,0 +1,388 @@
+//! Persistent worker pool for the serving compute core.
+//!
+//! PR 1's kernels spawned fresh OS threads (`std::thread::scope`) on
+//! every `fused_matmul_nt` call — dozens of spawns per forward pass,
+//! thousands per request. This pool is constructed **once** per
+//! [`crate::runtime::NativeBackend`] (and therefore once per
+//! [`crate::coordinator::Server`]) and reused by every tenant, layer,
+//! and request.
+//!
+//! Work model: [`ThreadPool::run`] takes a *chunk count* and a closure
+//! over the chunk index. Chunks are claimed from a shared atomic
+//! counter (self-balancing: a slow chunk doesn't stall the others), the
+//! caller participates in execution, and `run` returns only after every
+//! chunk has finished — which is what makes lending the pool a
+//! non-`'static` closure sound (see the safety comment on [`TaskPtr`]).
+//!
+//! Determinism: *what* a chunk computes depends only on its index, so
+//! results are bit-identical for any pool size or claim order (pinned
+//! by `tests/tiled_matmul.rs`).
+
+use std::marker::PhantomData;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased pointer to the borrowed task closure.
+///
+/// Safety: the pointer is only dereferenced while claiming chunks of a
+/// job whose `finished` count is below `total`; `ThreadPool::run` does
+/// not return until `finished == total`, so the borrow it was created
+/// from is still live for every dereference. Workers that wake late see
+/// the chunk counter exhausted and never touch the pointer again.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+/// One data-parallel job: `total` chunks, claimed via `next`.
+struct Job {
+    task: TaskPtr,
+    next: AtomicUsize,
+    finished: AtomicUsize,
+    total: usize,
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    /// Claim and execute chunks until the counter is exhausted.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                return;
+            }
+            // SAFETY: `finished < total` here, so `run` is still blocked
+            // and the closure it lent us is alive (see TaskPtr docs).
+            let f = unsafe { &*self.task.0 };
+            if std::panic::catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                self.panicked.store(true, Ordering::Release);
+            }
+            if self.finished.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+                let mut flag = self.done.lock().unwrap();
+                *flag = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// The job queue workers watch. Multiple jobs can be in flight at once
+/// (server workers call `run` concurrently); workers help whichever
+/// incomplete job was published first, so no caller silently degrades
+/// to single-threaded while the pool idles on a newer job.
+struct Queue {
+    jobs: Vec<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    work_cv: Condvar,
+}
+
+/// Persistent, scoped-lifetime-safe worker pool.
+///
+/// `ThreadPool::new(n)` provides `n`-way parallelism: `n - 1` parked OS
+/// threads plus the calling thread, which always participates (so a
+/// 1-thread pool spawns nothing and runs inline). Concurrent `run`
+/// calls from different threads are safe: each caller drives its own
+/// job to completion even if the workers are busy elsewhere.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Pool with `threads`-way parallelism. `threads == 0` auto-detects
+    /// from [`std::thread::available_parallelism`]; `threads == 1` runs
+    /// everything inline on the caller.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = resolve_threads(threads);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: Vec::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("deltadq-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Serial pool (1-way; no threads spawned). Handy default.
+    pub fn serial() -> ThreadPool {
+        ThreadPool::new(1)
+    }
+
+    /// Parallelism of this pool (workers + the participating caller).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Execute `task(0..chunks)` across the pool, returning when every
+    /// chunk has finished. Chunk-to-thread assignment is dynamic; the
+    /// closure must derive all effects from the chunk index alone
+    /// (disjoint writes via [`SharedSliceMut`]).
+    pub fn run(&self, chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        if self.workers.is_empty() || chunks == 1 {
+            for i in 0..chunks {
+                task(i);
+            }
+            return;
+        }
+        // Erase the borrow's lifetime for the shared job record; the
+        // completion wait below re-establishes that no dereference
+        // outlives the borrow (see TaskPtr).
+        #[allow(clippy::useless_transmute)] // changes only the lifetime
+        let task_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
+        };
+        let job = Arc::new(Job {
+            task: TaskPtr(task_static as *const (dyn Fn(usize) + Sync)),
+            next: AtomicUsize::new(0),
+            finished: AtomicUsize::new(0),
+            total: chunks,
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut queue = self.shared.queue.lock().unwrap();
+            queue.jobs.push(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        job.work(); // the caller is a worker too
+        let mut flag = job.done.lock().unwrap();
+        while !*flag {
+            flag = job.done_cv.wait(flag).unwrap();
+        }
+        drop(flag);
+        // Unpublish the completed job so its (now dangling) task
+        // pointer doesn't linger in the queue between calls.
+        {
+            let mut queue = self.shared.queue.lock().unwrap();
+            queue.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        if job.panicked.load(Ordering::Acquire) {
+            panic!("pool worker task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut queue = self.shared.queue.lock().unwrap();
+            queue.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("threads", &self.threads()).finish()
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if queue.shutdown {
+                    return;
+                }
+                // Drop jobs whose chunks are all claimed (they finish on
+                // the threads already executing them), then help the
+                // oldest still-open job — FIFO keeps every concurrent
+                // caller's request parallel instead of only the newest.
+                queue.jobs.retain(|j| j.next.load(Ordering::Relaxed) < j.total);
+                if let Some(job) = queue.jobs.first().cloned() {
+                    break job;
+                }
+                queue = shared.work_cv.wait(queue).unwrap();
+            }
+        };
+        job.work();
+    }
+}
+
+/// `0` → available parallelism, otherwise the requested count (min 1).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// A `&mut [T]` that can be handed to pool chunks, each writing a
+/// disjoint range — the primitive that lets fused-kernel workers write
+/// straight into column stripes of the preallocated output instead of
+/// assembling per-worker blocks through `Matrix::set_cols`.
+pub struct SharedSliceMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SharedSliceMut<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSliceMut<'_, T> {}
+
+impl<'a, T> SharedSliceMut<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> SharedSliceMut<'a, T> {
+        SharedSliceMut { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Raw base pointer (for kernels that compute their own offsets;
+    /// the disjointness obligation is the same as [`Self::slice_mut`]).
+    #[inline]
+    pub fn as_ptr(&self) -> *mut T {
+        self.ptr
+    }
+
+    /// Mutable view of `start..start + len`.
+    ///
+    /// # Safety
+    /// Concurrent callers must access pairwise-disjoint ranges, and no
+    /// other reference to this region may be live for the duration.
+    #[inline]
+    #[allow(clippy::mut_from_ref)] // disjointness is the caller contract
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for total in [0usize, 1, 3, 17, 100] {
+            let hits: Vec<AtomicUsize> = (0..total).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(total, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} of {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_runs() {
+        let pool = ThreadPool::new(3);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(8, &|_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 1600);
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = ThreadPool::serial();
+        assert_eq!(pool.threads(), 1);
+        let seen: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(5, &|i| {
+            seen[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(seen.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn disjoint_writes_land() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u32; 64];
+        let shared = SharedSliceMut::new(&mut data);
+        pool.run(8, &|i| {
+            // SAFETY: chunk i owns the disjoint range [i*8, i*8+8).
+            let s = unsafe { shared.slice_mut(i * 8, 8) };
+            for (k, v) in s.iter_mut().enumerate() {
+                *v = (i * 8 + k) as u32;
+            }
+        });
+        for (k, v) in data.iter().enumerate() {
+            assert_eq!(*v, k as u32);
+        }
+    }
+
+    #[test]
+    fn concurrent_runs_from_multiple_threads_complete() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let total = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                let total = total.clone();
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        pool.run(16, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * 16);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // the pool survives a panicked job
+        let c = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn zero_resolves_to_hardware_parallelism() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        let pool = ThreadPool::new(0);
+        assert!(pool.threads() >= 1);
+    }
+}

@@ -3,7 +3,8 @@
 //! Weight matrices follow the paper's convention `W ∈ R^{h_out × h_in}`
 //! and activations `X ∈ R^{t × h_in}`, so the linear layer computes
 //! `A = X Wᵀ` (`matmul_nt`). All hot loops are written to autovectorize;
-//! the blocked/parallel variants live in [`super::ops`].
+//! the register-tiled kernels live in [`super::ops`] and the
+//! pool-parallel drivers in [`crate::runtime`].
 
 use crate::tensor::rng::Pcg64;
 
@@ -208,7 +209,18 @@ impl Matrix {
     /// `self: t×h_in`, `other: h_out×h_in` → `t×h_out`. The NT layout
     /// makes both inner loops stride-1, which is why weights are stored
     /// `h_out×h_in` throughout.
+    ///
+    /// Dispatches to the register-tiled, cache-blocked kernel in
+    /// [`super::ops`] (which itself falls back to the dot-product path
+    /// for shapes too small to amortize panel packing).
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        crate::tensor::ops::matmul_nt_blocked(self, other)
+    }
+
+    /// The unblocked reference `X·Wᵀ` (one [`dot`] per output element) —
+    /// kept as the oracle for the tiled kernel's property tests and the
+    /// baseline for the `kernels` microbench.
+    pub fn matmul_nt_naive(&self, other: &Matrix) -> Matrix {
         assert_eq!(
             self.cols, other.cols,
             "matmul_nt inner dims: {}x{} · ({}x{})ᵀ",
@@ -227,21 +239,41 @@ impl Matrix {
     }
 
     /// `A = self · other` (plain layout) — used for attention `P·V`.
+    ///
+    /// k-blocked: four rows of `other` are folded per pass over the
+    /// output row, quartering output-row traffic vs the rank-1 update
+    /// loop; all-zero activation quartets (the causally-masked suffix
+    /// of an attention row) are skipped in bulk.
     pub fn matmul_nn(&self, other: &Matrix) -> Matrix {
         assert_eq!(
             self.cols, other.rows,
             "matmul_nn inner dims: {}x{} · {}x{}",
             self.rows, self.cols, other.rows, other.cols
         );
-        let mut out = Matrix::zeros(self.rows, other.cols);
+        let n = other.cols;
+        let mut out = Matrix::zeros(self.rows, n);
         for p in 0..self.rows {
             let xrow = self.row(p);
-            let orow = &mut out.data[p * other.cols..(p + 1) * other.cols];
-            for (k, &x) in xrow.iter().enumerate() {
+            let orow = &mut out.data[p * n..(p + 1) * n];
+            let mut k = 0;
+            while k + 4 <= self.cols {
+                let (x0, x1, x2, x3) = (xrow[k], xrow[k + 1], xrow[k + 2], xrow[k + 3]);
+                if x0 != 0.0 || x1 != 0.0 || x2 != 0.0 || x3 != 0.0 {
+                    let b0 = &other.data[k * n..(k + 1) * n];
+                    let b1 = &other.data[(k + 1) * n..(k + 2) * n];
+                    let b2 = &other.data[(k + 2) * n..(k + 3) * n];
+                    let b3 = &other.data[(k + 3) * n..(k + 4) * n];
+                    for i in 0..n {
+                        orow[i] += x0 * b0[i] + x1 * b1[i] + x2 * b2[i] + x3 * b3[i];
+                    }
+                }
+                k += 4;
+            }
+            for (kk, &x) in xrow.iter().enumerate().skip(k) {
                 if x == 0.0 {
                     continue;
                 }
-                let brow = other.row(k);
+                let brow = other.row(kk);
                 for (o, &b) in orow.iter_mut().zip(brow) {
                     *o += x * b;
                 }

@@ -1,6 +1,9 @@
 //! Neural-net operations over [`Matrix`]: softmax, layernorm, GELU,
-//! embedding lookup, plus a thread-parallel blocked matmul used on the
-//! serving hot path.
+//! embedding lookup, plus the register-tiled, cache-blocked matmul
+//! kernels used on the serving hot path (thread-parallel drivers over
+//! these live in [`crate::runtime`], on the persistent pool).
+
+use std::cell::RefCell;
 
 use crate::tensor::matrix::{dot, Matrix};
 
@@ -107,39 +110,215 @@ pub fn argmax_rows(m: &Matrix) -> Vec<u32> {
         .collect()
 }
 
-/// `X · Wᵀ` split across `threads` OS threads by output row blocks of X.
+// --------------------------------------------------------------------
+// Tiled matmul microkernels (§Perf L3 iter 3)
+//
+// `A = X·Wᵀ` with `X: t×k`, `W: h_out×k` — both operands stride-1 over
+// k. The naive kernel re-streams the whole of `W` for every activation
+// row (16 MiB per row at h=2048), so it is memory-bound the moment `W`
+// falls out of L2. The blocked kernel packs `W` into Kc×NR panels
+// (`panel[kk][j] = W[q+j][k0+kk]`) so the microkernel's inner loop is
+// one 8-wide panel load + MR broadcast-FMAs, and each panel is reused
+// across all t activation rows: W traffic drops by t× and the kernel
+// autovectorizes the same way `dot` does.
+//
+// Determinism: every output element is a plain sequential sum over k
+// (k-blocks in order, lanes are per-element scalar chains), so results
+// are bit-identical regardless of panel alignment, stripe boundaries,
+// or thread count — which is what lets the pooled drivers chunk the
+// q-range freely (pinned by `tests/tiled_matmul.rs`).
+
+/// Panel width: weight rows per packed panel (one 8-lane vector).
+pub const TILE_NR: usize = 8;
+/// Activation rows per microkernel step.
+pub const TILE_MR: usize = 4;
+/// k-block: a packed panel is `TILE_KC × TILE_NR` f32 = 16 KiB (≈ L1).
+pub const TILE_KC: usize = 512;
+/// Below this many activation rows the dot-product path wins (panel
+/// packing costs ~one pass over the weight block; with t < 4 the
+/// compute doesn't amortize it).
+const MIN_T_BLOCKED: usize = 4;
+
+thread_local! {
+    /// Per-worker packed-panel scratch (one allocation per pool worker
+    /// for the life of the process, not one per call).
+    static PANEL: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Blocked `X·Wᵀ` restricted to weight rows `[q0, q1)`, written into a
+/// row-major output of row stride `out_stride` at column offset `q0`
+/// (i.e. element `(p, q)` lands at `out[p*out_stride + q]`).
+/// `accumulate = false` overwrites the stripe, `true` adds to it.
 ///
-/// This is the L3 fallback compute path (when the PJRT executable is not
-/// used, e.g. in pure-rust eval of many compressed variants). Scoped
-/// threads keep it allocation-free apart from the output buffer.
-pub fn matmul_nt_parallel(x: &Matrix, w: &Matrix, threads: usize) -> Matrix {
-    assert_eq!(x.cols(), w.cols(), "inner dims");
+/// This is the shared compute core: `Matrix::matmul_nt` calls it over
+/// the full range, and the pooled/fused drivers in [`crate::runtime`]
+/// call it per worker with disjoint `[q0, q1)` stripes.
+///
+/// # Safety
+/// `out` must be valid for `x.rows() * out_stride` elements, with
+/// `q1 <= out_stride`, and no other thread may concurrently access the
+/// stripe columns `[q0, q1)` of any row.
+pub unsafe fn matmul_nt_block_raw(
+    x: &Matrix,
+    w: &Matrix,
+    q0: usize,
+    q1: usize,
+    out: *mut f32,
+    out_stride: usize,
+    accumulate: bool,
+) {
+    debug_assert_eq!(x.cols(), w.cols(), "inner dims");
+    debug_assert!(q1 <= w.rows() && q1 <= out_stride);
     let t = x.rows();
-    let h_out = w.rows();
-    let threads = threads.max(1).min(t.max(1));
-    let mut out = Matrix::zeros(t, h_out);
-    if threads <= 1 || t < 4 {
-        return x.matmul_nt(w);
+    let k = x.cols();
+    if q1 <= q0 || t == 0 {
+        return;
     }
-    let chunk = t.div_ceil(threads);
-    {
-        let out_chunks: Vec<&mut [f32]> = out.data_mut().chunks_mut(chunk * h_out).collect();
-        std::thread::scope(|scope| {
-            for (b, out_block) in out_chunks.into_iter().enumerate() {
-                let x = &x;
-                let w = &w;
-                scope.spawn(move || {
-                    let row0 = b * chunk;
-                    for (i, orow) in out_block.chunks_exact_mut(h_out).enumerate() {
-                        let xrow = x.row(row0 + i);
-                        for (q, o) in orow.iter_mut().enumerate() {
-                            *o = dot(xrow, w.row(q));
-                        }
-                    }
-                });
+    if k == 0 {
+        if !accumulate {
+            for p in 0..t {
+                std::slice::from_raw_parts_mut(out.add(p * out_stride + q0), q1 - q0).fill(0.0);
             }
-        });
+        }
+        return;
     }
+    if t < MIN_T_BLOCKED {
+        // dot path: one pass per (p, q); fastest when packing can't be
+        // amortized across activation rows.
+        for p in 0..t {
+            let xrow = x.row(p);
+            let orow = std::slice::from_raw_parts_mut(out.add(p * out_stride + q0), q1 - q0);
+            for (q, o) in (q0..q1).zip(orow.iter_mut()) {
+                let v = dot(xrow, w.row(q));
+                if accumulate {
+                    *o += v;
+                } else {
+                    *o = v;
+                }
+            }
+        }
+        return;
+    }
+    PANEL.with(|buf| {
+        let mut panel = buf.borrow_mut();
+        panel.resize(TILE_KC * TILE_NR, 0.0);
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = TILE_KC.min(k - k0);
+            let first = k0 == 0 && !accumulate;
+            let mut qp = q0;
+            while qp < q1 {
+                let nr = TILE_NR.min(q1 - qp);
+                pack_panel(w, qp, nr, k0, kc, &mut panel);
+                // SAFETY (all four calls): forwarded from this fn's
+                // contract — `out` covers t×out_stride elements and the
+                // [q0, q1) stripe is exclusively ours; `p0 + M <= t`.
+                let mut p0 = 0;
+                while p0 + TILE_MR <= t {
+                    unsafe {
+                        micro_kernel::<TILE_MR>(
+                            x, p0, k0, kc, &panel, out, out_stride, qp, nr, first,
+                        )
+                    };
+                    p0 += TILE_MR;
+                }
+                match t - p0 {
+                    3 => unsafe {
+                        micro_kernel::<3>(x, p0, k0, kc, &panel, out, out_stride, qp, nr, first)
+                    },
+                    2 => unsafe {
+                        micro_kernel::<2>(x, p0, k0, kc, &panel, out, out_stride, qp, nr, first)
+                    },
+                    1 => unsafe {
+                        micro_kernel::<1>(x, p0, k0, kc, &panel, out, out_stride, qp, nr, first)
+                    },
+                    _ => {}
+                }
+                qp += nr;
+            }
+            k0 += kc;
+        }
+    });
+}
+
+/// Pack `nr` rows of `W` starting at `qp`, k-range `[k0, k0+kc)`, into
+/// `panel[kk*TILE_NR + j]`; lanes `j >= nr` are zero-filled so the
+/// microkernel never branches on the panel remainder.
+fn pack_panel(w: &Matrix, qp: usize, nr: usize, k0: usize, kc: usize, panel: &mut [f32]) {
+    for j in 0..TILE_NR {
+        if j < nr {
+            let wrow = &w.row(qp + j)[k0..k0 + kc];
+            for (kk, &v) in wrow.iter().enumerate() {
+                panel[kk * TILE_NR + j] = v;
+            }
+        } else {
+            for kk in 0..kc {
+                panel[kk * TILE_NR + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// The M×NR register tile: M activation rows against one packed panel.
+/// `acc[mi][j]` accumulates sequentially over kk, so each output element
+/// is an order-fixed scalar sum (determinism), while the j-dimension
+/// (one panel load per kk) autovectorizes 8-wide.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_kernel<const M: usize>(
+    x: &Matrix,
+    p0: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    out: *mut f32,
+    out_stride: usize,
+    qp: usize,
+    nr: usize,
+    overwrite: bool,
+) {
+    let mut acc = [[0.0f32; TILE_NR]; M];
+    let empty: &[f32] = &[];
+    let mut xr: [&[f32]; M] = [empty; M];
+    for (mi, r) in xr.iter_mut().enumerate() {
+        *r = &x.row(p0 + mi)[k0..k0 + kc];
+    }
+    for kk in 0..kc {
+        let wv = &panel[kk * TILE_NR..(kk + 1) * TILE_NR];
+        for mi in 0..M {
+            let xv = xr[mi][kk];
+            for j in 0..TILE_NR {
+                acc[mi][j] += xv * wv[j];
+            }
+        }
+    }
+    for (mi, arow) in acc.iter().enumerate() {
+        let orow = std::slice::from_raw_parts_mut(out.add((p0 + mi) * out_stride + qp), nr);
+        if overwrite {
+            orow.copy_from_slice(&arow[..nr]);
+        } else {
+            for (o, a) in orow.iter_mut().zip(arow) {
+                *o += a;
+            }
+        }
+    }
+}
+
+/// Safe full-range wrapper: blocked `A = X·Wᵀ` into a fresh matrix.
+pub fn matmul_nt_blocked(x: &Matrix, w: &Matrix) -> Matrix {
+    assert_eq!(
+        x.cols(),
+        w.cols(),
+        "matmul_nt inner dims: {}x{} · ({}x{})ᵀ",
+        x.rows(),
+        x.cols(),
+        w.rows(),
+        w.cols()
+    );
+    let mut out = Matrix::zeros(x.rows(), w.rows());
+    let h_out = w.rows();
+    // SAFETY: `out` is exclusively owned and exactly t×h_out.
+    unsafe { matmul_nt_block_raw(x, w, 0, h_out, out.data_mut().as_mut_ptr(), h_out, false) };
     out
 }
 
@@ -252,15 +431,60 @@ mod tests {
     }
 
     #[test]
-    fn parallel_matmul_matches_serial() {
+    fn blocked_matmul_matches_naive() {
         let mut rng = Pcg64::seeded(4);
         let x = Matrix::randn(33, 48, 1.0, &mut rng);
         let w = Matrix::randn(17, 48, 1.0, &mut rng);
-        let serial = x.matmul_nt(&w);
-        for threads in [1, 2, 4, 8] {
-            let par = matmul_nt_parallel(&x, &w, threads);
-            assert!(par.allclose(&serial, 1e-5, 1e-5), "threads={threads}");
+        let naive = x.matmul_nt_naive(&w);
+        let blocked = matmul_nt_blocked(&x, &w);
+        assert!(blocked.allclose(&naive, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn blocked_stripe_equals_full_range() {
+        // computing [q0, q1) stripes must give exactly the full-range
+        // result — the invariant the pooled drivers rely on
+        let mut rng = Pcg64::seeded(5);
+        let x = Matrix::randn(9, 100, 1.0, &mut rng);
+        let w = Matrix::randn(23, 100, 1.0, &mut rng);
+        let full = matmul_nt_blocked(&x, &w);
+        let mut striped = Matrix::zeros(9, 23);
+        for (q0, q1) in [(0usize, 5usize), (5, 6), (6, 21), (21, 23)] {
+            // SAFETY: single-threaded, stripes disjoint, buffer is 9×23.
+            unsafe {
+                matmul_nt_block_raw(&x, &w, q0, q1, striped.data_mut().as_mut_ptr(), 23, false)
+            };
         }
+        assert_eq!(striped, full);
+    }
+
+    #[test]
+    fn blocked_accumulate_adds_on_top() {
+        let mut rng = Pcg64::seeded(6);
+        let x = Matrix::randn(5, 32, 1.0, &mut rng);
+        let a = Matrix::randn(7, 32, 0.5, &mut rng);
+        let b = Matrix::randn(7, 32, 0.5, &mut rng);
+        let mut out = matmul_nt_blocked(&x, &a);
+        // SAFETY: exclusive buffer, full stripe.
+        unsafe { matmul_nt_block_raw(&x, &b, 0, 7, out.data_mut().as_mut_ptr(), 7, true) };
+        let want = x.matmul_nt(&a.add(&b));
+        assert!(out.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn blocked_handles_degenerate_shapes() {
+        // t=0, k=0, h_out=0, and 1×1 all stay well-formed
+        let e = matmul_nt_blocked(&Matrix::zeros(0, 8), &Matrix::zeros(3, 8));
+        assert_eq!(e.shape(), (0, 3));
+        let z = matmul_nt_blocked(&Matrix::zeros(4, 0), &Matrix::zeros(3, 0));
+        assert_eq!(z, Matrix::zeros(4, 3));
+        let n = matmul_nt_blocked(&Matrix::zeros(4, 8), &Matrix::zeros(0, 8));
+        assert_eq!(n.shape(), (4, 0));
+        let one = matmul_nt_blocked(
+            &Matrix::from_vec(1, 1, vec![3.0]),
+            &Matrix::from_vec(1, 1, vec![0.5]),
+        );
+        assert_eq!(one.get(0, 0), 1.5);
     }
 
     #[test]

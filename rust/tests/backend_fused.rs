@@ -7,7 +7,7 @@ use deltadq::compress::CompressedDelta;
 use deltadq::delta::format::DeltaSet;
 use deltadq::model::{forward, ModelConfig, ModelWeights};
 use deltadq::quant::separate::DecomposedDelta;
-use deltadq::runtime::{fused_matmul_nt, ExecutionBackend, NativeBackend};
+use deltadq::runtime::{fused_matmul_nt, ExecutionBackend, NativeBackend, ThreadPool};
 use deltadq::sparse::CsrMatrix;
 use deltadq::tensor::{Matrix, Pcg64};
 
@@ -48,8 +48,9 @@ fn prop_fused_kernel_matches_densify_within_1e5() {
             dec.add_to_dense(&mut densified, 1.0);
             let want = x.matmul_nt(&densified);
             for threads in [1usize, 4] {
+                let pool = ThreadPool::new(threads);
                 let got =
-                    fused_matmul_nt(&x, &w, &CompressedDelta::Quantized(dec.clone()), threads);
+                    fused_matmul_nt(&x, &w, &CompressedDelta::Quantized(dec.clone()), &pool);
                 assert!(
                     got.allclose(&want, 1e-5, 0.0),
                     "case {case} k={k} m={m} threads={threads}"

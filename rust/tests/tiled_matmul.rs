@@ -1,0 +1,178 @@
+//! Property tests for the blocked/pooled compute core (PR 2):
+//!
+//! * the register-tiled `matmul_nt` must match the naive dot-product
+//!   reference across odd and remainder shapes (1×1, prime dims, t=0,
+//!   panel remainders);
+//! * results must be **bit-identical** across pool sizes — for the
+//!   pooled dense matmul, the fused kernel over every delta variant,
+//!   and empty/degenerate deltas — since output elements are
+//!   order-fixed sums computed entirely within one stripe.
+
+use deltadq::compress::CompressedDelta;
+use deltadq::quant::separate::DecomposedDelta;
+use deltadq::runtime::{fused_matmul_nt, matmul_nt_pooled, ThreadPool};
+use deltadq::sparse::CsrMatrix;
+use deltadq::tensor::ops::matmul_nt_blocked;
+use deltadq::tensor::{Matrix, Pcg64};
+
+fn sparse_random(rows: usize, cols: usize, density: f64, rng: &mut Pcg64) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| {
+        if rng.bernoulli(density) {
+            rng.normal() * 0.02
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Property: tiled == naive (within fp reassociation tolerance) across
+/// a sweep of awkward shapes — primes around the MR=4/NR=8/KC=512 tile
+/// boundaries, plus the degenerate ones.
+#[test]
+fn prop_tiled_matches_naive_across_odd_shapes() {
+    let mut rng = Pcg64::seeded(1);
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 7, 3),
+        (2, 13, 5),
+        (3, 31, 17),
+        (4, 8, 8),
+        (5, 523, 9), // k just past one KC=512 block
+        (7, 64, 23),
+        (8, 17, 1),
+        (13, 100, 53),
+        (17, 1024, 64),
+        (0, 16, 8),  // t = 0
+        (4, 0, 8),   // k = 0
+        (4, 16, 0),  // h_out = 0
+    ];
+    for &(t, k, h_out) in shapes {
+        let x = Matrix::randn(t, k, 1.0, &mut rng);
+        let w = Matrix::randn(h_out, k, 0.1, &mut rng);
+        let naive = x.matmul_nt_naive(&w);
+        let tiled = matmul_nt_blocked(&x, &w);
+        assert_eq!(tiled.shape(), naive.shape(), "t={t} k={k} h={h_out}");
+        assert!(tiled.allclose(&naive, 1e-4, 1e-4), "t={t} k={k} h={h_out}");
+    }
+}
+
+/// Property: randomized shape sweep, 100 cases.
+#[test]
+fn prop_tiled_matches_naive_randomized() {
+    let mut rng = Pcg64::seeded(2);
+    for case in 0..100 {
+        let t = rng.below_usize(20);
+        let k = rng.below_usize(80);
+        let h_out = rng.below_usize(40);
+        let x = Matrix::randn(t, k, 1.0, &mut rng);
+        let w = Matrix::randn(h_out, k, 0.1, &mut rng);
+        let naive = x.matmul_nt_naive(&w);
+        let tiled = matmul_nt_blocked(&x, &w);
+        assert!(tiled.allclose(&naive, 1e-4, 1e-4), "case {case}: t={t} k={k} h={h_out}");
+    }
+}
+
+/// Property: the pooled dense matmul is bit-identical for every pool
+/// size (including sizes that don't divide the output width).
+#[test]
+fn prop_pooled_dense_bit_identical_across_pool_sizes() {
+    let mut rng = Pcg64::seeded(3);
+    for &(t, k, h_out) in &[(1usize, 64usize, 67usize), (6, 48, 31), (9, 129, 130)] {
+        let x = Matrix::randn(t, k, 1.0, &mut rng);
+        let w = Matrix::randn(h_out, k, 0.1, &mut rng);
+        let one = matmul_nt_pooled(&x, &w, &ThreadPool::new(1));
+        for threads in [2usize, 3, 5, 8, 16] {
+            let pool = ThreadPool::new(threads);
+            assert_eq!(
+                matmul_nt_pooled(&x, &w, &pool),
+                one,
+                "t={t} k={k} h={h_out} threads={threads}"
+            );
+        }
+    }
+}
+
+/// Property: the fused kernel is bit-identical across pool sizes for
+/// every delta variant — CSR, decomposed at several (k, m), and dense —
+/// including deltas with empty rows and fully-empty deltas.
+#[test]
+fn prop_fused_bit_identical_across_pool_sizes() {
+    let mut rng = Pcg64::seeded(4);
+    let h_out = 45;
+    let h_in = 52;
+    let w = Matrix::randn(h_out, h_in, 0.02, &mut rng);
+    let dm = sparse_random(h_out, h_in, 0.15, &mut rng); // many empty rows
+    let csr = CsrMatrix::from_dense(&dm);
+    let variants = [
+        CompressedDelta::Sparse(csr.clone()),
+        CompressedDelta::Sparse(CsrMatrix::empty(h_out, h_in)), // no entries at all
+        CompressedDelta::Quantized(DecomposedDelta::compress(&csr, 8, 1)),
+        CompressedDelta::Quantized(DecomposedDelta::compress(&csr, 4, 8)),
+        CompressedDelta::Quantized(DecomposedDelta::compress(&csr, 2, 4)), // zero-bit codes
+        CompressedDelta::Dense(Matrix::randn(h_out, h_in, 0.01, &mut rng)),
+    ];
+    for t in [1usize, 5, 8] {
+        let x = Matrix::randn(t, h_in, 1.0, &mut rng);
+        for (vi, delta) in variants.iter().enumerate() {
+            let one = fused_matmul_nt(&x, &w, delta, &ThreadPool::new(1));
+            for threads in [2usize, 4, 7, 16] {
+                let pool = ThreadPool::new(threads);
+                assert_eq!(
+                    fused_matmul_nt(&x, &w, delta, &pool),
+                    one,
+                    "variant {vi} t={t} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+/// The empty-delta fused product equals the plain matmul exactly (the
+/// base term goes through the identical stripe kernel).
+#[test]
+fn fused_with_empty_delta_equals_pooled_dense() {
+    let mut rng = Pcg64::seeded(5);
+    let w = Matrix::randn(33, 40, 0.1, &mut rng);
+    let x = Matrix::randn(6, 40, 1.0, &mut rng);
+    let empty = CompressedDelta::Sparse(CsrMatrix::empty(33, 40));
+    for threads in [1usize, 4] {
+        let pool = ThreadPool::new(threads);
+        let fused = fused_matmul_nt(&x, &w, &empty, &pool);
+        let dense = matmul_nt_pooled(&x, &w, &pool);
+        assert_eq!(fused, dense, "threads={threads}");
+    }
+}
+
+/// One pool, many shapes and calls — the persistent pool must be
+/// reusable across layers/requests without re-spawning (smoke test for
+/// the serving usage pattern).
+#[test]
+fn one_pool_serves_many_calls() {
+    let mut rng = Pcg64::seeded(6);
+    let pool = ThreadPool::new(4);
+    for i in 0..30 {
+        let t = 1 + (i % 5);
+        let h = 16 + 7 * (i % 4);
+        let x = Matrix::randn(t, h, 1.0, &mut rng);
+        let w = Matrix::randn(h + 3, h, 0.1, &mut rng);
+        let dm = sparse_random(h + 3, h, 0.2, &mut rng);
+        let delta = CompressedDelta::Sparse(CsrMatrix::from_dense(&dm));
+        let got = fused_matmul_nt(&x, &w, &delta, &pool);
+        let want = x.matmul_nt(&w.add(&dm));
+        assert!(got.allclose(&want, 1e-5, 1e-5), "call {i}");
+    }
+}
+
+/// matmul_nn (k-blocked) still matches matmul_nt of the transpose
+/// across remainder shapes (k % 4 ∈ {0,1,2,3}).
+#[test]
+fn blocked_nn_matches_nt_of_transpose() {
+    let mut rng = Pcg64::seeded(7);
+    for k in [1usize, 2, 3, 4, 5, 7, 8, 9, 31] {
+        let a = Matrix::randn(5, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, 6, 1.0, &mut rng);
+        let nn = a.matmul_nn(&b);
+        let nt = a.matmul_nt_naive(&b.transpose());
+        assert!(nn.allclose(&nt, 1e-4, 1e-4), "k={k}");
+    }
+}
