@@ -29,6 +29,8 @@ use crate::runtime::pool::{resolve_threads, ThreadPool};
 use crate::runtime::{fused_matmul_nt, ExecutionBackend};
 use crate::search::{search_direct, search_proxy};
 use crate::sparse::CsrMatrix;
+use crate::store::DeltaStore;
+use crate::tensor::stats::percentile;
 use crate::tensor::{dot, Matrix, Pcg64};
 use crate::util::bench::{bench, BenchResult};
 use crate::util::json::Json;
@@ -888,4 +890,195 @@ fn ref_fused_scalar(x: &Matrix, w: &Matrix, delta: &CompressedDelta) -> Matrix {
         }
     }
     out
+}
+
+// --------------------------------------------------------------- churn
+
+/// E12: tenant churn at scale — the tiered store under a registered
+/// population far larger than the resident `delta_budget`. Pushes N
+/// tenants into a scratch [`DeltaStore`], serves them through the
+/// coordinator with every tenant starting at Disk, and measures (a)
+/// cold-start latency (first request per tenant: hydration + serve) and
+/// (b) steady-state latency/throughput under a Zipf-distributed tenant
+/// mix, where the popular head stays Cold-resident and the tail pages
+/// in and out. Writes machine-readable `BENCH_churn.json`.
+///
+/// `DELTADQ_BENCH_QUICK=1` switches to CI mode: 10 tenants, capacity 3,
+/// 40 steady requests — enough to exercise hydration, demotion, and the
+/// emitted JSON.
+pub fn churn(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<String> {
+    let quick = std::env::var("DELTADQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (n_tenants, resident_capacity, steady_requests) =
+        if quick { (10usize, 3usize, 40usize) } else { (48, 8, 400) };
+    const ZIPF_S: f64 = 1.1;
+
+    let mut rng = Pcg64::seeded(0xC1124);
+    let base = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+
+    // a scratch store populated with synthesized fine-tune deltas
+    let root = std::env::temp_dir().join(format!("deltadq-bench-churn-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = Arc::new(DeltaStore::open_or_create(&root)?);
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(DEFAULT_GROUP)));
+    let mut per_tenant_bytes = 0u64;
+    for i in 0..n_tenants {
+        let mut ft = (*base).clone();
+        for name in base.config.delta_tensor_names() {
+            let (r, c) = ft.get(&name).shape();
+            let d = Matrix::randn(r, c, 0.001, &mut rng);
+            ft.get_mut(&name).add_assign(&d);
+        }
+        let deltas = extract_deltas(&base, &ft);
+        let set = compress_model_deltas(&deltas, &dq, &BTreeMap::new(), &mut rng);
+        per_tenant_bytes = store.push(&format!("t{i}"), &set)?;
+    }
+    // resident budget: ~resident_capacity tenants' compressed deltas.
+    // Measured against DeltaSet::storage_bits (the store accounting is
+    // close but not identical); the half-tenant slack absorbs the gap.
+    let delta_budget = per_tenant_bytes * resident_capacity as u64 + per_tenant_bytes / 2;
+
+    let options = ServerOptions {
+        workers: 2,
+        max_batch: 4,
+        batch_window: Duration::from_micros(200),
+        promote_after: u64::MAX, // stay on the fused Cold path
+        delta_budget: Some(delta_budget),
+        ..Default::default()
+    };
+    let server = Server::with_store(base, options, backend.clone(), store.clone())?;
+
+    let prompts: Vec<Vec<u32>> = gen_dataset(TaskKind::Math, 16, 5)
+        .into_iter()
+        .map(|s| s.prompt)
+        .collect();
+    let recv_timeout = Duration::from_secs(120);
+
+    // phase 1: cold sweep — first touch of every tenant pays Disk→Cold
+    let mut cold_ms: Vec<f64> = Vec::new();
+    for i in 0..n_tenants {
+        let rx = server.submit(&format!("t{i}"), prompts[i % prompts.len()].clone(), 2)?;
+        let resp = rx.recv_timeout(recv_timeout)?;
+        if let Some(e) = &resp.error {
+            anyhow::bail!("cold sweep: tenant t{i} failed: {e}");
+        }
+        cold_ms.push(resp.total.as_secs_f64() * 1e3);
+    }
+
+    // phase 2: steady state — Zipf-distributed tenant mix in waves
+    let cdf = zipf_cdf(n_tenants, ZIPF_S);
+    let mut steady_ms: Vec<f64> = Vec::new();
+    let t0 = Instant::now();
+    let mut submitted = 0usize;
+    while submitted < steady_requests {
+        let wave = 8.min(steady_requests - submitted);
+        let mut rxs = Vec::with_capacity(wave);
+        for _ in 0..wave {
+            let tenant = format!("t{}", sample_zipf(&cdf, &mut rng));
+            let prompt = prompts[submitted % prompts.len()].clone();
+            rxs.push(server.submit(&tenant, prompt, 2)?);
+            submitted += 1;
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(recv_timeout)?;
+            if let Some(e) = &resp.error {
+                anyhow::bail!("steady phase: tenant {} failed: {e}", resp.tenant);
+            }
+            steady_ms.push(resp.total.as_secs_f64() * 1e3);
+        }
+    }
+    let steady_elapsed = t0.elapsed().as_secs_f64();
+    let throughput = steady_requests as f64 / steady_elapsed.max(1e-9);
+
+    let tiers = server.metrics.tiers.clone();
+    let disk_loads = tiers.disk_loads.load(std::sync::atomic::Ordering::Relaxed);
+    let demotions = tiers.demotions.load(std::sync::atomic::Ordering::Relaxed);
+    let bytes_read = tiers.store_bytes_read.load(std::sync::atomic::Ordering::Relaxed);
+    let errors = server.metrics.backend_errors.load(std::sync::atomic::Ordering::Relaxed);
+    let completed = server.metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed);
+    let resident_now = server
+        .tier_residency()
+        .into_iter()
+        .filter(|(_, tier, _)| *tier != crate::coordinator::Tier::Disk)
+        .count();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+
+    let mut root_json = Json::obj();
+    root_json
+        .set("bench", "churn")
+        .set("schema", 1u64)
+        .set("quick", quick)
+        .set("tenants", n_tenants)
+        .set("resident_capacity", resident_capacity)
+        .set("delta_budget_bytes", delta_budget)
+        .set("per_tenant_bytes", per_tenant_bytes)
+        .set("zipf_s", ZIPF_S)
+        .set("requests_steady", steady_requests)
+        .set("completed", completed)
+        .set("backend_errors", errors)
+        .set("cold_start_ms", latency_stats(&cold_ms))
+        .set("steady_ms", latency_stats(&steady_ms))
+        .set("steady_throughput_rps", throughput)
+        .set("disk_loads", disk_loads)
+        .set("demotions", demotions)
+        .set("store_bytes_read", bytes_read)
+        .set("resident_tenants_end", resident_now);
+    std::fs::write(json_path, root_json.to_string())
+        .with_context(|| format!("write {json_path:?}"))?;
+
+    let mut out = format!(
+        "## Churn — {n_tenants} tenants through a {resident_capacity}-tenant resident budget \
+         (Zipf s={ZIPF_S})\n"
+    );
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    out.push_str(&format!(
+        "cold start: mean {:.2}ms p50 {:.2}ms p99 {:.2}ms over {} first-touches\n",
+        mean(&cold_ms),
+        percentile(&cold_ms, 50.0),
+        percentile(&cold_ms, 99.0),
+        cold_ms.len()
+    ));
+    out.push_str(&format!(
+        "steady state: {throughput:.1} req/s, mean {:.2}ms p50 {:.2}ms p99 {:.2}ms\n",
+        mean(&steady_ms),
+        percentile(&steady_ms, 50.0),
+        percentile(&steady_ms, 99.0)
+    ));
+    out.push_str(&format!(
+        "tiering: {disk_loads} disk loads, {demotions} demotions, {bytes_read} bytes read, \
+         {resident_now}/{n_tenants} resident at end\n"
+    ));
+    out.push_str(&format!("wrote {}\n", json_path.display()));
+    Ok(out)
+}
+
+/// Latency stats sub-object for the churn JSON.
+fn latency_stats(xs: &[f64]) -> Json {
+    let mean = xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    let mut o = Json::obj();
+    o.set("mean", mean)
+        .set("p50", percentile(xs, 50.0))
+        .set("p99", percentile(xs, 99.0))
+        .set("n", xs.len());
+    o
+}
+
+/// Cumulative distribution of a Zipf(s) law over ranks `0..n`.
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let weights: Vec<f64> = (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    weights
+        .iter()
+        .map(|w| {
+            acc += w / total;
+            acc
+        })
+        .collect()
+}
+
+/// Inverse-CDF sample: rank of the tenant to hit.
+fn sample_zipf(cdf: &[f64], rng: &mut Pcg64) -> usize {
+    let u = rng.next_f64();
+    cdf.iter().position(|&c| u < c).unwrap_or(cdf.len() - 1)
 }

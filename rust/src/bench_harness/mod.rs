@@ -37,6 +37,10 @@ pub fn run(
         // machine-readable trajectory file next to the report
         // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
         "kernels" => experiments::kernels(Path::new("BENCH_kernels.json")),
+        // tenant churn through the tiered delta store: N registered ≫
+        // resident budget; cold-start + steady-state under a Zipf mix
+        // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
+        "churn" => experiments::churn(backend, Path::new("BENCH_churn.json")),
         "all" => {
             let mut out = String::new();
             for exp in [

@@ -210,6 +210,13 @@ pub struct ServeConfig {
     pub fused_threads: usize,
     /// Fixed sequence length of the AOT prefill artifacts (pjrt only).
     pub pjrt_seq_len: usize,
+    /// Delta store root (`[store] path`). None = no disk tier: every
+    /// tenant stays Cold-resident forever (the pre-store behavior).
+    pub store_path: Option<String>,
+    /// Resident compressed-delta budget in MiB (`[store]
+    /// delta_budget_mib`; 0 = unbounded). Bounds the Cold tier — the
+    /// working set the server keeps hydrated out of the store.
+    pub delta_budget_mib: u64,
 }
 
 impl ServeConfig {
@@ -225,6 +232,8 @@ impl ServeConfig {
             backend: c.str_or("serve.backend", "native"),
             fused_threads: c.int_or("serve.fused_threads", 1) as usize,
             pjrt_seq_len: c.int_or("serve.pjrt_seq_len", 48) as usize,
+            store_path: c.get("store.path").and_then(|v| v.as_str()).map(str::to_string),
+            delta_budget_mib: c.int_or("store.delta_budget_mib", 0) as u64,
         }
     }
 }
@@ -292,6 +301,17 @@ ratios = [2, 4, 8]
         assert_eq!(sc.backend, "native");
         assert_eq!(sc.fused_threads, 1);
         assert_eq!(sc.pjrt_seq_len, 48);
+        assert_eq!(sc.store_path, None);
+        assert_eq!(sc.delta_budget_mib, 0);
+    }
+
+    #[test]
+    fn serve_config_reads_store_section() {
+        let c = Config::parse("[store]\npath = \"artifacts/store\"\ndelta_budget_mib = 64")
+            .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.store_path.as_deref(), Some("artifacts/store"));
+        assert_eq!(sc.delta_budget_mib, 64);
     }
 
     #[test]

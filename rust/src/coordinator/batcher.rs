@@ -96,6 +96,17 @@ impl Batcher {
         inner.queues.entry(tenant.to_string()).or_default();
     }
 
+    /// Drop a tenant's queue. Queued requests are dropped with it —
+    /// their response senders close, so waiting callers see a
+    /// disconnect immediately instead of a timeout. Later submissions
+    /// get `UnknownTenant`.
+    pub fn remove_tenant(&self, tenant: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.queues.remove(tenant);
+        drop(inner);
+        self.cv.notify_all();
+    }
+
     /// Enqueue a request.
     pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
         let mut inner = self.inner.lock().unwrap();
@@ -245,6 +256,21 @@ mod tests {
         let b = Batcher::new(4, Duration::from_millis(1), 4);
         let (r, _rx) = req("ghost", 1);
         assert_eq!(b.submit(r).unwrap_err(), SubmitError::UnknownTenant("ghost".into()));
+    }
+
+    #[test]
+    fn remove_tenant_rejects_and_disconnects() {
+        let b = Batcher::new(4, Duration::from_millis(50), 16);
+        b.add_tenant("a");
+        let (r, rx) = req("a", 1);
+        b.submit(r).unwrap();
+        b.remove_tenant("a");
+        // queued request's sender dropped with the queue → disconnect
+        assert!(matches!(rx.try_recv(), Err(mpsc::TryRecvError::Disconnected)));
+        // later submissions are unknown, not silently queued
+        let (r2, _rx2) = req("a", 2);
+        assert_eq!(b.submit(r2).unwrap_err(), SubmitError::UnknownTenant("a".into()));
+        assert_eq!(b.queued(), 0);
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //! snapshot-able as JSON for the demo server's periodic report.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use crate::coordinator::tenant::TierCounters;
 use crate::tensor::stats::Accumulator;
 use crate::util::json::Json;
 
@@ -19,6 +20,13 @@ pub struct Metrics {
     pub evictions: AtomicU64,
     /// Requests whose execution backend returned an error.
     pub backend_errors: AtomicU64,
+    /// Storage-tier counters (`disk_loads` / `demotions` /
+    /// `store_bytes_read`). Shared with the [`TenantStore`]'s loader
+    /// thread when the server runs over a delta store, so the snapshot
+    /// reports tier churn without a second source of truth.
+    ///
+    /// [`TenantStore`]: crate::coordinator::TenantStore
+    pub tiers: Arc<TierCounters>,
     /// End-to-end request latency (seconds).
     latency: Mutex<Accumulator>,
     /// Queue wait before batch pickup (seconds).
@@ -34,6 +42,12 @@ const RECENT_CAP: usize = 4096;
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Metrics whose tier counters alias the tenant store's (tiered
+    /// serving: the loader thread writes, the snapshot reads).
+    pub fn with_tiers(tiers: Arc<TierCounters>) -> Metrics {
+        Metrics { tiers, ..Metrics::default() }
     }
 
     pub fn observe_latency(&self, seconds: f64) {
@@ -75,6 +89,9 @@ impl Metrics {
         o.set("promotions", self.promotions.load(Ordering::Relaxed));
         o.set("evictions", self.evictions.load(Ordering::Relaxed));
         o.set("backend_errors", self.backend_errors.load(Ordering::Relaxed));
+        o.set("disk_loads", self.tiers.disk_loads.load(Ordering::Relaxed));
+        o.set("demotions", self.tiers.demotions.load(Ordering::Relaxed));
+        o.set("store_bytes_read", self.tiers.store_bytes_read.load(Ordering::Relaxed));
         o.set("latency_mean_s", self.mean_latency());
         o.set("latency_p50_s", self.latency_percentile(50.0));
         o.set("latency_p99_s", self.latency_percentile(99.0));
@@ -112,6 +129,21 @@ mod tests {
         }
         assert!((m.latency_percentile(50.0) - 50.5).abs() < 1.0);
         assert!(m.latency_percentile(99.0) > 95.0);
+    }
+
+    #[test]
+    fn tier_counters_shared_and_snapshotted() {
+        let tiers = Arc::new(TierCounters::default());
+        let m = Metrics::with_tiers(tiers.clone());
+        // the store side writes through its own Arc...
+        tiers.disk_loads.fetch_add(3, Ordering::Relaxed);
+        tiers.demotions.fetch_add(2, Ordering::Relaxed);
+        tiers.store_bytes_read.fetch_add(4096, Ordering::Relaxed);
+        // ...and the metrics snapshot sees it
+        let snap = m.snapshot().to_string();
+        assert!(snap.contains("\"disk_loads\":3"), "{snap}");
+        assert!(snap.contains("\"demotions\":2"), "{snap}");
+        assert!(snap.contains("\"store_bytes_read\":4096"), "{snap}");
     }
 
     #[test]

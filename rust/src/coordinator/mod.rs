@@ -1,6 +1,6 @@
 //! L3 serving coordinator (S10): multi-tenant request routing, dynamic
-//! batching, Hot/Cold tenant residency, and the demo-server driver used
-//! by `deltadq serve`.
+//! batching, Disk/Cold/Hot tenant residency over the delta store, and
+//! the demo-server driver used by `deltadq serve`.
 //!
 //! Architecture (vLLM-router-like, adapted to delta serving):
 //!
@@ -9,7 +9,8 @@
 //!                 │  oldest-head-first tenant pick + batch window
 //!                 ▼
 //!   worker pool ──▶ TenantStore.acquire()  (Hot dense cache | Cold
-//!                 │  compressed deltas → separate computation)
+//!                 │  compressed deltas → separate computation |
+//!                 │  Disk → loader thread hydrates from DeltaStore)
 //!                 ▼
 //!   generate() per request ─▶ Response channel, Metrics
 //! ```
@@ -22,7 +23,7 @@ pub mod tenant;
 pub use batcher::{Batcher, Request, Response, SubmitError};
 pub use metrics::Metrics;
 pub use server::{Server, ServerOptions};
-pub use tenant::{TenantStore, TenantView};
+pub use tenant::{TenantStore, TenantView, Tier, TierCounters};
 
 use std::path::Path;
 use std::sync::Arc;
@@ -34,6 +35,7 @@ use crate::config::ServeConfig;
 use crate::delta::format::load_delta_set;
 use crate::eval::tasks::{gen_dataset, TaskKind};
 use crate::model::load_weights;
+use crate::store::DeltaStore;
 use crate::tensor::Pcg64;
 
 /// Load a server from artifacts (`base.dqw` + `<tenant>.ddq` per
@@ -41,6 +43,12 @@ use crate::tensor::Pcg64;
 /// DeltaDQ compression of their `.dqw` fine-tune if present. The
 /// execution backend is resolved from `serve.backend`
 /// ("native" | "pjrt").
+///
+/// With `[store] path` configured, the server runs tiered: every tenant
+/// already in the store starts at Disk (manifest entry only, hydrated
+/// on first request, resident set bounded by `delta_budget_mib`), and
+/// requested tenants *not* yet in the store are compressed/loaded once
+/// and pushed — so the next launch serves them straight from the store.
 pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
     let dir = Path::new(&serve.artifacts_dir);
     let scale_dir = dir.join(&serve.model);
@@ -58,11 +66,26 @@ pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
         } else {
             Some(serve.cache_budget_mib * 1024 * 1024)
         },
+        delta_budget: if serve.delta_budget_mib == 0 {
+            None
+        } else {
+            Some(serve.delta_budget_mib * 1024 * 1024)
+        },
         promote_after: 8,
     };
     let backend = crate::runtime::backend_from_name(&serve.backend, serve)?;
-    let server = Server::with_backend(base.clone(), options, backend);
+    let delta_store = match &serve.store_path {
+        Some(path) => Some(Arc::new(DeltaStore::open_or_create(Path::new(path))?)),
+        None => None,
+    };
+    let server = match &delta_store {
+        Some(store) => Server::with_store(base.clone(), options, backend, store.clone())?,
+        None => Server::with_backend(base.clone(), options, backend),
+    };
     for tenant in tenants {
+        if server.tenants().iter().any(|t| t == tenant) {
+            continue; // already registered from the store manifest
+        }
         let ddq = scale_dir.join(format!("{tenant}.ddq"));
         let set = if ddq.exists() {
             load_delta_set(&ddq)?
@@ -83,7 +106,11 @@ pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
                 &mut rng,
             )
         };
-        server.register_tenant(tenant, set);
+        if delta_store.is_some() {
+            server.push_tenant(tenant, set)?;
+        } else {
+            server.register_tenant(tenant, set);
+        }
     }
     Ok(server)
 }
@@ -150,7 +177,7 @@ pub fn run_demo_server(
         m.latency_percentile(50.0) * 1e3,
         m.latency_percentile(99.0) * 1e3
     );
-    println!("residency: {:?}", server.residency());
+    println!("residency: {:?}", server.tier_residency());
     println!("metrics: {}", m.snapshot().to_string());
     server.shutdown();
     Ok(())

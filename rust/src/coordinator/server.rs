@@ -7,13 +7,16 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use anyhow::Result;
+
 use crate::coordinator::batcher::{Batcher, Request, Response, SubmitError};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::tenant::{TenantStore, TenantView};
+use crate::coordinator::tenant::{TenantStore, TenantView, Tier};
 use crate::delta::format::DeltaSet;
 use crate::eval::tasks::vocab;
 use crate::model::weights::ModelWeights;
 use crate::runtime::{ExecutionBackend, NativeBackend};
+use crate::store::DeltaStore;
 
 /// Server construction knobs (a subset of [`crate::config::ServeConfig`]
 /// resolved to concrete values).
@@ -25,6 +28,10 @@ pub struct ServerOptions {
     pub workers: usize,
     /// Dense-cache byte budget (None = unbounded).
     pub cache_budget: Option<u64>,
+    /// Resident compressed-delta byte budget for the Cold tier (None =
+    /// unbounded). Only meaningful with an attached delta store — an
+    /// in-memory tenant has nowhere to be demoted to.
+    pub delta_budget: Option<u64>,
     /// Promote to Hot after this many served requests.
     pub promote_after: u64,
 }
@@ -37,6 +44,7 @@ impl Default for ServerOptions {
             queue_depth: 256,
             workers: 4,
             cache_budget: None,
+            delta_budget: None,
             promote_after: 8,
         }
     }
@@ -71,12 +79,45 @@ impl Server {
             options.cache_budget,
             options.promote_after,
         ));
+        Server::over_store(store, options, backend)
+    }
+
+    /// Start the worker pool over an on-disk [`DeltaStore`]: every
+    /// tenant in the store manifest is registered at Disk tier (zero
+    /// RAM) and hydrated by the background loader on first request;
+    /// `options.delta_budget` bounds the resident Cold tier.
+    pub fn with_store(
+        base: Arc<ModelWeights>,
+        options: ServerOptions,
+        backend: Arc<dyn ExecutionBackend>,
+        delta_store: Arc<DeltaStore>,
+    ) -> Result<Server> {
+        let store = Arc::new(TenantStore::with_disk(
+            base,
+            options.cache_budget,
+            options.delta_budget,
+            options.promote_after,
+            delta_store.clone(),
+        ));
+        let server = Server::over_store(store, options, backend);
+        for tenant in delta_store.tenants() {
+            server.store.register_disk(&tenant)?;
+            server.batcher.add_tenant(&tenant);
+        }
+        Ok(server)
+    }
+
+    fn over_store(
+        store: Arc<TenantStore>,
+        options: ServerOptions,
+        backend: Arc<dyn ExecutionBackend>,
+    ) -> Server {
         let batcher = Arc::new(Batcher::new(
             options.max_batch,
             options.batch_window,
             options.queue_depth,
         ));
-        let metrics = Arc::new(Metrics::new());
+        let metrics = Arc::new(Metrics::with_tiers(store.tiers()));
         let mut workers = Vec::new();
         for _ in 0..options.workers.max(1) {
             let store = store.clone();
@@ -95,10 +136,26 @@ impl Server {
         self.backend.name()
     }
 
-    /// Register a tenant's compressed deltas.
+    /// Register a tenant's compressed deltas (in memory; not demotable).
     pub fn register_tenant(&self, tenant: &str, deltas: DeltaSet) {
         self.store.register(tenant, deltas);
         self.batcher.add_tenant(tenant);
+    }
+
+    /// Hot registration against the delta store: persist + serve. The
+    /// artifact I/O happens before the tenant becomes routable, so the
+    /// worker loop never blocks on it.
+    pub fn push_tenant(&self, tenant: &str, deltas: DeltaSet) -> Result<u64> {
+        let bytes = self.store.push(tenant, deltas)?;
+        self.batcher.add_tenant(tenant);
+        Ok(bytes)
+    }
+
+    /// Hot removal: stop routing (queued requests see a disconnect),
+    /// drop residency, delete the artifact.
+    pub fn remove_tenant(&self, tenant: &str) -> Result<bool> {
+        self.batcher.remove_tenant(tenant);
+        self.store.remove(tenant)
     }
 
     pub fn tenants(&self) -> Vec<String> {
@@ -137,6 +194,11 @@ impl Server {
         self.store.snapshot()
     }
 
+    /// Three-tier residency snapshot (tenant, tier, requests served).
+    pub fn tier_residency(&self) -> Vec<(String, Tier, u64)> {
+        self.store.tier_snapshot()
+    }
+
     /// Drain queues and stop workers.
     pub fn shutdown(mut self) {
         self.batcher.close();
@@ -155,7 +217,21 @@ fn worker_loop(
     while let Some((tenant, batch)) = batcher.next_batch() {
         let exec_start = Instant::now();
         let Some(acquired) = store.acquire(&tenant, batch.len() as u64) else {
-            continue; // tenant vanished
+            // tenant vanished or its hydration failed — answer the batch
+            // with an error instead of leaving callers to time out
+            for req in batch {
+                metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(Response {
+                    id: req.id,
+                    tenant: tenant.clone(),
+                    tokens: Vec::new(),
+                    queue_wait: exec_start.duration_since(req.submitted),
+                    total: req.submitted.elapsed(),
+                    served_hot: false,
+                    error: Some(format!("tenant '{tenant}' unavailable")),
+                });
+            }
+            continue;
         };
         if acquired.promoted {
             metrics.promotions.fetch_add(1, Ordering::Relaxed);

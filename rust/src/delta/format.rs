@@ -9,7 +9,7 @@
 //!
 //! ```text
 //! magic    b"DDQD"
-//! version  u32 (=1)
+//! version  u32 (=2; v1 files — no trailer — remain readable)
 //! method   str16        (length-prefixed utf-8, u16 length)
 //! ratio    f64          nominal compression ratio
 //! count    u32          number of tensors
@@ -21,11 +21,12 @@
 //!   Quantized: rows u32 | cols u32 | k u32 | m u32 | scale f32 | zero i32
 //!              | per part: nnz u32 | offsets u32[rows+1] | cols u32[nnz]
 //!                | words u64: n_words u32 then u64[n_words]
+//! crc32    u32 (v2+)    CRC-32 of every preceding byte — truncated or
+//!                       bit-flipped files fail loudly at load time
 //! ```
 
 use std::collections::BTreeMap;
-use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -35,9 +36,13 @@ use crate::quant::separate::{DecomposedDelta, QuantPart};
 use crate::quant::uniform::QuantParams;
 use crate::sparse::bitpack::PackedCodes;
 use crate::sparse::csr::CsrMatrix;
+use crate::util::crc32::crc32;
 
 const MAGIC: &[u8; 4] = b"DDQD";
-const VERSION: u32 = 1;
+/// Current write version. v2 appends the trailing CRC-32.
+const VERSION: u32 = 2;
+/// Oldest version still readable (pre-checksum files).
+const MIN_VERSION: u32 = 1;
 
 /// A named set of compressed deltas plus provenance metadata.
 #[derive(Debug, Clone)]
@@ -142,32 +147,48 @@ fn write_quantized(w: &mut impl Write, d: &DecomposedDelta) -> Result<()> {
     Ok(())
 }
 
-/// Save a delta set to a `.ddq` file.
-pub fn save_delta_set(path: &Path, set: &DeltaSet) -> Result<()> {
-    let file = File::create(path).with_context(|| format!("create {path:?}"))?;
-    let mut w = BufWriter::new(file);
-    w.write_all(MAGIC)?;
-    w_u32(&mut w, VERSION)?;
-    w_str16(&mut w, &set.method)?;
-    w.write_all(&set.nominal_ratio.to_le_bytes())?;
-    w_u32(&mut w, set.tensors.len() as u32)?;
-    for (name, tensor) in &set.tensors {
-        w_str16(&mut w, name)?;
-        match tensor {
-            CompressedDelta::Sparse(csr) => {
-                w.write_all(&[0u8])?;
-                write_csr(&mut w, csr)?;
-            }
-            CompressedDelta::Quantized(d) => {
-                w.write_all(&[1u8])?;
-                write_quantized(&mut w, d)?;
-            }
-            CompressedDelta::Dense(_) => {
-                bail!("dense deltas are not serializable (ablation-only)")
-            }
+/// One tensor record (kind byte + payload) — the unit the delta store
+/// pages in lazily; identical bytes inside a `.ddq` file and a store
+/// shard.
+pub(crate) fn write_tensor(w: &mut impl Write, tensor: &CompressedDelta) -> Result<()> {
+    match tensor {
+        CompressedDelta::Sparse(csr) => {
+            w.write_all(&[0u8])?;
+            write_csr(w, csr)?;
+        }
+        CompressedDelta::Quantized(d) => {
+            w.write_all(&[1u8])?;
+            write_quantized(w, d)?;
+        }
+        CompressedDelta::Dense(_) => {
+            bail!("dense deltas are not serializable (ablation-only)")
         }
     }
-    w.flush()?;
+    Ok(())
+}
+
+/// Serialize the body shared by every version: metadata + named tensors.
+fn write_set_body(w: &mut impl Write, set: &DeltaSet) -> Result<()> {
+    w_str16(w, &set.method)?;
+    w.write_all(&set.nominal_ratio.to_le_bytes())?;
+    w_u32(w, set.tensors.len() as u32)?;
+    for (name, tensor) in &set.tensors {
+        w_str16(w, name)?;
+        write_tensor(w, tensor)?;
+    }
+    Ok(())
+}
+
+/// Save a delta set to a `.ddq` file (current version, with the
+/// trailing CRC-32).
+pub fn save_delta_set(path: &Path, set: &DeltaSet) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    w_u32(&mut buf, VERSION)?;
+    write_set_body(&mut buf, set)?;
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    std::fs::write(path, &buf).with_context(|| format!("write {path:?}"))?;
     Ok(())
 }
 
@@ -299,35 +320,69 @@ fn read_quantized(r: &mut impl Read) -> Result<DecomposedDelta> {
         .context("corrupt quantized tensor")
 }
 
-/// Load a `.ddq` file.
-pub fn load_delta_set(path: &Path) -> Result<DeltaSet> {
-    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
-    let mut r = BufReader::new(file);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{path:?}: bad magic (expected DDQD)");
+/// One tensor record (kind byte + payload) — inverse of
+/// [`write_tensor`], shared with the delta store's paged reads.
+pub(crate) fn read_tensor(r: &mut impl Read) -> Result<CompressedDelta> {
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind)?;
+    match kind[0] {
+        0 => Ok(CompressedDelta::Sparse(read_csr(r)?)),
+        1 => Ok(CompressedDelta::Quantized(read_quantized(r)?)),
+        k => bail!("unknown tensor kind {k}"),
     }
-    let version = r_u32(&mut r)?;
-    if version != VERSION {
-        bail!("{path:?}: unsupported version {version}");
-    }
-    let method = r_str16(&mut r)?;
-    let nominal_ratio = r_f64(&mut r)?;
-    let count = r_u32(&mut r)? as usize;
+}
+
+/// Parse the version-independent body: metadata + named tensors.
+fn read_set_body(r: &mut impl Read) -> Result<DeltaSet> {
+    let method = r_str16(r)?;
+    let nominal_ratio = r_f64(r)?;
+    let count = r_u32(r)? as usize;
     let mut set = DeltaSet::new(&method, nominal_ratio);
     for _ in 0..count {
-        let name = r_str16(&mut r)?;
-        let mut kind = [0u8; 1];
-        r.read_exact(&mut kind)?;
-        let tensor = match kind[0] {
-            0 => CompressedDelta::Sparse(read_csr(&mut r)?),
-            1 => CompressedDelta::Quantized(read_quantized(&mut r)?),
-            k => bail!("unknown tensor kind {k}"),
-        };
+        let name = r_str16(r)?;
+        let tensor = read_tensor(r)?;
         set.tensors.insert(name, tensor);
     }
     Ok(set)
+}
+
+/// Load a `.ddq` file (v1 = no trailer, v2 = trailing CRC-32 verified
+/// before any tensor payload is trusted).
+///
+/// The whole file is buffered deliberately: verify-before-decode needs
+/// every byte hashed before the first tensor is parsed, and `.ddq`
+/// artifacts are small by construction (that is the paper's point).
+pub fn load_delta_set(path: &Path) -> Result<DeltaSet> {
+    let buf = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+    if buf.len() < 8 || &buf[..4] != MAGIC {
+        bail!("{path:?}: bad magic (expected DDQD)");
+    }
+    let version = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        bail!("{path:?}: unsupported version {version}");
+    }
+    let body = if version >= 2 {
+        // verify the trailer before parsing: a truncated or bit-flipped
+        // tail must fail here with a clear message, not decode garbage
+        if buf.len() < 12 {
+            bail!("{path:?}: checksum failure — file truncated");
+        }
+        let split = buf.len() - 4;
+        let mut tail = &buf[split..];
+        let stored = r_u32(&mut tail)?;
+        let actual = crc32(&buf[..split]);
+        if stored != actual {
+            bail!(
+                "{path:?}: checksum failure — stored crc32 {stored:#010x}, \
+                 computed {actual:#010x} (file truncated or corrupt)"
+            );
+        }
+        &buf[8..split]
+    } else {
+        &buf[8..]
+    };
+    let mut r: &[u8] = body;
+    read_set_body(&mut r).with_context(|| format!("parse {path:?}"))
 }
 
 #[cfg(test)]
@@ -404,7 +459,7 @@ mod tests {
     fn rejects_corrupt_csr_payload() {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC);
-        w_u32(&mut buf, VERSION).unwrap();
+        w_u32(&mut buf, 1).unwrap(); // v1: no trailer, payload guards engage
         w_str16(&mut buf, "DeltaDQ").unwrap();
         buf.extend_from_slice(&4.0f64.to_le_bytes());
         w_u32(&mut buf, 1).unwrap(); // one tensor
@@ -428,7 +483,7 @@ mod tests {
     fn rejects_absurd_header_without_allocating() {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC);
-        w_u32(&mut buf, VERSION).unwrap();
+        w_u32(&mut buf, 1).unwrap(); // v1: no trailer, payload guards engage
         w_str16(&mut buf, "DeltaDQ").unwrap();
         buf.extend_from_slice(&4.0f64.to_le_bytes());
         w_u32(&mut buf, 1).unwrap();
@@ -445,7 +500,7 @@ mod tests {
         // (rows*cols alone would admit it)
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC);
-        w_u32(&mut buf, VERSION).unwrap();
+        w_u32(&mut buf, 1).unwrap(); // v1: no trailer, payload guards engage
         w_str16(&mut buf, "DeltaDQ").unwrap();
         buf.extend_from_slice(&4.0f64.to_le_bytes());
         w_u32(&mut buf, 1).unwrap();
@@ -465,7 +520,7 @@ mod tests {
     fn rejects_corrupt_quantized_header() {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC);
-        w_u32(&mut buf, VERSION).unwrap();
+        w_u32(&mut buf, 1).unwrap(); // v1: no trailer, payload guards engage
         w_str16(&mut buf, "DeltaDQ").unwrap();
         buf.extend_from_slice(&64.0f64.to_le_bytes());
         w_u32(&mut buf, 1).unwrap();
@@ -487,5 +542,57 @@ mod tests {
             .insert("x".into(), CompressedDelta::Dense(Matrix::zeros(2, 2)));
         let path = tmpfile("dense.ddq");
         assert!(save_delta_set(&path, &set).is_err());
+    }
+
+    /// v1 files (written before the checksum trailer) must stay
+    /// readable byte-for-byte.
+    #[test]
+    fn v1_file_without_trailer_still_loads() {
+        let set = sample_set(Some((8, 4)));
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        w_u32(&mut buf, 1).unwrap(); // the pre-checksum version
+        write_set_body(&mut buf, &set).unwrap();
+        let path = tmpfile("v1-compat.ddq");
+        std::fs::write(&path, &buf).unwrap();
+        let loaded = load_delta_set(&path).unwrap();
+        assert_eq!(loaded.method, set.method);
+        for (name, t) in &set.tensors {
+            assert_eq!(loaded.tensors[name].to_dense(), t.to_dense(), "{name}");
+        }
+    }
+
+    /// Truncation round-trip: chopping any tail off a v2 file must fail
+    /// the checksum with a clear error, never decode a partial set.
+    #[test]
+    fn truncated_tail_fails_checksum() {
+        let set = sample_set(None);
+        let path = tmpfile("truncate.ddq");
+        save_delta_set(&path, &set).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        assert!(load_delta_set(&path).is_ok(), "pristine file loads");
+        for chop in [1usize, 4, 17, full.len() / 2] {
+            std::fs::write(&path, &full[..full.len() - chop]).unwrap();
+            let err = load_delta_set(&path).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("checksum") || msg.contains("truncated"),
+                "chop {chop}: {msg}"
+            );
+        }
+    }
+
+    /// A bit flip anywhere in the payload fails the checksum.
+    #[test]
+    fn bit_flip_fails_checksum() {
+        let set = sample_set(Some((4, 2)));
+        let path = tmpfile("bitflip.ddq");
+        save_delta_set(&path, &set).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_delta_set(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
     }
 }

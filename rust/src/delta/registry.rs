@@ -9,8 +9,11 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::Result;
+
 use crate::delta::format::DeltaSet;
 use crate::model::weights::ModelWeights;
+use crate::store::DeltaStore;
 
 /// Residency of a tenant's dense reconstruction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,7 +46,7 @@ impl TenantEntry {
     pub fn cache_bytes(&self) -> u64 {
         self.dense_cache
             .as_ref()
-            .map(|w| w.param_count() as u64 * 4)
+            .map(|w| w.resident_bytes())
             .unwrap_or(0)
     }
 
@@ -145,7 +148,7 @@ impl DeltaRegistry {
         for (name, delta) in &self.tenants[tenant_id].deltas.tensors {
             delta.add_to_dense(dense.get_mut(name), 1.0);
         }
-        let new_bytes = dense.param_count() as u64 * 4;
+        let new_bytes = dense.resident_bytes();
         if let Some(budget) = self.cache_budget {
             // LRU-evict other hot tenants until the new cache fits.
             while self.cache_bytes() + new_bytes > budget {
@@ -177,6 +180,24 @@ impl DeltaRegistry {
         if let Some(e) = self.tenants.get_mut(tenant_id) {
             e.dense_cache = None;
         }
+    }
+
+    /// Persist every registered tenant into an on-disk [`DeltaStore`]
+    /// (the offline half of the push workflow: compress → register →
+    /// persist). Returns the total payload bytes written.
+    pub fn persist_all(&self, store: &DeltaStore) -> Result<u64> {
+        let mut total = 0u64;
+        for entry in self.tenants.values() {
+            total += store.push(&entry.tenant_id, &entry.deltas)?;
+        }
+        Ok(total)
+    }
+
+    /// Register a tenant by hydrating it from a store (Cold residency).
+    pub fn register_from_store(&mut self, store: &DeltaStore, tenant_id: &str) -> Result<()> {
+        let set = store.load(tenant_id)?;
+        self.register(tenant_id, set);
+        Ok(())
     }
 }
 
@@ -244,7 +265,7 @@ mod tests {
     #[test]
     fn budget_evicts_lru() {
         let b = base();
-        let one_cache = b.param_count() as u64 * 4;
+        let one_cache = b.resident_bytes();
         // room for exactly two dense caches
         let mut reg = DeltaRegistry::new(Some(2 * one_cache + 1024));
         reg.register("a", delta_set(4));
@@ -290,5 +311,30 @@ mod tests {
         assert!(reg.unregister("t"));
         assert!(!reg.unregister("t"));
         assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn persist_and_rehydrate_through_store() {
+        let root = std::env::temp_dir()
+            .join("deltadq-test-registry-store")
+            .join(format!("{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let store = DeltaStore::open_or_create(&root).unwrap();
+        let mut reg = DeltaRegistry::new(None);
+        reg.register("a", delta_set(20));
+        reg.register("b", delta_set(21));
+        let written = reg.persist_all(&store).unwrap();
+        assert!(written > 0);
+        assert_eq!(store.tenant_count(), 2);
+
+        let mut fresh = DeltaRegistry::new(None);
+        fresh.register_from_store(&store, "a").unwrap();
+        assert!(fresh.register_from_store(&store, "ghost").is_err());
+        let orig = reg.get("a").unwrap();
+        let back = fresh.get("a").unwrap();
+        assert_eq!(back.deltas.nnz(), orig.deltas.nnz());
+        for (name, t) in &orig.deltas.tensors {
+            assert_eq!(back.deltas.tensors[name].to_dense(), t.to_dense(), "{name}");
+        }
     }
 }

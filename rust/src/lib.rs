@@ -6,10 +6,12 @@
 //!
 //! * **L3 (this crate)** — the serving coordinator: multi-tenant request
 //!   routing, dynamic batching, per-tenant compressed-delta registry,
-//!   pluggable execution backends ([`runtime::ExecutionBackend`]: the
-//!   native fused sparse path, or PJRT behind `--features pjrt`), and
-//!   the full native implementation of the compression algorithms
-//!   (DeltaDQ plus the Magnitude / DARE / DELTAZIP baselines).
+//!   the tiered on-disk delta artifact store ([`store::DeltaStore`]:
+//!   Disk → Cold → Hot residency with lazy paged hydration), pluggable
+//!   execution backends ([`runtime::ExecutionBackend`]: the native
+//!   fused sparse path, or PJRT behind `--features pjrt`), and the full
+//!   native implementation of the compression algorithms (DeltaDQ plus
+//!   the Magnitude / DARE / DELTAZIP baselines).
 //! * **L2 (python/compile/model.py)** — the JAX transformer forward pass
 //!   with separate base+delta computation, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
@@ -34,5 +36,6 @@ pub mod quant;
 pub mod runtime;
 pub mod search;
 pub mod sparse;
+pub mod store;
 pub mod tensor;
 pub mod util;

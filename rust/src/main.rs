@@ -7,6 +7,9 @@
 //! * `eval`       — task accuracy of base / fine-tuned / compressed
 //! * `search`     — group-size search (direct vs proxy)
 //! * `serve`      — multi-tenant serving coordinator
+//! * `push`       — register a `.ddq` artifact into a delta store
+//! * `gc`         — sweep a delta store (and optionally remove tenants)
+//! * `ls`         — list a delta store's tenants
 //! * `bench`      — regenerate a paper table/figure (table1..4, fig4..8)
 //!
 //! CLI parsing is hand-rolled (the container vendors no clap); flags are
@@ -26,7 +29,9 @@ use deltadq::delta::{extract_deltas, load_delta_set, save_delta_set};
 use deltadq::eval::{evaluate_parallel, gen_dataset, save_dataset, TaskKind};
 use deltadq::model::load_weights;
 use deltadq::search::{search_direct, search_proxy};
+use deltadq::store::DeltaStore;
 use deltadq::tensor::Pcg64;
+use deltadq::util::table::Table;
 
 /// Minimal `--key value` flag map.
 struct Args {
@@ -93,6 +98,9 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
+        "push" => cmd_push(&args),
+        "gc" => cmd_gc(&args),
+        "ls" => cmd_ls(&args),
         "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -120,11 +128,15 @@ fn print_usage() {
                      [--ratio R] [--method proxy|direct|both]\n\
            serve     [--config F.toml] [--models DIR] [--requests N]\n\
                      [--tenants LIST] [--rate R] [--backend native|pjrt]\n\
+                     [--store DIR] (tiered serving out of a delta store)\n\
+           push      --store DIR --tenant NAME --delta F.ddq\n\
+           gc        --store DIR [--remove TENANT[,TENANT...]]\n\
+           ls        --store DIR\n\
            bench     --name table1|table2|table3|table4|fig4|fig5|fig6|\n\
-                     fig7|fig8|ablations|serving|kernels [--models DIR]\n\
-                     [--out FILE] [--backend native|pjrt]\n\
+                     fig7|fig8|ablations|serving|kernels|churn\n\
+                     [--models DIR] [--out FILE] [--backend native|pjrt]\n\
                      [--fused-threads N] [--artifacts DIR]\n\
-                     (kernels writes BENCH_kernels.json; set\n\
+                     (kernels/churn write BENCH_<name>.json; set\n\
                      DELTADQ_BENCH_QUICK=1 for the CI-sized run)"
     );
 }
@@ -285,7 +297,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let overrides: Vec<String> = args
         .flags
         .iter()
-        .filter(|(k, _)| k.starts_with("serve."))
+        .filter(|(k, _)| k.starts_with("serve.") || k.starts_with("store."))
         .map(|(k, v)| format!("{k}={v}"))
         .collect();
     config.apply_overrides(&overrides)?;
@@ -296,10 +308,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(backend) = args.get("backend") {
         serve.backend = backend.to_string();
     }
+    if let Some(store) = args.get("store") {
+        serve.store_path = Some(store.to_string());
+    }
     let requests = args.usize_or("requests", 64)?;
     let rate = args.f64_or("rate", 200.0)?;
     let tenants = args.str_or("tenants", "math,code,chat");
     coordinator::run_demo_server(&serve, &tenants, requests, rate)
+}
+
+// ------------------------------------------------------- delta store
+
+fn cmd_push(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.get("store").context("--store required")?);
+    let tenant = args.get("tenant").context("--tenant required")?;
+    let delta = args.get("delta").context("--delta required (a .ddq file)")?;
+    let set = load_delta_set(Path::new(delta))?;
+    let store = DeltaStore::open_or_create(&root)?;
+    let bytes = store.push(tenant, &set)?;
+    let info = store.tenant_info(tenant).expect("just pushed");
+    println!(
+        "pushed '{tenant}' ({}, nominal {:.0}x): {} tensors, {bytes} bytes in {} shard(s)",
+        info.method,
+        info.nominal_ratio,
+        info.tensors.len(),
+        info.shards.len()
+    );
+    Ok(())
+}
+
+fn cmd_gc(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.get("store").context("--store required")?);
+    let store = DeltaStore::open(&root)?;
+    if let Some(list) = args.get("remove") {
+        for tenant in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if store.remove(tenant)? {
+                println!("removed '{tenant}'");
+            } else {
+                println!("'{tenant}' was not in the store");
+            }
+        }
+    }
+    let report = store.gc()?;
+    println!(
+        "gc: swept {} orphan file(s), {} bytes freed; {} tenant(s), {} bytes live",
+        report.files_removed,
+        report.bytes_freed,
+        store.tenant_count(),
+        store.total_bytes()
+    );
+    Ok(())
+}
+
+fn cmd_ls(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.get("store").context("--store required")?);
+    let store = DeltaStore::open(&root)?;
+    let mut t = Table::new(
+        &format!("delta store at {}", root.display()),
+        &["tenant", "id", "method", "ratio", "tensors", "shards", "bytes"],
+    );
+    for tenant in store.tenants() {
+        let info = store.tenant_info(&tenant).expect("listed");
+        t.add_row(vec![
+            tenant,
+            info.id.to_string(),
+            info.method.clone(),
+            format!("{:.0}x", info.nominal_ratio),
+            info.tensors.len().to_string(),
+            info.shards.len().to_string(),
+            info.bytes.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("total: {} tenant(s), {} payload bytes", store.tenant_count(), store.total_bytes());
+    Ok(())
 }
 
 // --------------------------------------------------------------- bench

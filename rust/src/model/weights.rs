@@ -91,6 +91,14 @@ impl ModelWeights {
         self.tensors.values().map(|t| t.len()).sum()
     }
 
+    /// Resident RAM of the dense weights (f32 storage). The single
+    /// source of truth for every cache-budget accounting site — the
+    /// registry and the serving tenant store must agree on this number
+    /// or their eviction decisions drift apart.
+    pub fn resident_bytes(&self) -> u64 {
+        self.param_count() as u64 * std::mem::size_of::<f32>() as u64
+    }
+
     /// Check that every tensor the config requires is present with the
     /// right shape; returns the list of problems (empty = valid).
     pub fn validate(&self) -> Vec<String> {
@@ -152,6 +160,7 @@ mod tests {
         let w = ModelWeights::init(c, &mut rng);
         assert!(w.validate().is_empty());
         assert_eq!(w.param_count(), c.param_count());
+        assert_eq!(w.resident_bytes(), c.param_count() as u64 * 4);
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! The store manifest: `MANIFEST.json` at the store root.
+//!
+//! The manifest is the only authority on what the store contains — a
+//! tenant exists iff it has an entry here, and every entry carries the
+//! full per-layer offset table (shard index, byte offset, length,
+//! CRC-32) so a reader can page in any single layer without touching
+//! the rest of the shard. Updates are atomic: the new manifest is
+//! written to a temp file and renamed over the old one, so a crash
+//! mid-push leaves the previous manifest intact and at worst some
+//! orphan shard files for `gc` to sweep.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const MANIFEST_FILE: &str = "MANIFEST.json";
+/// Manifest schema version (`"version"` in the JSON).
+pub const MANIFEST_VERSION: u64 = 1;
+/// The `"format"` marker distinguishing a store root from random JSON.
+pub const MANIFEST_FORMAT: &str = "deltastore";
+
+/// Where one tensor's record lives: `shards[shard]` at `offset..offset+len`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorRecord {
+    pub name: String,
+    /// Index into the owning tenant's `shards` list.
+    pub shard: usize,
+    pub offset: u64,
+    pub len: u64,
+    pub crc32: u32,
+}
+
+/// One tenant's artifact: shard files plus the per-layer offset table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantRecord {
+    /// Store-assigned numeric id (names the shard files, so tenant ids
+    /// never need filesystem-safe escaping).
+    pub id: u64,
+    pub method: String,
+    pub nominal_ratio: f64,
+    /// Total payload bytes across all tensor records.
+    pub bytes: u64,
+    /// Store-relative shard paths ("shards/t<id>.<k>.ddq").
+    pub shards: Vec<String>,
+    pub tensors: Vec<TensorRecord>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Manifest {
+    pub next_id: u64,
+    pub tenants: BTreeMap<String, TenantRecord>,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        let mut tenants = Json::obj();
+        for (name, t) in &self.tenants {
+            let mut o = Json::obj();
+            o.set("id", t.id)
+                .set("method", t.method.as_str())
+                .set("nominal_ratio", t.nominal_ratio)
+                .set("bytes", t.bytes)
+                .set("shards", t.shards.clone());
+            let mut tensors = Vec::with_capacity(t.tensors.len());
+            for rec in &t.tensors {
+                let mut r = Json::obj();
+                r.set("name", rec.name.as_str())
+                    .set("shard", rec.shard)
+                    .set("offset", rec.offset)
+                    .set("len", rec.len)
+                    .set("crc32", rec.crc32);
+                tensors.push(r);
+            }
+            o.set("tensors", Json::Arr(tensors));
+            tenants.set(name, o);
+        }
+        let mut root = Json::obj();
+        root.set("format", MANIFEST_FORMAT)
+            .set("version", MANIFEST_VERSION)
+            .set("next_id", self.next_id)
+            .set("tenants", tenants);
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        if j.get("format").and_then(Json::as_str) != Some(MANIFEST_FORMAT) {
+            bail!("not a delta store manifest (missing format marker)");
+        }
+        match j.get("version").and_then(Json::as_u64) {
+            Some(MANIFEST_VERSION) => {}
+            Some(v) => bail!("unsupported manifest version {v}"),
+            None => bail!("manifest has no version"),
+        }
+        let next_id = field_u64(j, "next_id")?;
+        let mut tenants = BTreeMap::new();
+        let table = j.get("tenants").and_then(Json::as_object);
+        let table = table.context("manifest has no tenants object")?;
+        for (name, t) in table {
+            let mut tensors = Vec::new();
+            let recs = t.get("tensors").and_then(Json::as_array);
+            let recs = recs.with_context(|| format!("tenant '{name}': no tensors array"))?;
+            for rec in recs {
+                tensors.push(TensorRecord {
+                    name: field_str(rec, "name")?,
+                    shard: field_u64(rec, "shard")? as usize,
+                    offset: field_u64(rec, "offset")?,
+                    len: field_u64(rec, "len")?,
+                    crc32: field_u64(rec, "crc32")? as u32,
+                });
+            }
+            let arr = t.get("shards").and_then(Json::as_array);
+            let arr = arr.with_context(|| format!("tenant '{name}': no shards array"))?;
+            let mut shards = Vec::with_capacity(arr.len());
+            for s in arr {
+                let s = s.as_str();
+                let s = s.with_context(|| format!("tenant '{name}': non-string shard"))?;
+                shards.push(s.to_string());
+            }
+            let ratio = t.get("nominal_ratio").and_then(Json::as_f64);
+            let ratio = ratio.with_context(|| format!("tenant '{name}': no nominal_ratio"))?;
+            let record = TenantRecord {
+                id: field_u64(t, "id")?,
+                method: field_str(t, "method")?,
+                nominal_ratio: ratio,
+                bytes: field_u64(t, "bytes")?,
+                shards,
+                tensors,
+            };
+            for rec in &record.tensors {
+                if rec.shard >= record.shards.len() {
+                    bail!(
+                        "tenant '{name}': tensor '{}' references shard {} of {}",
+                        rec.name,
+                        rec.shard,
+                        record.shards.len()
+                    );
+                }
+            }
+            tenants.insert(name.clone(), record);
+        }
+        Ok(Manifest { next_id, tenants })
+    }
+
+    /// Load `MANIFEST.json` from a store root.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let json = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        Manifest::from_json(&json).with_context(|| format!("validate {path:?}"))
+    }
+
+    /// Atomically write `MANIFEST.json` (temp file, fsync, rename).
+    /// The fsync before the rename matters: without it a crash can
+    /// persist the rename ahead of the data and leave an empty
+    /// manifest — the one failure worse than losing the last push.
+    pub fn save(&self, root: &Path) -> Result<()> {
+        let path = root.join(MANIFEST_FILE);
+        let tmp = root.join("MANIFEST.json.tmp");
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+            f.write_all(self.to_json().to_string().as_bytes())
+                .with_context(|| format!("write {tmp:?}"))?;
+            f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+        }
+        std::fs::rename(&tmp, &path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+        // best effort: make the rename itself durable
+        if let Ok(dir) = std::fs::File::open(root) {
+            let _ = dir.sync_all();
+        }
+        Ok(())
+    }
+}
+
+fn field_u64(j: &Json, key: &str) -> Result<u64> {
+    let n = j.get(key).and_then(Json::as_u64);
+    n.with_context(|| format!("missing/invalid u64 field '{key}'"))
+}
+
+fn field_str(j: &Json, key: &str) -> Result<String> {
+    let s = j.get(key).and_then(Json::as_str);
+    Ok(s.with_context(|| format!("missing/invalid string field '{key}'"))?.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let mut m = Manifest { next_id: 3, tenants: BTreeMap::new() };
+        m.tenants.insert(
+            "math".to_string(),
+            TenantRecord {
+                id: 1,
+                method: "DeltaDQ".to_string(),
+                nominal_ratio: 16.0,
+                bytes: 2048,
+                shards: vec!["shards/t1.0.ddq".to_string(), "shards/t1.1.ddq".to_string()],
+                tensors: vec![
+                    TensorRecord {
+                        name: "layers.0.attn.wq".to_string(),
+                        shard: 0,
+                        offset: 8,
+                        len: 1024,
+                        crc32: 0xDEAD_BEEF,
+                    },
+                    TensorRecord {
+                        name: "layers.0.attn.wk".to_string(),
+                        shard: 1,
+                        offset: 8,
+                        len: 1024,
+                        crc32: 7,
+                    },
+                ],
+            },
+        );
+        m
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let m = sample();
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("deltadq-test-manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample();
+        m.save(&dir).unwrap();
+        assert_eq!(Manifest::load(&dir).unwrap(), m);
+    }
+
+    #[test]
+    fn rejects_foreign_json() {
+        assert!(Manifest::from_json(&Json::parse(r#"{"hello": 1}"#).unwrap()).is_err());
+        let wrong_version =
+            r#"{"format": "deltastore", "version": 99, "next_id": 0, "tenants": {}}"#;
+        assert!(Manifest::from_json(&Json::parse(wrong_version).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_dangling_shard_index() {
+        let mut m = sample();
+        m.tenants.get_mut("math").unwrap().tensors[1].shard = 9;
+        let err = Manifest::from_json(&m.to_json()).unwrap_err();
+        assert!(format!("{err:#}").contains("references shard"), "{err:#}");
+    }
+}

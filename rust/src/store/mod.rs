@@ -1,0 +1,476 @@
+//! DeltaStore (S13): the persistent, tiered delta artifact repository.
+//!
+//! The paper's deployment pitch is one base model plus thousands of
+//! tiny per-tenant deltas — which only pays off if the serving tier
+//! scales with *resident* tenants, not *registered* ones. The store is
+//! the disk tier of that story:
+//!
+//! ```text
+//!   <root>/MANIFEST.json         versioned index (atomic replace)
+//!   <root>/shards/t<id>.<k>.ddq  per-tenant shard blobs
+//! ```
+//!
+//! * **push** — a tenant's [`DeltaSet`] is encoded tensor-by-tensor,
+//!   packed into shards of ~[`DEFAULT_SHARD_BUDGET`] bytes, written
+//!   atomically, and committed to the manifest with a per-layer offset
+//!   table (shard, offset, len, CRC-32).
+//! * **load / load_tensor** — hydration reads exactly the records it
+//!   needs via positioned reads (`pread`); every record's CRC-32 is
+//!   verified before its bytes are decoded. A whole-set load is just
+//!   the per-layer path over every layer — there is no separate eager
+//!   format.
+//! * **remove / gc** — removal drops the manifest entry first (the
+//!   commit point), then deletes shard files best-effort; `gc` sweeps
+//!   anything in `shards/` the manifest no longer references.
+//!
+//! Concurrency: within one process the manifest mutex guards metadata
+//! only — all file I/O happens outside it, so hydrations proceed while
+//! a push writes new shards. Replacing a tenant mid-hydration can fail
+//! that hydration (its shard files may vanish); callers surface the
+//! error and the next request retries against the new artifact. Across
+//! processes, every mutating op re-reads the manifest before editing
+//! (sequential `push`/`gc` from a CLI compose with a running server),
+//! but truly *concurrent* cross-process writers are not coordinated —
+//! std has no file locking — so run mutating CLI ops one at a time,
+//! and `gc` only against a store no other process is pushing to (an
+//! in-flight foreign push's shards look like orphans until its
+//! manifest commit).
+
+pub mod manifest;
+mod shard;
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::CompressedDelta;
+use crate::delta::format::DeltaSet;
+use manifest::{Manifest, TenantRecord, TensorRecord};
+use shard::{SHARD_HEADER_LEN, TensorBlob};
+
+/// Target shard payload size: tensors are greedily packed into shards
+/// until one would overflow this. Small enough that cold-start paging
+/// touches only the layers it needs even with read-ahead, large enough
+/// to keep file counts sane at thousands of tenants.
+pub const DEFAULT_SHARD_BUDGET: u64 = 1 << 20;
+
+/// What `gc` swept.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct GcReport {
+    pub files_removed: usize,
+    pub bytes_freed: u64,
+}
+
+/// The on-disk tenant repository. Cheap to share (`Arc`) between the
+/// serving tier's loader thread and CLI tooling.
+#[derive(Debug)]
+pub struct DeltaStore {
+    root: PathBuf,
+    manifest: Mutex<Manifest>,
+    /// Serializes the mutating control-plane ops (`push`/`remove`/`gc`)
+    /// of THIS instance across their whole file-I/O window, so an
+    /// in-process `gc` can never sweep the shards of a push that has
+    /// reserved its id but not yet committed. Reads never take it.
+    ops: Mutex<()>,
+    shard_budget: u64,
+    bytes_read: AtomicU64,
+}
+
+impl DeltaStore {
+    /// Open an existing store (errors if `root` has no manifest).
+    pub fn open(root: &Path) -> Result<DeltaStore> {
+        let manifest = Manifest::load(root)?;
+        Ok(DeltaStore {
+            root: root.to_path_buf(),
+            manifest: Mutex::new(manifest),
+            ops: Mutex::new(()),
+            shard_budget: DEFAULT_SHARD_BUDGET,
+            bytes_read: AtomicU64::new(0),
+        })
+    }
+
+    /// Open a store, initializing an empty one if `root` is new.
+    pub fn open_or_create(root: &Path) -> Result<DeltaStore> {
+        DeltaStore::open_or_create_with(root, DEFAULT_SHARD_BUDGET)
+    }
+
+    /// As [`open_or_create`](DeltaStore::open_or_create) with an
+    /// explicit shard payload budget (tests use tiny budgets to force
+    /// multi-shard tenants).
+    pub fn open_or_create_with(root: &Path, shard_budget: u64) -> Result<DeltaStore> {
+        if !root.join(manifest::MANIFEST_FILE).exists() {
+            std::fs::create_dir_all(root.join("shards"))
+                .with_context(|| format!("create store at {root:?}"))?;
+            Manifest::default().save(root)?;
+        }
+        let manifest = Manifest::load(root)?;
+        Ok(DeltaStore {
+            root: root.to_path_buf(),
+            manifest: Mutex::new(manifest),
+            ops: Mutex::new(()),
+            shard_budget: shard_budget.max(1),
+            bytes_read: AtomicU64::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Total bytes of shard payload read since open (telemetry).
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    pub fn tenants(&self) -> Vec<String> {
+        self.manifest.lock().unwrap().tenants.keys().cloned().collect()
+    }
+
+    pub fn contains(&self, tenant: &str) -> bool {
+        self.manifest.lock().unwrap().tenants.contains_key(tenant)
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.manifest.lock().unwrap().tenants.len()
+    }
+
+    /// Manifest entry for one tenant (cloned snapshot).
+    pub fn tenant_info(&self, tenant: &str) -> Option<TenantRecord> {
+        self.manifest.lock().unwrap().tenants.get(tenant).cloned()
+    }
+
+    /// Total payload bytes across all registered tenants.
+    pub fn total_bytes(&self) -> u64 {
+        self.manifest.lock().unwrap().tenants.values().map(|t| t.bytes).sum()
+    }
+
+    /// Re-read `MANIFEST.json` into the locked in-memory copy. Every
+    /// mutating op calls this first, so sequential operations from
+    /// different processes (a serving daemon plus `deltadq push/gc/ls`)
+    /// compose instead of saving a stale snapshot over each other's
+    /// commits. Truly concurrent cross-process writers remain
+    /// uncoordinated (no file locking in std) — see the module docs.
+    fn reload_locked(&self, m: &mut Manifest) -> Result<()> {
+        *m = Manifest::load(&self.root)?;
+        Ok(())
+    }
+
+    /// Register (or replace) a tenant's deltas on disk. Returns the
+    /// payload bytes written. The manifest commit is the atomicity
+    /// point; a crash before it leaves orphan shards for [`gc`].
+    pub fn push(&self, tenant: &str, set: &DeltaSet) -> Result<u64> {
+        if set.tensors.is_empty() {
+            bail!("refusing to push tenant '{tenant}' with an empty delta set");
+        }
+        // encode everything before taking any lock
+        let mut blobs: Vec<TensorBlob> = Vec::with_capacity(set.tensors.len());
+        for (name, tensor) in &set.tensors {
+            blobs.push(shard::encode_tensor(name, tensor)?);
+        }
+        let _ops = self.ops.lock().unwrap();
+        let id = {
+            let mut m = self.manifest.lock().unwrap();
+            self.reload_locked(&mut m)?;
+            let id = m.next_id;
+            m.next_id += 1;
+            // persist the reservation so a later process (or a crash
+            // before commit) can never reuse this id's shard filenames
+            m.save(&self.root)?;
+            id
+        };
+
+        // greedy pack into shards; write each file atomically
+        let mut shards: Vec<String> = Vec::new();
+        let mut tensors: Vec<TensorRecord> = Vec::new();
+        let mut total = 0u64;
+        let mut start = 0usize;
+        while start < blobs.len() {
+            let mut end = start + 1;
+            let mut payload = blobs[start].bytes.len() as u64;
+            while end < blobs.len() {
+                let next = blobs[end].bytes.len() as u64;
+                if payload + next > self.shard_budget {
+                    break;
+                }
+                payload += next;
+                end += 1;
+            }
+            let rel = format!("shards/t{id}.{}.ddq", shards.len());
+            let group: Vec<&TensorBlob> = blobs[start..end].iter().collect();
+            shard::write_shard(&self.root.join(&rel), &group)?;
+            let mut offset = SHARD_HEADER_LEN;
+            for blob in &group {
+                let len = blob.bytes.len() as u64;
+                tensors.push(TensorRecord {
+                    name: blob.name.clone(),
+                    shard: shards.len(),
+                    offset,
+                    len,
+                    crc32: blob.crc32,
+                });
+                offset += len;
+                total += len;
+            }
+            shards.push(rel);
+            start = end;
+        }
+
+        let record = TenantRecord {
+            id,
+            method: set.method.clone(),
+            nominal_ratio: set.nominal_ratio,
+            bytes: total,
+            shards,
+            tensors,
+        };
+        let replaced = {
+            let mut m = self.manifest.lock().unwrap();
+            self.reload_locked(&mut m)?;
+            let old = m.tenants.insert(tenant.to_string(), record);
+            m.save(&self.root)?;
+            old
+        };
+        // the old artifact is unreachable now; delete best-effort
+        if let Some(old) = replaced {
+            for rel in &old.shards {
+                let _ = std::fs::remove_file(self.root.join(rel));
+            }
+        }
+        Ok(total)
+    }
+
+    /// Remove a tenant. Returns whether it existed.
+    pub fn remove(&self, tenant: &str) -> Result<bool> {
+        let _ops = self.ops.lock().unwrap();
+        let removed = {
+            let mut m = self.manifest.lock().unwrap();
+            self.reload_locked(&mut m)?;
+            let removed = m.tenants.remove(tenant);
+            if removed.is_some() {
+                m.save(&self.root)?;
+            }
+            removed
+        };
+        match removed {
+            Some(record) => {
+                for rel in &record.shards {
+                    let _ = std::fs::remove_file(self.root.join(rel));
+                }
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Sweep `shards/` for files the manifest no longer references
+    /// (crashed pushes, failed removals, stale `.tmp` files).
+    pub fn gc(&self) -> Result<GcReport> {
+        let _ops = self.ops.lock().unwrap();
+        let live: std::collections::BTreeSet<PathBuf> = {
+            let mut m = self.manifest.lock().unwrap();
+            self.reload_locked(&mut m)?;
+            m.tenants
+                .values()
+                .flat_map(|t| t.shards.iter().map(|rel| self.root.join(rel)))
+                .collect()
+        };
+        let mut report = GcReport::default();
+        let dir = self.root.join("shards");
+        for entry in std::fs::read_dir(&dir).with_context(|| format!("read_dir {dir:?}"))? {
+            let path = entry?.path();
+            if !path.is_file() || live.contains(&path) {
+                continue;
+            }
+            let bytes = path.metadata().map(|m| m.len()).unwrap_or(0);
+            std::fs::remove_file(&path).with_context(|| format!("remove {path:?}"))?;
+            report.files_removed += 1;
+            report.bytes_freed += bytes;
+        }
+        Ok(report)
+    }
+
+    /// Page in one tensor: a single positioned read + CRC verify.
+    pub fn load_tensor(&self, tenant: &str, name: &str) -> Result<CompressedDelta> {
+        let record = self.tenant_info(tenant);
+        let record = record.with_context(|| format!("tenant '{tenant}' is not in the store"))?;
+        let rec = record.tensors.iter().find(|t| t.name == name);
+        let rec = rec.with_context(|| format!("tenant '{tenant}' has no tensor '{name}'"))?;
+        let rel = &record.shards[rec.shard];
+        let path = self.root.join(rel);
+        let file = shard::open_shard(&path)?;
+        let raw = shard::read_record(&file, &path, rec.offset, rec.len, rec.crc32)?;
+        self.bytes_read.fetch_add(rec.len, Ordering::Relaxed);
+        shard::decode_tensor(name, &raw)
+    }
+
+    /// Hydrate a tenant's full [`DeltaSet`] — the per-layer paged path
+    /// over every layer, one shard file handle per shard.
+    pub fn load(&self, tenant: &str) -> Result<DeltaSet> {
+        let record = self.tenant_info(tenant);
+        let record = record.with_context(|| format!("tenant '{tenant}' is not in the store"))?;
+        let mut set = DeltaSet::new(&record.method, record.nominal_ratio);
+        let mut files: BTreeMap<usize, std::fs::File> = BTreeMap::new();
+        for rec in &record.tensors {
+            let path = self.root.join(&record.shards[rec.shard]);
+            let file = match files.entry(rec.shard) {
+                Entry::Occupied(e) => e.into_mut(),
+                Entry::Vacant(v) => v.insert(shard::open_shard(&path)?),
+            };
+            let raw = shard::read_record(file, &path, rec.offset, rec.len, rec.crc32)
+                .with_context(|| format!("tenant '{tenant}', tensor '{}'", rec.name))?;
+            let tensor = shard::decode_tensor(&rec.name, &raw)
+                .with_context(|| format!("tenant '{tenant}'"))?;
+            set.tensors.insert(rec.name.clone(), tensor);
+        }
+        self.bytes_read.fetch_add(record.bytes, Ordering::Relaxed);
+        Ok(set)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, DeltaDq, DeltaDqConfig, LayerContext};
+    use crate::tensor::{Matrix, Pcg64};
+
+    fn tmp_store(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("deltadq-test-store")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_set(seed: u64, quant: Option<(u32, u32)>) -> DeltaSet {
+        let mut rng = Pcg64::seeded(seed);
+        let dq = DeltaDq::new(DeltaDqConfig { alpha: 4.0, group_size: Some(8), quant });
+        let mut set = DeltaSet::new(&dq.name(), dq.nominal_ratio());
+        for i in 0..4 {
+            let d = Matrix::randn(16, 32, 0.01, &mut rng);
+            let name = format!("layers.{i}.attn.wq");
+            let c = dq.compress(&d, &LayerContext::data_free(i, &name), &mut rng);
+            set.tensors.insert(name, c);
+        }
+        set
+    }
+
+    fn assert_sets_equal(a: &DeltaSet, b: &DeltaSet) {
+        assert_eq!(a.method, b.method);
+        assert_eq!(a.nominal_ratio, b.nominal_ratio);
+        assert_eq!(a.tensors.len(), b.tensors.len());
+        for (name, t) in &a.tensors {
+            assert_eq!(t.to_dense(), b.tensors[name].to_dense(), "{name}");
+        }
+    }
+
+    #[test]
+    fn push_load_roundtrip() {
+        let root = tmp_store("roundtrip");
+        let store = DeltaStore::open_or_create(&root).unwrap();
+        for (tenant, seed, quant) in
+            [("math", 2u64, None), ("code", 3, Some((8u32, 4u32))), ("chat", 4, Some((4, 8)))]
+        {
+            let set = sample_set(seed, quant);
+            let bytes = store.push(tenant, &set).unwrap();
+            assert!(bytes > 0);
+            assert_sets_equal(&store.load(tenant).unwrap(), &set);
+        }
+        assert_eq!(store.tenant_count(), 3);
+        assert!(store.bytes_read() > 0);
+    }
+
+    #[test]
+    fn lazy_single_tensor_read() {
+        let root = tmp_store("lazy");
+        let store = DeltaStore::open_or_create(&root).unwrap();
+        let set = sample_set(5, Some((8, 1)));
+        store.push("t", &set).unwrap();
+        let before = store.bytes_read();
+        let one = store.load_tensor("t", "layers.2.attn.wq").unwrap();
+        assert_eq!(one.to_dense(), set.tensors["layers.2.attn.wq"].to_dense());
+        let read = store.bytes_read() - before;
+        let info = store.tenant_info("t").unwrap();
+        assert!(read < info.bytes, "one layer read {read} < whole artifact {}", info.bytes);
+        assert!(store.load_tensor("t", "nope").is_err());
+    }
+
+    #[test]
+    fn tiny_shard_budget_forces_multiple_shards() {
+        let root = tmp_store("multishard");
+        // budget below any single tensor record → one shard per tensor
+        let store = DeltaStore::open_or_create_with(&root, 16).unwrap();
+        let set = sample_set(6, None);
+        store.push("t", &set).unwrap();
+        let info = store.tenant_info("t").unwrap();
+        assert_eq!(info.shards.len(), set.tensors.len());
+        assert_sets_equal(&store.load("t").unwrap(), &set);
+    }
+
+    #[test]
+    fn reopen_preserves_manifest() {
+        let root = tmp_store("reopen");
+        let set = sample_set(7, Some((4, 2)));
+        {
+            let store = DeltaStore::open_or_create(&root).unwrap();
+            store.push("persist", &set).unwrap();
+        }
+        let store = DeltaStore::open(&root).unwrap();
+        assert!(store.contains("persist"));
+        assert_sets_equal(&store.load("persist").unwrap(), &set);
+        // a directory without a manifest is not a store
+        assert!(DeltaStore::open(&root.join("shards")).is_err());
+    }
+
+    #[test]
+    fn push_replaces_and_drops_old_shards() {
+        let root = tmp_store("replace");
+        let store = DeltaStore::open_or_create(&root).unwrap();
+        store.push("t", &sample_set(8, None)).unwrap();
+        let old = store.tenant_info("t").unwrap();
+        let newer = sample_set(9, Some((8, 4)));
+        store.push("t", &newer).unwrap();
+        let new = store.tenant_info("t").unwrap();
+        assert_ne!(old.id, new.id);
+        for rel in &old.shards {
+            assert!(!root.join(rel).exists(), "stale shard {rel} must be gone");
+        }
+        assert_sets_equal(&store.load("t").unwrap(), &newer);
+    }
+
+    #[test]
+    fn remove_then_gc_sweeps_orphans() {
+        let root = tmp_store("gc");
+        let store = DeltaStore::open_or_create(&root).unwrap();
+        store.push("a", &sample_set(10, None)).unwrap();
+        store.push("b", &sample_set(11, None)).unwrap();
+        assert!(store.remove("a").unwrap());
+        assert!(!store.remove("a").unwrap());
+        // simulate a crashed push: orphan file in shards/
+        std::fs::write(root.join("shards/orphan.ddq"), b"DDQS....junk").unwrap();
+        let report = store.gc().unwrap();
+        assert_eq!(report.files_removed, 1);
+        assert!(report.bytes_freed > 0);
+        // the live tenant is untouched
+        assert_sets_equal(&store.load("b").unwrap(), &sample_set(11, None));
+        assert!(store.load("a").is_err());
+    }
+
+    #[test]
+    fn corrupt_shard_fails_hydration() {
+        let root = tmp_store("corrupt");
+        let store = DeltaStore::open_or_create(&root).unwrap();
+        store.push("t", &sample_set(12, Some((8, 1)))).unwrap();
+        let info = store.tenant_info("t").unwrap();
+        let path = root.join(&info.shards[0]);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = store.load("t").unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    }
+}

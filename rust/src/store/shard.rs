@@ -1,0 +1,201 @@
+//! Shard blob files: the on-disk unit of the delta store.
+//!
+//! A shard is a flat container of tensor records — the same `kind +
+//! payload` bytes a `.ddq` file holds, minus the set-level header. The
+//! byte position of every record lives in the store manifest, so a
+//! reader pages in exactly one layer with one positioned read
+//! (`read_exact_at`) and verifies its CRC-32 before decoding; nothing
+//! else in the file is touched.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic    b"DDQS"
+//! version  u32 (=1)
+//! record*  kind u8 + tensor payload   (format.rs tensor encoding)
+//! ```
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::CompressedDelta;
+use crate::delta::format::{read_tensor, write_tensor};
+use crate::util::crc32::crc32;
+
+pub(crate) const SHARD_MAGIC: &[u8; 4] = b"DDQS";
+pub(crate) const SHARD_VERSION: u32 = 1;
+/// Byte offset of the first record (magic + version).
+pub(crate) const SHARD_HEADER_LEN: u64 = 8;
+
+/// One encoded tensor, ready to be placed into a shard.
+pub(crate) struct TensorBlob {
+    pub name: String,
+    pub bytes: Vec<u8>,
+    pub crc32: u32,
+}
+
+/// Encode one tensor into its shard record bytes.
+pub(crate) fn encode_tensor(name: &str, tensor: &CompressedDelta) -> Result<TensorBlob> {
+    let mut bytes: Vec<u8> = Vec::new();
+    write_tensor(&mut bytes, tensor).with_context(|| format!("encode tensor '{name}'"))?;
+    let crc = crc32(&bytes);
+    Ok(TensorBlob { name: name.to_string(), bytes, crc32: crc })
+}
+
+/// Decode one tensor record; the record must be consumed exactly.
+pub(crate) fn decode_tensor(name: &str, bytes: &[u8]) -> Result<CompressedDelta> {
+    let mut r: &[u8] = bytes;
+    let tensor = read_tensor(&mut r).with_context(|| format!("decode tensor '{name}'"))?;
+    if !r.is_empty() {
+        bail!("tensor '{name}': {} trailing bytes after payload", r.len());
+    }
+    Ok(tensor)
+}
+
+/// Write a shard file atomically (tmp + rename): header, then the
+/// records back to back. Returns nothing — record offsets are computed
+/// by the caller from the blob lengths.
+pub(crate) fn write_shard(path: &Path, blobs: &[&TensorBlob]) -> Result<()> {
+    let tmp = path.with_extension("ddq.tmp");
+    {
+        let mut f = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        f.write_all(SHARD_MAGIC)?;
+        f.write_all(&SHARD_VERSION.to_le_bytes())?;
+        for blob in blobs {
+            f.write_all(&blob.bytes)?;
+        }
+        let _ = f.sync_all(); // best effort — not all filesystems support it
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+/// Open a shard for positioned reads, verifying its header once.
+pub(crate) fn open_shard(path: &Path) -> Result<File> {
+    let file = File::open(path).with_context(|| format!("open shard {path:?}"))?;
+    let mut header = [0u8; 8];
+    read_at(&file, path, 0, &mut header).with_context(|| format!("read header {path:?}"))?;
+    if &header[..4] != SHARD_MAGIC {
+        bail!("{path:?}: bad shard magic (expected DDQS)");
+    }
+    let version = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+    if version != SHARD_VERSION {
+        bail!("{path:?}: unsupported shard version {version}");
+    }
+    Ok(file)
+}
+
+/// Read one record (`len` bytes at `offset`) and verify its CRC-32.
+pub(crate) fn read_record(
+    file: &File,
+    path: &Path,
+    offset: u64,
+    len: u64,
+    expect_crc: u32,
+) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; len as usize];
+    read_at(file, path, offset, &mut buf).with_context(|| {
+        format!("{path:?}: short read at offset {offset} (+{len}) — shard truncated?")
+    })?;
+    let actual = crc32(&buf);
+    if actual != expect_crc {
+        bail!(
+            "{path:?}: record checksum failure at offset {offset}: stored {expect_crc:#010x}, \
+             computed {actual:#010x}"
+        );
+    }
+    Ok(buf)
+}
+
+/// Positioned exact read. On unix this is `pread` (no seek, safe to
+/// share one `File` across threads); elsewhere each read opens a fresh
+/// handle from `path` — a `try_clone` would share the file cursor, so
+/// concurrent seek+read pairs on clones would race.
+fn read_at(file: &File, path: &Path, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        let _ = path;
+        file.read_exact_at(buf, offset)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        let _ = file;
+        let mut f = File::open(path)?;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::csr::CsrMatrix;
+    use crate::tensor::{Matrix, Pcg64};
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("deltadq-test-shard");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_tensor(seed: u64) -> CompressedDelta {
+        let mut rng = Pcg64::seeded(seed);
+        let m = Matrix::from_fn(8, 16, |_, _| {
+            if rng.bernoulli(0.3) {
+                rng.normal() * 0.01
+            } else {
+                0.0
+            }
+        });
+        CompressedDelta::Sparse(CsrMatrix::from_dense(&m))
+    }
+
+    #[test]
+    fn record_roundtrip_with_positioned_reads() {
+        let t0 = sample_tensor(1);
+        let t1 = sample_tensor(2);
+        let b0 = encode_tensor("a", &t0).unwrap();
+        let b1 = encode_tensor("b", &t1).unwrap();
+        let path = tmpdir().join("roundtrip.ddq");
+        write_shard(&path, &[&b0, &b1]).unwrap();
+
+        let file = open_shard(&path).unwrap();
+        let off0 = SHARD_HEADER_LEN;
+        let off1 = off0 + b0.bytes.len() as u64;
+        // read the SECOND record first — order independence is the point
+        let raw1 = read_record(&file, &path, off1, b1.bytes.len() as u64, b1.crc32).unwrap();
+        let got1 = decode_tensor("b", &raw1).unwrap();
+        assert_eq!(got1.to_dense(), t1.to_dense());
+        let raw0 = read_record(&file, &path, off0, b0.bytes.len() as u64, b0.crc32).unwrap();
+        let got0 = decode_tensor("a", &raw0).unwrap();
+        assert_eq!(got0.to_dense(), t0.to_dense());
+    }
+
+    #[test]
+    fn corrupt_record_fails_crc() {
+        let t = sample_tensor(3);
+        let b = encode_tensor("x", &t).unwrap();
+        let path = tmpdir().join("corrupt.ddq");
+        write_shard(&path, &[&b]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = SHARD_HEADER_LEN as usize + b.bytes.len() / 2;
+        bytes[mid] ^= 0x08;
+        std::fs::write(&path, &bytes).unwrap();
+        let file = open_shard(&path).unwrap();
+        let err = read_record(&file, &path, SHARD_HEADER_LEN, b.bytes.len() as u64, b.crc32)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    }
+
+    #[test]
+    fn bad_header_rejected() {
+        let path = tmpdir().join("badmagic.ddq");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(open_shard(&path).is_err());
+    }
+}

@@ -1,11 +1,15 @@
-//! Minimal JSON value model + serializer (no external deps).
+//! Minimal JSON value model, serializer, and parser (no external deps).
 //!
-//! Used for metrics endpoints, experiment logs, and the `.ddq` sidecar
-//! manifests. Writing only — the library never needs to parse arbitrary
-//! JSON (configs use the TOML-subset parser in [`crate::config`]).
+//! Used for metrics endpoints, experiment logs, and the delta store's
+//! `MANIFEST.json` — the one artifact the library both writes *and*
+//! reads back (configs still use the TOML-subset parser in
+//! [`crate::config`]). The parser accepts standard JSON; numbers are
+//! `f64` (the manifest never needs more than 2^53 integer precision).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
 
 /// A JSON value. `BTreeMap` keeps object keys sorted → stable output.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,6 +36,71 @@ impl Json {
             _ => panic!("Json::set on non-object"),
         }
         self
+    }
+
+    /// Parse a JSON document (must consume the whole input).
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing bytes at offset {pos}");
+        }
+        Ok(value)
+    }
+
+    /// Object field lookup (`None` for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(map) => map.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Numeric field as u64 (rejects negatives and fractions).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 2f64.powi(53) => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(map) => Some(map),
+            _ => None,
+        }
     }
 
     /// Serialize compactly.
@@ -150,6 +219,154 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+// ---------------------------------------------------------------- parse
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, ch: u8) -> Result<()> {
+    if bytes.get(*pos) != Some(&ch) {
+        bail!("expected '{}' at offset {}", ch as char, *pos);
+    }
+    *pos += 1;
+    Ok(())
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => bail!("unexpected end of input"),
+        Some(b'{') => parse_object(bytes, pos),
+        Some(b'[') => parse_array(bytes, pos),
+        Some(b'"') => Ok(Json::Str(parse_string(bytes, pos)?)),
+        Some(b't') => parse_literal(bytes, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_literal(bytes, pos, "false", Json::Bool(false)),
+        Some(b'n') => parse_literal(bytes, pos, "null", Json::Null),
+        Some(_) => parse_number(bytes, pos),
+    }
+}
+
+fn parse_literal(bytes: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        bail!("bad literal at offset {}", *pos)
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&bytes[start..*pos])?;
+    match text.parse::<f64>() {
+        Ok(n) => Ok(Json::Num(n)),
+        Err(_) => bail!("bad number '{text}' at offset {start}"),
+    }
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = Vec::new();
+    loop {
+        match bytes.get(*pos) {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(String::from_utf8(out)?);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push(b'"'),
+                    Some(b'\\') => out.push(b'\\'),
+                    Some(b'/') => out.push(b'/'),
+                    Some(b'n') => out.push(b'\n'),
+                    Some(b'r') => out.push(b'\r'),
+                    Some(b't') => out.push(b'\t'),
+                    Some(b'b') => out.push(0x08),
+                    Some(b'f') => out.push(0x0C),
+                    Some(b'u') => {
+                        if *pos + 4 >= bytes.len() {
+                            bail!("truncated \\u escape");
+                        }
+                        let hex = std::str::from_utf8(&bytes[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        // BMP only — the serializer never emits surrogate
+                        // pairs (it writes astral chars as raw utf-8)
+                        let ch = char::from_u32(code)
+                            .ok_or_else(|| anyhow::anyhow!("bad \\u{hex} escape"))?;
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        *pos += 4;
+                    }
+                    _ => bail!("bad escape at offset {}", *pos),
+                }
+                *pos += 1;
+            }
+            Some(&b) => {
+                out.push(b);
+                *pos += 1;
+            }
+        }
+    }
+}
+
+fn parse_array(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(bytes, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => bail!("expected ',' or ']' at offset {}", *pos),
+        }
+    }
+}
+
+fn parse_object(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(bytes, pos, b'{')?;
+    let mut map = BTreeMap::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        let key = parse_string(bytes, pos)?;
+        skip_ws(bytes, pos);
+        expect(bytes, pos, b':')?;
+        map.insert(key, parse_value(bytes, pos)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            _ => bail!("expected ',' or '}}' at offset {}", *pos),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +401,49 @@ mod tests {
         inner.set("x", "y");
         o.set("c", inner);
         assert_eq!(o.to_string(), r#"{"a":[1,2],"b":2,"c":{"x":"y"}}"#);
+    }
+
+    #[test]
+    fn parse_roundtrips_serializer_output() {
+        let mut o = Json::obj();
+        o.set("name", "tenant \"a\"\n");
+        o.set("bytes", 123456u64);
+        o.set("ratio", 16.5f64);
+        o.set("ok", true);
+        o.set("gone", Json::Null);
+        o.set("shards", vec!["s0".to_string(), "s1".to_string()]);
+        let text = o.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, o);
+        // and the reparse of the re-serialization is stable
+        assert_eq!(Json::parse(&back.to_string()).unwrap(), o);
+    }
+
+    #[test]
+    fn parse_accessors() {
+        let j = Json::parse(r#"{"a": [1, 2.5], "s": "x", "b": false, "n": 7}"#).unwrap();
+        assert_eq!(j.get("n").unwrap().as_u64(), Some(7));
+        assert_eq!(j.get("s").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("b").unwrap().as_bool(), Some(false));
+        let arr = j.get("a").unwrap().as_array().unwrap();
+        assert_eq!(arr[1].as_f64(), Some(2.5));
+        assert_eq!(arr[1].as_u64(), None, "fractional is not u64");
+        assert!(j.get("missing").is_none());
+    }
+
+    #[test]
+    fn parse_whitespace_and_escapes() {
+        let j = Json::parse(" { \"k\" : \"a\\u0041\\n\" } ").unwrap();
+        assert_eq!(j.get("k").unwrap().as_str(), Some("aA\n"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\":1} trailing").is_err());
+        assert!(Json::parse("\"open").is_err());
+        assert!(Json::parse("nul").is_err());
     }
 }

@@ -1,9 +1,10 @@
-//! Shared utilities: small linear algebra, JSON emission, table
-//! rendering, and timing — all in-tree because the crate's only default
-//! dependency is `anyhow` (see Cargo.toml; the `xla` stub rides behind
-//! the optional `pjrt` feature).
+//! Shared utilities: small linear algebra, JSON emission/parsing,
+//! CRC-32, table rendering, and timing — all in-tree because the
+//! crate's only default dependency is `anyhow` (see Cargo.toml; the
+//! `xla` stub rides behind the optional `pjrt` feature).
 
 pub mod bench;
+pub mod crc32;
 pub mod json;
 pub mod linalg;
 pub mod table;

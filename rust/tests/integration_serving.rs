@@ -116,7 +116,7 @@ fn backpressure_surfaces_to_caller() {
 #[test]
 fn cache_budget_bounds_dense_memory() {
     let b = base();
-    let one_cache = b.param_count() as u64 * 4;
+    let one_cache = b.resident_bytes();
     let server = Server::start(
         b.clone(),
         ServerOptions {
