@@ -965,7 +965,7 @@ pub fn churn(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<St
     }
 
     // phase 2: steady state — Zipf-distributed tenant mix in waves
-    let cdf = zipf_cdf(n_tenants, ZIPF_S);
+    let zipf = crate::util::zipf::Zipf::new(n_tenants, ZIPF_S);
     let mut steady_ms: Vec<f64> = Vec::new();
     let t0 = Instant::now();
     let mut submitted = 0usize;
@@ -973,7 +973,7 @@ pub fn churn(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<St
         let wave = 8.min(steady_requests - submitted);
         let mut rxs = Vec::with_capacity(wave);
         for _ in 0..wave {
-            let tenant = format!("t{}", sample_zipf(&cdf, &mut rng));
+            let tenant = format!("t{}", zipf.sample(&mut rng));
             let prompt = prompts[submitted % prompts.len()].clone();
             rxs.push(server.submit(&tenant, prompt, 2)?);
             submitted += 1;
@@ -1063,22 +1063,188 @@ fn latency_stats(xs: &[f64]) -> Json {
     o
 }
 
-/// Cumulative distribution of a Zipf(s) law over ranks `0..n`.
-fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
-    let weights: Vec<f64> = (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(s)).collect();
-    let total: f64 = weights.iter().sum();
-    let mut acc = 0.0;
-    weights
-        .iter()
-        .map(|w| {
-            acc += w / total;
-            acc
-        })
-        .collect()
-}
 
-/// Inverse-CDF sample: rank of the tenant to hit.
-fn sample_zipf(cdf: &[f64], rng: &mut Pcg64) -> usize {
-    let u = rng.next_f64();
-    cdf.iter().position(|&c| u < c).unwrap_or(cdf.len() - 1)
+// ------------------------------------------------------------- gateway
+
+/// E13: HTTP serving through the network gateway — the full wire path
+/// (TCP accept → HTTP parse → coordinator → SSE token streaming) driven
+/// by the open-loop load generator, in-process on an ephemeral port.
+/// Measures TTFT, per-token inter-arrival, and total latency for the
+/// streaming path plus total latency for the batch path, and pins the
+/// backpressure contract (a deliberate flood past `queue_depth` must
+/// produce 429s, not hangs). Writes machine-readable
+/// `BENCH_gateway.json`.
+///
+/// `DELTADQ_BENCH_QUICK=1` switches to CI mode: 3 tenants, 24 requests
+/// per phase — enough to exercise streaming, batching, and shedding.
+pub fn gateway(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<String> {
+    use crate::gateway::loadgen::{self, LoadgenOptions};
+    use crate::gateway::{Gateway, GatewayOptions};
+
+    let quick = std::env::var("DELTADQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (n_tenants, requests, rps) = if quick { (3usize, 24usize, 48.0) } else { (8, 200, 64.0) };
+    const ZIPF_S: f64 = 1.1;
+    const MAX_TOKENS: usize = 4;
+
+    let mut rng = Pcg64::seeded(0x6A7E);
+    let base = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(DEFAULT_GROUP)));
+    let options = ServerOptions {
+        workers: 2,
+        max_batch: 4,
+        batch_window: Duration::from_micros(200),
+        queue_depth: 64,
+        ..Default::default()
+    };
+    let server = Arc::new(Server::with_backend(base.clone(), options, backend.clone()));
+    for i in 0..n_tenants {
+        let mut ft = (*base).clone();
+        for name in base.config.delta_tensor_names() {
+            let (r, c) = ft.get(&name).shape();
+            let d = Matrix::randn(r, c, 0.001, &mut rng);
+            ft.get_mut(&name).add_assign(&d);
+        }
+        let deltas = extract_deltas(&base, &ft);
+        let set = compress_model_deltas(&deltas, &dq, &BTreeMap::new(), &mut rng);
+        server.register_tenant(&format!("t{i}"), set);
+    }
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions {
+        max_connections: 32,
+        ..Default::default()
+    })?;
+    let addr = gw.local_addr().to_string();
+    let tenants: Vec<String> = (0..n_tenants).map(|i| format!("t{i}")).collect();
+
+    let base_opts = LoadgenOptions {
+        addr: addr.clone(),
+        tenants: tenants.clone(),
+        requests,
+        rps,
+        zipf_s: ZIPF_S,
+        prompt_len: 6,
+        max_tokens: MAX_TOKENS,
+        seed: 0xFEED,
+        ..Default::default()
+    };
+    let stream_report = loadgen::run(&LoadgenOptions { stream: true, ..base_opts.clone() })?;
+    let batch_report = loadgen::run(&LoadgenOptions { stream: false, ..base_opts })?;
+
+    // backpressure probe: a tiny queue flooded far past its depth must
+    // shed with 429s while answering everything it accepted. The
+    // throttled backend pins per-request service time at 10ms so the
+    // burst outpaces the drain on any host speed.
+    struct ThrottledBackend {
+        inner: Arc<dyn ExecutionBackend>,
+        delay: Duration,
+    }
+    impl ExecutionBackend for ThrottledBackend {
+        fn name(&self) -> &'static str {
+            "throttled"
+        }
+        fn prefill(
+            &self,
+            base: &ModelWeights,
+            delta: Option<&crate::delta::format::DeltaSet>,
+            tokens: &[u32],
+        ) -> Result<Matrix> {
+            self.inner.prefill(base, delta, tokens)
+        }
+        fn generate(
+            &self,
+            base: &ModelWeights,
+            delta: Option<&crate::delta::format::DeltaSet>,
+            prompt: &[u32],
+            max_new: usize,
+            eos: Option<u32>,
+        ) -> Result<Vec<u32>> {
+            std::thread::sleep(self.delay);
+            self.inner.generate(base, delta, prompt, max_new, eos)
+        }
+    }
+    let flood_server = Arc::new(Server::with_backend(
+        base,
+        ServerOptions {
+            workers: 1,
+            max_batch: 1,
+            batch_window: Duration::from_micros(200),
+            queue_depth: 2,
+            ..Default::default()
+        },
+        Arc::new(ThrottledBackend { inner: backend.clone(), delay: Duration::from_millis(10) }),
+    ));
+    let flood_set = {
+        let mut rng = Pcg64::seeded(0xF100D);
+        let fresh = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+        let mut ft = (*fresh).clone();
+        for name in fresh.config.delta_tensor_names() {
+            let (r, c) = ft.get(&name).shape();
+            ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, &mut rng));
+        }
+        compress_model_deltas(&extract_deltas(&fresh, &ft), &dq, &BTreeMap::new(), &mut rng)
+    };
+    flood_server.register_tenant("flood", flood_set);
+    // worker pool + pending cap sized so even a fully simultaneous
+    // burst is accepted (overflow would be a 503, polluting the probe)
+    let flood_gw = Gateway::start(flood_server.clone(), "127.0.0.1:0", GatewayOptions {
+        max_connections: 32,
+        ..Default::default()
+    })?;
+    let flood_report = loadgen::run(&LoadgenOptions {
+        addr: flood_gw.local_addr().to_string(),
+        tenants: vec!["flood".to_string()],
+        requests: if quick { 24 } else { 64 },
+        rps: 2000.0, // far past what a 1-worker/depth-2 queue absorbs
+        zipf_s: 0.0,
+        prompt_len: 6,
+        max_tokens: MAX_TOKENS,
+        stream: false,
+        seed: 0xF100D,
+        ..Default::default()
+    })?;
+    flood_gw.shutdown();
+
+    let completed =
+        server.metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed);
+    let rejected = server.metrics.requests_rejected.load(std::sync::atomic::Ordering::Relaxed);
+    let tokens = server.metrics.tokens_generated.load(std::sync::atomic::Ordering::Relaxed);
+    gw.shutdown();
+
+    let mut root = Json::obj();
+    root.set("bench", "gateway")
+        .set("schema", 1u64)
+        .set("quick", quick)
+        .set("tenants", n_tenants)
+        .set("requests_per_phase", requests)
+        .set("rps_target", rps)
+        .set("zipf_s", ZIPF_S)
+        .set("max_tokens", MAX_TOKENS)
+        .set("stream", stream_report.to_json())
+        .set("nonstream", batch_report.to_json())
+        .set("flood", flood_report.to_json())
+        .set("server_completed", completed)
+        .set("server_rejected", rejected)
+        .set("server_tokens_generated", tokens);
+    std::fs::write(json_path, root.to_pretty_string())
+        .with_context(|| format!("write {json_path:?}"))?;
+
+    let mut out = format!(
+        "## Gateway — HTTP serving over {addr}: {n_tenants} tenants, open-loop \
+         {rps:.0} req/s target (Zipf s={ZIPF_S})\n"
+    );
+    out.push_str("streaming phase:\n");
+    out.push_str(&stream_report.render());
+    out.push_str("non-streaming phase:\n");
+    out.push_str(&batch_report.render());
+    out.push_str(&format!(
+        "flood probe: {} submitted, {} ok, {} shed with 429 (queue_depth 2)\n",
+        flood_report.submitted, flood_report.ok, flood_report.rejected_429
+    ));
+    out.push_str(&format!("wrote {}\n", json_path.display()));
+    if flood_report.transport_errors > 0 {
+        anyhow::bail!(
+            "flood probe dropped {} accepted connections",
+            flood_report.transport_errors
+        );
+    }
+    Ok(out)
 }

@@ -41,6 +41,11 @@ pub fn run(
         // resident budget; cold-start + steady-state under a Zipf mix
         // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
         "churn" => experiments::churn(backend, Path::new("BENCH_churn.json")),
+        // HTTP gateway end to end: in-process server on an ephemeral
+        // port driven by the open-loop loadgen — SSE streaming TTFT /
+        // inter-token / total latency, plus a 429 backpressure probe
+        // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
+        "gateway" => experiments::gateway(backend, Path::new("BENCH_gateway.json")),
         "all" => {
             let mut out = String::new();
             for exp in [

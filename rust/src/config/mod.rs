@@ -210,6 +210,13 @@ pub struct ServeConfig {
     pub fused_threads: usize,
     /// Fixed sequence length of the AOT prefill artifacts (pjrt only).
     pub pjrt_seq_len: usize,
+    /// HTTP gateway bind address (`[serve] listen_addr`, e.g.
+    /// `"127.0.0.1:8080"`; port `0` = ephemeral). None = no network
+    /// front-end: `deltadq serve` runs the in-process demo driver.
+    pub listen_addr: Option<String>,
+    /// Gateway connection worker threads == max concurrently served
+    /// HTTP connections (`[serve] max_connections`).
+    pub max_connections: usize,
     /// Delta store root (`[store] path`). None = no disk tier: every
     /// tenant stays Cold-resident forever (the pre-store behavior).
     pub store_path: Option<String>,
@@ -232,6 +239,11 @@ impl ServeConfig {
             backend: c.str_or("serve.backend", "native"),
             fused_threads: c.int_or("serve.fused_threads", 1) as usize,
             pjrt_seq_len: c.int_or("serve.pjrt_seq_len", 48) as usize,
+            listen_addr: c
+                .get("serve.listen_addr")
+                .and_then(|v| v.as_str())
+                .map(str::to_string),
+            max_connections: c.int_or("serve.max_connections", 64) as usize,
             store_path: c.get("store.path").and_then(|v| v.as_str()).map(str::to_string),
             delta_budget_mib: c.int_or("store.delta_budget_mib", 0) as u64,
         }
@@ -301,8 +313,19 @@ ratios = [2, 4, 8]
         assert_eq!(sc.backend, "native");
         assert_eq!(sc.fused_threads, 1);
         assert_eq!(sc.pjrt_seq_len, 48);
+        assert_eq!(sc.listen_addr, None);
+        assert_eq!(sc.max_connections, 64);
         assert_eq!(sc.store_path, None);
         assert_eq!(sc.delta_budget_mib, 0);
+    }
+
+    #[test]
+    fn serve_config_reads_gateway_section() {
+        let c = Config::parse("[serve]\nlisten_addr = \"127.0.0.1:0\"\nmax_connections = 16")
+            .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.listen_addr.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(sc.max_connections, 16);
     }
 
     #[test]

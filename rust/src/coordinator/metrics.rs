@@ -1,11 +1,12 @@
-//! Serving metrics: lock-free counters plus latency accumulators,
-//! snapshot-able as JSON for the demo server's periodic report.
+//! Serving metrics: lock-free counters plus log-bucketed latency
+//! histograms, snapshot-able as JSON for the demo server's periodic
+//! report and rendered as Prometheus text by the gateway's `/metrics`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::tenant::TierCounters;
-use crate::tensor::stats::Accumulator;
+use crate::util::hist::LatencyHistogram;
 use crate::util::json::Json;
 
 /// Coordinator-wide metrics. Cheap to update from any worker thread.
@@ -27,17 +28,15 @@ pub struct Metrics {
     ///
     /// [`TenantStore`]: crate::coordinator::TenantStore
     pub tiers: Arc<TierCounters>,
-    /// End-to-end request latency (seconds).
-    latency: Mutex<Accumulator>,
+    /// End-to-end request latency (log-bucketed histogram; exact mean,
+    /// percentiles to bucket precision over the *whole* history — the
+    /// old bounded sample ring forgot everything but recent requests).
+    latency: Mutex<LatencyHistogram>,
     /// Queue wait before batch pickup (seconds).
-    queue_wait: Mutex<Accumulator>,
+    queue_wait: Mutex<LatencyHistogram>,
     /// Per-batch execution time (seconds).
-    batch_exec: Mutex<Accumulator>,
-    /// p50/p99 need raw samples; bounded ring of recent latencies.
-    recent_latencies: Mutex<Vec<f64>>,
+    batch_exec: Mutex<LatencyHistogram>,
 }
-
-const RECENT_CAP: usize = 4096;
 
 impl Metrics {
     pub fn new() -> Metrics {
@@ -51,22 +50,15 @@ impl Metrics {
     }
 
     pub fn observe_latency(&self, seconds: f64) {
-        self.latency.lock().unwrap().add(seconds);
-        let mut recent = self.recent_latencies.lock().unwrap();
-        if recent.len() >= RECENT_CAP {
-            let len = recent.len();
-            recent.copy_within(len / 2.., 0);
-            recent.truncate(len / 2);
-        }
-        recent.push(seconds);
+        self.latency.lock().unwrap().record(seconds);
     }
 
     pub fn observe_queue_wait(&self, seconds: f64) {
-        self.queue_wait.lock().unwrap().add(seconds);
+        self.queue_wait.lock().unwrap().record(seconds);
     }
 
     pub fn observe_batch_exec(&self, seconds: f64) {
-        self.batch_exec.lock().unwrap().add(seconds);
+        self.batch_exec.lock().unwrap().record(seconds);
     }
 
     pub fn mean_latency(&self) -> f64 {
@@ -74,8 +66,18 @@ impl Metrics {
     }
 
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        let recent = self.recent_latencies.lock().unwrap();
-        crate::tensor::stats::percentile(&recent, p)
+        self.latency.lock().unwrap().percentile(p)
+    }
+
+    /// Copy of the end-to-end latency histogram (for merging/rendering
+    /// outside the lock).
+    pub fn latency_histogram(&self) -> LatencyHistogram {
+        self.latency.lock().unwrap().clone()
+    }
+
+    /// Copy of the queue-wait histogram.
+    pub fn queue_wait_histogram(&self) -> LatencyHistogram {
+        self.queue_wait.lock().unwrap().clone()
     }
 
     /// JSON snapshot (stable key order).
@@ -94,8 +96,10 @@ impl Metrics {
         o.set("store_bytes_read", self.tiers.store_bytes_read.load(Ordering::Relaxed));
         o.set("latency_mean_s", self.mean_latency());
         o.set("latency_p50_s", self.latency_percentile(50.0));
+        o.set("latency_p95_s", self.latency_percentile(95.0));
         o.set("latency_p99_s", self.latency_percentile(99.0));
         o.set("queue_wait_mean_s", self.queue_wait.lock().unwrap().mean());
+        o.set("queue_wait_p99_s", self.queue_wait.lock().unwrap().percentile(99.0));
         o.set("batch_exec_mean_s", self.batch_exec.lock().unwrap().mean());
         let completed = self.requests_completed.load(Ordering::Relaxed);
         let batches = self.batches_executed.load(Ordering::Relaxed).max(1);
@@ -122,13 +126,15 @@ mod tests {
     }
 
     #[test]
-    fn percentiles_from_recent() {
+    fn percentiles_from_histogram() {
         let m = Metrics::new();
         for i in 1..=100 {
             m.observe_latency(i as f64);
         }
-        assert!((m.latency_percentile(50.0) - 50.5).abs() < 1.0);
+        // log-bucketed: percentiles accurate to ~±2.5% relative
+        assert!((m.latency_percentile(50.0) - 50.0).abs() < 2.0);
         assert!(m.latency_percentile(99.0) > 95.0);
+        assert!(m.latency_percentile(99.0) <= 100.0);
     }
 
     #[test]
@@ -147,11 +153,20 @@ mod tests {
     }
 
     #[test]
-    fn recent_ring_stays_bounded() {
+    fn histogram_remembers_full_history() {
+        // the pre-histogram sample ring halved itself at capacity; the
+        // histogram's percentiles cover every observation ever recorded
         let m = Metrics::new();
-        for i in 0..(RECENT_CAP * 3) {
-            m.observe_latency(i as f64);
+        for _ in 0..10_000 {
+            m.observe_latency(1e-3);
         }
-        assert!(m.recent_latencies.lock().unwrap().len() <= RECENT_CAP);
+        m.observe_latency(10.0); // one slow outlier, early...
+        for _ in 0..10_000 {
+            m.observe_latency(1e-3);
+        }
+        let h = m.latency_histogram();
+        assert_eq!(h.count(), 20_001);
+        assert!((h.max() - 10.0).abs() < 1e-9, "outlier retained");
+        assert!(m.latency_percentile(50.0) < 2e-3);
     }
 }

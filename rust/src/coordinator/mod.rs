@@ -20,7 +20,7 @@ pub mod metrics;
 pub mod server;
 pub mod tenant;
 
-pub use batcher::{Batcher, Request, Response, SubmitError};
+pub use batcher::{Batcher, ReplySink, Request, Response, StreamEvent, SubmitError};
 pub use metrics::Metrics;
 pub use server::{Server, ServerOptions};
 pub use tenant::{TenantStore, TenantView, Tier, TierCounters};

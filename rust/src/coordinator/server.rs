@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::batcher::{Batcher, Request, Response, SubmitError};
+use crate::coordinator::batcher::{Batcher, ReplySink, Request, Response, StreamEvent, SubmitError};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::tenant::{TenantStore, TenantView, Tier};
 use crate::delta::format::DeltaSet;
@@ -162,7 +162,7 @@ impl Server {
         self.store.tenants()
     }
 
-    /// Submit a request; returns the response receiver.
+    /// Submit a request; returns the (final-only) response receiver.
     pub fn submit(
         &self,
         tenant: &str,
@@ -170,6 +170,33 @@ impl Server {
         max_new: usize,
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
         let (tx, rx) = mpsc::channel();
+        self.submit_with_sink(tenant, prompt, max_new, ReplySink::Batch(tx))?;
+        Ok(rx)
+    }
+
+    /// Submit a streaming request: the receiver yields one
+    /// [`StreamEvent::Token`] per decoded token as the worker decodes
+    /// it, then [`StreamEvent::Done`] with the final [`Response`]. The
+    /// token sequence is bit-identical to what [`Server::submit`] would
+    /// return for the same tenant/prompt/limit.
+    pub fn submit_stream(
+        &self,
+        tenant: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+    ) -> Result<mpsc::Receiver<StreamEvent>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with_sink(tenant, prompt, max_new, ReplySink::Stream(tx))?;
+        Ok(rx)
+    }
+
+    fn submit_with_sink(
+        &self,
+        tenant: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        respond: ReplySink,
+    ) -> Result<(), SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request {
             id,
@@ -177,16 +204,36 @@ impl Server {
             prompt,
             max_new,
             submitted: Instant::now(),
-            respond: tx,
+            respond,
         };
         self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
         match self.batcher.submit(req) {
-            Ok(()) => Ok(rx),
+            Ok(()) => Ok(()),
             Err(e) => {
                 self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
                 Err(e)
             }
         }
+    }
+
+    /// Total queued requests across all tenant queues (a backpressure
+    /// gauge for the metrics endpoint).
+    pub fn queued(&self) -> usize {
+        self.batcher.queued()
+    }
+
+    /// `(vocab_size, max_seq)` of the base model — the bounds the
+    /// gateway validates prompts against before submission (an
+    /// out-of-range token or over-length sequence would otherwise
+    /// panic a worker mid-batch).
+    pub fn model_limits(&self) -> (usize, usize) {
+        let c = self.store.base().config;
+        (c.vocab_size, c.max_seq)
+    }
+
+    /// The per-tenant queue-depth limit requests bounce off (HTTP 429).
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.queue_depth
     }
 
     /// Residency snapshot (tenant, hot?, requests served).
@@ -221,7 +268,7 @@ fn worker_loop(
             // with an error instead of leaving callers to time out
             for req in batch {
                 metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
-                let _ = req.respond.send(Response {
+                req.respond.send_done(Response {
                     id: req.id,
                     tenant: tenant.clone(),
                     tokens: Vec::new(),
@@ -241,23 +288,30 @@ fn worker_loop(
         for req in batch {
             let queue_wait = exec_start.duration_since(req.submitted);
             metrics.observe_queue_wait(queue_wait.as_secs_f64());
+            // tokens flow to streaming sinks as they decode (batch
+            // sinks ignore them); the decode loop is the same either
+            // way, so streamed tokens are bit-identical to batch ones
+            let sink = &req.respond;
+            let mut on_token = |t: u32| sink.send_token(t);
             let result = match &acquired.view {
                 // Hot: merged dense weights, no delta term.
-                TenantView::Hot(weights) => backend.generate(
+                TenantView::Hot(weights) => backend.generate_stream(
                     weights.as_ref(),
                     None,
                     &req.prompt,
                     req.max_new,
                     Some(vocab::EOS),
+                    &mut on_token,
                 ),
                 // Cold: separate computation over the compressed deltas
                 // (the native backend's fused sparse path).
-                TenantView::Cold(deltas) => backend.generate(
+                TenantView::Cold(deltas) => backend.generate_stream(
                     store.base().as_ref(),
                     Some(deltas.as_ref()),
                     &req.prompt,
                     req.max_new,
                     Some(vocab::EOS),
+                    &mut on_token,
                 ),
             };
             let (tokens, error) = match result {
@@ -276,7 +330,7 @@ fn worker_loop(
             metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
             let total = req.submitted.elapsed();
             metrics.observe_latency(total.as_secs_f64());
-            let _ = req.respond.send(Response {
+            req.respond.send_done(Response {
                 id: req.id,
                 tenant: tenant.clone(),
                 tokens,
@@ -341,6 +395,39 @@ mod tests {
             assert_eq!(resp.tenant, "math");
         }
         assert_eq!(server.metrics.requests_completed.load(Ordering::Relaxed), 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn streamed_tokens_match_final_response() {
+        let server = Server::start(base(), ServerOptions {
+            workers: 1,
+            batch_window: Duration::from_millis(0),
+            ..Default::default()
+        });
+        server.register_tenant("t", delta_set(5));
+        let prompt = vec![1u32, 20, 4, 21, 3];
+        let batch = server
+            .submit("t", prompt.clone(), 6)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        let rx = server.submit_stream("t", prompt, 6).unwrap();
+        let mut streamed = Vec::new();
+        let mut done = None;
+        loop {
+            match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+                StreamEvent::Token(t) => streamed.push(t),
+                StreamEvent::Done(resp) => {
+                    done = Some(resp);
+                    break;
+                }
+            }
+        }
+        let done = done.unwrap();
+        assert_eq!(streamed, done.tokens, "events concatenate to the final response");
+        assert_eq!(streamed, batch.tokens, "streamed == batch-submitted tokens");
+        assert!(done.error.is_none());
         server.shutdown();
     }
 

@@ -1,0 +1,378 @@
+//! Minimal HTTP/1.1 wire handling over `std::net` — just enough for
+//! the gateway's three routes and the loadgen client: request-line +
+//! header parsing, `Content-Length` bodies, fixed and chunked response
+//! writing, and a client-side response parser (used by the load
+//! generator and the integration tests).
+//!
+//! Deliberately not a general HTTP implementation: no multipart, no
+//! compression, no trailers, no request pipelining. Unsupported
+//! constructs fail fast with a 4xx instead of being half-handled.
+
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Largest accepted request body (a prompt of ~100k tokens as JSON).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+/// Largest accepted request-line + header block.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// "HTTP/1.1" or "HTTP/1.0".
+    pub version: String,
+    /// Header names lower-cased; values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection should stay open after this exchange.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(str::to_ascii_lowercase) {
+            Some(c) if c.contains("close") => false,
+            Some(c) if c.contains("keep-alive") => true,
+            // HTTP/1.1 defaults to persistent, 1.0 to close
+            _ => self.version == "HTTP/1.1",
+        }
+    }
+}
+
+/// Read one request off the connection. `Ok(None)` means the peer
+/// closed cleanly before sending another request (normal keep-alive
+/// termination); malformed input is an error the caller answers with
+/// a 400.
+pub fn read_request(reader: &mut impl BufRead) -> Result<Option<HttpRequest>> {
+    let Some(request_line) = read_line(reader, MAX_HEAD_BYTES)? else {
+        return Ok(None);
+    };
+    if request_line.is_empty() {
+        bail!("empty request line");
+    }
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.0").to_string();
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        bail!("unsupported version '{version}'");
+    }
+
+    let mut headers = Vec::new();
+    let mut head_bytes = request_line.len();
+    loop {
+        let line = read_line(reader, MAX_HEAD_BYTES)?.context("eof inside headers")?;
+        if line.is_empty() {
+            break;
+        }
+        head_bytes += line.len();
+        if head_bytes > MAX_HEAD_BYTES {
+            bail!("header block too large");
+        }
+        let (name, value) = line.split_once(':').with_context(|| format!("bad header '{line}'"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let mut req = HttpRequest { method, path, version, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        bail!("chunked request bodies are not supported");
+    }
+    if let Some(len) = req.header("content-length") {
+        let len: usize = len.parse().with_context(|| format!("bad content-length '{len}'"))?;
+        if len > MAX_BODY_BYTES {
+            bail!("body of {len} bytes exceeds the {MAX_BODY_BYTES} limit");
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).context("short body")?;
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+/// Read one CRLF (or bare-LF) terminated line, without the terminator.
+/// `Ok(None)` on immediate EOF.
+fn read_line(reader: &mut impl BufRead, limit: usize) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = reader
+        .by_ref()
+        .take(limit as u64 + 2)
+        .read_until(b'\n', &mut buf)
+        .context("read line")?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() == Some(&b'\n') {
+        buf.pop();
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+    } else if buf.len() > limit {
+        bail!("line exceeds {limit} bytes");
+    }
+    Ok(Some(String::from_utf8(buf).context("non-utf8 header data")?))
+}
+
+/// Standard reason phrase for the status codes the gateway emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response. `extra_headers` are emitted
+/// verbatim (e.g. `("Retry-After", "1")`).
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra_headers: &[(&str, &str)],
+) -> Result<()> {
+    write!(w, "HTTP/1.1 {status} {}\r\n", reason(status))?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    write!(w, "Connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Chunked-transfer body writer for streaming responses. Callers write
+/// the header block via [`start`], then any number of chunks, then
+/// [`finish`] for the zero-length terminator.
+///
+/// [`start`]: ChunkedWriter::start
+/// [`finish`]: ChunkedWriter::finish
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Write the response head announcing a chunked body.
+    pub fn start(
+        mut w: W,
+        status: u16,
+        content_type: &str,
+        keep_alive: bool,
+    ) -> Result<ChunkedWriter<W>> {
+        write!(w, "HTTP/1.1 {status} {}\r\n", reason(status))?;
+        write!(w, "Content-Type: {content_type}\r\n")?;
+        w.write_all(b"Transfer-Encoding: chunked\r\n")?;
+        w.write_all(b"Cache-Control: no-store\r\n")?;
+        write!(w, "Connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+        w.write_all(b"\r\n")?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    /// Write one chunk (flushed immediately — each streamed token must
+    /// hit the wire without waiting for the next).
+    pub fn chunk(&mut self, data: &[u8]) -> Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the body
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()?;
+        Ok(())
+    }
+
+    /// Terminate the chunked body.
+    pub fn finish(mut self) -> Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// One parsed client-side HTTP response.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Client side: read one full response (status line, headers, body —
+/// fixed-length, chunked, or read-to-EOF). Used by loadgen's
+/// non-streaming path and the integration tests; the streaming path
+/// uses [`read_response_head`] + [`ChunkReader`] to timestamp frames.
+pub fn read_response(reader: &mut impl BufRead) -> Result<HttpResponse> {
+    let mut resp = read_response_head(reader)?;
+    if resp.header("transfer-encoding").map(str::to_ascii_lowercase).as_deref() == Some("chunked")
+    {
+        let mut chunks = ChunkReader::new();
+        while let Some(chunk) = chunks.next_chunk(reader)? {
+            resp.body.extend_from_slice(&chunk);
+        }
+    } else if let Some(len) = resp.header("content-length") {
+        let len: usize = len.parse().with_context(|| format!("bad content-length '{len}'"))?;
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).context("short response body")?;
+        resp.body = body;
+    } else {
+        reader.read_to_end(&mut resp.body)?;
+    }
+    Ok(resp)
+}
+
+/// Client side: status line + headers only (body left to the caller).
+pub fn read_response_head(reader: &mut impl BufRead) -> Result<HttpResponse> {
+    let status_line = read_line(reader, MAX_HEAD_BYTES)?.context("eof before status line")?;
+    let mut parts = status_line.split_whitespace();
+    let version = parts.next().context("missing version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("bad status line '{status_line}'");
+    }
+    let status: u16 = parts.next().context("missing status")?.parse()?;
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(reader, MAX_HEAD_BYTES)?.context("eof inside headers")?;
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line.split_once(':').with_context(|| format!("bad header '{line}'"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok(HttpResponse { status, headers, body: Vec::new() })
+}
+
+/// Client side: incremental chunked-body reader. `next_chunk` blocks
+/// until one whole chunk arrives — which for the gateway's SSE stream
+/// means "one flushed event" — so callers can timestamp arrivals.
+#[derive(Default)]
+pub struct ChunkReader {
+    done: bool,
+}
+
+impl ChunkReader {
+    pub fn new() -> ChunkReader {
+        ChunkReader::default()
+    }
+
+    /// `Ok(None)` once the terminating zero-length chunk is consumed.
+    pub fn next_chunk(&mut self, reader: &mut impl BufRead) -> Result<Option<Vec<u8>>> {
+        if self.done {
+            return Ok(None);
+        }
+        let size_line = read_line(reader, 64)?.context("eof inside chunked body")?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .with_context(|| format!("bad chunk size '{size_line}'"))?;
+        if size == 0 {
+            // consume the trailing CRLF after the last-chunk marker
+            let _ = read_line(reader, MAX_HEAD_BYTES)?;
+            self.done = true;
+            return Ok(None);
+        }
+        if size > MAX_BODY_BYTES {
+            bail!("chunk of {size} bytes exceeds the {MAX_BODY_BYTES} limit");
+        }
+        let mut data = vec![0u8; size];
+        reader.read_exact(&mut data).context("short chunk")?;
+        let crlf = read_line(reader, 8)?.context("missing chunk terminator")?;
+        if !crlf.is_empty() {
+            bail!("chunk not CRLF-terminated");
+        }
+        Ok(Some(data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = read_request(&mut BufReader::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"), "case-insensitive");
+        assert_eq!(req.body, b"abcd");
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_garbage_is_error() {
+        assert!(read_request(&mut BufReader::new(&b""[..])).unwrap().is_none());
+        assert!(read_request(&mut BufReader::new(&b"not http\r\n\r\n"[..])).is_err());
+        let oversized =
+            format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(read_request(&mut BufReader::new(oversized.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn connection_close_overrides_version_default() {
+        let raw = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let req = read_request(&mut BufReader::new(&raw[..])).unwrap().unwrap();
+        assert!(!req.keep_alive());
+        let raw10 = b"GET / HTTP/1.0\r\n\r\n";
+        let req10 = read_request(&mut BufReader::new(&raw10[..])).unwrap().unwrap();
+        assert!(!req10.keep_alive(), "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn response_roundtrip_fixed() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 429, "application/json", b"{}", false, &[("Retry-After", "1")])
+            .unwrap();
+        let resp = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.body, b"{}");
+    }
+
+    #[test]
+    fn response_roundtrip_chunked() {
+        let mut wire = Vec::new();
+        let mut cw = ChunkedWriter::start(&mut wire, 200, "text/event-stream", true).unwrap();
+        cw.chunk(b"data: 1\n\n").unwrap();
+        cw.chunk(b"data: 2\n\n").unwrap();
+        cw.finish().unwrap();
+        // incremental reader sees each flushed chunk separately
+        let mut r = BufReader::new(&wire[..]);
+        let head = read_response_head(&mut r).unwrap();
+        assert_eq!(head.status, 200);
+        assert_eq!(head.header("transfer-encoding"), Some("chunked"));
+        let mut chunks = ChunkReader::new();
+        assert_eq!(chunks.next_chunk(&mut r).unwrap().unwrap(), b"data: 1\n\n");
+        assert_eq!(chunks.next_chunk(&mut r).unwrap().unwrap(), b"data: 2\n\n");
+        assert!(chunks.next_chunk(&mut r).unwrap().is_none());
+        // and the one-shot reader reassembles the full body
+        let resp = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(resp.body, b"data: 1\n\ndata: 2\n\n");
+    }
+}

@@ -1,0 +1,383 @@
+//! Open-loop load generator for the gateway (`deltadq loadgen`).
+//!
+//! Open-loop means arrivals follow the configured rate regardless of
+//! how fast the server answers — the schedule never waits for
+//! responses, so queueing delay shows up in the measured latency
+//! instead of silently throttling the offered load (the classic
+//! closed-loop coordinated-omission trap). Each request runs on its own
+//! thread against a fresh connection; tenants are drawn from a Zipf(s)
+//! law over the tenant list (rank 0 hottest), prompts are synthesized
+//! from the shared numeric vocab range so any model preset accepts
+//! them.
+//!
+//! Streaming-aware measurement: for `stream: true` requests the client
+//! records TTFT (request start → first token frame), per-token
+//! inter-arrival gaps, and total latency, all into the shared
+//! log-bucketed [`LatencyHistogram`]; non-streaming requests record
+//! TTFT at the response head and no inter-token samples.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::eval::tasks::vocab;
+use crate::gateway::http::{read_response, read_response_head, ChunkReader};
+use crate::gateway::sse;
+use crate::tensor::Pcg64;
+use crate::util::hist::LatencyHistogram;
+use crate::util::json::Json;
+use crate::util::zipf::Zipf;
+
+/// Load-generation knobs (`deltadq loadgen --help` mirrors these).
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Gateway address, `host:port`.
+    pub addr: String,
+    /// Tenant mix, hottest first (Zipf rank order).
+    pub tenants: Vec<String>,
+    /// Total requests to fire.
+    pub requests: usize,
+    /// Target arrival rate (requests/second), open-loop.
+    pub rps: f64,
+    /// Zipf skew across tenants (1.0+ = realistic multi-tenant skew;
+    /// 0.0 = uniform).
+    pub zipf_s: f64,
+    /// Prompt length in tokens (synthesized ids).
+    pub prompt_len: usize,
+    /// `max_tokens` per request.
+    pub max_tokens: usize,
+    /// Request SSE streaming (per-token TTFT/inter-arrival recording).
+    pub stream: bool,
+    /// Arrival/tenant/prompt randomness seed.
+    pub seed: u64,
+    /// Per-request client timeout.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> LoadgenOptions {
+        LoadgenOptions {
+            addr: "127.0.0.1:8080".to_string(),
+            tenants: vec!["math".to_string()],
+            requests: 64,
+            rps: 32.0,
+            zipf_s: 1.1,
+            prompt_len: 8,
+            max_tokens: 8,
+            stream: true,
+            seed: 0x10AD,
+            timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Aggregated results of one loadgen run (merge-able across threads).
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    pub submitted: usize,
+    /// 2xx responses with a well-formed body.
+    pub ok: usize,
+    /// 429 backpressure rejections (the server shedding load correctly).
+    pub rejected_429: usize,
+    /// Other non-2xx statuses (4xx/5xx).
+    pub http_errors: usize,
+    /// Connect/read/parse failures (no status received).
+    pub transport_errors: usize,
+    /// Tokens received across all ok responses.
+    pub tokens: u64,
+    /// Request start → first token frame (stream) / response head.
+    pub ttft: LatencyHistogram,
+    /// Gap between consecutive token frames (stream only).
+    pub inter_token: LatencyHistogram,
+    /// Request start → final byte.
+    pub total: LatencyHistogram,
+    /// Wall-clock of the whole run (seconds; set by [`run`]).
+    pub elapsed_s: f64,
+}
+
+impl LoadReport {
+    pub fn merge(&mut self, other: &LoadReport) {
+        self.submitted += other.submitted;
+        self.ok += other.ok;
+        self.rejected_429 += other.rejected_429;
+        self.http_errors += other.http_errors;
+        self.transport_errors += other.transport_errors;
+        self.tokens += other.tokens;
+        self.ttft.merge(&other.ttft);
+        self.inter_token.merge(&other.inter_token);
+        self.total.merge(&other.total);
+    }
+
+    /// Completed-request throughput actually achieved.
+    pub fn achieved_rps(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.ok as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// JSON summary (the `BENCH_gateway.json` per-phase schema).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("submitted", self.submitted)
+            .set("ok", self.ok)
+            .set("rejected_429", self.rejected_429)
+            .set("http_errors", self.http_errors)
+            .set("transport_errors", self.transport_errors)
+            .set("tokens", self.tokens)
+            .set("achieved_rps", self.achieved_rps())
+            .set("elapsed_s", self.elapsed_s)
+            .set("ttft_ms", self.ttft.summary_ms())
+            .set("inter_token_ms", self.inter_token.summary_ms())
+            .set("total_ms", self.total.summary_ms());
+        o
+    }
+
+    /// Human-readable multi-line report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests: {} submitted, {} ok, {} 429-rejected, {} http errors, {} transport errors\n",
+            self.submitted, self.ok, self.rejected_429, self.http_errors, self.transport_errors
+        ));
+        out.push_str(&format!(
+            "tokens: {} received, throughput {:.1} req/s over {:.2}s\n",
+            self.tokens,
+            self.achieved_rps(),
+            self.elapsed_s
+        ));
+        out.push_str(&self.ttft.report_ms("ttft"));
+        out.push('\n');
+        if !self.inter_token.is_empty() {
+            out.push_str(&self.inter_token.report_ms("inter-token"));
+            out.push('\n');
+        }
+        out.push_str(&self.total.report_ms("total"));
+        out.push('\n');
+        out
+    }
+}
+
+/// One planned request.
+struct Arrival {
+    at: Duration,
+    tenant: String,
+    prompt: Vec<u32>,
+}
+
+/// Fire `opts.requests` requests open-loop and gather the merged
+/// report. Blocks until every in-flight request resolves.
+pub fn run(opts: &LoadgenOptions) -> Result<LoadReport> {
+    if opts.tenants.is_empty() {
+        bail!("loadgen needs at least one tenant");
+    }
+    if opts.rps <= 0.0 || !opts.rps.is_finite() {
+        bail!("--rps must be positive");
+    }
+    let mut rng = Pcg64::seeded(opts.seed);
+    let zipf = Zipf::new(opts.tenants.len(), opts.zipf_s.max(0.0));
+
+    // the whole schedule is drawn up front so worker timing can't
+    // perturb the arrival process
+    let mut at = Duration::ZERO;
+    let arrivals: Vec<Arrival> = (0..opts.requests)
+        .map(|_| {
+            at += Duration::from_secs_f64(rng.exponential(opts.rps));
+            let tenant = opts.tenants[zipf.sample(&mut rng)].clone();
+            let mut prompt = Vec::with_capacity(opts.prompt_len.max(1));
+            prompt.push(vocab::BOS);
+            while prompt.len() < opts.prompt_len.max(1) {
+                prompt.push(vocab::NUM0 + (rng.next_f64() * vocab::NUM_COUNT as f64) as u32);
+            }
+            Arrival { at, tenant, prompt }
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(arrivals.len());
+    for arrival in arrivals {
+        if let Some(wait) = arrival.at.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let addr = opts.addr.clone();
+        let stream = opts.stream;
+        let max_tokens = opts.max_tokens;
+        let timeout = opts.timeout;
+        handles.push(std::thread::spawn(move || {
+            one_request(&addr, &arrival.tenant, &arrival.prompt, max_tokens, stream, timeout)
+        }));
+    }
+    let mut report = LoadReport::default();
+    for h in handles {
+        match h.join() {
+            Ok(r) => report.merge(&r),
+            Err(_) => report.transport_errors += 1,
+        }
+        report.submitted += 1;
+    }
+    report.elapsed_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Execute one request and fold its measurements into a fresh report.
+fn one_request(
+    addr: &str,
+    tenant: &str,
+    prompt: &[u32],
+    max_tokens: usize,
+    stream: bool,
+    timeout: Duration,
+) -> LoadReport {
+    let mut report = LoadReport::default();
+    match try_request(addr, tenant, prompt, max_tokens, stream, timeout, &mut report) {
+        Ok(()) => {}
+        Err(RequestError::Status(429)) => report.rejected_429 += 1,
+        Err(RequestError::Status(_)) => report.http_errors += 1,
+        Err(RequestError::Transport(_)) => report.transport_errors += 1,
+    }
+    report
+}
+
+enum RequestError {
+    Status(u16),
+    Transport(anyhow::Error),
+}
+
+impl From<anyhow::Error> for RequestError {
+    fn from(e: anyhow::Error) -> RequestError {
+        RequestError::Transport(e)
+    }
+}
+
+fn try_request(
+    addr: &str,
+    tenant: &str,
+    prompt: &[u32],
+    max_tokens: usize,
+    stream: bool,
+    timeout: Duration,
+    report: &mut LoadReport,
+) -> Result<(), RequestError> {
+    let mut body = Json::obj();
+    body.set("tenant", tenant)
+        .set("prompt", prompt.to_vec())
+        .set("max_tokens", max_tokens as u64)
+        .set("stream", stream);
+    let body = body.to_string();
+
+    let started = Instant::now();
+    let conn = TcpStream::connect(addr).context("connect")?;
+    conn.set_read_timeout(Some(timeout)).context("set timeout")?;
+    conn.set_nodelay(true).context("nodelay")?;
+    let mut w = conn.try_clone().context("clone stream")?;
+    write!(
+        w,
+        "POST /v1/completions HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .context("send request")?;
+    w.flush().context("flush request")?;
+
+    let mut reader = BufReader::new(conn);
+    if stream {
+        let head = read_response_head(&mut reader).context("response head")?;
+        if head.status != 200 {
+            // error bodies are fixed-length JSON even on the stream path
+            return Err(RequestError::Status(head.status));
+        }
+        let mut chunks = ChunkReader::new();
+        let mut last_token_at: Option<Instant> = None;
+        // staged locally; folded into the report only if the whole
+        // stream succeeds, so failed requests can't pollute the
+        // histograms (report.ttft.count() == report.ok must hold)
+        let mut ttft: Option<f64> = None;
+        let mut gaps: Vec<f64> = Vec::new();
+        let mut n_tokens = 0u64;
+        let mut saw_done = false;
+        while let Some(chunk) = chunks.next_chunk(&mut reader).context("read chunk")? {
+            let Some(payload) = sse::payload_of(&chunk) else { continue };
+            if payload == sse::DONE_SENTINEL {
+                continue;
+            }
+            let event = Json::parse(&payload).context("frame json")?;
+            if event.get("token").is_some() {
+                let now = Instant::now();
+                match last_token_at {
+                    None => ttft = Some(now.duration_since(started).as_secs_f64()),
+                    Some(prev) => gaps.push(now.duration_since(prev).as_secs_f64()),
+                }
+                last_token_at = Some(now);
+                n_tokens += 1;
+            } else if event.get("done").is_some() {
+                if event.get("error").is_some() {
+                    return Err(RequestError::Status(500));
+                }
+                saw_done = true;
+            }
+        }
+        if !saw_done {
+            return Err(RequestError::Transport(anyhow::anyhow!("stream ended without done")));
+        }
+        // a request that legitimately generated zero tokens (immediate
+        // EOS) has its TTFT at stream end
+        report.ttft.record(ttft.unwrap_or_else(|| started.elapsed().as_secs_f64()));
+        for gap in gaps {
+            report.inter_token.record(gap);
+        }
+        report.total.record(started.elapsed().as_secs_f64());
+        report.tokens += n_tokens;
+        report.ok += 1;
+    } else {
+        let resp = read_response(&mut reader).context("response")?;
+        if resp.status != 200 {
+            return Err(RequestError::Status(resp.status));
+        }
+        // no per-token frames here: TTFT collapses to head arrival
+        report.ttft.record(started.elapsed().as_secs_f64());
+        let text = std::str::from_utf8(&resp.body).context("utf8 body")?;
+        let j = Json::parse(text).context("body json")?;
+        let n = j
+            .get("tokens")
+            .and_then(Json::as_array)
+            .map(|a| a.len())
+            .ok_or_else(|| anyhow::anyhow!("response missing 'tokens'"))?;
+        report.total.record(started.elapsed().as_secs_f64());
+        report.tokens += n as u64;
+        report.ok += 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_merge_accumulates() {
+        let mut a = LoadReport { ok: 2, tokens: 10, ..Default::default() };
+        a.ttft.record(0.01);
+        let mut b = LoadReport { ok: 1, rejected_429: 3, ..Default::default() };
+        b.ttft.record(0.02);
+        a.merge(&b);
+        assert_eq!(a.ok, 3);
+        assert_eq!(a.rejected_429, 3);
+        assert_eq!(a.tokens, 10);
+        assert_eq!(a.ttft.count(), 2);
+        let j = a.to_json().to_string();
+        assert!(j.contains("\"rejected_429\":3"), "{j}");
+        assert!(j.contains("\"ttft_ms\""), "{j}");
+    }
+
+    #[test]
+    fn run_rejects_bad_options() {
+        let no_tenants =
+            LoadgenOptions { tenants: Vec::new(), requests: 0, ..Default::default() };
+        assert!(run(&no_tenants).is_err());
+        let bad_rps = LoadgenOptions { rps: 0.0, requests: 0, ..Default::default() };
+        assert!(run(&bad_rps).is_err());
+    }
+}

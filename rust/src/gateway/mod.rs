@@ -1,0 +1,359 @@
+//! Network gateway: the HTTP/1.1 serving front-end over the
+//! multi-tenant coordinator (std-only — `TcpListener` plus a bounded
+//! connection worker pool in the style of [`crate::runtime::pool`]).
+//!
+//! ```text
+//!   TcpListener (accept thread)
+//!        │  bounded handoff queue (overflow → immediate 503)
+//!        ▼
+//!   connection workers (max_connections threads, keep-alive loop)
+//!        │  POST /v1/completions ──▶ Server::submit / submit_stream
+//!        │       429 + Retry-After on queue backpressure
+//!        │       404 on unknown tenant · SSE chunks per token
+//!        │  GET /metrics ──▶ Prometheus text from Metrics snapshot
+//!        │  GET /healthz
+//!        ▼
+//!   coordinator worker pool (batching, tiers, backends — PR 1–3)
+//! ```
+//!
+//! Shutdown is graceful: the accept loop stops taking connections,
+//! queued + in-flight connections finish their current exchange (new
+//! keep-alive requests are turned away with `Connection: close`), and
+//! only then do the worker threads join.
+
+pub mod http;
+pub mod loadgen;
+pub mod routes;
+pub mod sse;
+
+use std::collections::VecDeque;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Server;
+
+/// Gateway construction knobs (a subset of
+/// [`crate::config::ServeConfig`] resolved to concrete values).
+#[derive(Debug, Clone)]
+pub struct GatewayOptions {
+    /// Connection worker threads == max concurrently served
+    /// connections. Accepted sockets beyond `2 ×` this wait in the
+    /// handoff queue; past that they get an immediate 503.
+    pub max_connections: usize,
+    /// Per-connection socket read timeout (idle keep-alive reaper).
+    pub read_timeout: Duration,
+    /// Per-connection socket write timeout: a client that stops
+    /// reading mid-stream must not wedge a worker (or shutdown's
+    /// join) once the kernel send buffer fills.
+    pub write_timeout: Duration,
+}
+
+impl Default for GatewayOptions {
+    fn default() -> GatewayOptions {
+        GatewayOptions {
+            max_connections: 64,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Accept-queue state shared between the accept thread and workers.
+struct Shared {
+    server: Arc<Server>,
+    queue: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    closing: AtomicBool,
+    max_pending: usize,
+    read_timeout: Duration,
+    write_timeout: Duration,
+}
+
+/// The running HTTP front-end. Bind with [`Gateway::start`]; stop with
+/// [`Gateway::shutdown`] (drains in-flight connections).
+pub struct Gateway {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind `listen_addr` (e.g. `"127.0.0.1:8080"`; port `0` picks an
+    /// ephemeral port — read it back via [`Gateway::local_addr`]) and
+    /// start serving the coordinator over HTTP.
+    pub fn start(server: Arc<Server>, listen_addr: &str, opts: GatewayOptions) -> Result<Gateway> {
+        let listener =
+            TcpListener::bind(listen_addr).with_context(|| format!("bind {listen_addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let workers_n = opts.max_connections.max(1);
+        let shared = Arc::new(Shared {
+            server,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closing: AtomicBool::new(false),
+            max_pending: workers_n * 2,
+            read_timeout: opts.read_timeout,
+            write_timeout: opts.write_timeout,
+        });
+
+        let mut workers = Vec::with_capacity(workers_n);
+        for _ in 0..workers_n {
+            let shared = shared.clone();
+            workers.push(std::thread::spawn(move || connection_worker(&shared)));
+        }
+
+        let accept_shared = shared.clone();
+        let accept_thread = std::thread::spawn(move || accept_loop(&listener, &accept_shared));
+
+        Ok(Gateway { local_addr, shared, accept_thread: Some(accept_thread), workers })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful shutdown: stop accepting, serve every connection
+    /// already accepted to completion, join all threads. The
+    /// coordinator [`Server`] is left running (the caller owns it).
+    pub fn shutdown(mut self) {
+        self.shared.closing.store(true, Ordering::Release);
+        // unblock the accept() call with a throwaway connection
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        // take and release the queue lock before notifying: a worker
+        // that read `closing == false` but hasn't entered cv.wait yet
+        // holds the lock, so this serializes against it and the
+        // notification can't be lost (classic lost-wakeup race)
+        drop(self.shared.queue.lock().unwrap());
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// `deltadq serve --listen ADDR`: load the configured server, expose it
+/// over HTTP, and serve until the process is killed. The bound address
+/// is printed (and flushed) as `gateway listening on http://ADDR` so
+/// scripts driving an ephemeral port (`--listen 127.0.0.1:0`) can
+/// scrape it.
+pub fn run_serve(serve: &crate::config::ServeConfig, tenants_csv: &str) -> Result<()> {
+    let listen = serve.listen_addr.as_deref().context("no [serve] listen_addr configured")?;
+    let tenants: Vec<String> = tenants_csv.split(',').map(|s| s.trim().to_string()).collect();
+    let server = Arc::new(crate::coordinator::load_server(serve, &tenants)?);
+    let opts = GatewayOptions {
+        max_connections: serve.max_connections.max(1),
+        ..GatewayOptions::default()
+    };
+    let gateway = Gateway::start(server.clone(), listen, opts)?;
+    println!(
+        "serving {} tenants on '{}' preset via '{}' backend: {:?}",
+        tenants.len(),
+        serve.model,
+        server.backend_name(),
+        server.tenants()
+    );
+    println!("gateway listening on http://{}", gateway.local_addr());
+    std::io::stdout().flush().ok();
+    // serve until killed; periodically surface the metrics snapshot so
+    // an operator tailing the log sees liveness without hitting /metrics
+    loop {
+        std::thread::sleep(Duration::from_secs(60));
+        println!("metrics: {}", server.metrics.snapshot().to_string());
+        std::io::stdout().flush().ok();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Shared) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(e) => {
+                if shared.closing.load(Ordering::Acquire) {
+                    return;
+                }
+                eprintln!("gateway: accept failed: {e}");
+                // persistent failures (e.g. EMFILE under connection
+                // floods) must not busy-spin the accept thread
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        if shared.closing.load(Ordering::Acquire) {
+            return; // the wake-up connection (or a late client) — drop it
+        }
+        let mut queue = shared.queue.lock().unwrap();
+        if queue.len() >= shared.max_pending {
+            // accept queue saturated: shed load immediately rather
+            // than letting the client hang unserved
+            drop(queue);
+            let mut stream = stream;
+            let _ = routes::error_response(&mut stream, 503, "gateway at capacity", false);
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            continue;
+        }
+        queue.push_back(stream);
+        drop(queue);
+        shared.cv.notify_one();
+    }
+}
+
+/// Worker: pull accepted connections and serve them until shutdown.
+/// On shutdown the queue is drained first — accepted clients always
+/// get answers.
+fn connection_worker(shared: &Shared) {
+    loop {
+        let stream = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if let Some(s) = queue.pop_front() {
+                    break s;
+                }
+                if shared.closing.load(Ordering::Acquire) {
+                    return;
+                }
+                queue = shared.cv.wait(queue).unwrap();
+            }
+        };
+        if let Err(e) = serve_connection(shared, stream) {
+            // connection-level failures (resets, timeouts) are normal
+            // under open-loop load; they must never take the worker down
+            eprintln!("gateway: connection error: {e:#}");
+        }
+    }
+}
+
+fn serve_connection(shared: &Shared, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(shared.read_timeout))?;
+    stream.set_write_timeout(Some(shared.write_timeout))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return Ok(()), // peer closed between requests
+            Err(e) => {
+                // idle keep-alive connections hitting the read timeout
+                // are a clean close, not a protocol error
+                use std::io::ErrorKind;
+                let timed_out = e
+                    .root_cause()
+                    .downcast_ref::<std::io::Error>()
+                    .is_some_and(|io| {
+                        matches!(io.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+                    });
+                if !timed_out {
+                    let _ = routes::error_response(&mut writer, 400, &format!("{e:#}"), false);
+                }
+                return Ok(());
+            }
+        };
+        // during drain the response must advertise the close we are
+        // about to perform, so keep-alive clients don't fire a next
+        // request into a dead socket
+        let draining = shared.closing.load(Ordering::Acquire);
+        let keep = routes::handle(&shared.server, &req, &mut writer, draining)?;
+        writer.flush()?;
+        if !keep {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::coordinator::ServerOptions;
+    use crate::model::{ModelConfig, ModelWeights};
+    use crate::tensor::Pcg64;
+
+    fn tiny_server() -> Arc<Server> {
+        let mut rng = Pcg64::seeded(11);
+        let base = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+        Arc::new(Server::start(base, ServerOptions {
+            workers: 1,
+            batch_window: Duration::from_millis(0),
+            ..Default::default()
+        }))
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> http::HttpResponse {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        write!(w, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+        w.flush().unwrap();
+        http::read_response(&mut BufReader::new(stream)).unwrap()
+    }
+
+    fn small_opts() -> GatewayOptions {
+        GatewayOptions { max_connections: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn healthz_and_unknown_route() {
+        let server = tiny_server();
+        let gw = Gateway::start(server.clone(), "127.0.0.1:0", small_opts()).unwrap();
+        let ok = get(gw.local_addr(), "/healthz");
+        assert_eq!(ok.status, 200);
+        assert!(String::from_utf8_lossy(&ok.body).contains("\"status\":\"ok\""));
+        let missing = get(gw.local_addr(), "/nope");
+        assert_eq!(missing.status, 404);
+        gw.shutdown();
+        if let Ok(s) = Arc::try_unwrap(server) {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn keep_alive_serves_sequential_requests() {
+        let server = tiny_server();
+        let gw = Gateway::start(server.clone(), "127.0.0.1:0", small_opts()).unwrap();
+        let stream = TcpStream::connect(gw.local_addr()).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        for _ in 0..3 {
+            write!(w, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+            w.flush().unwrap();
+            let head = http::read_response_head(&mut r).unwrap();
+            assert_eq!(head.status, 200);
+            let len: usize = head.header("content-length").unwrap().parse().unwrap();
+            let mut body = vec![0u8; len];
+            std::io::Read::read_exact(&mut r, &mut body).unwrap();
+        }
+        // close the client first: shutdown drains in-flight connections,
+        // so a live idle keep-alive would hold the join until its read
+        // timeout fires
+        drop(w);
+        drop(r);
+        gw.shutdown();
+        if let Ok(s) = Arc::try_unwrap(server) {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn shutdown_with_no_traffic_joins_cleanly() {
+        let server = tiny_server();
+        let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions {
+            max_connections: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        gw.shutdown();
+        if let Ok(s) = Arc::try_unwrap(server) {
+            s.shutdown();
+        }
+    }
+}

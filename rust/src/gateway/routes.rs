@@ -1,0 +1,416 @@
+//! Route handlers for the gateway: `POST /v1/completions` (batch and
+//! SSE-streaming), `GET /metrics` (Prometheus text), `GET /healthz` —
+//! plus the [`SubmitError`] → HTTP status mapping that turns batcher
+//! backpressure into 429 + `Retry-After` and unknown tenants into 404.
+
+use std::io::Write;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{Response, Server, StreamEvent, SubmitError, Tier};
+use crate::gateway::http::{write_response, ChunkedWriter, HttpRequest};
+use crate::gateway::sse;
+use crate::util::json::Json;
+
+/// How long a connection worker waits on the coordinator before
+/// answering 504 (the batcher has accepted the request, so this only
+/// fires if the model is pathologically slow or a worker died).
+pub const RESPONSE_TIMEOUT: Duration = Duration::from_secs(120);
+
+const CT_JSON: &str = "application/json";
+const CT_SSE: &str = "text/event-stream";
+const CT_PROM: &str = "text/plain; version=0.0.4";
+
+/// Dispatch one parsed request; returns whether to keep the
+/// connection. `draining` forces `Connection: close` on the response —
+/// the gateway is shutting down and will close after this exchange.
+pub fn handle(
+    server: &Server,
+    req: &HttpRequest,
+    w: &mut impl Write,
+    draining: bool,
+) -> Result<bool> {
+    let keep = req.keep_alive() && !draining;
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/completions") => completions(server, req, w, keep),
+        ("GET", "/healthz") => {
+            let mut o = Json::obj();
+            o.set("status", "ok").set("tenants", server.tenants().len());
+            write_response(w, 200, CT_JSON, o.to_string().as_bytes(), keep, &[])?;
+            Ok(keep)
+        }
+        ("GET", "/metrics") => {
+            let body = render_prometheus(server);
+            write_response(w, 200, CT_PROM, body.as_bytes(), keep, &[])?;
+            Ok(keep)
+        }
+        ("GET" | "POST", _) => {
+            error_response(w, 404, &format!("no route for {} {}", req.method, req.path), keep)?;
+            Ok(keep)
+        }
+        _ => {
+            error_response(w, 405, &format!("method {} not allowed", req.method), keep)?;
+            Ok(keep)
+        }
+    }
+}
+
+/// `{"error": msg}` with the given status.
+pub fn error_response(w: &mut impl Write, status: u16, msg: &str, keep: bool) -> Result<()> {
+    let mut o = Json::obj();
+    o.set("error", msg);
+    let extra: &[(&str, &str)] = if status == 429 { RETRY_AFTER_HEADER } else { &[] };
+    write_response(w, status, CT_JSON, o.to_string().as_bytes(), keep, extra)
+}
+
+const RETRY_AFTER_HEADER: &[(&str, &str)] = &[("Retry-After", "1")];
+
+/// The JSON body shared by the non-streaming response and the SSE
+/// `done` frame.
+pub fn response_json(resp: &Response) -> Json {
+    let mut o = Json::obj();
+    o.set("id", resp.id)
+        .set("tenant", resp.tenant.as_str())
+        .set("tokens", resp.tokens.clone())
+        .set("n_tokens", resp.tokens.len())
+        .set("served_hot", resp.served_hot)
+        .set("queue_wait_ms", resp.queue_wait.as_secs_f64() * 1e3)
+        .set("total_ms", resp.total.as_secs_f64() * 1e3);
+    if let Some(e) = &resp.error {
+        o.set("error", e.as_str());
+    }
+    o
+}
+
+/// Parsed body of `POST /v1/completions`.
+struct CompletionParams {
+    tenant: String,
+    prompt: Vec<u32>,
+    max_tokens: usize,
+    stream: bool,
+}
+
+fn parse_params(body: &[u8]) -> Result<CompletionParams, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    let j = Json::parse(text).map_err(|e| format!("bad JSON body: {e}"))?;
+    let tenant = j
+        .get("tenant")
+        .and_then(Json::as_str)
+        .ok_or("missing string field 'tenant'")?
+        .to_string();
+    let prompt_field = j.get("prompt").ok_or("missing array field 'prompt' (token ids)")?;
+    let items = prompt_field.as_array().ok_or("'prompt' must be an array of token ids")?;
+    let mut prompt = Vec::with_capacity(items.len());
+    for item in items {
+        prompt.push(item.as_u64().ok_or("'prompt' entries must be non-negative integers")? as u32);
+    }
+    if prompt.is_empty() {
+        return Err("'prompt' must not be empty".to_string());
+    }
+    let max_tokens = match j.get("max_tokens") {
+        Some(v) => v.as_u64().ok_or("'max_tokens' must be a non-negative integer")? as usize,
+        None => 16,
+    };
+    let stream = match j.get("stream") {
+        Some(v) => v.as_bool().ok_or("'stream' must be a boolean")?,
+        None => false,
+    };
+    Ok(CompletionParams { tenant, prompt, max_tokens, stream })
+}
+
+fn submit_error_status(e: &SubmitError) -> (u16, String) {
+    match e {
+        SubmitError::Backpressure { tenant, depth } => (
+            429,
+            format!("tenant '{tenant}' queue full (depth {depth}); retry after backoff"),
+        ),
+        SubmitError::UnknownTenant(t) => (404, format!("unknown tenant '{t}'")),
+        SubmitError::Closed => (503, "server is shutting down".to_string()),
+    }
+}
+
+fn completions(
+    server: &Server,
+    req: &HttpRequest,
+    w: &mut impl Write,
+    keep: bool,
+) -> Result<bool> {
+    let params = match parse_params(&req.body) {
+        Ok(p) => p,
+        Err(msg) => {
+            error_response(w, 400, &msg, keep)?;
+            return Ok(keep);
+        }
+    };
+    // bound-check against the model before submission: an oversized
+    // prompt or out-of-vocab token would panic a coordinator worker
+    let (vocab_size, max_seq) = server.model_limits();
+    if params.prompt.len() >= max_seq {
+        let msg = format!("prompt of {} tokens exceeds max_seq {max_seq}", params.prompt.len());
+        error_response(w, 400, &msg, keep)?;
+        return Ok(keep);
+    }
+    if let Some(&bad) = params.prompt.iter().find(|&&t| t as usize >= vocab_size) {
+        let msg = format!("prompt token {bad} outside the vocabulary (size {vocab_size})");
+        error_response(w, 400, &msg, keep)?;
+        return Ok(keep);
+    }
+    if params.stream {
+        completions_stream(server, params, w, keep)
+    } else {
+        completions_batch(server, params, w, keep)
+    }
+}
+
+fn completions_batch(
+    server: &Server,
+    params: CompletionParams,
+    w: &mut impl Write,
+    keep: bool,
+) -> Result<bool> {
+    let rx = match server.submit(&params.tenant, params.prompt, params.max_tokens) {
+        Ok(rx) => rx,
+        Err(e) => {
+            let (status, msg) = submit_error_status(&e);
+            error_response(w, status, &msg, keep)?;
+            return Ok(keep);
+        }
+    };
+    match rx.recv_timeout(RESPONSE_TIMEOUT) {
+        Ok(resp) => {
+            let status = if resp.error.is_some() { 500 } else { 200 };
+            let body = response_json(&resp).to_string();
+            write_response(w, status, CT_JSON, body.as_bytes(), keep, &[])?;
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            error_response(w, 504, "request accepted but not answered in time", keep)?;
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            // tenant removed while queued — its queue (and our sender)
+            // was dropped
+            error_response(w, 404, &format!("tenant '{}' was removed", params.tenant), keep)?;
+        }
+    }
+    Ok(keep)
+}
+
+fn completions_stream(
+    server: &Server,
+    params: CompletionParams,
+    w: &mut impl Write,
+    keep: bool,
+) -> Result<bool> {
+    let rx = match server.submit_stream(&params.tenant, params.prompt, params.max_tokens) {
+        Ok(rx) => rx,
+        Err(e) => {
+            // nothing streamed yet — a plain status response is still
+            // possible (this is where the 429/Retry-After surfaces)
+            let (status, msg) = submit_error_status(&e);
+            error_response(w, status, &msg, keep)?;
+            return Ok(keep);
+        }
+    };
+    let mut cw = ChunkedWriter::start(w, 200, CT_SSE, keep)?;
+    let mut index = 0usize;
+    loop {
+        match rx.recv_timeout(RESPONSE_TIMEOUT) {
+            Ok(StreamEvent::Token(token)) => {
+                cw.chunk(&sse::token_frame(index, token))?;
+                index += 1;
+            }
+            Ok(StreamEvent::Done(resp)) => {
+                cw.chunk(&sse::done_frame(&resp))?;
+                break;
+            }
+            Err(e) => {
+                // headers are gone; the error has to ride the stream
+                let reason = match e {
+                    RecvTimeoutError::Timeout => "timed out waiting for the next token",
+                    RecvTimeoutError::Disconnected => "tenant removed mid-stream",
+                };
+                let mut o = Json::obj();
+                o.set("error", reason).set("done", true);
+                cw.chunk(&sse::frame(&o.to_string()))?;
+                break;
+            }
+        }
+    }
+    cw.chunk(&sse::frame(sse::DONE_SENTINEL))?;
+    cw.finish()?;
+    Ok(keep)
+}
+
+/// Render the coordinator metrics in Prometheus text exposition format.
+pub fn render_prometheus(server: &Server) -> String {
+    use std::fmt::Write as _;
+    use std::sync::atomic::Ordering;
+
+    let m = &server.metrics;
+    let mut out = String::with_capacity(2048);
+    let mut counter = |name: &str, help: &str, value: u64| {
+        let _ = writeln!(out, "# HELP deltadq_{name} {help}");
+        let _ = writeln!(out, "# TYPE deltadq_{name} counter");
+        let _ = writeln!(out, "deltadq_{name} {value}");
+    };
+    counter(
+        "requests_submitted_total",
+        "Submission attempts (accepted + rejected).",
+        m.requests_submitted.load(Ordering::Relaxed),
+    );
+    counter(
+        "requests_completed_total",
+        "Requests answered (including backend errors).",
+        m.requests_completed.load(Ordering::Relaxed),
+    );
+    counter(
+        "requests_rejected_total",
+        "Submissions refused (backpressure / unknown tenant).",
+        m.requests_rejected.load(Ordering::Relaxed),
+    );
+    counter(
+        "tokens_generated_total",
+        "Tokens decoded across all requests.",
+        m.tokens_generated.load(Ordering::Relaxed),
+    );
+    counter(
+        "batches_executed_total",
+        "Tenant batches executed by the worker pool.",
+        m.batches_executed.load(Ordering::Relaxed),
+    );
+    counter(
+        "promotions_total",
+        "Cold→Hot tenant promotions.",
+        m.promotions.load(Ordering::Relaxed),
+    );
+    counter(
+        "evictions_total",
+        "Hot-cache evictions.",
+        m.evictions.load(Ordering::Relaxed),
+    );
+    counter(
+        "backend_errors_total",
+        "Requests whose execution backend failed.",
+        m.backend_errors.load(Ordering::Relaxed),
+    );
+    counter(
+        "disk_loads_total",
+        "Disk→Cold tenant hydrations from the delta store.",
+        m.tiers.disk_loads.load(Ordering::Relaxed),
+    );
+    counter(
+        "demotions_total",
+        "Cold→Disk demotions under the delta budget.",
+        m.tiers.demotions.load(Ordering::Relaxed),
+    );
+    counter(
+        "store_bytes_read_total",
+        "Bytes read from delta-store shards.",
+        m.tiers.store_bytes_read.load(Ordering::Relaxed),
+    );
+
+    let mut gauge = |name: &str, help: &str, value: f64| {
+        let _ = writeln!(out, "# HELP deltadq_{name} {help}");
+        let _ = writeln!(out, "# TYPE deltadq_{name} gauge");
+        let _ = writeln!(out, "deltadq_{name} {value}");
+    };
+    gauge(
+        "queue_depth",
+        "Requests currently queued across all tenants.",
+        server.queued() as f64,
+    );
+    gauge(
+        "queue_depth_limit",
+        "Per-tenant queue capacity (submissions beyond it get 429).",
+        server.queue_depth() as f64,
+    );
+
+    let residency = server.tier_residency();
+    let count_tier = |t: Tier| residency.iter().filter(|(_, tier, _)| *tier == t).count();
+    let _ = writeln!(out, "# HELP deltadq_tenants Registered tenants by residency tier.");
+    let _ = writeln!(out, "# TYPE deltadq_tenants gauge");
+    for (label, tier) in [("hot", Tier::Hot), ("cold", Tier::Cold), ("disk", Tier::Disk)] {
+        let _ = writeln!(out, "deltadq_tenants{{tier=\"{label}\"}} {}", count_tier(tier));
+    }
+
+    let latency = m.latency_histogram();
+    let queue_wait = m.queue_wait_histogram();
+    for (name, help, hist) in [
+        ("request_latency_seconds", "End-to-end request latency.", &latency),
+        ("queue_wait_seconds", "Queue wait before batch pickup.", &queue_wait),
+    ] {
+        let _ = writeln!(out, "# HELP deltadq_{name} {help}");
+        let _ = writeln!(out, "# TYPE deltadq_{name} summary");
+        for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+            let _ = writeln!(
+                out,
+                "deltadq_{name}{{quantile=\"{q}\"}} {}",
+                hist.percentile(p)
+            );
+        }
+        let _ = writeln!(out, "deltadq_{name}_sum {}", hist.sum());
+        let _ = writeln!(out, "deltadq_{name}_count {}", hist.count());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_parse_and_validate() {
+        let p = parse_params(
+            br#"{"tenant":"math","prompt":[1,2,3],"max_tokens":4,"stream":true}"#,
+        )
+        .unwrap();
+        assert_eq!(p.tenant, "math");
+        assert_eq!(p.prompt, vec![1, 2, 3]);
+        assert_eq!(p.max_tokens, 4);
+        assert!(p.stream);
+
+        let defaults = parse_params(br#"{"tenant":"t","prompt":[7]}"#).unwrap();
+        assert_eq!(defaults.max_tokens, 16);
+        assert!(!defaults.stream);
+
+        assert!(parse_params(b"not json").is_err());
+        assert!(parse_params(br#"{"prompt":[1]}"#).unwrap_err().contains("tenant"));
+        assert!(parse_params(br#"{"tenant":"t"}"#).unwrap_err().contains("prompt"));
+        assert!(parse_params(br#"{"tenant":"t","prompt":[]}"#).is_err());
+        assert!(parse_params(br#"{"tenant":"t","prompt":[-1]}"#).is_err());
+        assert!(parse_params(br#"{"tenant":"t","prompt":[1.5]}"#).is_err());
+    }
+
+    #[test]
+    fn submit_errors_map_to_statuses() {
+        let (s, msg) = submit_error_status(&SubmitError::Backpressure {
+            tenant: "a".into(),
+            depth: 4,
+        });
+        assert_eq!(s, 429);
+        assert!(msg.contains("queue full"));
+        let (s, _) = submit_error_status(&SubmitError::UnknownTenant("g".into()));
+        assert_eq!(s, 404);
+        let (s, _) = submit_error_status(&SubmitError::Closed);
+        assert_eq!(s, 503);
+    }
+
+    #[test]
+    fn response_json_carries_tokens_and_error() {
+        let resp = Response {
+            id: 7,
+            tenant: "math".into(),
+            tokens: vec![5, 6],
+            queue_wait: Duration::from_millis(2),
+            total: Duration::from_millis(9),
+            served_hot: true,
+            error: None,
+        };
+        let j = response_json(&resp);
+        let text = j.to_string();
+        assert!(text.contains("\"tokens\":[5,6]"), "{text}");
+        assert!(text.contains("\"served_hot\":true"), "{text}");
+        assert!(!text.contains("\"error\""), "{text}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Server-sent-events framing for `POST /v1/completions` with
+//! `"stream": true`.
+//!
+//! Wire format (each frame is one chunked-transfer chunk, flushed as
+//! soon as the token decodes):
+//!
+//! ```text
+//! data: {"index":0,"token":17}\n\n
+//! data: {"index":1,"token":4}\n\n
+//! data: {"done":true,"id":9,"tenant":"math","tokens":[17,4],...}\n\n
+//! data: [DONE]\n\n
+//! ```
+//!
+//! Every `data:` payload except the final sentinel is a JSON object
+//! built with [`crate::util::json::Json`]; a request that fails after
+//! streaming began carries an `"error"` key on its `done` frame.
+
+use crate::coordinator::Response;
+use crate::util::json::Json;
+
+/// Terminal sentinel frame (mirrors the OpenAI streaming convention).
+pub const DONE_SENTINEL: &str = "[DONE]";
+
+/// Encode one payload as an SSE frame.
+pub fn frame(payload: &str) -> Vec<u8> {
+    format!("data: {payload}\n\n").into_bytes()
+}
+
+/// Frame for one decoded token.
+pub fn token_frame(index: usize, token: u32) -> Vec<u8> {
+    let mut o = Json::obj();
+    o.set("index", index).set("token", token);
+    frame(&o.to_string())
+}
+
+/// Terminal `done` frame carrying the full response summary (same
+/// fields as the non-streaming response body, plus `"done": true`).
+pub fn done_frame(resp: &Response) -> Vec<u8> {
+    let mut o = super::routes::response_json(resp);
+    o.set("done", true);
+    frame(&o.to_string())
+}
+
+/// Split a complete SSE body into its `data:` payloads (client side —
+/// loadgen and the integration tests).
+pub fn parse_payloads(body: &str) -> Vec<String> {
+    body.split("\n\n")
+        .filter_map(|block| block.trim_start().strip_prefix("data:"))
+        .map(|p| p.trim().to_string())
+        .collect()
+}
+
+/// Extract the `data:` payload from a single frame, if `buf` holds one.
+pub fn payload_of(frame: &[u8]) -> Option<String> {
+    let text = std::str::from_utf8(frame).ok()?;
+    text.trim_end_matches('\n').trim_start().strip_prefix("data:").map(|p| p.trim().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_frames_roundtrip() {
+        let f = token_frame(3, 42);
+        let payload = payload_of(&f).unwrap();
+        let j = Json::parse(&payload).unwrap();
+        assert_eq!(j.get("index").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("token").unwrap().as_u64(), Some(42));
+    }
+
+    #[test]
+    fn parse_payloads_splits_frames() {
+        let body = "data: {\"a\":1}\n\ndata: {\"b\":2}\n\ndata: [DONE]\n\n";
+        let got = parse_payloads(body);
+        assert_eq!(got, vec!["{\"a\":1}", "{\"b\":2}", DONE_SENTINEL]);
+    }
+}

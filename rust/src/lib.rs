@@ -4,8 +4,11 @@
 //! Compression for Fine-Tuned LLMs via Group-wise Dropout and Separate
 //! Quantization"* (Jiang et al., 2024), built as a three-layer stack:
 //!
-//! * **L3 (this crate)** — the serving coordinator: multi-tenant request
-//!   routing, dynamic batching, per-tenant compressed-delta registry,
+//! * **L3 (this crate)** — the serving stack: the HTTP gateway
+//!   ([`gateway`]: token streaming over SSE, backpressure as 429,
+//!   Prometheus `/metrics`, and the open-loop load generator), the
+//!   coordinator (multi-tenant request routing, dynamic batching,
+//!   per-tenant compressed-delta registry),
 //!   the tiered on-disk delta artifact store ([`store::DeltaStore`]:
 //!   Disk → Cold → Hot residency with lazy paged hydration), pluggable
 //!   execution backends ([`runtime::ExecutionBackend`]: the native
@@ -31,6 +34,7 @@ pub mod coordinator;
 pub mod delta;
 pub mod dropout;
 pub mod eval;
+pub mod gateway;
 pub mod model;
 pub mod quant;
 pub mod runtime;

@@ -83,6 +83,13 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v} (expected true|false)")),
+            None => Ok(default),
+        }
+    }
 }
 
 fn main() -> Result<()> {
@@ -94,10 +101,12 @@ fn main() -> Result<()> {
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "gen-data" => cmd_gen_data(&args),
+        "gen-models" => cmd_gen_models(&args),
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "push" => cmd_push(&args),
         "gc" => cmd_gc(&args),
         "ls" => cmd_ls(&args),
@@ -118,6 +127,11 @@ fn print_usage() {
          \n\
          COMMANDS:\n\
            gen-data  --out DIR [--train N] [--eval N] [--seed S]\n\
+           gen-models --out DIR [--scale tiny|small|base|large]\n\
+                     [--tenants LIST] [--seed S] (synthesizes base.dqw\n\
+                     + per-tenant fine-tune .dqw artifacts — randomly\n\
+                     initialized, for serving smoke tests; real models\n\
+                     come from python/compile/train.py)\n\
            compress  --base F.dqw --finetuned F.dqw --out F.ddq\n\
                      [--method deltadq|dare|magnitude|deltazip]\n\
                      [--ratio R] [--group-size G] [--bits K] [--parts M]\n\
@@ -129,14 +143,24 @@ fn print_usage() {
            serve     [--config F.toml] [--models DIR] [--requests N]\n\
                      [--tenants LIST] [--rate R] [--backend native|pjrt]\n\
                      [--store DIR] (tiered serving out of a delta store)\n\
+                     [--listen HOST:PORT] (HTTP gateway: POST\n\
+                     /v1/completions with SSE streaming, GET /metrics,\n\
+                     GET /healthz; port 0 = ephemeral, the bound\n\
+                     address is printed; serves until killed)\n\
+           loadgen   --addr HOST:PORT [--requests N] [--rps R]\n\
+                     [--tenants LIST] [--zipf S] [--prompt-len P]\n\
+                     [--max-tokens M] [--stream true|false]\n\
+                     [--seed S] [--out REPORT.json]\n\
+                     (open-loop HTTP load: TTFT / inter-token / total\n\
+                     latency histograms, 429 accounting)\n\
            push      --store DIR --tenant NAME --delta F.ddq\n\
            gc        --store DIR [--remove TENANT[,TENANT...]]\n\
            ls        --store DIR\n\
            bench     --name table1|table2|table3|table4|fig4|fig5|fig6|\n\
-                     fig7|fig8|ablations|serving|kernels|churn\n\
+                     fig7|fig8|ablations|serving|kernels|churn|gateway\n\
                      [--models DIR] [--out FILE] [--backend native|pjrt]\n\
                      [--fused-threads N] [--artifacts DIR]\n\
-                     (kernels/churn write BENCH_<name>.json; set\n\
+                     (kernels/churn/gateway write BENCH_<name>.json; set\n\
                      DELTADQ_BENCH_QUICK=1 for the CI-sized run)"
     );
 }
@@ -160,6 +184,42 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
             task.name()
         );
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------- gen-models
+
+/// Synthesize serving artifacts without the Python training pipeline:
+/// a randomly initialized `base.dqw` plus one small-perturbation
+/// fine-tune `.dqw` per tenant. Enough for the gateway/serving smoke
+/// paths (`serve` compresses the delta on first load); accuracy-bearing
+/// experiments still need the trained artifacts.
+fn cmd_gen_models(args: &Args) -> Result<()> {
+    use deltadq::model::{save_weights, ModelConfig, ModelWeights};
+
+    let out = PathBuf::from(args.str_or("out", "artifacts/models"));
+    let scale = args.str_or("scale", "tiny");
+    let tenants = args.str_or("tenants", "math,code,chat");
+    let seed = args.u64_or("seed", 7)?;
+    let config = ModelConfig::preset(&scale)
+        .with_context(|| format!("unknown scale '{scale}' (tiny|small|base|large)"))?;
+    let dir = out.join(&scale);
+    std::fs::create_dir_all(&dir)?;
+    let mut rng = Pcg64::seeded(seed);
+    let base = ModelWeights::init(config, &mut rng);
+    save_weights(&dir.join("base.dqw"), &base)?;
+    let mut n = 1usize;
+    for tenant in tenants.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let mut ft = base.clone();
+        for name in config.delta_tensor_names() {
+            let (r, c) = ft.get(&name).shape();
+            let d = deltadq::tensor::Matrix::randn(r, c, 0.001, &mut rng);
+            ft.get_mut(&name).add_assign(&d);
+        }
+        save_weights(&dir.join(format!("{tenant}.dqw")), &ft)?;
+        n += 1;
+    }
+    println!("wrote {n} synthetic '{scale}' model(s) under {}", dir.display());
     Ok(())
 }
 
@@ -311,10 +371,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(store) = args.get("store") {
         serve.store_path = Some(store.to_string());
     }
+    if let Some(listen) = args.get("listen") {
+        serve.listen_addr = Some(listen.to_string());
+    }
+    let tenants = args.str_or("tenants", "math,code,chat");
+    if serve.listen_addr.is_some() {
+        // network front-end: expose the coordinator over HTTP and serve
+        // until killed (requests come from outside the process)
+        return deltadq::gateway::run_serve(&serve, &tenants);
+    }
     let requests = args.usize_or("requests", 64)?;
     let rate = args.f64_or("rate", 200.0)?;
-    let tenants = args.str_or("tenants", "math,code,chat");
     coordinator::run_demo_server(&serve, &tenants, requests, rate)
+}
+
+// ------------------------------------------------------------- loadgen
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let opts = deltadq::gateway::loadgen::LoadgenOptions {
+        addr: args.get("addr").context("--addr HOST:PORT required")?.to_string(),
+        tenants: args
+            .str_or("tenants", "math,code,chat")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        requests: args.usize_or("requests", 64)?,
+        rps: args.f64_or("rps", 32.0)?,
+        zipf_s: args.f64_or("zipf", 1.1)?,
+        prompt_len: args.usize_or("prompt-len", 8)?,
+        max_tokens: args.usize_or("max-tokens", 8)?,
+        stream: args.bool_or("stream", true)?,
+        seed: args.u64_or("seed", 0x10AD)?,
+        timeout: std::time::Duration::from_secs(args.u64_or("timeout-secs", 120)?),
+    };
+    let report = deltadq::gateway::loadgen::run(&opts)?;
+    print!("{}", report.render());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().to_string())?;
+        println!("wrote {out}");
+    }
+    if report.transport_errors > 0 || report.http_errors > 0 {
+        bail!(
+            "{} transport / {} http errors during the run",
+            report.transport_errors,
+            report.http_errors
+        );
+    }
+    Ok(())
 }
 
 // ------------------------------------------------------- delta store

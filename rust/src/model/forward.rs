@@ -196,6 +196,20 @@ pub fn generate<S: WeightSource>(
     max_new: usize,
     eos: Option<u32>,
 ) -> Vec<u32> {
+    generate_with(source, prompt, max_new, eos, &mut |_| {})
+}
+
+/// [`generate`] with a per-token observer: `on_token` fires the moment
+/// each token is decoded, *before* the next forward step — the hook the
+/// gateway's SSE streaming rides on. The returned vector is identical
+/// to `generate`'s for the same inputs (the decode loop is shared).
+pub fn generate_with<S: WeightSource>(
+    source: &S,
+    prompt: &[u32],
+    max_new: usize,
+    eos: Option<u32>,
+    on_token: &mut dyn FnMut(u32),
+) -> Vec<u32> {
     let c = source.config();
     let mut cache = KvCache::new(c.n_layers, c.hidden);
     let mut out = Vec::new();
@@ -213,6 +227,7 @@ pub fn generate<S: WeightSource>(
             break;
         }
         out.push(next);
+        on_token(next);
         last_logits = forward_step(source, next, pos, &mut cache);
         pos += 1;
     }

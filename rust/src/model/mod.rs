@@ -9,7 +9,7 @@ pub mod kvcache;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use forward::{forward, forward_step, generate, DeltaView, WeightSource};
+pub use forward::{forward, forward_step, generate, generate_with, DeltaView, WeightSource};
 pub use io::{load_weights, save_weights};
 pub use kvcache::KvCache;
 pub use weights::ModelWeights;

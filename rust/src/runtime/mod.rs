@@ -64,6 +64,31 @@ pub trait ExecutionBackend: Send + Sync {
         max_new: usize,
         eos: Option<u32>,
     ) -> Result<Vec<u32>>;
+
+    /// Streaming decode: `on_token` fires for every generated token in
+    /// order, as soon as it is available. The returned vector must be
+    /// exactly the sequence of `on_token` calls — the coordinator's
+    /// token-streaming path relies on that equivalence.
+    ///
+    /// The default emits all tokens only once the full `generate` call
+    /// finishes (correct, but with no intra-request latency benefit);
+    /// backends that own a decode loop should override it to emit
+    /// per-step.
+    fn generate_stream(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        prompt: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+        on_token: &mut dyn FnMut(u32),
+    ) -> Result<Vec<u32>> {
+        let tokens = self.generate(base, delta, prompt, max_new, eos)?;
+        for &t in &tokens {
+            on_token(t);
+        }
+        Ok(tokens)
+    }
 }
 
 /// Resolve a backend by name ("native" | "pjrt") against serve settings.

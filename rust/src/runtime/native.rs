@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::compress::CompressedDelta;
 use crate::delta::format::DeltaSet;
-use crate::model::forward::{forward, generate, WeightSource};
+use crate::model::forward::{forward, generate, generate_with, WeightSource};
 use crate::model::weights::ModelWeights;
 use crate::model::ModelConfig;
 use crate::runtime::fused::{fused_matmul_nt, matmul_nt_pooled};
@@ -137,6 +137,29 @@ impl ExecutionBackend for NativeBackend {
             Some(set) => generate(&self.view(base, set), prompt, max_new, eos),
         })
     }
+
+    fn generate_stream(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        prompt: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+        on_token: &mut dyn FnMut(u32),
+    ) -> Result<Vec<u32>> {
+        // same decode loop as `generate` (bit-identical tokens), with
+        // the observer firing per decode step instead of at the end
+        Ok(match delta {
+            None => generate_with(
+                &PooledWeights { weights: base, pool: &self.pool },
+                prompt,
+                max_new,
+                eos,
+                on_token,
+            ),
+            Some(set) => generate_with(&self.view(base, set), prompt, max_new, eos, on_token),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -198,6 +221,21 @@ mod tests {
         let got = b.prefill(&w, Some(&set), &tokens).unwrap();
         let want = forward(&merged, &tokens);
         assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn generate_stream_emits_exactly_the_batch_tokens() {
+        let w = base(7);
+        let set = delta_set(&w, 8, Some((8, 4)));
+        let prompt = [1u32, 20, 4, 21, 3];
+        let b = NativeBackend::default();
+        let batch = b.generate(&w, Some(&set), &prompt, 6, None).unwrap();
+        let mut streamed = Vec::new();
+        let ret = b
+            .generate_stream(&w, Some(&set), &prompt, 6, None, &mut |t| streamed.push(t))
+            .unwrap();
+        assert_eq!(streamed, batch, "per-token emission == batch decode");
+        assert_eq!(ret, batch, "return value == emitted sequence");
     }
 
     #[test]

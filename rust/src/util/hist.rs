@@ -1,0 +1,254 @@
+//! Log-bucketed latency histogram shared by the serving metrics and the
+//! gateway load generator.
+//!
+//! Durations land in geometrically spaced buckets (16 per octave from
+//! 1µs up; relative bucket width 2^(1/16) ≈ 4.4%), so a fixed ~4KiB of
+//! counters covers nanosecond-to-hour latencies with bounded relative
+//! error — unlike the previous ad-hoc scheme (a running mean plus a
+//! capped ring of raw samples that forgot history under load).
+//! Histograms from different worker threads [`merge`] exactly.
+//!
+//! [`merge`]: LatencyHistogram::merge
+
+use crate::util::json::Json;
+
+/// Smallest representable latency (seconds); everything below clamps
+/// into the first bucket.
+const MIN_S: f64 = 1e-6;
+/// Sub-buckets per factor-of-two octave.
+const SUB: usize = 16;
+/// Octaves covered: 1µs · 2^32 ≈ 71 minutes; beyond that clamps into
+/// the last bucket.
+const OCTAVES: usize = 32;
+const BUCKETS: usize = SUB * OCTAVES;
+
+/// Fixed-footprint latency histogram with exact count/sum/min/max and
+/// ~±2.2% percentile error.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    fn bucket_of(seconds: f64) -> usize {
+        if seconds <= MIN_S {
+            return 0;
+        }
+        let b = ((seconds / MIN_S).log2() * SUB as f64) as usize;
+        b.min(BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of a bucket (halves the quantization error).
+    fn bucket_value(bucket: usize) -> f64 {
+        MIN_S * 2f64.powf((bucket as f64 + 0.5) / SUB as f64)
+    }
+
+    /// Record one latency in seconds (non-finite samples are dropped).
+    pub fn record(&mut self, seconds: f64) {
+        if !seconds.is_finite() {
+            return;
+        }
+        let s = seconds.max(0.0);
+        self.counts[Self::bucket_of(s)] += 1;
+        self.count += 1;
+        self.sum += s;
+        self.min = self.min.min(s);
+        self.max = self.max.max(s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (tracked outside the buckets).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Percentile in seconds (`p` in 0..=100), accurate to the bucket
+    /// width. The extreme percentiles return the exact tracked min/max.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if p <= 0.0 {
+            return self.min();
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        let rank = (p / 100.0 * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // clamp to the observed envelope so tiny histograms
+                // don't report beyond their own min/max
+                return Self::bucket_value(b).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one (exact: bucket-wise add).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// `{n, mean_ms, p50_ms, p95_ms, p99_ms, min_ms, max_ms}` summary
+    /// object — the schema used by loadgen reports and BENCH JSON.
+    pub fn summary_ms(&self) -> Json {
+        let ms = 1e3;
+        let mut o = Json::obj();
+        o.set("n", self.count)
+            .set("mean_ms", self.mean() * ms)
+            .set("p50_ms", self.percentile(50.0) * ms)
+            .set("p95_ms", self.percentile(95.0) * ms)
+            .set("p99_ms", self.percentile(99.0) * ms)
+            .set("min_ms", self.min() * ms)
+            .set("max_ms", self.max * ms);
+        o
+    }
+
+    /// One human-readable report line in milliseconds.
+    pub fn report_ms(&self, name: &str) -> String {
+        format!(
+            "{name:<14} n={:<6} mean {:>9.3}ms  p50 {:>9.3}ms  p95 {:>9.3}ms  p99 {:>9.3}ms",
+            self.count,
+            self.mean() * 1e3,
+            self.percentile(50.0) * 1e3,
+            self.percentile(95.0) * 1e3,
+            self.percentile(99.0) * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_all_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.is_empty());
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn mean_is_exact_and_percentiles_bounded_error() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1ms..1s
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.5005).abs() < 1e-9, "mean is tracked exactly");
+        // log-bucket quantization: ±2.5% relative
+        let p50 = h.percentile(50.0);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.025, "p50 {p50}");
+        let p99 = h.percentile(99.0);
+        assert!((p99 - 0.99).abs() / 0.99 < 0.025, "p99 {p99}");
+        assert_eq!(h.percentile(0.0), 1e-3);
+        assert_eq!(h.percentile(100.0), 1.0);
+    }
+
+    #[test]
+    fn clamps_tiny_huge_and_drops_nonfinite() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(1e9);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 3, "non-finite samples dropped");
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e9);
+        assert!(h.percentile(50.0) <= 1e9);
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for i in 1..=50 {
+            a.record(i as f64 * 1e-4);
+            all.record(i as f64 * 1e-4);
+        }
+        for i in 1..=70 {
+            b.record(i as f64 * 1e-2);
+            all.record(i as f64 * 1e-2);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.sum(), all.sum());
+        for p in [10.0, 50.0, 95.0, 99.0] {
+            assert_eq!(a.percentile(p), all.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn summary_json_has_schema_keys() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.010);
+        h.record(0.020);
+        let s = h.summary_ms().to_string();
+        for key in ["\"n\":2", "\"mean_ms\"", "\"p50_ms\"", "\"p95_ms\"", "\"p99_ms\""] {
+            assert!(s.contains(key), "{key} missing from {s}");
+        }
+        assert!(h.report_ms("total").contains("n=2"));
+    }
+}

@@ -27,6 +27,19 @@ impl Json {
         Json::Obj(BTreeMap::new())
     }
 
+    pub fn arr() -> Json {
+        Json::Arr(Vec::new())
+    }
+
+    /// Append to an array (panics on non-arrays — programmer error).
+    pub fn push(&mut self, value: impl Into<Json>) -> &mut Self {
+        match self {
+            Json::Arr(items) => items.push(value.into()),
+            _ => panic!("Json::push on non-array"),
+        }
+        self
+    }
+
     /// Insert into an object (panics on non-objects — programmer error).
     pub fn set(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
         match self {
@@ -108,6 +121,51 @@ impl Json {
         let mut s = String::new();
         self.write(&mut s);
         s
+    }
+
+    /// Serialize with two-space indentation (for on-disk artifacts a
+    /// human will diff, like the `BENCH_*.json` files). Parses back to
+    /// the same value as the compact form.
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s.push('\n');
+        s
+    }
+
+    fn write_pretty(&self, out: &mut String, depth: usize) {
+        const INDENT: &str = "  ";
+        match self {
+            Json::Arr(items) if !items.is_empty() => {
+                out.push_str("[\n");
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&INDENT.repeat(depth + 1));
+                    item.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&INDENT.repeat(depth));
+                out.push(']');
+            }
+            Json::Obj(map) if !map.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&INDENT.repeat(depth + 1));
+                    Json::Str(k.clone()).write(out);
+                    out.push_str(": ");
+                    v.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&INDENT.repeat(depth));
+                out.push('}');
+            }
+            other => other.write(out),
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -417,6 +475,19 @@ mod tests {
         assert_eq!(back, o);
         // and the reparse of the re-serialization is stable
         assert_eq!(Json::parse(&back.to_string()).unwrap(), o);
+    }
+
+    #[test]
+    fn array_builder_and_pretty_roundtrip() {
+        let mut a = Json::arr();
+        a.push(1u64).push("two");
+        let mut o = Json::obj();
+        o.set("items", a).set("empty", Json::arr()).set("nested", Json::obj());
+        let pretty = o.to_pretty_string();
+        assert!(pretty.contains("  \"items\": [\n"), "{pretty}");
+        assert!(pretty.contains("\"empty\": []"), "{pretty}");
+        assert!(pretty.ends_with('\n'));
+        assert_eq!(Json::parse(&pretty).unwrap(), o, "pretty form parses back");
     }
 
     #[test]

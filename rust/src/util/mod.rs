@@ -1,11 +1,14 @@
 //! Shared utilities: small linear algebra, JSON emission/parsing,
-//! CRC-32, table rendering, and timing — all in-tree because the
+//! CRC-32, the log-bucketed latency histogram, table rendering, and
+//! timing — all in-tree because the
 //! crate's only default dependency is `anyhow` (see Cargo.toml; the
 //! `xla` stub rides behind the optional `pjrt` feature).
 
 pub mod bench;
 pub mod crc32;
+pub mod hist;
 pub mod json;
 pub mod linalg;
 pub mod table;
 pub mod timer;
+pub mod zipf;

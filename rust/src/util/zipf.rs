@@ -1,0 +1,64 @@
+//! Zipf(s) rank sampler shared by the churn bench and the gateway load
+//! generator — the standard skewed-popularity model for multi-tenant
+//! traffic (rank 0 hottest; `s = 0` degenerates to uniform).
+
+use crate::tensor::Pcg64;
+
+/// Inverse-CDF Zipf sampler over `n` ranks.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        let weights: Vec<f64> = (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(s)).collect();
+        let sum: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        Zipf {
+            cdf: weights
+                .iter()
+                .map(|w| {
+                    acc += w / sum;
+                    acc
+                })
+                .collect(),
+        }
+    }
+
+    /// Sample a rank in `0..n`.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        self.cdf.iter().position(|&c| u < c).unwrap_or(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skewed_toward_rank_zero_and_covers_all_ranks() {
+        let z = Zipf::new(8, 1.2);
+        let mut rng = Pcg64::seeded(3);
+        let mut counts = [0usize; 8];
+        for _ in 0..4000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[3], "{counts:?}");
+        assert!(counts[0] > counts[7] * 2, "{counts:?}");
+        assert!(counts.iter().all(|&c| c > 0), "all ranks sampled: {counts:?}");
+    }
+
+    #[test]
+    fn s_zero_is_roughly_uniform() {
+        let z = Zipf::new(4, 0.0);
+        let mut rng = Pcg64::seeded(9);
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((700..=1300).contains(&c), "{counts:?}");
+        }
+    }
+}

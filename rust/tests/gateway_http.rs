@@ -1,0 +1,414 @@
+//! Integration: the HTTP gateway end to end, over real sockets.
+//!
+//! Acceptance properties of the network subsystem:
+//! * ≥ 8 concurrent connections across ≥ 3 tenants — all starting at
+//!   Disk tier (hydrating mid-request) — answer correctly;
+//! * tokens streamed over the socket (SSE frames) are bit-identical to
+//!   the in-process `generate()` path for the same tenant/prompt;
+//! * a flood past `queue_depth` sheds with 429 + `Retry-After` while
+//!   every accepted request still completes (nothing dropped or hung);
+//! * `GET /metrics` exposes the tier counters (disk loads, demotions)
+//!   and queue-depth gauges in Prometheus text format.
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use deltadq::compress::pipeline::compress_model_deltas;
+use deltadq::compress::{DeltaDq, DeltaDqConfig};
+use deltadq::coordinator::{Server, ServerOptions, Tier};
+use deltadq::delta::extract_deltas;
+use deltadq::delta::format::DeltaSet;
+use deltadq::eval::tasks::vocab;
+use deltadq::gateway::http::{read_response, HttpResponse};
+use deltadq::gateway::{sse, Gateway, GatewayOptions};
+use deltadq::model::{ModelConfig, ModelWeights};
+use deltadq::runtime::{ExecutionBackend, NativeBackend};
+use deltadq::store::DeltaStore;
+use deltadq::tensor::{Matrix, Pcg64};
+use deltadq::util::json::Json;
+
+const N_TENANTS: usize = 3;
+const PROMPT: [u32; 5] = [1, 20, 4, 21, 3];
+const MAX_NEW: usize = 6;
+
+fn base() -> Arc<ModelWeights> {
+    let mut rng = Pcg64::seeded(1);
+    Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng))
+}
+
+fn deltas_for(base: &ModelWeights, seed: u64) -> DeltaSet {
+    let mut rng = Pcg64::seeded(seed);
+    let mut ft = base.clone();
+    for name in base.config.delta_tensor_names() {
+        let (r, c) = ft.get(&name).shape();
+        ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, &mut rng));
+    }
+    let d = extract_deltas(base, &ft);
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(16)));
+    compress_model_deltas(&d, &dq, &Default::default(), &mut rng)
+}
+
+fn post(addr: SocketAddr, body: &str) -> HttpResponse {
+    let conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut w = conn.try_clone().unwrap();
+    write!(
+        w,
+        "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    w.flush().unwrap();
+    read_response(&mut BufReader::new(conn)).unwrap()
+}
+
+fn get(addr: SocketAddr, path: &str) -> HttpResponse {
+    let conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut w = conn.try_clone().unwrap();
+    write!(w, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+    w.flush().unwrap();
+    read_response(&mut BufReader::new(conn)).unwrap()
+}
+
+fn completion_body(tenant: &str, stream: bool) -> String {
+    let mut o = Json::obj();
+    o.set("tenant", tenant)
+        .set("prompt", PROMPT.to_vec())
+        .set("max_tokens", MAX_NEW as u64)
+        .set("stream", stream);
+    o.to_string()
+}
+
+/// Extract the streamed token sequence (and the `done` summary) from a
+/// complete SSE body.
+fn streamed_tokens(body: &[u8]) -> (Vec<u32>, Json) {
+    let text = std::str::from_utf8(body).unwrap();
+    let mut tokens = Vec::new();
+    let mut done = None;
+    for payload in sse::parse_payloads(text) {
+        if payload == sse::DONE_SENTINEL {
+            continue;
+        }
+        let j = Json::parse(&payload).unwrap();
+        if let Some(t) = j.get("token") {
+            tokens.push(t.as_u64().unwrap() as u32);
+        } else if j.get("done").is_some() {
+            done = Some(j);
+        }
+    }
+    (tokens, done.expect("stream carried a done frame"))
+}
+
+/// The headline acceptance test: tiered tenants (all starting at Disk)
+/// served over ≥ 8 concurrent HTTP connections, streamed output
+/// bit-equal to the in-process path, with the tier counters visible on
+/// `/metrics`.
+#[test]
+fn concurrent_streaming_over_disk_tenants_matches_in_process() {
+    let b = base();
+    let sets: Vec<DeltaSet> = (0..N_TENANTS as u64).map(|i| deltas_for(&b, 70 + i)).collect();
+
+    // ground truth: the in-process eager path, per tenant
+    let backend = NativeBackend::default();
+    let expected: Vec<Vec<u32>> = sets
+        .iter()
+        .map(|set| {
+            backend.generate(&b, Some(set), &PROMPT, MAX_NEW, Some(vocab::EOS)).unwrap()
+        })
+        .collect();
+
+    let root = std::env::temp_dir()
+        .join("deltadq-test-gateway")
+        .join(format!("serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = Arc::new(DeltaStore::open_or_create(&root).unwrap());
+    for (i, set) in sets.iter().enumerate() {
+        store.push(&format!("t{i}"), set).unwrap();
+    }
+    // budget: two resident tenants out of three → hydrations + demotions
+    let mut sizes: Vec<u64> = sets.iter().map(|s| s.storage_bits() / 8).collect();
+    sizes.sort();
+    let delta_budget = sizes[N_TENANTS - 1] + sizes[N_TENANTS - 2] + 1024;
+
+    let server = Arc::new(
+        Server::with_store(
+            b.clone(),
+            ServerOptions {
+                workers: 2,
+                batch_window: Duration::from_micros(200),
+                promote_after: u64::MAX, // stay Cold: the fused path
+                delta_budget: Some(delta_budget),
+                ..Default::default()
+            },
+            Arc::new(NativeBackend::default()),
+            store.clone(),
+        )
+        .unwrap(),
+    );
+    assert!(
+        server.tier_residency().iter().all(|(_, t, _)| *t == Tier::Disk),
+        "every tenant starts at Disk"
+    );
+
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions {
+        max_connections: 16,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = gw.local_addr();
+
+    // 9 concurrent connections (3 per tenant: stream, batch, stream),
+    // every one its own socket — all racing the Disk→Cold hydration
+    let mut handles = Vec::new();
+    for round in 0..3 {
+        for tenant_i in 0..N_TENANTS {
+            let want = expected[tenant_i].clone();
+            let stream = round != 1;
+            handles.push(std::thread::spawn(move || {
+                let tenant = format!("t{tenant_i}");
+                let resp = post(addr, &completion_body(&tenant, stream));
+                assert_eq!(resp.status, 200, "{tenant}: {:?}", resp);
+                if stream {
+                    let (tokens, done) = streamed_tokens(&resp.body);
+                    assert_eq!(tokens, want, "{tenant}: streamed == in-process");
+                    assert!(done.get("error").is_none(), "{tenant}: {done:?}");
+                    // the done frame repeats the full sequence
+                    let done_tokens: Vec<u32> = done
+                        .get("tokens")
+                        .unwrap()
+                        .as_array()
+                        .unwrap()
+                        .iter()
+                        .map(|t| t.as_u64().unwrap() as u32)
+                        .collect();
+                    assert_eq!(done_tokens, want);
+                } else {
+                    let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+                    let tokens: Vec<u32> = j
+                        .get("tokens")
+                        .unwrap()
+                        .as_array()
+                        .unwrap()
+                        .iter()
+                        .map(|t| t.as_u64().unwrap() as u32)
+                        .collect();
+                    assert_eq!(tokens, want, "{tenant}: batch == in-process");
+                }
+            }));
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // tier churn happened and is visible over the wire
+    let metrics = get(addr, "/metrics");
+    assert_eq!(metrics.status, 200);
+    let text = String::from_utf8(metrics.body).unwrap();
+    let metric_value = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(name) && !l.starts_with('#'))
+            .unwrap_or_else(|| panic!("{name} missing from:\n{text}"))
+            .rsplit(' ')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap()
+    };
+    assert!(metric_value("deltadq_disk_loads_total") >= N_TENANTS as f64, "{text}");
+    assert!(metric_value("deltadq_demotions_total") > 0.0, "{text}");
+    assert!(metric_value("deltadq_requests_completed_total") >= 9.0, "{text}");
+    assert!(text.contains("deltadq_queue_depth "), "{text}");
+    assert!(text.contains("deltadq_tenants{tier=\"disk\"}"), "{text}");
+    assert!(text.contains("deltadq_request_latency_seconds{quantile=\"0.99\"}"), "{text}");
+
+    // health + unknown tenant semantics on the same live server
+    assert_eq!(get(addr, "/healthz").status, 200);
+    let missing = post(addr, &completion_body("ghost", false));
+    assert_eq!(missing.status, 404, "unknown tenant maps to 404");
+    // malformed requests never reach (or panic) a coordinator worker
+    assert_eq!(post(addr, "not json").status, 400);
+    let mut oov = Json::obj();
+    oov.set("tenant", "t0").set("prompt", vec![999_999u64]);
+    assert_eq!(post(addr, &oov.to_string()).status, 400, "out-of-vocab token rejected");
+    let mut long = Json::obj();
+    long.set("tenant", "t0").set("prompt", vec![1u64; 4096]);
+    assert_eq!(post(addr, &long.to_string()).status, 400, "over-length prompt rejected");
+
+    gw.shutdown();
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Backend wrapper pinning per-request service time, so the flood is
+/// guaranteed to outpace the drain on any host speed.
+struct SlowBackend {
+    inner: NativeBackend,
+    delay: Duration,
+}
+
+impl ExecutionBackend for SlowBackend {
+    fn name(&self) -> &'static str {
+        "slow-native"
+    }
+
+    fn prefill(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        tokens: &[u32],
+    ) -> anyhow::Result<deltadq::tensor::Matrix> {
+        self.inner.prefill(base, delta, tokens)
+    }
+
+    fn generate(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        prompt: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> anyhow::Result<Vec<u32>> {
+        std::thread::sleep(self.delay);
+        self.inner.generate(base, delta, prompt, max_new, eos)
+    }
+}
+
+/// Backpressure contract: flooding a deliberately tiny queue yields
+/// 429 + `Retry-After` for the overflow, while every accepted request
+/// completes with a well-formed 200 — no drops, no hangs.
+#[test]
+fn flood_past_queue_depth_sheds_with_429_and_serves_the_rest() {
+    let b = base();
+    let server = Arc::new(Server::with_backend(
+        b.clone(),
+        ServerOptions {
+            workers: 1,
+            max_batch: 1,
+            batch_window: Duration::from_micros(200),
+            queue_depth: 2,
+            ..Default::default()
+        },
+        // 10ms per request: the 24-connection burst arrives in well
+        // under the ≥80ms the queue needs to drain it
+        Arc::new(SlowBackend { inner: NativeBackend::default(), delay: Duration::from_millis(10) }),
+    ));
+    server.register_tenant("flood", deltas_for(&b, 90));
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions {
+        max_connections: 32,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = gw.local_addr();
+
+    let mut handles = Vec::new();
+    for i in 0..24 {
+        let stream = i % 2 == 0;
+        handles.push(std::thread::spawn(move || {
+            let resp = post(addr, &completion_body("flood", stream));
+            match resp.status {
+                200 => {
+                    if stream {
+                        let (tokens, done) = streamed_tokens(&resp.body);
+                        assert!(done.get("error").is_none(), "{done:?}");
+                        let n = done.get("n_tokens").unwrap().as_u64().unwrap() as usize;
+                        assert_eq!(tokens.len(), n, "stream complete, nothing truncated");
+                    } else {
+                        let j =
+                            Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+                        assert!(j.get("tokens").is_some(), "{j:?}");
+                    }
+                    (1usize, 0usize)
+                }
+                429 => {
+                    assert_eq!(
+                        resp.header("retry-after"),
+                        Some("1"),
+                        "429 carries Retry-After"
+                    );
+                    let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+                    assert!(j.get("error").unwrap().as_str().unwrap().contains("queue full"));
+                    (0, 1)
+                }
+                other => panic!("unexpected status {other}"),
+            }
+        }));
+    }
+    let mut served = 0;
+    let mut shed = 0;
+    for h in handles {
+        // every accepted connection resolves — a panic or a hang here
+        // is a dropped request
+        let (ok, rejected) = h.join().unwrap();
+        served += ok;
+        shed += rejected;
+    }
+    assert_eq!(served + shed, 24, "every request answered");
+    assert!(served > 0, "some requests served");
+    assert!(shed > 0, "flood past queue_depth must shed with 429s");
+
+    gw.shutdown();
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}
+
+/// The loadgen client measures through the same wire path it drives:
+/// an in-process smoke run records TTFT/total for every request and
+/// sees only 200s/429s.
+#[test]
+fn loadgen_smoke_against_live_gateway() {
+    use deltadq::gateway::loadgen::{self, LoadgenOptions};
+
+    let b = base();
+    let server = Arc::new(Server::with_backend(
+        b.clone(),
+        ServerOptions {
+            workers: 2,
+            batch_window: Duration::from_micros(200),
+            ..Default::default()
+        },
+        Arc::new(NativeBackend::default()),
+    ));
+    server.register_tenant("t0", deltas_for(&b, 95));
+    server.register_tenant("t1", deltas_for(&b, 96));
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions {
+        max_connections: 8,
+        ..Default::default()
+    })
+    .unwrap();
+
+    for stream in [true, false] {
+        let report = loadgen::run(&LoadgenOptions {
+            addr: gw.local_addr().to_string(),
+            tenants: vec!["t0".to_string(), "t1".to_string()],
+            requests: 8,
+            rps: 64.0,
+            prompt_len: 5,
+            max_tokens: 4,
+            stream,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(report.submitted, 8);
+        assert_eq!(report.transport_errors, 0, "stream={stream}");
+        assert_eq!(report.http_errors, 0, "stream={stream}");
+        assert_eq!(report.ok + report.rejected_429, 8, "stream={stream}");
+        assert_eq!(report.ttft.count() as usize, report.ok, "stream={stream}");
+        assert_eq!(report.total.count() as usize, report.ok, "stream={stream}");
+        if stream {
+            assert!(report.tokens > 0, "streamed tokens arrived");
+        }
+    }
+
+    gw.shutdown();
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}
