@@ -1063,6 +1063,224 @@ fn latency_stats(xs: &[f64]) -> Json {
     o
 }
 
+// -------------------------------------------------------------- decode
+
+/// One measured request of the decode bench.
+struct DecodeSample {
+    long: bool,
+    ttft_ms: f64,
+    tokens: Vec<u32>,
+}
+
+/// Result of one decode-bench phase (one scheduling discipline).
+struct DecodePhase {
+    samples: Vec<DecodeSample>,
+    elapsed_s: f64,
+    preempted: u64,
+    steps: u64,
+}
+
+/// E14: iteration-level scheduling vs run-to-completion batching on a
+/// mixed workload — a few long generations submitted ahead of many
+/// short ones, the pattern where run-to-completion head-of-line-blocks
+/// every short request behind the longs. Measures per-class TTFT
+/// (streaming, in-process) and aggregate tokens/s for both disciplines
+/// over the *same* requests, asserts the outputs are bit-identical, and
+/// writes machine-readable `BENCH_decode.json`.
+///
+/// `DELTADQ_BENCH_QUICK=1` switches to CI mode: 8 short + 2 long
+/// requests per phase.
+pub fn decode(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<String> {
+    use crate::coordinator::StreamEvent;
+    use crate::sched::SchedOptions;
+
+    let quick = std::env::var("DELTADQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (shorts, longs) = if quick { (8usize, 2usize) } else { (32, 4) };
+    let (short_max, long_max) = (2usize, 32usize);
+    const PROMPT_LEN: usize = 6;
+    const BLOCK_SIZE: usize = 16;
+
+    anyhow::ensure!(
+        backend.supports_stepping(),
+        "decode bench needs a stepping backend ('{}' is run-to-completion only)",
+        backend.name()
+    );
+
+    let mut rng = Pcg64::seeded(0xDEC0DE);
+    let base = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(DEFAULT_GROUP)));
+    let mut tenant_sets = Vec::new();
+    for _ in 0..2 {
+        let mut ft = (*base).clone();
+        for name in base.config.delta_tensor_names() {
+            let (r, c) = ft.get(&name).shape();
+            ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, &mut rng));
+        }
+        let deltas = extract_deltas(&base, &ft);
+        tenant_sets.push(compress_model_deltas(&deltas, &dq, &BTreeMap::new(), &mut rng));
+    }
+    // request plan: longs (tenant "long") submitted first, then shorts
+    // (tenant "short") — worst case for run-to-completion
+    let plan: Vec<(bool, Vec<u32>)> = (0..longs + shorts)
+        .map(|i| {
+            let mut prompt = vec![crate::eval::tasks::vocab::BOS];
+            while prompt.len() < PROMPT_LEN {
+                prompt.push(
+                    crate::eval::tasks::vocab::NUM0
+                        + (rng.next_f64() * crate::eval::tasks::vocab::NUM_COUNT as f64) as u32,
+                );
+            }
+            (i < longs, prompt)
+        })
+        .collect();
+
+    let run_phase = |sched: bool| -> Result<DecodePhase> {
+        let options = ServerOptions {
+            workers: 1, // equivalent compute either way: one drive thread
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            queue_depth: 1024,
+            sched: sched.then(|| SchedOptions {
+                kv_pool_bytes: 8 << 20,
+                block_size: BLOCK_SIZE,
+                max_running: longs + shorts,
+            }),
+            ..Default::default()
+        };
+        let server = Arc::new(Server::with_backend(base.clone(), options, backend.clone()));
+        server.register_tenant("long", tenant_sets[0].clone());
+        server.register_tenant("short", tenant_sets[1].clone());
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for (long, prompt) in plan.clone() {
+            let (tenant, max_tokens) = if long { ("long", long_max) } else { ("short", short_max) };
+            let rx = server
+                .submit_stream(tenant, prompt, max_tokens)
+                .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
+            let submitted = Instant::now();
+            handles.push(std::thread::spawn(move || -> Result<DecodeSample> {
+                let mut ttft_ms = f64::NAN;
+                let mut tokens = Vec::new();
+                loop {
+                    match rx.recv_timeout(Duration::from_secs(300))? {
+                        StreamEvent::Token(t) => {
+                            if tokens.is_empty() {
+                                ttft_ms = submitted.elapsed().as_secs_f64() * 1e3;
+                            }
+                            tokens.push(t);
+                        }
+                        StreamEvent::Done(resp) => {
+                            if let Some(e) = resp.error {
+                                anyhow::bail!("request failed: {e}");
+                            }
+                            // a zero-token generation's TTFT is its
+                            // completion time
+                            if tokens.is_empty() {
+                                ttft_ms = submitted.elapsed().as_secs_f64() * 1e3;
+                            }
+                            return Ok(DecodeSample { long, ttft_ms, tokens });
+                        }
+                    }
+                }
+            }));
+        }
+        let samples: Result<Vec<DecodeSample>> = handles
+            .into_iter()
+            .map(|h| -> Result<DecodeSample> {
+                h.join().map_err(|_| anyhow::anyhow!("collector panicked"))?
+            })
+            .collect();
+        let samples = samples?;
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        let stats = server.sched_stats();
+        let phase = DecodePhase {
+            samples,
+            elapsed_s,
+            preempted: stats.map(|s| s.preempted_total).unwrap_or(0),
+            steps: stats.map(|s| s.steps_executed).unwrap_or(0),
+        };
+        match Arc::try_unwrap(server) {
+            Ok(s) => s.shutdown(),
+            Err(_) => anyhow::bail!("server still referenced"),
+        }
+        Ok(phase)
+    };
+
+    let continuous = run_phase(true)?;
+    let legacy = run_phase(false)?;
+
+    let tokens_match = continuous
+        .samples
+        .iter()
+        .zip(legacy.samples.iter())
+        .all(|(a, b)| a.tokens == b.tokens);
+    let phase_json = |p: &DecodePhase| -> Json {
+        let short_ttft: Vec<f64> =
+            p.samples.iter().filter(|s| !s.long).map(|s| s.ttft_ms).collect();
+        let long_ttft: Vec<f64> =
+            p.samples.iter().filter(|s| s.long).map(|s| s.ttft_ms).collect();
+        let total_tokens: usize = p.samples.iter().map(|s| s.tokens.len()).sum();
+        let mut o = Json::obj();
+        o.set("ttft_short_ms", latency_stats(&short_ttft))
+            .set("ttft_long_ms", latency_stats(&long_ttft))
+            .set("tokens", total_tokens)
+            .set("tokens_per_s", total_tokens as f64 / p.elapsed_s.max(1e-9))
+            .set("elapsed_s", p.elapsed_s)
+            .set("preempted", p.preempted)
+            .set("steps", p.steps);
+        o
+    };
+    let short_p99 = |p: &DecodePhase| -> f64 {
+        let xs: Vec<f64> = p.samples.iter().filter(|s| !s.long).map(|s| s.ttft_ms).collect();
+        percentile(&xs, 99.0)
+    };
+    let speedup = short_p99(&legacy) / short_p99(&continuous).max(1e-9);
+
+    let mut root = Json::obj();
+    root.set("bench", "decode")
+        .set("schema", 1u64)
+        .set("quick", quick)
+        .set("model", "tiny")
+        .set("shorts", shorts)
+        .set("longs", longs)
+        .set("short_max_tokens", short_max)
+        .set("long_max_tokens", long_max)
+        .set("block_size", BLOCK_SIZE)
+        .set("continuous", phase_json(&continuous))
+        .set("run_to_completion", phase_json(&legacy))
+        .set("short_ttft_p99_speedup", speedup)
+        .set("tokens_match", tokens_match);
+    std::fs::write(json_path, root.to_pretty_string())
+        .with_context(|| format!("write {json_path:?}"))?;
+
+    let mut out = format!(
+        "## Decode — continuous batching vs run-to-completion: {shorts} short \
+         (≤{short_max} tok) + {longs} long (≤{long_max} tok) requests, longs first\n"
+    );
+    out.push_str(&format!(
+        "continuous:        short TTFT p99 {:.2}ms, {:.1} tok/s over {:.2}s ({} steps, {} preemptions)\n",
+        short_p99(&continuous),
+        continuous.samples.iter().map(|s| s.tokens.len()).sum::<usize>() as f64
+            / continuous.elapsed_s.max(1e-9),
+        continuous.elapsed_s,
+        continuous.steps,
+        continuous.preempted,
+    ));
+    out.push_str(&format!(
+        "run-to-completion: short TTFT p99 {:.2}ms, {:.1} tok/s over {:.2}s\n",
+        short_p99(&legacy),
+        legacy.samples.iter().map(|s| s.tokens.len()).sum::<usize>() as f64
+            / legacy.elapsed_s.max(1e-9),
+        legacy.elapsed_s,
+    ));
+    out.push_str(&format!(
+        "short-request p99 TTFT speedup: {speedup:.2}x; outputs bit-identical: {tokens_match}\n"
+    ));
+    out.push_str(&format!("wrote {}\n", json_path.display()));
+    anyhow::ensure!(tokens_match, "scheduler output diverged from the run-to-completion path");
+    Ok(out)
+}
+
 
 // ------------------------------------------------------------- gateway
 

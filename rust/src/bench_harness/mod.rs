@@ -46,6 +46,11 @@ pub fn run(
         // inter-token / total latency, plus a 429 backpressure probe
         // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
         "gateway" => experiments::gateway(backend, Path::new("BENCH_gateway.json")),
+        // continuous-batching scheduler vs the run-to-completion loop
+        // on a short-vs-long mixed workload: tokens/s and per-class
+        // TTFT, plus a bit-identity check between the two paths
+        // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
+        "decode" => experiments::decode(backend, Path::new("BENCH_decode.json")),
         "all" => {
             let mut out = String::new();
             for exp in [

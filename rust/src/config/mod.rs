@@ -224,6 +224,19 @@ pub struct ServeConfig {
     /// delta_budget_mib`; 0 = unbounded). Bounds the Cold tier — the
     /// working set the server keeps hydrated out of the store.
     pub delta_budget_mib: u64,
+    /// Continuous-batching scheduler toggle (`[sched] enabled`,
+    /// default true). Backends without the stepping API fall back to
+    /// the run-to-completion loop automatically either way.
+    pub sched_enabled: bool,
+    /// Paged KV-cache pool budget in MiB (`[sched] kv_pool_mib`) — the
+    /// hard cap on KV memory; admission control and preemption keep
+    /// the pool under it.
+    pub sched_kv_pool_mib: u64,
+    /// Positions per KV block (`[sched] block_size`).
+    pub sched_block_size: usize,
+    /// Max concurrently decoding sequences (`[sched] max_running`;
+    /// 0 = inherit `max_batch`).
+    pub sched_max_running: usize,
 }
 
 impl ServeConfig {
@@ -246,6 +259,10 @@ impl ServeConfig {
             max_connections: c.int_or("serve.max_connections", 64) as usize,
             store_path: c.get("store.path").and_then(|v| v.as_str()).map(str::to_string),
             delta_budget_mib: c.int_or("store.delta_budget_mib", 0) as u64,
+            sched_enabled: c.bool_or("sched.enabled", true),
+            sched_kv_pool_mib: c.int_or("sched.kv_pool_mib", 64) as u64,
+            sched_block_size: c.int_or("sched.block_size", 16) as usize,
+            sched_max_running: c.int_or("sched.max_running", 0) as usize,
         }
     }
 }
@@ -317,6 +334,23 @@ ratios = [2, 4, 8]
         assert_eq!(sc.max_connections, 64);
         assert_eq!(sc.store_path, None);
         assert_eq!(sc.delta_budget_mib, 0);
+        assert!(sc.sched_enabled);
+        assert_eq!(sc.sched_kv_pool_mib, 64);
+        assert_eq!(sc.sched_block_size, 16);
+        assert_eq!(sc.sched_max_running, 0);
+    }
+
+    #[test]
+    fn serve_config_reads_sched_section() {
+        let c = Config::parse(
+            "[sched]\nenabled = false\nkv_pool_mib = 128\nblock_size = 32\nmax_running = 12",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert!(!sc.sched_enabled);
+        assert_eq!(sc.sched_kv_pool_mib, 128);
+        assert_eq!(sc.sched_block_size, 32);
+        assert_eq!(sc.sched_max_running, 12);
     }
 
     #[test]

@@ -41,12 +41,16 @@ pub enum ReplySink {
 }
 
 impl ReplySink {
-    /// Emit one decoded token (no-op on the batch sink). Send failures
-    /// (receiver gone) are ignored — generation runs to completion so
-    /// metrics and batch accounting stay identical either way.
-    pub fn send_token(&self, token: u32) {
-        if let ReplySink::Stream(tx) = self {
-            let _ = tx.send(StreamEvent::Token(token));
+    /// Emit one decoded token (no-op on the batch sink). Returns
+    /// whether the receiver is still listening: `false` means a
+    /// streaming client vanished — the iteration-level scheduler uses
+    /// that to cancel the sequence and free its KV blocks, while the
+    /// legacy run-to-completion loop ignores it (generation runs to
+    /// completion so batch accounting stays identical).
+    pub fn send_token(&self, token: u32) -> bool {
+        match self {
+            ReplySink::Stream(tx) => tx.send(StreamEvent::Token(token)).is_ok(),
+            ReplySink::Batch(_) => true,
         }
     }
 
@@ -179,6 +183,65 @@ impl Batcher {
     /// Total queued requests (all tenants).
     pub fn queued(&self) -> usize {
         self.inner.lock().unwrap().queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Queue depth per tenant (the `/metrics` per-tenant gauge).
+    pub fn queue_depths(&self) -> Vec<(String, usize)> {
+        let inner = self.inner.lock().unwrap();
+        inner.queues.iter().map(|(t, q)| (t.clone(), q.len())).collect()
+    }
+
+    /// Submission time of the oldest head-of-line request across all
+    /// tenant queues (the scheduler's FCFS admission probe).
+    pub fn oldest_submitted(&self) -> Option<Instant> {
+        let inner = self.inner.lock().unwrap();
+        inner.queues.values().filter_map(|q| q.front().map(|r| r.submitted)).min()
+    }
+
+    /// Pop the single oldest head-of-line request across tenants —
+    /// iteration-level admission (no batch window: the scheduler admits
+    /// whenever a slot and KV blocks are free).
+    pub fn pop_oldest(&self) -> Option<Request> {
+        let mut inner = self.inner.lock().unwrap();
+        let tenant = inner
+            .queues
+            .iter()
+            .filter_map(|(t, q)| q.front().map(|r| (t.clone(), r.submitted)))
+            .min_by_key(|(_, at)| *at)?
+            .0;
+        inner.queues.get_mut(&tenant).unwrap().pop_front()
+    }
+
+    /// Put a request back at the *front* of its tenant queue (the
+    /// scheduler's head-of-line wait when the KV pool can't fit it
+    /// yet). Returns false — dropping the request, which disconnects
+    /// its caller — if the tenant was removed meanwhile. May hold the
+    /// queue one past `queue_depth` transiently; `submit` still bounds
+    /// what callers can add.
+    pub fn requeue_front(&self, req: Request) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.queues.get_mut(&req.tenant) {
+            Some(q) => {
+                q.push_front(req);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Park until a request is queued, the batcher closes, or `timeout`
+    /// elapses. Returns `false` only when the batcher is closed *and*
+    /// every queue is drained — the scheduler's exit condition.
+    pub fn wait_for_work(&self, timeout: Duration) -> bool {
+        let inner = self.inner.lock().unwrap();
+        if inner.queues.values().any(|q| !q.is_empty()) {
+            return true;
+        }
+        if inner.closed {
+            return false;
+        }
+        let (inner, _timeout) = self.cv.wait_timeout(inner, timeout).unwrap();
+        !(inner.closed && inner.queues.values().all(|q| q.is_empty()))
     }
 
     /// Pull the next tenant batch. Blocks until work arrives or the
@@ -382,6 +445,59 @@ mod tests {
         // submissions after close fail
         let (r2, _rx2) = req("a", 2);
         assert_eq!(b.submit(r2).unwrap_err(), SubmitError::Closed);
+    }
+
+    #[test]
+    fn pop_oldest_is_fcfs_across_tenants_and_requeue_restores_head() {
+        let b = Batcher::new(4, Duration::from_millis(0), 16);
+        b.add_tenant("a");
+        b.add_tenant("z");
+        let (r1, _rx1) = req("z", 1);
+        b.submit(r1).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let (r2, _rx2) = req("a", 2);
+        b.submit(r2).unwrap();
+        assert!(b.oldest_submitted().is_some());
+        let first = b.pop_oldest().unwrap();
+        assert_eq!(first.id, 1, "z submitted first");
+        // head-of-line wait: put it back, it must come out first again
+        assert!(b.requeue_front(first));
+        assert_eq!(b.pop_oldest().unwrap().id, 1);
+        assert_eq!(b.pop_oldest().unwrap().id, 2);
+        assert!(b.pop_oldest().is_none());
+        assert!(b.oldest_submitted().is_none());
+        // requeue into a removed tenant drops the request
+        b.remove_tenant("a");
+        let (r3, rx3) = req("a", 3);
+        assert!(!b.requeue_front(r3));
+        assert!(matches!(rx3.try_recv(), Err(mpsc::TryRecvError::Disconnected)));
+    }
+
+    #[test]
+    fn queue_depths_per_tenant() {
+        let b = Batcher::new(4, Duration::from_millis(0), 16);
+        b.add_tenant("a");
+        b.add_tenant("b");
+        let (r1, _rx1) = req("a", 1);
+        let (r2, _rx2) = req("a", 2);
+        b.submit(r1).unwrap();
+        b.submit(r2).unwrap();
+        let depths = b.queue_depths();
+        assert_eq!(depths, vec![("a".to_string(), 2), ("b".to_string(), 0)]);
+    }
+
+    #[test]
+    fn wait_for_work_reports_close_and_drain() {
+        let b = Batcher::new(4, Duration::from_millis(0), 16);
+        b.add_tenant("a");
+        // empty + open: times out but stays alive
+        assert!(b.wait_for_work(Duration::from_millis(1)));
+        let (r, _rx) = req("a", 1);
+        b.submit(r).unwrap();
+        b.close();
+        assert!(b.wait_for_work(Duration::from_millis(1)), "queued work still served");
+        b.pop_oldest().unwrap();
+        assert!(!b.wait_for_work(Duration::from_millis(1)), "closed and drained");
     }
 
     #[test]

@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::tenant::TierCounters;
+use crate::sched::SchedCounters;
 use crate::util::hist::LatencyHistogram;
 use crate::util::json::Json;
 
@@ -28,6 +29,11 @@ pub struct Metrics {
     ///
     /// [`TenantStore`]: crate::coordinator::TenantStore
     pub tiers: Arc<TierCounters>,
+    /// Continuous-batching scheduler gauges (running/waiting/preempted
+    /// sequences, KV-pool occupancy, per-step batch occupancy). Written
+    /// by the scheduler drive loop; all-zero under the legacy
+    /// run-to-completion worker loop.
+    pub sched: Arc<SchedCounters>,
     /// End-to-end request latency (log-bucketed histogram; exact mean,
     /// percentiles to bucket precision over the *whole* history — the
     /// old bounded sample ring forgot everything but recent requests).
@@ -101,6 +107,15 @@ impl Metrics {
         o.set("queue_wait_mean_s", self.queue_wait.lock().unwrap().mean());
         o.set("queue_wait_p99_s", self.queue_wait.lock().unwrap().percentile(99.0));
         o.set("batch_exec_mean_s", self.batch_exec.lock().unwrap().mean());
+        let sched = self.sched.stats();
+        o.set("sched_running", sched.running);
+        o.set("sched_waiting", sched.waiting);
+        o.set("sched_preempted", sched.preempted_total);
+        o.set("sched_cancelled", sched.cancelled_total);
+        o.set("kv_blocks_used", sched.kv_blocks_used);
+        o.set("kv_blocks_free", sched.kv_blocks_free);
+        o.set("kv_blocks_total", sched.kv_blocks_total);
+        o.set("step_occupancy_mean", self.sched.occupancy_histogram().mean());
         let completed = self.requests_completed.load(Ordering::Relaxed);
         let batches = self.batches_executed.load(Ordering::Relaxed).max(1);
         o.set("mean_batch_size", completed as f64 / batches as f64);

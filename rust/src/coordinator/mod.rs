@@ -6,14 +6,20 @@
 //!
 //! ```text
 //!   submit() ─▶ Batcher (per-tenant FIFO queues, bounded)
-//!                 │  oldest-head-first tenant pick + batch window
+//!                 │  oldest-head-first admission, FCFS across tenants
 //!                 ▼
-//!   worker pool ──▶ TenantStore.acquire()  (Hot dense cache | Cold
-//!                 │  compressed deltas → separate computation |
-//!                 │  Disk → loader thread hydrates from DeltaStore)
+//!   scheduler ──▶ TenantStore.acquire()  (Hot dense cache | Cold
+//!   drive loop  │  compressed deltas → separate computation |
+//!   (sched::)   │  Disk → loader thread hydrates from DeltaStore)
 //!                 ▼
-//!   generate() per request ─▶ Response channel, Metrics
+//!   per-decode-step mixed-tenant batches over the paged KV block
+//!   pool (admission control + preemption) ─▶ token stream / final
+//!   Response channel, Metrics
 //! ```
+//!
+//! Backends without the stepping API (pjrt), or servers built with
+//! `ServerOptions { sched: None, .. }`, fall back to the legacy
+//! run-to-completion worker pool — same tokens, bit for bit.
 
 pub mod batcher;
 pub mod metrics;
@@ -23,7 +29,7 @@ pub mod tenant;
 pub use batcher::{Batcher, ReplySink, Request, Response, StreamEvent, SubmitError};
 pub use metrics::Metrics;
 pub use server::{Server, ServerOptions};
-pub use tenant::{TenantStore, TenantView, Tier, TierCounters};
+pub use tenant::{Poke, TenantStore, TenantView, Tier, TierCounters};
 
 use std::path::Path;
 use std::sync::Arc;
@@ -72,6 +78,15 @@ pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
             Some(serve.delta_budget_mib * 1024 * 1024)
         },
         promote_after: 8,
+        sched: if serve.sched_enabled {
+            Some(crate::sched::SchedOptions {
+                kv_pool_bytes: serve.sched_kv_pool_mib.max(1) * 1024 * 1024,
+                block_size: serve.sched_block_size,
+                max_running: serve.sched_max_running,
+            })
+        } else {
+            None
+        },
     };
     let backend = crate::runtime::backend_from_name(&serve.backend, serve)?;
     let delta_store = match &serve.store_path {

@@ -1,6 +1,8 @@
-//! The serving coordinator: worker pool executing tenant batches through
-//! a pluggable [`ExecutionBackend`] — fused separate computation for
-//! Cold tenants, dense caches for Hot ones.
+//! The serving coordinator: the continuous-batching scheduler (or, for
+//! backends without the stepping API, the legacy run-to-completion
+//! worker pool) executing tenant requests through a pluggable
+//! [`ExecutionBackend`] — fused separate computation for Cold tenants,
+//! dense caches for Hot ones.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -16,6 +18,7 @@ use crate::delta::format::DeltaSet;
 use crate::eval::tasks::vocab;
 use crate::model::weights::ModelWeights;
 use crate::runtime::{ExecutionBackend, NativeBackend};
+use crate::sched::{self, SchedOptions, SchedStats};
 use crate::store::DeltaStore;
 
 /// Server construction knobs (a subset of [`crate::config::ServeConfig`]
@@ -34,6 +37,13 @@ pub struct ServerOptions {
     pub delta_budget: Option<u64>,
     /// Promote to Hot after this many served requests.
     pub promote_after: u64,
+    /// Continuous-batching scheduler knobs. `Some` (the default) drives
+    /// requests through per-decode-step scheduling whenever the backend
+    /// supports stepping; `None` forces the legacy run-to-completion
+    /// worker loop (also the automatic fallback for backends without
+    /// the stepping API, e.g. pjrt). Streamed tokens are bit-identical
+    /// either way.
+    pub sched: Option<SchedOptions>,
 }
 
 impl Default for ServerOptions {
@@ -46,6 +56,7 @@ impl Default for ServerOptions {
             cache_budget: None,
             delta_budget: None,
             promote_after: 8,
+            sched: Some(SchedOptions::default()),
         }
     }
 }
@@ -58,6 +69,9 @@ pub struct Server {
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     backend: Arc<dyn ExecutionBackend>,
+    /// Whether the continuous-batching scheduler (vs the legacy
+    /// run-to-completion worker pool) drives execution.
+    sched_active: bool,
 }
 
 impl Server {
@@ -119,16 +133,55 @@ impl Server {
         ));
         let metrics = Arc::new(Metrics::with_tiers(store.tiers()));
         let mut workers = Vec::new();
-        for _ in 0..options.workers.max(1) {
+        let sched_opts = match &options.sched {
+            Some(opts) if backend.supports_stepping() => Some(opts.clone()),
+            _ => None,
+        };
+        let sched_active = sched_opts.is_some();
+        if let Some(opts) = sched_opts {
+            // iteration-level scheduling: one drive thread assembles a
+            // mixed-tenant step batch every decode step (intra-op
+            // parallelism comes from the backend's compute pool)
+            let max_running =
+                if opts.max_running == 0 { options.max_batch.max(1) } else { opts.max_running };
             let store = store.clone();
             let batcher = batcher.clone();
             let metrics = metrics.clone();
             let backend = backend.clone();
-            workers.push(std::thread::spawn(move || {
-                worker_loop(&store, &batcher, &metrics, backend.as_ref());
-            }));
+            let handle = std::thread::Builder::new()
+                .name("deltadq-sched".to_string())
+                .spawn(move || {
+                    sched::drive_loop(
+                        &store,
+                        &batcher,
+                        &metrics,
+                        backend.as_ref(),
+                        &opts,
+                        max_running,
+                    );
+                })
+                .expect("spawn scheduler thread");
+            workers.push(handle);
+        } else {
+            for _ in 0..options.workers.max(1) {
+                let store = store.clone();
+                let batcher = batcher.clone();
+                let metrics = metrics.clone();
+                let backend = backend.clone();
+                workers.push(std::thread::spawn(move || {
+                    worker_loop(&store, &batcher, &metrics, backend.as_ref());
+                }));
+            }
         }
-        Server { store, batcher, metrics, workers, next_id: AtomicU64::new(1), backend }
+        Server {
+            store,
+            batcher,
+            metrics,
+            workers,
+            next_id: AtomicU64::new(1),
+            backend,
+            sched_active,
+        }
     }
 
     /// Name of the execution backend serving requests.
@@ -236,6 +289,17 @@ impl Server {
         self.batcher.queue_depth
     }
 
+    /// Queued requests per tenant (the `/metrics` per-tenant gauge).
+    pub fn tenant_queue_depths(&self) -> Vec<(String, usize)> {
+        self.batcher.queue_depths()
+    }
+
+    /// Live scheduler gauges — `None` when the legacy
+    /// run-to-completion worker pool drives execution.
+    pub fn sched_stats(&self) -> Option<SchedStats> {
+        self.sched_active.then(|| self.metrics.sched.stats())
+    }
+
     /// Residency snapshot (tenant, hot?, requests served).
     pub fn residency(&self) -> Vec<(String, bool, u64)> {
         self.store.snapshot()
@@ -255,6 +319,10 @@ impl Server {
     }
 }
 
+/// The legacy run-to-completion worker loop: pop a whole tenant batch,
+/// run every request in it to completion, repeat. Still the execution
+/// path for backends without the stepping API (pjrt) and the baseline
+/// the `decode` bench compares the scheduler against.
 fn worker_loop(
     store: &TenantStore,
     batcher: &Batcher,
@@ -292,7 +360,9 @@ fn worker_loop(
             // sinks ignore them); the decode loop is the same either
             // way, so streamed tokens are bit-identical to batch ones
             let sink = &req.respond;
-            let mut on_token = |t: u32| sink.send_token(t);
+            let mut on_token = |t: u32| {
+                sink.send_token(t);
+            };
             let result = match &acquired.view {
                 // Hot: merged dense weights, no delta term.
                 TenantView::Hot(weights) => backend.generate_stream(
@@ -428,6 +498,74 @@ mod tests {
         assert_eq!(streamed, done.tokens, "events concatenate to the final response");
         assert_eq!(streamed, batch.tokens, "streamed == batch-submitted tokens");
         assert!(done.error.is_none());
+        server.shutdown();
+    }
+
+    #[test]
+    fn scheduler_and_legacy_loop_stream_identical_tokens() {
+        // the pinned core contract of the scheduler redesign: identical
+        // single requests produce bit-identical streamed tokens on the
+        // iteration-level path and the run-to-completion path
+        let b = base();
+        let set = delta_set(7);
+        let prompt = vec![1u32, 20, 4, 21, 3];
+        let collect = |server: &Server| -> Vec<u32> {
+            let rx = server.submit_stream("t", prompt.clone(), 6).unwrap();
+            let mut tokens = Vec::new();
+            loop {
+                match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+                    StreamEvent::Token(t) => tokens.push(t),
+                    StreamEvent::Done(resp) => {
+                        assert!(resp.error.is_none(), "{:?}", resp.error);
+                        assert_eq!(resp.tokens, tokens);
+                        return tokens;
+                    }
+                }
+            }
+        };
+
+        let sched_server = Server::start(b.clone(), ServerOptions::default());
+        assert!(sched_server.sched_stats().is_some(), "scheduler drives by default");
+        sched_server.register_tenant("t", set.clone());
+        let stepped = collect(&sched_server);
+        let stats = sched_server.sched_stats().unwrap();
+        assert!(stats.kv_blocks_total > 0);
+        sched_server.shutdown();
+
+        let legacy_server = Server::start(b, ServerOptions { sched: None, ..Default::default() });
+        assert!(legacy_server.sched_stats().is_none());
+        legacy_server.register_tenant("t", set);
+        let legacy = collect(&legacy_server);
+        legacy_server.shutdown();
+
+        assert_eq!(stepped, legacy, "scheduler == run-to-completion, bit for bit");
+    }
+
+    #[test]
+    fn scheduler_frees_all_kv_blocks_when_done() {
+        let server = Server::start(base(), ServerOptions {
+            batch_window: Duration::from_millis(0),
+            ..Default::default()
+        });
+        server.register_tenant("t", delta_set(8));
+        let mut rxs = Vec::new();
+        for _ in 0..6 {
+            rxs.push(server.submit("t", vec![1, 20, 4, 21, 3], 4).unwrap());
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+        // the drive loop publishes gauges on its next idle tick
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let stats = server.sched_stats().unwrap();
+            if stats.kv_blocks_used == 0 && stats.running == 0 {
+                assert_eq!(stats.kv_blocks_free, stats.kv_blocks_total);
+                break;
+            }
+            assert!(Instant::now() < deadline, "kv blocks leaked: {stats:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
         server.shutdown();
     }
 

@@ -136,6 +136,18 @@ pub struct Acquired {
     pub hydrated: bool,
 }
 
+/// Result of a non-blocking residency probe ([`TenantStore::poke`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Poke {
+    /// Resident (Cold or Hot): `acquire` will not wait on hydration.
+    Ready,
+    /// On Disk with a hydration queued/in flight — check back later.
+    Pending,
+    /// Unknown tenant, or the last hydration attempt failed (consumed:
+    /// the next probe retries).
+    Missing,
+}
+
 impl TenantStore {
     /// In-memory store (no disk tier): every registered tenant is at
     /// least Cold-resident forever.
@@ -322,6 +334,39 @@ impl TenantStore {
     fn send_loader(&self, msg: LoaderMsg) -> Option<()> {
         let tx = self.loader_tx.as_ref()?;
         tx.lock().unwrap().send(msg).ok()
+    }
+
+    /// Non-blocking residency probe for iteration-level admission:
+    /// reports whether [`acquire`](TenantStore::acquire) would return
+    /// without waiting, kicking off the background hydration when the
+    /// tenant is on Disk. The scheduler's single drive thread keeps
+    /// decoding running sequences while a `Pending` tenant hydrates on
+    /// the loader thread, instead of parking on the hydration condvar.
+    pub fn poke(&self, tenant: &str) -> Poke {
+        let mut slots = self.shared.slots.lock().unwrap();
+        let Some(slot) = slots.get_mut(tenant) else {
+            return Poke::Missing;
+        };
+        if slot.dense.is_some() || slot.deltas.is_some() {
+            return Poke::Ready;
+        }
+        if slot.failed {
+            // consumed, like acquire(): the caller answers unavailable
+            // and the next request retries the hydration
+            slot.failed = false;
+            return Poke::Missing;
+        }
+        if !slot.on_disk {
+            return Poke::Missing; // unreachable: memory slots always hold deltas
+        }
+        if !slot.loading {
+            slot.loading = true;
+            if self.send_loader(LoaderMsg::Hydrate(tenant.to_string())).is_none() {
+                slot.loading = false;
+                return Poke::Missing; // loader gone (shutdown)
+            }
+        }
+        Poke::Pending
     }
 
     /// Acquire an execution view for `batch_size` requests, applying
@@ -686,6 +731,30 @@ mod tests {
         });
         let snap = store.snapshot();
         assert_eq!(snap[0].2, 80);
+    }
+
+    #[test]
+    fn poke_probes_residency_without_blocking() {
+        let disk = tmp_store("poke");
+        let store = TenantStore::with_disk(base(), None, None, u64::MAX, disk.clone());
+        disk.push("t", &deltas(30)).unwrap();
+        store.register_disk("t").unwrap();
+        assert_eq!(store.poke("ghost"), Poke::Missing);
+        // first probe kicks the loader; repeated probes don't re-enqueue
+        let mut first = store.poke("t");
+        assert_ne!(first, Poke::Missing);
+        // loader hydrates in the background; Pending resolves to Ready
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while first == Poke::Pending {
+            assert!(std::time::Instant::now() < deadline, "hydration never finished");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            first = store.poke("t");
+        }
+        assert_eq!(first, Poke::Ready);
+        // now acquire is wait-free (already resident) and counts one load
+        let a = store.acquire("t", 1).unwrap();
+        assert!(matches!(a.view, TenantView::Cold(_)));
+        assert_eq!(store.tiers().disk_loads.load(Ordering::Relaxed), 1);
     }
 
     #[test]

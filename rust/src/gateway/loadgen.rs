@@ -48,6 +48,14 @@ pub struct LoadgenOptions {
     pub prompt_len: usize,
     /// `max_tokens` per request.
     pub max_tokens: usize,
+    /// Fraction of requests in the *long* class (0.0–1.0): those use
+    /// `long_max_tokens` instead of `max_tokens`. This reproduces the
+    /// short-vs-long mix that iteration-level scheduling helps —
+    /// without it every short request behind a long generation pays the
+    /// long request's decode time in TTFT.
+    pub long_frac: f64,
+    /// `max_tokens` for the long class.
+    pub long_max_tokens: usize,
     /// Request SSE streaming (per-token TTFT/inter-arrival recording).
     pub stream: bool,
     /// Arrival/tenant/prompt randomness seed.
@@ -66,6 +74,8 @@ impl Default for LoadgenOptions {
             zipf_s: 1.1,
             prompt_len: 8,
             max_tokens: 8,
+            long_frac: 0.0,
+            long_max_tokens: 32,
             stream: true,
             seed: 0x10AD,
             timeout: Duration::from_secs(120),
@@ -89,6 +99,11 @@ pub struct LoadReport {
     pub tokens: u64,
     /// Request start → first token frame (stream) / response head.
     pub ttft: LatencyHistogram,
+    /// TTFT of short-class requests only (`max_tokens` requests).
+    pub ttft_short: LatencyHistogram,
+    /// TTFT of long-class requests only (`long_max_tokens` requests;
+    /// empty when `long_frac == 0`).
+    pub ttft_long: LatencyHistogram,
     /// Gap between consecutive token frames (stream only).
     pub inter_token: LatencyHistogram,
     /// Request start → final byte.
@@ -106,6 +121,8 @@ impl LoadReport {
         self.transport_errors += other.transport_errors;
         self.tokens += other.tokens;
         self.ttft.merge(&other.ttft);
+        self.ttft_short.merge(&other.ttft_short);
+        self.ttft_long.merge(&other.ttft_long);
         self.inter_token.merge(&other.inter_token);
         self.total.merge(&other.total);
     }
@@ -131,6 +148,8 @@ impl LoadReport {
             .set("achieved_rps", self.achieved_rps())
             .set("elapsed_s", self.elapsed_s)
             .set("ttft_ms", self.ttft.summary_ms())
+            .set("ttft_short_ms", self.ttft_short.summary_ms())
+            .set("ttft_long_ms", self.ttft_long.summary_ms())
             .set("inter_token_ms", self.inter_token.summary_ms())
             .set("total_ms", self.total.summary_ms());
         o
@@ -151,6 +170,12 @@ impl LoadReport {
         ));
         out.push_str(&self.ttft.report_ms("ttft"));
         out.push('\n');
+        if !self.ttft_long.is_empty() {
+            out.push_str(&self.ttft_short.report_ms("ttft[short]"));
+            out.push('\n');
+            out.push_str(&self.ttft_long.report_ms("ttft[long]"));
+            out.push('\n');
+        }
         if !self.inter_token.is_empty() {
             out.push_str(&self.inter_token.report_ms("inter-token"));
             out.push('\n');
@@ -166,6 +191,9 @@ struct Arrival {
     at: Duration,
     tenant: String,
     prompt: Vec<u32>,
+    max_tokens: usize,
+    /// Long-class request (drawn with probability `long_frac`).
+    long: bool,
 }
 
 /// Fire `opts.requests` requests open-loop and gather the merged
@@ -192,7 +220,9 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadReport> {
             while prompt.len() < opts.prompt_len.max(1) {
                 prompt.push(vocab::NUM0 + (rng.next_f64() * vocab::NUM_COUNT as f64) as u32);
             }
-            Arrival { at, tenant, prompt }
+            let long = rng.next_f64() < opts.long_frac;
+            let max_tokens = if long { opts.long_max_tokens } else { opts.max_tokens };
+            Arrival { at, tenant, prompt, max_tokens, long }
         })
         .collect();
 
@@ -202,13 +232,13 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadReport> {
         if let Some(wait) = arrival.at.checked_sub(t0.elapsed()) {
             std::thread::sleep(wait);
         }
-        let addr = opts.addr.clone();
-        let stream = opts.stream;
-        let max_tokens = opts.max_tokens;
-        let timeout = opts.timeout;
-        handles.push(std::thread::spawn(move || {
-            one_request(&addr, &arrival.tenant, &arrival.prompt, max_tokens, stream, timeout)
-        }));
+        let spec = RequestSpec {
+            addr: opts.addr.clone(),
+            stream: opts.stream,
+            timeout: opts.timeout,
+            arrival,
+        };
+        handles.push(std::thread::spawn(move || one_request(&spec)));
     }
     let mut report = LoadReport::default();
     for h in handles {
@@ -222,17 +252,18 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadReport> {
     Ok(report)
 }
 
-/// Execute one request and fold its measurements into a fresh report.
-fn one_request(
-    addr: &str,
-    tenant: &str,
-    prompt: &[u32],
-    max_tokens: usize,
+/// Everything one worker thread needs to fire its request.
+struct RequestSpec {
+    addr: String,
     stream: bool,
     timeout: Duration,
-) -> LoadReport {
+    arrival: Arrival,
+}
+
+/// Execute one request and fold its measurements into a fresh report.
+fn one_request(spec: &RequestSpec) -> LoadReport {
     let mut report = LoadReport::default();
-    match try_request(addr, tenant, prompt, max_tokens, stream, timeout, &mut report) {
+    match try_request(spec, &mut report) {
         Ok(()) => {}
         Err(RequestError::Status(429)) => report.rejected_429 += 1,
         Err(RequestError::Status(_)) => report.http_errors += 1,
@@ -252,24 +283,28 @@ impl From<anyhow::Error> for RequestError {
     }
 }
 
-fn try_request(
-    addr: &str,
-    tenant: &str,
-    prompt: &[u32],
-    max_tokens: usize,
-    stream: bool,
-    timeout: Duration,
-    report: &mut LoadReport,
-) -> Result<(), RequestError> {
+/// Record a TTFT observation into the combined and class histograms.
+fn record_ttft(report: &mut LoadReport, long: bool, seconds: f64) {
+    report.ttft.record(seconds);
+    if long {
+        report.ttft_long.record(seconds);
+    } else {
+        report.ttft_short.record(seconds);
+    }
+}
+
+fn try_request(spec: &RequestSpec, report: &mut LoadReport) -> Result<(), RequestError> {
+    let RequestSpec { addr, stream, timeout, arrival } = spec;
+    let (stream, timeout) = (*stream, *timeout);
     let mut body = Json::obj();
-    body.set("tenant", tenant)
-        .set("prompt", prompt.to_vec())
-        .set("max_tokens", max_tokens as u64)
+    body.set("tenant", arrival.tenant.as_str())
+        .set("prompt", arrival.prompt.clone())
+        .set("max_tokens", arrival.max_tokens as u64)
         .set("stream", stream);
     let body = body.to_string();
 
     let started = Instant::now();
-    let conn = TcpStream::connect(addr).context("connect")?;
+    let conn = TcpStream::connect(addr.as_str()).context("connect")?;
     conn.set_read_timeout(Some(timeout)).context("set timeout")?;
     conn.set_nodelay(true).context("nodelay")?;
     let mut w = conn.try_clone().context("clone stream")?;
@@ -324,7 +359,8 @@ fn try_request(
         }
         // a request that legitimately generated zero tokens (immediate
         // EOS) has its TTFT at stream end
-        report.ttft.record(ttft.unwrap_or_else(|| started.elapsed().as_secs_f64()));
+        let v = ttft.unwrap_or_else(|| started.elapsed().as_secs_f64());
+        record_ttft(report, arrival.long, v);
         for gap in gaps {
             report.inter_token.record(gap);
         }
@@ -337,7 +373,7 @@ fn try_request(
             return Err(RequestError::Status(resp.status));
         }
         // no per-token frames here: TTFT collapses to head arrival
-        report.ttft.record(started.elapsed().as_secs_f64());
+        record_ttft(report, arrival.long, started.elapsed().as_secs_f64());
         let text = std::str::from_utf8(&resp.body).context("utf8 body")?;
         let j = Json::parse(text).context("body json")?;
         let n = j
@@ -370,6 +406,26 @@ mod tests {
         let j = a.to_json().to_string();
         assert!(j.contains("\"rejected_429\":3"), "{j}");
         assert!(j.contains("\"ttft_ms\""), "{j}");
+    }
+
+    #[test]
+    fn ttft_splits_by_request_class() {
+        let mut a = LoadReport::default();
+        record_ttft(&mut a, false, 0.010);
+        record_ttft(&mut a, true, 0.200);
+        let mut b = LoadReport::default();
+        record_ttft(&mut b, false, 0.020);
+        a.merge(&b);
+        assert_eq!(a.ttft.count(), 3, "combined histogram sees every request");
+        assert_eq!(a.ttft_short.count(), 2);
+        assert_eq!(a.ttft_long.count(), 1);
+        assert!(a.ttft_long.mean() > a.ttft_short.mean());
+        let j = a.to_json().to_string();
+        assert!(j.contains("\"ttft_short_ms\""), "{j}");
+        assert!(j.contains("\"ttft_long_ms\""), "{j}");
+        let rendered = a.render();
+        assert!(rendered.contains("ttft[short]"), "{rendered}");
+        assert!(rendered.contains("ttft[long]"), "{rendered}");
     }
 
     #[test]

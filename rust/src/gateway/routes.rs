@@ -230,6 +230,11 @@ fn completions_stream(
                     RecvTimeoutError::Timeout => "timed out waiting for the next token",
                     RecvTimeoutError::Disconnected => "tenant removed mid-stream",
                 };
+                // NB the reverse direction is handled upstream: when
+                // the *client* disconnects, `cw.chunk` errors out of
+                // this handler, dropping `rx` — the scheduler sees the
+                // dead sink on its next token, cancels the sequence,
+                // and frees its KV blocks and running slot.
                 let mut o = Json::obj();
                 o.set("error", reason).set("done", true);
                 cw.chunk(&sse::frame(&o.to_string()))?;
@@ -309,6 +314,17 @@ pub fn render_prometheus(server: &Server) -> String {
         "Bytes read from delta-store shards.",
         m.tiers.store_bytes_read.load(Ordering::Relaxed),
     );
+    let sched = m.sched.stats();
+    counter(
+        "sched_preempted_total",
+        "Sequences preempted back to the queue on KV-pool exhaustion.",
+        sched.preempted_total,
+    );
+    counter(
+        "sched_cancelled_total",
+        "Sequences cancelled after their streaming client disconnected.",
+        sched.cancelled_total,
+    );
 
     let mut gauge = |name: &str, help: &str, value: f64| {
         let _ = writeln!(out, "# HELP deltadq_{name} {help}");
@@ -325,6 +341,34 @@ pub fn render_prometheus(server: &Server) -> String {
         "Per-tenant queue capacity (submissions beyond it get 429).",
         server.queue_depth() as f64,
     );
+    gauge(
+        "sched_running_sequences",
+        "Sequences holding a scheduler running slot.",
+        sched.running as f64,
+    );
+    gauge(
+        "sched_waiting_sequences",
+        "Requests waiting for admission (queued + preempted).",
+        sched.waiting as f64,
+    );
+
+    let _ = writeln!(out, "# HELP deltadq_kv_pool_blocks Paged KV-cache block pool occupancy.");
+    let _ = writeln!(out, "# TYPE deltadq_kv_pool_blocks gauge");
+    let _ = writeln!(out, "deltadq_kv_pool_blocks{{state=\"used\"}} {}", sched.kv_blocks_used);
+    let _ = writeln!(out, "deltadq_kv_pool_blocks{{state=\"free\"}} {}", sched.kv_blocks_free);
+    let _ = writeln!(
+        out,
+        "# HELP deltadq_kv_pool_blocks_total KV block pool capacity (the configured budget)."
+    );
+    let _ = writeln!(out, "# TYPE deltadq_kv_pool_blocks_total gauge");
+    let _ = writeln!(out, "deltadq_kv_pool_blocks_total {}", sched.kv_blocks_total);
+
+    let _ = writeln!(out, "# HELP deltadq_tenant_queue_depth Queued requests per tenant.");
+    let _ = writeln!(out, "# TYPE deltadq_tenant_queue_depth gauge");
+    for (tenant, depth) in server.tenant_queue_depths() {
+        let label = tenant.replace('\\', "\\\\").replace('"', "\\\"");
+        let _ = writeln!(out, "deltadq_tenant_queue_depth{{tenant=\"{label}\"}} {depth}");
+    }
 
     let residency = server.tier_residency();
     let count_tier = |t: Tier| residency.iter().filter(|(_, tier, _)| *tier == t).count();

@@ -7,8 +7,10 @@
 //! * **L3 (this crate)** — the serving stack: the HTTP gateway
 //!   ([`gateway`]: token streaming over SSE, backpressure as 429,
 //!   Prometheus `/metrics`, and the open-loop load generator), the
-//!   coordinator (multi-tenant request routing, dynamic batching,
-//!   per-tenant compressed-delta registry),
+//!   continuous-batching scheduler ([`sched`]: iteration-level step
+//!   batches over a paged KV-cache block pool, with admission control
+//!   and preemption), the coordinator (multi-tenant request routing,
+//!   dynamic batching, per-tenant compressed-delta registry),
 //!   the tiered on-disk delta artifact store ([`store::DeltaStore`]:
 //!   Disk → Cold → Hot residency with lazy paged hydration), pluggable
 //!   execution backends ([`runtime::ExecutionBackend`]: the native
@@ -38,6 +40,7 @@ pub mod gateway;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod sched;
 pub mod search;
 pub mod sparse;
 pub mod store;

@@ -147,21 +147,30 @@ fn print_usage() {
                      /v1/completions with SSE streaming, GET /metrics,\n\
                      GET /healthz; port 0 = ephemeral, the bound\n\
                      address is printed; serves until killed)\n\
+                     [--sched.kv_pool_mib M] [--sched.block_size B]\n\
+                     [--sched.max_running N] [--sched.enabled B]\n\
+                     (continuous-batching scheduler knobs)\n\
            loadgen   --addr HOST:PORT [--requests N] [--rps R]\n\
                      [--tenants LIST] [--zipf S] [--prompt-len P]\n\
-                     [--max-tokens M] [--stream true|false]\n\
+                     [--max-tokens M] [--long-frac F]\n\
+                     [--long-max-tokens M] [--stream true|false]\n\
                      [--seed S] [--out REPORT.json]\n\
                      (open-loop HTTP load: TTFT / inter-token / total\n\
-                     latency histograms, 429 accounting)\n\
+                     latency histograms split short-vs-long, 429\n\
+                     accounting)\n\
            push      --store DIR --tenant NAME --delta F.ddq\n\
            gc        --store DIR [--remove TENANT[,TENANT...]]\n\
+                     [--dry-run true] (report orphans/bytes without\n\
+                     deleting; removals print bytes per tenant)\n\
            ls        --store DIR\n\
            bench     --name table1|table2|table3|table4|fig4|fig5|fig6|\n\
-                     fig7|fig8|ablations|serving|kernels|churn|gateway\n\
+                     fig7|fig8|ablations|serving|kernels|churn|gateway|\n\
+                     decode\n\
                      [--models DIR] [--out FILE] [--backend native|pjrt]\n\
                      [--fused-threads N] [--artifacts DIR]\n\
-                     (kernels/churn/gateway write BENCH_<name>.json; set\n\
-                     DELTADQ_BENCH_QUICK=1 for the CI-sized run)"
+                     (kernels/churn/gateway/decode write\n\
+                     BENCH_<name>.json; set DELTADQ_BENCH_QUICK=1 for\n\
+                     the CI-sized run)"
     );
 }
 
@@ -357,7 +366,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let overrides: Vec<String> = args
         .flags
         .iter()
-        .filter(|(k, _)| k.starts_with("serve.") || k.starts_with("store."))
+        .filter(|(k, _)| {
+            k.starts_with("serve.") || k.starts_with("store.") || k.starts_with("sched.")
+        })
         .map(|(k, v)| format!("{k}={v}"))
         .collect();
     config.apply_overrides(&overrides)?;
@@ -401,6 +412,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         zipf_s: args.f64_or("zipf", 1.1)?,
         prompt_len: args.usize_or("prompt-len", 8)?,
         max_tokens: args.usize_or("max-tokens", 8)?,
+        long_frac: args.f64_or("long-frac", 0.0)?,
+        long_max_tokens: args.usize_or("long-max-tokens", 32)?,
         stream: args.bool_or("stream", true)?,
         seed: args.u64_or("seed", 0x10AD)?,
         timeout: std::time::Duration::from_secs(args.u64_or("timeout-secs", 120)?),
@@ -444,18 +457,29 @@ fn cmd_push(args: &Args) -> Result<()> {
 fn cmd_gc(args: &Args) -> Result<()> {
     let root = PathBuf::from(args.get("store").context("--store required")?);
     let store = DeltaStore::open(&root)?;
+    let dry_run = args.bool_or("dry-run", false)?;
     if let Some(list) = args.get("remove") {
         for tenant in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
-            if store.remove(tenant)? {
-                println!("removed '{tenant}'");
+            // read the size before the manifest entry goes away, so the
+            // per-tenant reclaimed bytes can be reported
+            let bytes = store.tenant_info(tenant).map(|i| i.bytes).unwrap_or(0);
+            if dry_run {
+                if store.contains(tenant) {
+                    println!("would remove '{tenant}' ({bytes} bytes)");
+                } else {
+                    println!("'{tenant}' is not in the store");
+                }
+            } else if store.remove(tenant)? {
+                println!("removed '{tenant}' ({bytes} bytes reclaimed)");
             } else {
                 println!("'{tenant}' was not in the store");
             }
         }
     }
-    let report = store.gc()?;
+    let report = if dry_run { store.gc_dry_run()? } else { store.gc()? };
+    let verb = if dry_run { "gc --dry-run: would sweep" } else { "gc: swept" };
     println!(
-        "gc: swept {} orphan file(s), {} bytes freed; {} tenant(s), {} bytes live",
+        "{verb} {} orphan file(s), {} bytes; {} tenant(s), {} bytes live",
         report.files_removed,
         report.bytes_freed,
         store.tenant_count(),

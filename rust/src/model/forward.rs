@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 
 use crate::compress::CompressedDelta;
 use crate::model::config::ModelConfig;
-use crate::model::kvcache::KvCache;
+use crate::model::kvcache::{KvCache, KvSlot};
 use crate::model::weights::ModelWeights;
 use crate::tensor::ops;
 use crate::tensor::Matrix;
@@ -138,11 +138,15 @@ pub fn forward<S: WeightSource>(source: &S, tokens: &[u32]) -> Matrix {
 /// Single-token decode step with KV cache. `pos` is the absolute
 /// position of `token`; the cache must hold positions `0..pos`.
 /// Returns logits (`1 × vocab`).
-pub fn forward_step<S: WeightSource>(
+///
+/// Generic over the cache layout ([`KvSlot`]): the monolithic
+/// [`KvCache`] and the scheduler's paged cache attend through the same
+/// kernel, so the layout never changes a single output bit.
+pub fn forward_step<S: WeightSource, K: KvSlot + ?Sized>(
     source: &S,
     token: u32,
     pos: usize,
-    cache: &mut KvCache,
+    cache: &mut K,
 ) -> Matrix {
     let c = source.config();
     assert!(pos < c.max_seq, "position {pos} ≥ max_seq {}", c.max_seq);
@@ -161,22 +165,7 @@ pub fn forward_step<S: WeightSource>(
         let k = source.linear(&p("attn.wk"), &normed);
         let v = source.linear(&p("attn.wv"), &normed);
         cache.append(layer, k.row(0), v.row(0));
-        let (k_all, v_all) = cache.layer(layer);
-        let t = k_all.rows();
-        let mut ctx = Matrix::zeros(1, c.hidden);
-        for head in 0..c.n_heads {
-            let lo = head * d;
-            let hi = lo + d;
-            let qh = q.slice_cols(lo, hi);
-            let kh = k_all.slice_cols(lo, hi);
-            let vh = v_all.slice_cols(lo, hi);
-            let mut scores = qh.matmul_nt(&kh); // 1×t
-            scores.scale(scale);
-            ops::softmax_rows(&mut scores);
-            let out = scores.matmul_nn(&vh); // 1×d
-            ctx.set_cols(lo, &out);
-        }
-        let _ = t;
+        let ctx = cache.attend(layer, &q, c.n_heads, d, scale);
         let attn_out = source.linear(&p("attn.wo"), &ctx);
         x.add_assign(&attn_out);
         let mut normed = x.clone();
@@ -186,6 +175,26 @@ pub fn forward_step<S: WeightSource>(
     }
     ops::rmsnorm_rows(&mut x, source.dense("final_norm").row(0), 1e-6);
     source.linear("lm_head", &x)
+}
+
+/// Step-level prefill: feed `tokens` through [`forward_step`] one
+/// position at a time, starting at the cache's current length, and
+/// return the last position's logits (`1 × vocab`). This is the entry
+/// point the iteration-level scheduler uses to (re)prime a sequence —
+/// after a preemption, `tokens` is the prompt plus everything already
+/// generated, and the deterministic greedy decode continues exactly
+/// where it left off.
+pub fn prefill_into<S: WeightSource, K: KvSlot + ?Sized>(
+    source: &S,
+    tokens: &[u32],
+    cache: &mut K,
+) -> Matrix {
+    assert!(!tokens.is_empty(), "prefill over an empty prefix");
+    let mut last = forward_step(source, tokens[0], cache.len(), cache);
+    for &tok in &tokens[1..] {
+        last = forward_step(source, tok, cache.len(), cache);
+    }
+    last
 }
 
 /// Greedy decode: feed `prompt`, then generate up to `max_new` tokens

@@ -1,6 +1,78 @@
 //! Per-sequence KV cache for incremental decoding.
+//!
+//! Two implementations share one contract ([`KvSlot`]):
+//!
+//! * [`KvCache`] — a monolithic growable buffer per layer (the original
+//!   run-to-completion serving path and the offline `generate` loop).
+//! * [`crate::sched::PagedKvCache`] — fixed-size blocks leased from the
+//!   scheduler's [`crate::sched::BlockPool`], for iteration-level
+//!   scheduling with admission control and preemption.
+//!
+//! Both route decode attention through [`attend_dense`], so for the
+//! same cached values the computed context — and therefore every
+//! decoded token — is bit-identical across cache layouts.
 
+use crate::tensor::ops;
 use crate::tensor::Matrix;
+
+/// What [`crate::model::forward::forward_step`] needs from a KV cache:
+/// append one position's K/V rows per layer, and attend a single query
+/// row over everything cached for a layer.
+pub trait KvSlot {
+    /// Number of complete cached positions (all layers appended).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one position's K/V rows to `layer`. Layers are appended
+    /// in order `0..n_layers` during a step; the final layer's append
+    /// completes the position.
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]);
+
+    /// Multi-head attention of the single query row `q` (1×hidden)
+    /// over every position cached for `layer` — including the one just
+    /// appended this step. Returns the 1×hidden context row. Takes
+    /// `&mut self` so paged implementations can reuse gather scratch
+    /// across steps.
+    fn attend(
+        &mut self,
+        layer: usize,
+        q: &Matrix,
+        n_heads: usize,
+        head_dim: usize,
+        scale: f32,
+    ) -> Matrix;
+}
+
+/// Single-query multi-head attention over dense K/V matrices
+/// (`t × hidden`). This is the one decode-attention kernel: every
+/// [`KvSlot`] funnels through it, which is what makes paged and
+/// monolithic caches bit-identical.
+pub fn attend_dense(
+    q: &Matrix,
+    k_all: &Matrix,
+    v_all: &Matrix,
+    n_heads: usize,
+    head_dim: usize,
+    scale: f32,
+) -> Matrix {
+    let mut ctx = Matrix::zeros(1, n_heads * head_dim);
+    for head in 0..n_heads {
+        let lo = head * head_dim;
+        let hi = lo + head_dim;
+        let qh = q.slice_cols(lo, hi);
+        let kh = k_all.slice_cols(lo, hi);
+        let vh = v_all.slice_cols(lo, hi);
+        let mut scores = qh.matmul_nt(&kh); // 1×t
+        scores.scale(scale);
+        ops::softmax_rows(&mut scores);
+        let out = scores.matmul_nn(&vh); // 1×head_dim
+        ctx.set_cols(lo, &out);
+    }
+    ctx
+}
 
 /// Keys and values for every layer of one sequence. Rows grow as tokens
 /// are appended; all layers always hold the same number of positions.
@@ -69,6 +141,28 @@ impl KvCache {
     }
 }
 
+impl KvSlot for KvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        KvCache::append(self, layer, k, v);
+    }
+
+    fn attend(
+        &mut self,
+        layer: usize,
+        q: &Matrix,
+        n_heads: usize,
+        head_dim: usize,
+        scale: f32,
+    ) -> Matrix {
+        let (k_all, v_all) = self.layer(layer);
+        attend_dense(q, k_all, v_all, n_heads, head_dim, scale)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +202,21 @@ mod tests {
         // usable after clear
         c.append(0, &[5.0, 6.0], &[7.0, 8.0]);
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn attend_matches_manual_single_head() {
+        // one head, two cached positions: softmax(q·Kᵀ·scale)·V
+        let mut c = KvCache::new(1, 2);
+        c.append(0, &[1.0, 0.0], &[1.0, 2.0]);
+        c.append(0, &[0.0, 1.0], &[3.0, 4.0]);
+        let q = Matrix::from_vec(1, 2, vec![1.0, 0.0]);
+        let ctx = KvSlot::attend(&mut c, 0, &q, 1, 2, 1.0);
+        let e0 = 1.0f32.exp();
+        let e1 = 0.0f32.exp();
+        let w0 = e0 / (e0 + e1);
+        let w1 = e1 / (e0 + e1);
+        assert!((ctx.get(0, 0) - (w0 * 1.0 + w1 * 3.0)).abs() < 1e-5);
+        assert!((ctx.get(0, 1) - (w0 * 2.0 + w1 * 4.0)).abs() < 1e-5);
     }
 }

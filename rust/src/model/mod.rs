@@ -9,7 +9,9 @@ pub mod kvcache;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use forward::{forward, forward_step, generate, generate_with, DeltaView, WeightSource};
+pub use forward::{
+    forward, forward_step, generate, generate_with, prefill_into, DeltaView, WeightSource,
+};
 pub use io::{load_weights, save_weights};
-pub use kvcache::KvCache;
+pub use kvcache::{attend_dense, KvCache, KvSlot};
 pub use weights::ModelWeights;

@@ -35,6 +35,7 @@ use anyhow::{bail, Result};
 use crate::config::ServeConfig;
 use crate::delta::format::DeltaSet;
 use crate::model::weights::ModelWeights;
+use crate::sched::PagedKvCache;
 use crate::tensor::Matrix;
 
 /// A pluggable execution engine for prefill and greedy decoding.
@@ -88,6 +89,44 @@ pub trait ExecutionBackend: Send + Sync {
             on_token(t);
         }
         Ok(tokens)
+    }
+
+    /// Whether this backend implements the iteration-level stepping API
+    /// ([`prefill_step`](ExecutionBackend::prefill_step) /
+    /// [`decode_step`](ExecutionBackend::decode_step)) that the
+    /// continuous-batching scheduler drives. Backends that don't (pjrt
+    /// runs fixed-shape AOT artifacts) are served by the legacy
+    /// run-to-completion worker loop instead — the defaults below
+    /// preserve exactly that contract.
+    fn supports_stepping(&self) -> bool {
+        false
+    }
+
+    /// Prime `cache` with `tokens` — the prompt, or after a preemption
+    /// the prompt plus everything already generated — and return the
+    /// last position's logits (`1 × vocab`).
+    fn prefill_step(
+        &self,
+        _base: &ModelWeights,
+        _delta: Option<&DeltaSet>,
+        _tokens: &[u32],
+        _cache: &mut PagedKvCache,
+    ) -> Result<Matrix> {
+        bail!("backend '{}' does not implement iteration-level stepping", self.name())
+    }
+
+    /// One decode step: feed `token` at absolute position `pos` (the
+    /// cache holds positions `0..pos`) and return its logits
+    /// (`1 × vocab`).
+    fn decode_step(
+        &self,
+        _base: &ModelWeights,
+        _delta: Option<&DeltaSet>,
+        _token: u32,
+        _pos: usize,
+        _cache: &mut PagedKvCache,
+    ) -> Result<Matrix> {
+        bail!("backend '{}' does not implement iteration-level stepping", self.name())
     }
 }
 

@@ -8,12 +8,15 @@ use anyhow::Result;
 
 use crate::compress::CompressedDelta;
 use crate::delta::format::DeltaSet;
-use crate::model::forward::{forward, generate, generate_with, WeightSource};
+use crate::model::forward::{
+    forward, forward_step, generate, generate_with, prefill_into, WeightSource,
+};
 use crate::model::weights::ModelWeights;
 use crate::model::ModelConfig;
 use crate::runtime::fused::{fused_matmul_nt, matmul_nt_pooled};
 use crate::runtime::pool::ThreadPool;
 use crate::runtime::ExecutionBackend;
+use crate::sched::PagedKvCache;
 use crate::tensor::Matrix;
 
 /// Weight source that evaluates `X·(W_b + ΔŴ)ᵀ` per linear layer via
@@ -160,6 +163,47 @@ impl ExecutionBackend for NativeBackend {
             Some(set) => generate_with(&self.view(base, set), prompt, max_new, eos, on_token),
         })
     }
+
+    fn supports_stepping(&self) -> bool {
+        true
+    }
+
+    fn prefill_step(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        tokens: &[u32],
+        cache: &mut PagedKvCache,
+    ) -> Result<Matrix> {
+        // the same `forward_step` loop `generate_with` runs over the
+        // prompt — only the cache layout differs, and `KvSlot` makes
+        // that bit-invisible
+        Ok(match delta {
+            None => {
+                prefill_into(&PooledWeights { weights: base, pool: &self.pool }, tokens, cache)
+            }
+            Some(set) => prefill_into(&self.view(base, set), tokens, cache),
+        })
+    }
+
+    fn decode_step(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        token: u32,
+        pos: usize,
+        cache: &mut PagedKvCache,
+    ) -> Result<Matrix> {
+        Ok(match delta {
+            None => forward_step(
+                &PooledWeights { weights: base, pool: &self.pool },
+                token,
+                pos,
+                cache,
+            ),
+            Some(set) => forward_step(&self.view(base, set), token, pos, cache),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -236,6 +280,44 @@ mod tests {
             .unwrap();
         assert_eq!(streamed, batch, "per-token emission == batch decode");
         assert_eq!(ret, batch, "return value == emitted sequence");
+    }
+
+    #[test]
+    fn stepping_api_matches_generate_bit_for_bit() {
+        // hand-drive the scheduler's step API (prefill_step + one
+        // decode_step per token over a paged cache) and compare against
+        // the run-to-completion decode loop
+        use crate::eval::tasks::vocab;
+        use crate::sched::BlockPool;
+        use crate::tensor::ops;
+
+        let w = base(11);
+        let set = delta_set(&w, 12, Some((4, 8)));
+        let prompt = [1u32, 20, 4, 21, 3];
+        let max_new = 6;
+        let b = NativeBackend::default();
+        let want = b.generate(&w, Some(&set), &prompt, max_new, Some(vocab::EOS)).unwrap();
+
+        let pool = Arc::new(BlockPool::with_blocks(&w.config, 4, 16));
+        let mut cache = PagedKvCache::new(pool);
+        assert!(cache.grow(prompt.len()));
+        let mut last = b.prefill_step(&w, Some(&set), &prompt, &mut cache).unwrap();
+        let mut got = Vec::new();
+        let mut pos = prompt.len();
+        for _ in 0..max_new {
+            if pos >= w.config.max_seq {
+                break;
+            }
+            let next = ops::argmax_rows(&last)[0];
+            if next == vocab::EOS {
+                break;
+            }
+            got.push(next);
+            assert!(cache.grow(pos + 1));
+            last = b.decode_step(&w, Some(&set), next, pos, &mut cache).unwrap();
+            pos += 1;
+        }
+        assert_eq!(got, want, "stepped decode == run-to-completion decode");
     }
 
     #[test]

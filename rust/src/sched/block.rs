@@ -1,0 +1,330 @@
+//! The paged KV-cache block pool: fixed-size blocks of KV positions,
+//! leased to sequences and recycled on finish/cancel/preemption.
+//!
+//! A block holds `block_size` positions of K and V for *every* layer of
+//! the model, so one block is the unit of both admission control and
+//! preemption accounting. The pool never allocates past its configured
+//! budget — `try_alloc` simply returns `None` once `total_blocks` are
+//! outstanding, and the scheduler reacts by preempting the youngest
+//! running sequence.
+//!
+//! Storage is created lazily (first lease) and recycled through a free
+//! list, so an idle server with a large `kv_pool_mib` costs nothing and
+//! a busy one never re-allocates block buffers on the hot path.
+
+use std::sync::{Arc, Mutex};
+
+use crate::model::kvcache::{attend_dense, KvSlot};
+use crate::model::ModelConfig;
+use crate::tensor::Matrix;
+
+/// One leased block: `block_size × hidden` K and V matrices per layer.
+/// Rows are overwritten on reuse; only rows below the owning cache's
+/// fill count are ever read.
+#[derive(Debug)]
+pub struct KvBlock {
+    keys: Vec<Matrix>,
+    values: Vec<Matrix>,
+}
+
+impl KvBlock {
+    fn new(n_layers: usize, block_size: usize, hidden: usize) -> KvBlock {
+        KvBlock {
+            keys: (0..n_layers).map(|_| Matrix::zeros(block_size, hidden)).collect(),
+            values: (0..n_layers).map(|_| Matrix::zeros(block_size, hidden)).collect(),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct PoolInner {
+    /// Recycled block storage, ready to lease again.
+    free: Vec<KvBlock>,
+    /// Blocks currently leased out (the capacity check).
+    outstanding: usize,
+}
+
+/// Fixed-capacity pool of paged KV blocks. Cheap to share (`Arc`)
+/// between the scheduler and every sequence's [`PagedKvCache`].
+#[derive(Debug)]
+pub struct BlockPool {
+    block_size: usize,
+    n_layers: usize,
+    hidden: usize,
+    total: usize,
+    inner: Mutex<PoolInner>,
+}
+
+impl BlockPool {
+    /// Pool sized to `budget_bytes` of KV storage for `config`'s
+    /// geometry (at least one block).
+    pub fn new(config: &ModelConfig, budget_bytes: u64, block_size: usize) -> BlockPool {
+        let block_size = block_size.max(1);
+        let per = BlockPool::block_bytes(config, block_size);
+        let total = (budget_bytes / per).max(1) as usize;
+        BlockPool::with_blocks(config, block_size, total)
+    }
+
+    /// Pool with an explicit block count (tests and benches).
+    pub fn with_blocks(config: &ModelConfig, block_size: usize, total: usize) -> BlockPool {
+        BlockPool {
+            block_size: block_size.max(1),
+            n_layers: config.n_layers,
+            hidden: config.hidden,
+            total: total.max(1),
+            inner: Mutex::new(PoolInner { free: Vec::new(), outstanding: 0 }),
+        }
+    }
+
+    /// Bytes of KV storage one block pins for `config`'s geometry
+    /// (`block_size` positions × layers × {K,V} × hidden × f32).
+    pub fn block_bytes(config: &ModelConfig, block_size: usize) -> u64 {
+        (block_size.max(1) * config.n_layers * 2 * config.hidden * std::mem::size_of::<f32>())
+            as u64
+    }
+
+    /// Positions one block holds.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Blocks needed to cache `positions` positions.
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_size)
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.inner.lock().unwrap().outstanding
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.total - self.used_blocks()
+    }
+
+    /// Lease one block, or `None` when the pool is at capacity — the
+    /// admission/preemption signal. Never allocates past the budget.
+    fn try_alloc(&self) -> Option<KvBlock> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.outstanding >= self.total {
+            return None;
+        }
+        inner.outstanding += 1;
+        let block = inner
+            .free
+            .pop()
+            .unwrap_or_else(|| KvBlock::new(self.n_layers, self.block_size, self.hidden));
+        Some(block)
+    }
+
+    fn release(&self, block: KvBlock) {
+        let mut inner = self.inner.lock().unwrap();
+        debug_assert!(inner.outstanding > 0, "release without a lease");
+        inner.outstanding -= 1;
+        inner.free.push(block);
+    }
+}
+
+/// A sequence's KV cache backed by pool blocks: the per-sequence block
+/// table of the paged-attention scheme. Grows block-at-a-time via
+/// [`PagedKvCache::grow`]; every block returns to the pool on
+/// [`PagedKvCache::release`] (or drop).
+#[derive(Debug)]
+pub struct PagedKvCache {
+    pool: Arc<BlockPool>,
+    blocks: Vec<KvBlock>,
+    /// Rows written per layer (layers trail by ≤1 within a step).
+    filled: Vec<usize>,
+    /// Reused gather scratch for `attend` (K rows, V rows) — grown
+    /// once per sequence instead of allocated per step and layer.
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+}
+
+impl PagedKvCache {
+    pub fn new(pool: Arc<BlockPool>) -> PagedKvCache {
+        let n_layers = pool.n_layers;
+        PagedKvCache {
+            pool,
+            blocks: Vec::new(),
+            filled: vec![0; n_layers],
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+        }
+    }
+
+    /// Positions the leased blocks can hold.
+    pub fn capacity(&self) -> usize {
+        self.blocks.len() * self.pool.block_size
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Lease blocks until the cache can hold `positions` positions.
+    /// Returns `false` if the pool ran dry first (any blocks obtained
+    /// so far are kept — the retry after preemption picks up there).
+    #[must_use]
+    pub fn grow(&mut self, positions: usize) -> bool {
+        while self.capacity() < positions {
+            match self.pool.try_alloc() {
+                Some(b) => self.blocks.push(b),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Return every block to the pool and reset the fill counts (the
+    /// free-on-finish/cancel/preempt path).
+    pub fn release(&mut self) {
+        for block in self.blocks.drain(..) {
+            self.pool.release(block);
+        }
+        for f in &mut self.filled {
+            *f = 0;
+        }
+    }
+}
+
+impl Drop for PagedKvCache {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+impl KvSlot for PagedKvCache {
+    fn len(&self) -> usize {
+        // complete positions = rows of the last layer (layers append in
+        // order within a step), matching `KvCache::len`
+        self.filled.last().copied().unwrap_or(0)
+    }
+
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let pos = self.filled[layer];
+        assert!(pos < self.capacity(), "PagedKvCache append past leased capacity");
+        let (b, off) = (pos / self.pool.block_size, pos % self.pool.block_size);
+        self.blocks[b].keys[layer].row_mut(off).copy_from_slice(k);
+        self.blocks[b].values[layer].row_mut(off).copy_from_slice(v);
+        self.filled[layer] = pos + 1;
+    }
+
+    fn attend(
+        &mut self,
+        layer: usize,
+        q: &Matrix,
+        n_heads: usize,
+        head_dim: usize,
+        scale: f32,
+    ) -> Matrix {
+        // gather the layer's rows into the reused contiguous scratch,
+        // then run the exact same kernel as the monolithic cache — same
+        // values in, same float ops, bit-identical context out
+        let t = self.filled[layer];
+        let hidden = self.pool.hidden;
+        let mut k_data = std::mem::take(&mut self.scratch_k);
+        let mut v_data = std::mem::take(&mut self.scratch_v);
+        k_data.clear();
+        v_data.clear();
+        k_data.reserve(t * hidden);
+        v_data.reserve(t * hidden);
+        for pos in 0..t {
+            let (b, off) = (pos / self.pool.block_size, pos % self.pool.block_size);
+            k_data.extend_from_slice(self.blocks[b].keys[layer].row(off));
+            v_data.extend_from_slice(self.blocks[b].values[layer].row(off));
+        }
+        let k_all = Matrix::from_vec(t, hidden, k_data);
+        let v_all = Matrix::from_vec(t, hidden, v_data);
+        let ctx = attend_dense(q, &k_all, &v_all, n_heads, head_dim, scale);
+        // recover the buffers for the next step
+        self.scratch_k = k_all.into_vec();
+        self.scratch_v = v_all.into_vec();
+        ctx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::kvcache::KvCache;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    #[test]
+    fn pool_caps_at_total_and_recycles() {
+        let pool = BlockPool::with_blocks(&tiny(), 4, 2);
+        assert_eq!(pool.total_blocks(), 2);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        assert!(pool.try_alloc().is_none(), "budget is a hard cap");
+        assert_eq!(pool.free_blocks(), 0);
+        pool.release(a);
+        assert_eq!(pool.free_blocks(), 1);
+        let c = pool.try_alloc().unwrap();
+        pool.release(b);
+        pool.release(c);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn budget_to_blocks_math() {
+        let c = tiny();
+        let per = BlockPool::block_bytes(&c, 4);
+        assert_eq!(per, (4 * c.n_layers * 2 * c.hidden * 4) as u64);
+        let pool = BlockPool::new(&c, per * 3 + per / 2, 4);
+        assert_eq!(pool.total_blocks(), 3, "partial blocks don't count");
+        assert_eq!(BlockPool::new(&c, 0, 4).total_blocks(), 1, "at least one block");
+    }
+
+    #[test]
+    fn cache_grow_release_roundtrip() {
+        let pool = Arc::new(BlockPool::with_blocks(&tiny(), 4, 3));
+        let mut cache = PagedKvCache::new(pool.clone());
+        assert!(cache.grow(5), "2 blocks for 5 positions");
+        assert_eq!(cache.n_blocks(), 2);
+        assert_eq!(pool.used_blocks(), 2);
+        let mut other = PagedKvCache::new(pool.clone());
+        assert!(other.grow(4));
+        assert!(!cache.grow(9), "pool dry: 3rd block unavailable");
+        drop(other);
+        assert!(cache.grow(9), "freed block re-leased");
+        drop(cache);
+        assert_eq!(pool.used_blocks(), 0, "drop returns every block");
+    }
+
+    #[test]
+    fn paged_attend_matches_monolithic_bit_for_bit() {
+        // same appended rows through both cache layouts → identical
+        // context, even when positions span multiple blocks
+        let config = tiny();
+        let (layers, hidden) = (config.n_layers, config.hidden);
+        let pool = Arc::new(BlockPool::with_blocks(&config, 3, 8));
+        let mut paged = PagedKvCache::new(pool);
+        let mut mono = KvCache::new(layers, hidden);
+        assert!(paged.grow(7));
+        let mut rng = crate::tensor::Pcg64::seeded(42);
+        for _pos in 0..7 {
+            for layer in 0..layers {
+                let k = Matrix::randn(1, hidden, 1.0, &mut rng);
+                let v = Matrix::randn(1, hidden, 1.0, &mut rng);
+                KvSlot::append(&mut paged, layer, k.row(0), v.row(0));
+                mono.append(layer, k.row(0), v.row(0));
+            }
+        }
+        assert_eq!(KvSlot::len(&paged), 7);
+        assert_eq!(mono.len(), 7);
+        let q = Matrix::randn(1, hidden, 1.0, &mut rng);
+        let scale = 1.0 / ((hidden / config.n_heads) as f32).sqrt();
+        for layer in 0..layers {
+            let a = paged.attend(layer, &q, config.n_heads, config.head_dim(), scale);
+            let b = KvSlot::attend(&mut mono, layer, &q, config.n_heads, config.head_dim(), scale);
+            assert_eq!(a, b, "layer {layer}: paged == monolithic, bitwise");
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! S14: the continuous-batching scheduler — iteration-level scheduling
+//! over a paged KV-cache block pool.
+//!
+//! The run-to-completion worker loop (PR 1) executes a whole tenant
+//! batch before touching the queue again, so one long generation
+//! head-of-line-blocks every request behind it and mixed-tenant traffic
+//! never shares a decode step. This module replaces that with the
+//! vLLM-style scheme:
+//!
+//! ```text
+//!   submit() ─▶ Batcher (per-tenant FIFO queues, bounded → 429)
+//!                 │ oldest-head-first admission, FCFS across tenants
+//!                 ▼
+//!   Scheduler drive loop — every iteration:
+//!     admit      while slots + KV blocks allow: pop the oldest waiting
+//!                request (resuming preempted sequences first), acquire
+//!                its tenant view, lease prompt blocks from the pool
+//!     plan       StepBatch = {prefill slots, decode slots} over every
+//!                running sequence — mixed tenants in one step
+//!     execute    prefill_step / decode_step per slot; each decoded
+//!                token streams out immediately; a dead stream cancels
+//!                the sequence and frees its blocks
+//!     preempt    a sequence that cannot lease its next block preempts
+//!                the *youngest* running sequence back to the queue
+//!                (its blocks free instantly; it resumes later by
+//!                re-prefilling prompt + generated — greedy decoding is
+//!                deterministic, so the continuation is bit-identical)
+//! ```
+//!
+//! The KV pool ([`BlockPool`]) is the admission controller: it never
+//! leases past its byte budget, so KV memory is bounded no matter how
+//! many sequences are admitted or how long they run.
+//!
+//! Backends opt in via [`crate::runtime::ExecutionBackend`]'s
+//! `supports_stepping` / `prefill_step` / `decode_step`; backends
+//! without the stepping API (pjrt) keep the legacy run-to-completion
+//! loop. Streamed tokens are bit-identical between the two paths
+//! (pinned by `tests/sched_serving.rs`).
+
+pub mod block;
+pub mod scheduler;
+
+pub use block::{BlockPool, PagedKvCache};
+pub use scheduler::{drive_loop, StepBatch};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::hist::LatencyHistogram;
+
+/// Scheduler construction knobs (the `[sched]` config section resolved
+/// to concrete values).
+#[derive(Debug, Clone)]
+pub struct SchedOptions {
+    /// KV block-pool budget in bytes — the hard cap on paged KV memory.
+    pub kv_pool_bytes: u64,
+    /// Positions per KV block.
+    pub block_size: usize,
+    /// Max sequences decoding concurrently (`0` = inherit the server's
+    /// `max_batch`).
+    pub max_running: usize,
+}
+
+impl Default for SchedOptions {
+    fn default() -> SchedOptions {
+        SchedOptions { kv_pool_bytes: 64 << 20, block_size: 16, max_running: 0 }
+    }
+}
+
+/// Live scheduler gauges and counters, shared between the drive loop
+/// (writer) and [`crate::coordinator::Metrics`] (reader) — the same
+/// pattern as the store's `TierCounters`.
+#[derive(Debug, Default)]
+pub struct SchedCounters {
+    /// Sequences currently holding a running slot.
+    pub running: AtomicU64,
+    /// Requests waiting: queued in the batcher plus preempted.
+    pub waiting: AtomicU64,
+    /// Preemptions (youngest sequence pushed back to the queue).
+    pub preempted_total: AtomicU64,
+    /// Sequences cancelled because their stream receiver vanished.
+    pub cancelled_total: AtomicU64,
+    /// KV pool blocks currently leased.
+    pub kv_blocks_used: AtomicU64,
+    /// KV pool blocks available.
+    pub kv_blocks_free: AtomicU64,
+    /// KV pool capacity in blocks.
+    pub kv_blocks_total: AtomicU64,
+    /// Scheduler iterations executed.
+    pub steps_executed: AtomicU64,
+    /// Per-step batch occupancy (running sequences per iteration).
+    occupancy: Mutex<LatencyHistogram>,
+}
+
+impl SchedCounters {
+    pub fn observe_occupancy(&self, slots: usize) {
+        self.occupancy.lock().unwrap().record(slots as f64);
+    }
+
+    /// Copy of the per-step occupancy histogram.
+    pub fn occupancy_histogram(&self) -> LatencyHistogram {
+        self.occupancy.lock().unwrap().clone()
+    }
+
+    /// Point-in-time snapshot of every gauge/counter.
+    pub fn stats(&self) -> SchedStats {
+        SchedStats {
+            running: self.running.load(Ordering::Relaxed),
+            waiting: self.waiting.load(Ordering::Relaxed),
+            preempted_total: self.preempted_total.load(Ordering::Relaxed),
+            cancelled_total: self.cancelled_total.load(Ordering::Relaxed),
+            kv_blocks_used: self.kv_blocks_used.load(Ordering::Relaxed),
+            kv_blocks_free: self.kv_blocks_free.load(Ordering::Relaxed),
+            kv_blocks_total: self.kv_blocks_total.load(Ordering::Relaxed),
+            steps_executed: self.steps_executed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Snapshot of [`SchedCounters`] (`Server::sched_stats`).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedStats {
+    pub running: u64,
+    pub waiting: u64,
+    pub preempted_total: u64,
+    pub cancelled_total: u64,
+    pub kv_blocks_used: u64,
+    pub kv_blocks_free: u64,
+    pub kv_blocks_total: u64,
+    pub steps_executed: u64,
+}

@@ -1,0 +1,552 @@
+//! The iteration-level scheduler drive loop: per-decode-step batching
+//! with FCFS admission, KV-pool admission control, and preemption of
+//! the youngest sequence when the pool runs dry.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, Request, Response};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::tenant::{Poke, TenantStore, TenantView};
+use crate::eval::tasks::vocab;
+use crate::runtime::ExecutionBackend;
+use crate::sched::block::{BlockPool, PagedKvCache};
+use crate::sched::SchedOptions;
+use crate::tensor::ops;
+use crate::tensor::Matrix;
+
+/// How long the drive loop parks when it has nothing running and
+/// nothing queued (also the gauge refresh cadence while idle).
+const IDLE_WAIT: Duration = Duration::from_millis(5);
+
+/// Where a running slot is within its lifecycle after a step.
+enum SeqState {
+    Active,
+    /// Answered (normally or with an error); blocks already freed.
+    Done,
+    /// Pushed back to the waiting set; blocks freed, resumes by
+    /// re-prefilling prompt + generated.
+    Preempted,
+    /// Stream receiver vanished mid-generation; blocks freed.
+    Cancelled,
+}
+
+/// One admitted sequence: the request plus everything needed to decode
+/// it one step at a time.
+struct Sequence {
+    req: Request,
+    view: TenantView,
+    served_hot: bool,
+    cache: PagedKvCache,
+    generated: Vec<u32>,
+    /// `None` → needs (re)prefill; `Some` → ready for a decode slot.
+    last_logits: Option<Matrix>,
+    /// Wait from submission to first admission (reported queue_wait).
+    queue_wait: Duration,
+    /// Monotonic admission stamp — the preemption victim is the
+    /// sequence with the largest (youngest) stamp.
+    admission: u64,
+    state: SeqState,
+}
+
+impl Sequence {
+    /// Tokens that must be cached before the next decode: prompt plus
+    /// everything generated so far.
+    fn prefix_len(&self) -> usize {
+        self.req.prompt.len() + self.generated.len()
+    }
+}
+
+/// The plan for one scheduler iteration: which running slots run a
+/// prefill and which run a single decode step. Mixed tenants share one
+/// step batch — that is the whole point.
+pub struct StepBatch {
+    pub prefill: Vec<usize>,
+    pub decode: Vec<usize>,
+}
+
+impl StepBatch {
+    /// Sequences touched by this step.
+    pub fn occupancy(&self) -> usize {
+        self.prefill.len() + self.decode.len()
+    }
+}
+
+/// Drive the coordinator with iteration-level scheduling until the
+/// batcher closes and drains. Spawned by `Server` in place of the
+/// run-to-completion worker pool when the backend supports stepping.
+pub fn drive_loop(
+    store: &TenantStore,
+    batcher: &Batcher,
+    metrics: &Metrics,
+    backend: &dyn ExecutionBackend,
+    opts: &SchedOptions,
+    max_running: usize,
+) {
+    let pool =
+        Arc::new(BlockPool::new(&store.base().config, opts.kv_pool_bytes, opts.block_size));
+    metrics.sched.kv_blocks_total.store(pool.total_blocks() as u64, Ordering::Relaxed);
+    let mut sched = Scheduler {
+        store,
+        batcher,
+        metrics,
+        backend,
+        pool,
+        max_running: max_running.max(1),
+        running: Vec::new(),
+        preempted: VecDeque::new(),
+        admissions: 0,
+        hydration_blocked: false,
+    };
+    loop {
+        sched.admit();
+        sched.publish();
+        if sched.running.is_empty() {
+            if !batcher.wait_for_work(IDLE_WAIT) && sched.preempted.is_empty() {
+                sched.publish();
+                return; // closed and fully drained
+            }
+            if sched.hydration_blocked {
+                // the queue head is waiting on a background hydration,
+                // so wait_for_work returns immediately (the queue is
+                // non-empty) — park instead of spinning the probe
+                std::thread::sleep(IDLE_WAIT);
+            }
+            continue;
+        }
+        sched.step();
+    }
+}
+
+struct Scheduler<'a> {
+    store: &'a TenantStore,
+    batcher: &'a Batcher,
+    metrics: &'a Metrics,
+    backend: &'a dyn ExecutionBackend,
+    pool: Arc<BlockPool>,
+    max_running: usize,
+    running: Vec<Sequence>,
+    /// Preempted sequences awaiting re-admission, oldest arrival first.
+    preempted: VecDeque<Sequence>,
+    admissions: u64,
+    /// The last admission pass requeued its head to wait for a
+    /// background hydration (drive-loop pacing hint).
+    hydration_blocked: bool,
+}
+
+impl Scheduler<'_> {
+    // ---------------------------------------------------- admission
+
+    /// Fill free running slots FCFS by arrival time, resuming preempted
+    /// sequences ahead of equally-old queued requests. Head-of-line
+    /// candidates that don't fit the pool wait (no bypass) — running
+    /// sequences will free blocks as they finish.
+    fn admit(&mut self) {
+        self.hydration_blocked = false;
+        while self.running.len() < self.max_running {
+            let resume_first = match (self.preempted.front(), self.batcher.oldest_submitted()) {
+                (Some(p), Some(q)) => p.req.submitted <= q,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => return,
+            };
+            let admitted = if resume_first { self.try_resume() } else { self.try_admit_new() };
+            if !admitted {
+                return;
+            }
+        }
+    }
+
+    /// Re-admit the oldest preempted sequence. Returns false when it
+    /// must keep waiting for blocks.
+    fn try_resume(&mut self) -> bool {
+        let needed = {
+            let seq = self.preempted.front().expect("caller checked");
+            self.pool.blocks_for(seq.prefix_len())
+        };
+        if needed > self.pool.total_blocks() {
+            // can never fit, even with everything else preempted
+            let mut seq = self.preempted.pop_front().unwrap();
+            let msg = format!(
+                "sequence needs {needed} KV blocks but the pool holds {}",
+                self.pool.total_blocks()
+            );
+            seq.state = SeqState::Done;
+            Self::respond(self.metrics, &mut seq, Some(msg));
+            return true;
+        }
+        if self.pool.free_blocks() < needed {
+            return false;
+        }
+        let mut seq = self.preempted.pop_front().unwrap();
+        let grown = seq.cache.grow(seq.prefix_len());
+        debug_assert!(grown, "free-block check precedes the lease");
+        seq.last_logits = None; // re-prefill prompt + generated
+        self.admissions += 1;
+        seq.admission = self.admissions;
+        seq.state = SeqState::Active;
+        self.running.push(seq);
+        true
+    }
+
+    /// Admit the oldest queued request. Returns false when the queue is
+    /// drained or its head must wait for blocks.
+    fn try_admit_new(&mut self) -> bool {
+        let Some(req) = self.batcher.pop_oldest() else {
+            return false;
+        };
+        // validate against the model limits up front: a malformed
+        // direct submission must answer with an error, not panic the
+        // single drive thread inside forward_step (the gateway rejects
+        // these before submission; the in-process API does not)
+        let limits = self.store.base().config;
+        if req.prompt.is_empty() {
+            self.answer_unadmitted(req, "empty prompt".to_string());
+            return true;
+        }
+        if req.prompt.len() > limits.max_seq {
+            let msg = format!(
+                "prompt of {} tokens exceeds max_seq {}",
+                req.prompt.len(),
+                limits.max_seq
+            );
+            self.answer_unadmitted(req, msg);
+            return true;
+        }
+        if let Some(&bad) = req.prompt.iter().find(|&&t| (t as usize) >= limits.vocab_size) {
+            let msg = format!("prompt token {bad} outside the vocabulary ({})", limits.vocab_size);
+            self.answer_unadmitted(req, msg);
+            return true;
+        }
+        let needed = self.pool.blocks_for(req.prompt.len());
+        if needed > self.pool.total_blocks() {
+            let msg = format!(
+                "prompt needs {needed} KV blocks but the pool holds {}",
+                self.pool.total_blocks()
+            );
+            self.answer_unadmitted(req, msg);
+            return true;
+        }
+        if self.pool.free_blocks() < needed {
+            // FCFS: the head waits for blocks rather than being bypassed
+            self.batcher.requeue_front(req);
+            return false;
+        }
+        match self.store.poke(&req.tenant) {
+            Poke::Ready => {}
+            Poke::Pending => {
+                // Disk tier: the loader thread is hydrating — requeue
+                // the head and keep decoding running sequences instead
+                // of parking the drive thread on the hydration condvar
+                self.batcher.requeue_front(req);
+                self.hydration_blocked = true;
+                return false;
+            }
+            Poke::Missing => {
+                let msg = format!("tenant '{}' unavailable", req.tenant);
+                self.answer_unadmitted(req, msg);
+                return true;
+            }
+        }
+        let exec_start = Instant::now();
+        let Some(acquired) = self.store.acquire(&req.tenant, 1) else {
+            // tenant vanished or its hydration failed — answer instead
+            // of leaving the caller to time out (same as the legacy loop)
+            let msg = format!("tenant '{}' unavailable", req.tenant);
+            self.answer_unadmitted(req, msg);
+            return true;
+        };
+        if acquired.promoted {
+            self.metrics.promotions.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.evictions.fetch_add(acquired.evicted as u64, Ordering::Relaxed);
+        let queue_wait = exec_start.duration_since(req.submitted);
+        self.metrics.observe_queue_wait(queue_wait.as_secs_f64());
+        let mut cache = PagedKvCache::new(self.pool.clone());
+        let grown = cache.grow(req.prompt.len());
+        debug_assert!(grown, "free-block check precedes the lease");
+        let served_hot = matches!(acquired.view, TenantView::Hot(_));
+        self.admissions += 1;
+        self.running.push(Sequence {
+            req,
+            view: acquired.view,
+            served_hot,
+            cache,
+            generated: Vec::new(),
+            last_logits: None,
+            queue_wait,
+            admission: self.admissions,
+            state: SeqState::Active,
+        });
+        true
+    }
+
+    // ---------------------------------------------------- stepping
+
+    /// One scheduler iteration over every running sequence.
+    fn step(&mut self) {
+        let plan = self.plan();
+        self.metrics.sched.observe_occupancy(plan.occupancy());
+        let step_start = Instant::now();
+        for i in plan.prefill {
+            self.prefill_slot(i);
+        }
+        for i in plan.decode {
+            self.decode_slot(i);
+        }
+        self.metrics.observe_batch_exec(step_start.elapsed().as_secs_f64());
+        self.metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.sched.steps_executed.fetch_add(1, Ordering::Relaxed);
+        self.sweep();
+    }
+
+    fn plan(&self) -> StepBatch {
+        let mut batch = StepBatch { prefill: Vec::new(), decode: Vec::new() };
+        for (i, seq) in self.running.iter().enumerate() {
+            if seq.last_logits.is_none() {
+                batch.prefill.push(i);
+            } else {
+                batch.decode.push(i);
+            }
+        }
+        batch
+    }
+
+    /// Prefill slot: run the whole prefix (prompt, plus generated after
+    /// a preemption) through the backend; blocks were leased at
+    /// admission.
+    fn prefill_slot(&mut self, i: usize) {
+        if !matches!(self.running[i].state, SeqState::Active) {
+            return; // preempted earlier in this same iteration
+        }
+        let tokens: Vec<u32> = {
+            let seq = &self.running[i];
+            seq.req.prompt.iter().chain(seq.generated.iter()).copied().collect()
+        };
+        let result = {
+            let seq = &mut self.running[i];
+            match &seq.view {
+                TenantView::Hot(weights) => {
+                    self.backend.prefill_step(weights.as_ref(), None, &tokens, &mut seq.cache)
+                }
+                TenantView::Cold(deltas) => self.backend.prefill_step(
+                    self.store.base().as_ref(),
+                    Some(deltas.as_ref()),
+                    &tokens,
+                    &mut seq.cache,
+                ),
+            }
+        };
+        match result {
+            Ok(logits) => self.running[i].last_logits = Some(logits),
+            Err(e) => self.backend_failure(i, &e),
+        }
+    }
+
+    /// Decode slot: emit the token the last logits imply, then run one
+    /// forward step for it. The decision order (max_seq check → argmax
+    /// → EOS check → emit → step) mirrors `generate_with` exactly, so
+    /// the emitted token sequence is bit-identical to the
+    /// run-to-completion path.
+    fn decode_slot(&mut self, i: usize) {
+        if !matches!(self.running[i].state, SeqState::Active) {
+            return;
+        }
+        // the token budget bounds emissions exactly like generate_with's
+        // `for _ in 0..max_new` loop — checked BEFORE emitting, so
+        // max_tokens = 0 yields zero tokens on both paths
+        if self.running[i].generated.len() >= self.running[i].req.max_new {
+            self.answer_at(i, None);
+            return;
+        }
+        let pos = self.running[i].prefix_len();
+        if pos >= self.store.base().config.max_seq {
+            self.answer_at(i, None);
+            return;
+        }
+        let next = {
+            let seq = &self.running[i];
+            ops::argmax_rows(seq.last_logits.as_ref().expect("decode slot has logits"))[0]
+        };
+        if next == vocab::EOS {
+            self.answer_at(i, None);
+            return;
+        }
+        let live = self.running[i].req.respond.send_token(next);
+        self.running[i].generated.push(next);
+        if !live {
+            self.cancel(i);
+            return;
+        }
+        if self.running[i].generated.len() >= self.running[i].req.max_new {
+            // the token limit is reached; the forward step for this
+            // token would only compute logits nobody reads
+            self.answer_at(i, None);
+            return;
+        }
+        if self.pool.blocks_for(pos + 1) > self.pool.total_blocks() {
+            let msg = format!(
+                "sequence of {} positions exceeds the KV pool ({} blocks)",
+                pos + 1,
+                self.pool.total_blocks()
+            );
+            self.answer_at(i, Some(msg));
+            return;
+        }
+        if !self.ensure_capacity(i, pos + 1) {
+            return; // preempted itself making room
+        }
+        let result = {
+            let seq = &mut self.running[i];
+            match &seq.view {
+                TenantView::Hot(weights) => {
+                    self.backend.decode_step(weights.as_ref(), None, next, pos, &mut seq.cache)
+                }
+                TenantView::Cold(deltas) => self.backend.decode_step(
+                    self.store.base().as_ref(),
+                    Some(deltas.as_ref()),
+                    next,
+                    pos,
+                    &mut seq.cache,
+                ),
+            }
+        };
+        match result {
+            Ok(logits) => self.running[i].last_logits = Some(logits),
+            Err(e) => self.backend_failure(i, &e),
+        }
+    }
+
+    /// Lease blocks until slot `i` can cache `positions` positions,
+    /// preempting the youngest active sequence whenever the pool is
+    /// dry. Returns false if `i` itself was the youngest and got
+    /// preempted.
+    fn ensure_capacity(&mut self, i: usize, positions: usize) -> bool {
+        loop {
+            if self.running[i].cache.grow(positions) {
+                return true;
+            }
+            let victim = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| matches!(s.state, SeqState::Active))
+                .max_by_key(|(_, s)| s.admission)
+                .map(|(j, _)| j)
+                .expect("slot i is active");
+            let self_preempt = victim == i;
+            self.preempt(victim);
+            if self_preempt {
+                return false;
+            }
+        }
+    }
+
+    fn preempt(&mut self, j: usize) {
+        let seq = &mut self.running[j];
+        seq.cache.release();
+        seq.last_logits = None;
+        seq.state = SeqState::Preempted;
+        self.metrics.sched.preempted_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // ---------------------------------------------------- completion
+
+    /// Answer slot `i` and free its blocks.
+    fn answer_at(&mut self, i: usize, error: Option<String>) {
+        self.running[i].state = SeqState::Done;
+        Self::respond(self.metrics, &mut self.running[i], error);
+    }
+
+    fn backend_failure(&mut self, i: usize, e: &anyhow::Error) {
+        self.metrics.backend_errors.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "backend '{}' failed for tenant '{}' request {}: {e:#}",
+            self.backend.name(),
+            self.running[i].req.tenant,
+            self.running[i].req.id
+        );
+        self.answer_at(i, Some(format!("{e:#}")));
+    }
+
+    /// The stream receiver vanished: stop decoding, free the blocks and
+    /// the slot. The already-streamed prefix stays valid (greedy decode
+    /// is deterministic), there is just nobody left to read the rest.
+    fn cancel(&mut self, i: usize) {
+        let seq = &mut self.running[i];
+        seq.cache.release();
+        seq.state = SeqState::Cancelled;
+        self.metrics.sched.cancelled_total.fetch_add(1, Ordering::Relaxed);
+        self.metrics.tokens_generated.fetch_add(seq.generated.len() as u64, Ordering::Relaxed);
+        self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Answer a request that never got a running slot (bad prompt,
+    /// unknown/failed tenant, impossible block demand) — mirrors the
+    /// legacy loop's unavailable-tenant response.
+    fn answer_unadmitted(&self, req: Request, error: String) {
+        self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+        let total = req.submitted.elapsed();
+        req.respond.send_done(Response {
+            id: req.id,
+            tenant: req.tenant.clone(),
+            tokens: Vec::new(),
+            queue_wait: total,
+            total,
+            served_hot: false,
+            error: Some(error),
+        });
+    }
+
+    fn respond(metrics: &Metrics, seq: &mut Sequence, error: Option<String>) {
+        seq.cache.release();
+        let tokens = std::mem::take(&mut seq.generated);
+        let total = seq.req.submitted.elapsed();
+        metrics.tokens_generated.fetch_add(tokens.len() as u64, Ordering::Relaxed);
+        metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+        metrics.observe_latency(total.as_secs_f64());
+        seq.req.respond.send_done(Response {
+            id: seq.req.id,
+            tenant: seq.req.tenant.clone(),
+            tokens,
+            queue_wait: seq.queue_wait,
+            total,
+            served_hot: seq.served_hot,
+            error,
+        });
+    }
+
+    /// Move preempted slots to the waiting set (FCFS by arrival) and
+    /// drop finished ones.
+    fn sweep(&mut self) {
+        let drained = std::mem::take(&mut self.running);
+        for seq in drained {
+            match seq.state {
+                SeqState::Active => self.running.push(seq),
+                SeqState::Preempted => self.queue_preempted(seq),
+                SeqState::Done | SeqState::Cancelled => {}
+            }
+        }
+    }
+
+    fn queue_preempted(&mut self, seq: Sequence) {
+        let at = self
+            .preempted
+            .iter()
+            .position(|p| p.req.submitted > seq.req.submitted)
+            .unwrap_or(self.preempted.len());
+        self.preempted.insert(at, seq);
+    }
+
+    /// Refresh the shared gauges.
+    fn publish(&self) {
+        let s = &self.metrics.sched;
+        s.running.store(self.running.len() as u64, Ordering::Relaxed);
+        let waiting = self.batcher.queued() + self.preempted.len();
+        s.waiting.store(waiting as u64, Ordering::Relaxed);
+        s.kv_blocks_used.store(self.pool.used_blocks() as u64, Ordering::Relaxed);
+        s.kv_blocks_free.store(self.pool.free_blocks() as u64, Ordering::Relaxed);
+    }
+}

@@ -269,6 +269,16 @@ impl DeltaStore {
     /// Sweep `shards/` for files the manifest no longer references
     /// (crashed pushes, failed removals, stale `.tmp` files).
     pub fn gc(&self) -> Result<GcReport> {
+        self.sweep(false)
+    }
+
+    /// Report what [`gc`](DeltaStore::gc) *would* sweep — orphan file
+    /// count and bytes — without deleting anything.
+    pub fn gc_dry_run(&self) -> Result<GcReport> {
+        self.sweep(true)
+    }
+
+    fn sweep(&self, dry_run: bool) -> Result<GcReport> {
         let _ops = self.ops.lock().unwrap();
         let live: std::collections::BTreeSet<PathBuf> = {
             let mut m = self.manifest.lock().unwrap();
@@ -286,7 +296,9 @@ impl DeltaStore {
                 continue;
             }
             let bytes = path.metadata().map(|m| m.len()).unwrap_or(0);
-            std::fs::remove_file(&path).with_context(|| format!("remove {path:?}"))?;
+            if !dry_run {
+                std::fs::remove_file(&path).with_context(|| format!("remove {path:?}"))?;
+            }
             report.files_removed += 1;
             report.bytes_freed += bytes;
         }
@@ -457,6 +469,27 @@ mod tests {
         // the live tenant is untouched
         assert_sets_equal(&store.load("b").unwrap(), &sample_set(11, None));
         assert!(store.load("a").is_err());
+    }
+
+    #[test]
+    fn gc_dry_run_reports_without_deleting() {
+        let root = tmp_store("gc-dry");
+        let store = DeltaStore::open_or_create(&root).unwrap();
+        store.push("keep", &sample_set(13, None)).unwrap();
+        let orphan = root.join("shards/orphan.ddq");
+        std::fs::write(&orphan, b"DDQS....junk").unwrap();
+
+        let dry = store.gc_dry_run().unwrap();
+        assert_eq!(dry.files_removed, 1, "one orphan reported");
+        assert!(dry.bytes_freed > 0);
+        assert!(orphan.exists(), "dry run must not delete");
+        assert_sets_equal(&store.load("keep").unwrap(), &sample_set(13, None));
+
+        // a real sweep removes exactly what the dry run promised
+        let real = store.gc().unwrap();
+        assert_eq!(real, dry);
+        assert!(!orphan.exists());
+        assert_eq!(store.gc_dry_run().unwrap(), GcReport::default());
     }
 
     #[test]

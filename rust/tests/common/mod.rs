@@ -1,0 +1,70 @@
+//! Shared helpers for the serving integration tests (`mod common;`).
+
+use std::time::Duration;
+
+use deltadq::delta::format::DeltaSet;
+use deltadq::model::ModelWeights;
+use deltadq::runtime::{ExecutionBackend, NativeBackend};
+use deltadq::sched::PagedKvCache;
+use deltadq::tensor::Matrix;
+
+/// Stepping-aware backend wrapper that pins per-decode-step time, so
+/// scheduling order (and a mid-generation disconnect) is observable on
+/// the wall clock without flakiness. Tokens are bit-identical to the
+/// wrapped [`NativeBackend`]'s.
+pub struct SlowStepBackend {
+    pub inner: NativeBackend,
+    pub delay: Duration,
+}
+
+impl ExecutionBackend for SlowStepBackend {
+    fn name(&self) -> &'static str {
+        "slow-step"
+    }
+
+    fn prefill(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        tokens: &[u32],
+    ) -> anyhow::Result<Matrix> {
+        self.inner.prefill(base, delta, tokens)
+    }
+
+    fn generate(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        prompt: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> anyhow::Result<Vec<u32>> {
+        self.inner.generate(base, delta, prompt, max_new, eos)
+    }
+
+    fn supports_stepping(&self) -> bool {
+        true
+    }
+
+    fn prefill_step(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        tokens: &[u32],
+        cache: &mut PagedKvCache,
+    ) -> anyhow::Result<Matrix> {
+        self.inner.prefill_step(base, delta, tokens, cache)
+    }
+
+    fn decode_step(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        token: u32,
+        pos: usize,
+        cache: &mut PagedKvCache,
+    ) -> anyhow::Result<Matrix> {
+        std::thread::sleep(self.delay);
+        self.inner.decode_step(base, delta, token, pos, cache)
+    }
+}

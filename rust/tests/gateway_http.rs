@@ -10,11 +10,14 @@
 //! * `GET /metrics` exposes the tier counters (disk loads, demotions)
 //!   and queue-depth gauges in Prometheus text format.
 
+mod common;
+
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
+use common::SlowStepBackend;
 use deltadq::compress::pipeline::compress_model_deltas;
 use deltadq::compress::{DeltaDq, DeltaDqConfig};
 use deltadq::coordinator::{Server, ServerOptions, Tier};
@@ -25,6 +28,7 @@ use deltadq::gateway::http::{read_response, HttpResponse};
 use deltadq::gateway::{sse, Gateway, GatewayOptions};
 use deltadq::model::{ModelConfig, ModelWeights};
 use deltadq::runtime::{ExecutionBackend, NativeBackend};
+use deltadq::sched::SchedOptions;
 use deltadq::store::DeltaStore;
 use deltadq::tensor::{Matrix, Pcg64};
 use deltadq::util::json::Json;
@@ -225,6 +229,21 @@ fn concurrent_streaming_over_disk_tenants_matches_in_process() {
     assert!(text.contains("deltadq_queue_depth "), "{text}");
     assert!(text.contains("deltadq_tenants{tier=\"disk\"}"), "{text}");
     assert!(text.contains("deltadq_request_latency_seconds{quantile=\"0.99\"}"), "{text}");
+    // scheduler gauges: running/waiting sequences, preemption/cancel
+    // counters, KV-pool occupancy, per-tenant queue depth
+    assert!(text.contains("deltadq_sched_running_sequences "), "{text}");
+    assert!(text.contains("deltadq_sched_waiting_sequences "), "{text}");
+    assert!(text.contains("deltadq_sched_preempted_total "), "{text}");
+    assert!(text.contains("deltadq_sched_cancelled_total "), "{text}");
+    assert!(text.contains("deltadq_kv_pool_blocks{state=\"used\"}"), "{text}");
+    assert!(text.contains("deltadq_kv_pool_blocks{state=\"free\"}"), "{text}");
+    assert!(metric_value("deltadq_kv_pool_blocks_total") > 0.0, "{text}");
+    for i in 0..N_TENANTS {
+        assert!(
+            text.contains(&format!("deltadq_tenant_queue_depth{{tenant=\"t{i}\"}}")),
+            "{text}"
+        );
+    }
 
     // health + unknown tenant semantics on the same live server
     assert_eq!(get(addr, "/healthz").status, 200);
@@ -352,6 +371,109 @@ fn flood_past_queue_depth_sheds_with_429_and_serves_the_rest() {
     assert_eq!(served + shed, 24, "every request answered");
     assert!(served > 0, "some requests served");
     assert!(shed > 0, "flood past queue_depth must shed with 429s");
+
+    gw.shutdown();
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}
+
+/// Cancellation contract: a streaming client that disconnects
+/// mid-generation frees the sequence's KV blocks and its scheduler
+/// slot (pool occupancy returns to baseline), and a subsequently
+/// queued request runs to completion.
+#[test]
+fn client_disconnect_mid_stream_frees_kv_blocks_and_slot() {
+    let b = base();
+    // pick a seed whose generation runs long enough that the
+    // disconnect lands mid-decode (deterministic per seed)
+    let probe = NativeBackend::default();
+    let (seed, _) = (90u64..110)
+        .map(|s| {
+            let set = deltas_for(&b, s);
+            let len = probe
+                .generate(&b, Some(&set), &PROMPT, 48, Some(vocab::EOS))
+                .unwrap()
+                .len();
+            (s, len)
+        })
+        .find(|&(_, len)| len >= 8)
+        .expect("some seed generates ≥8 tokens");
+
+    let server = Arc::new(Server::with_backend(
+        b.clone(),
+        ServerOptions {
+            batch_window: Duration::from_micros(100),
+            promote_after: u64::MAX,
+            sched: Some(SchedOptions::default()),
+            ..Default::default()
+        },
+        Arc::new(SlowStepBackend {
+            inner: NativeBackend::default(),
+            delay: Duration::from_millis(5),
+        }),
+    ));
+    server.register_tenant("t", deltas_for(&b, seed));
+    let baseline = server.sched_stats().expect("scheduler active");
+    assert_eq!(baseline.kv_blocks_used, 0);
+
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions {
+        max_connections: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = gw.local_addr();
+
+    // stream a long generation, read just the response head + first
+    // chunk, then vanish without a trace
+    {
+        let conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let mut body = Json::obj();
+        body.set("tenant", "t")
+            .set("prompt", PROMPT.to_vec())
+            .set("max_tokens", 48u64)
+            .set("stream", true);
+        let body = body.to_string();
+        write!(
+            w,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        w.flush().unwrap();
+        let mut r = BufReader::new(conn);
+        let head = deltadq::gateway::http::read_response_head(&mut r).unwrap();
+        assert_eq!(head.status, 200);
+        let mut chunks = deltadq::gateway::http::ChunkReader::new();
+        let first = chunks.next_chunk(&mut r).unwrap();
+        assert!(first.is_some(), "at least one SSE frame before the disconnect");
+        // drop both halves: FIN now, RST on the server's next writes
+        let _ = r.into_inner().shutdown(std::net::Shutdown::Both);
+    }
+
+    // the scheduler must notice the dead sink, cancel the sequence,
+    // and return every block to the pool
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let stats = server.sched_stats().unwrap();
+        if stats.kv_blocks_used == 0 && stats.running == 0 && stats.cancelled_total >= 1 {
+            assert_eq!(stats.kv_blocks_free, stats.kv_blocks_total, "pool back to baseline");
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "sequence not cancelled / blocks not freed: {stats:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // the freed slot serves new work: a queued request completes
+    let rx = server.submit("t", PROMPT.to_vec(), 2).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
 
     gw.shutdown();
     if let Ok(s) = Arc::try_unwrap(server) {

@@ -1,0 +1,243 @@
+//! Integration: the continuous-batching scheduler — bit-identity with
+//! the run-to-completion path, KV-pool admission control with
+//! preemption, and freedom from head-of-line blocking.
+//!
+//! Acceptance properties of the scheduler subsystem:
+//! * streamed tokens are bit-identical to the pre-scheduler
+//!   run-to-completion path for identical requests (pinned);
+//! * the KV pool never exceeds its configured budget: filling it
+//!   triggers preemption of the youngest sequence, and every preempted
+//!   sequence completes with the correct output;
+//! * a short request submitted behind a long generation completes
+//!   before the long one — iteration-level scheduling shares decode
+//!   steps instead of running requests to completion.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::SlowStepBackend;
+use deltadq::compress::pipeline::compress_model_deltas;
+use deltadq::compress::{DeltaDq, DeltaDqConfig};
+use deltadq::coordinator::{Server, ServerOptions, StreamEvent};
+use deltadq::delta::extract_deltas;
+use deltadq::delta::format::DeltaSet;
+use deltadq::eval::tasks::vocab;
+use deltadq::model::{ModelConfig, ModelWeights};
+use deltadq::runtime::{ExecutionBackend, NativeBackend};
+use deltadq::sched::{BlockPool, SchedOptions};
+use deltadq::tensor::{Matrix, Pcg64};
+
+fn base() -> Arc<ModelWeights> {
+    let mut rng = Pcg64::seeded(1);
+    Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng))
+}
+
+fn deltas_for(base: &ModelWeights, seed: u64) -> DeltaSet {
+    let mut rng = Pcg64::seeded(seed);
+    let mut ft = base.clone();
+    for name in base.config.delta_tensor_names() {
+        let (r, c) = ft.get(&name).shape();
+        ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, &mut rng));
+    }
+    let d = extract_deltas(base, &ft);
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(16)));
+    compress_model_deltas(&d, &dq, &Default::default(), &mut rng)
+}
+
+fn stream_tokens(server: &Server, tenant: &str, prompt: &[u32], max_new: usize) -> Vec<u32> {
+    let rx = server.submit_stream(tenant, prompt.to_vec(), max_new).unwrap();
+    let mut tokens = Vec::new();
+    loop {
+        match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            StreamEvent::Token(t) => tokens.push(t),
+            StreamEvent::Done(resp) => {
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                assert_eq!(resp.tokens, tokens, "done frame repeats the stream");
+                return tokens;
+            }
+        }
+    }
+}
+
+/// Pinned: for identical single requests, the iteration-level scheduler
+/// streams exactly the tokens the run-to-completion worker loop does —
+/// across prompts, tenants, and both Cold (fused) and Hot (promoted)
+/// execution.
+#[test]
+fn scheduler_streams_bit_identical_to_run_to_completion() {
+    let b = base();
+    let prompts: [&[u32]; 3] = [&[1, 20, 4, 21, 3], &[1, 30, 5, 31, 3, 7], &[1, 16, 17]];
+    for promote_after in [u64::MAX, 1] {
+        let mk = |sched: Option<SchedOptions>| {
+            let server = Server::start(b.clone(), ServerOptions {
+                promote_after,
+                batch_window: Duration::from_millis(0),
+                sched,
+                ..Default::default()
+            });
+            server.register_tenant("a", deltas_for(&b, 21));
+            server.register_tenant("b", deltas_for(&b, 22));
+            server
+        };
+        let sched_server = mk(Some(SchedOptions::default()));
+        assert!(sched_server.sched_stats().is_some());
+        let legacy_server = mk(None);
+        assert!(legacy_server.sched_stats().is_none());
+        for tenant in ["a", "b"] {
+            for prompt in prompts {
+                let stepped = stream_tokens(&sched_server, tenant, prompt, 8);
+                let legacy = stream_tokens(&legacy_server, tenant, prompt, 8);
+                assert_eq!(
+                    stepped, legacy,
+                    "tenant {tenant} prompt {prompt:?} promote_after {promote_after}"
+                );
+            }
+        }
+        sched_server.shutdown();
+        legacy_server.shutdown();
+    }
+}
+
+/// Pinned: filling the KV pool preempts the youngest sequence, the pool
+/// never exceeds its block budget, and every preempted sequence still
+/// completes with exactly the output an unconstrained server produces.
+#[test]
+fn pool_exhaustion_preempts_youngest_and_completes_correctly() {
+    let b = base();
+    let set = deltas_for(&b, 31);
+    let prompts: Vec<Vec<u32>> = (0..4).map(|i| vec![1, 20 + i, 4, 21 + i, 3]).collect();
+    let max_new = 12;
+
+    // ground truth from the eager path
+    let backend = NativeBackend::default();
+    let expected: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| backend.generate(&b, Some(&set), p, max_new, Some(vocab::EOS)).unwrap())
+        .collect();
+    assert!(
+        expected.iter().any(|t| !t.is_empty()),
+        "seed must generate at least one token so sequences outgrow their prompt blocks"
+    );
+
+    // block_size 1 → every prompt takes 5 blocks at admission; a pool
+    // of exactly 4×5 blocks is full the moment all four are admitted,
+    // so the first decode step that needs a block must preempt
+    let total_blocks = 4 * prompts[0].len();
+    let kv_pool_bytes = total_blocks as u64 * BlockPool::block_bytes(&b.config, 1);
+    let server = Server::start(b.clone(), ServerOptions {
+        batch_window: Duration::from_millis(0),
+        promote_after: u64::MAX, // stay Cold: the fused path
+        sched: Some(SchedOptions { kv_pool_bytes, block_size: 1, max_running: 4 }),
+        ..Default::default()
+    });
+    server.register_tenant("t", set);
+    // the drive thread publishes the pool capacity as it starts up
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.sched_stats().unwrap().kv_blocks_total == 0 {
+        assert!(Instant::now() < deadline, "scheduler never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(server.sched_stats().unwrap().kv_blocks_total, total_blocks as u64);
+
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| server.submit_stream("t", p.clone(), max_new).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let mut tokens = Vec::new();
+        loop {
+            match rx.recv_timeout(Duration::from_secs(120)).unwrap() {
+                StreamEvent::Token(t) => tokens.push(t),
+                StreamEvent::Done(resp) => {
+                    assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+                    assert_eq!(resp.tokens, tokens);
+                    break;
+                }
+            }
+        }
+        assert_eq!(tokens, expected[i], "request {i}: correct output despite preemption");
+    }
+
+    let stats = server.sched_stats().unwrap();
+    assert!(stats.preempted_total >= 1, "a full pool must preempt: {stats:?}");
+    assert_eq!(stats.kv_blocks_total, total_blocks as u64, "budget never grows");
+    // all blocks returned once everything finished
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = server.sched_stats().unwrap();
+        if s.kv_blocks_used == 0 && s.running == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "kv blocks leaked: {s:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    server.shutdown();
+}
+
+/// A short request submitted while a long generation is mid-decode must
+/// not wait for it to finish — the whole point of iteration-level
+/// scheduling. (Under the old run-to-completion loop with one worker
+/// the short request's TTFT includes the entire long generation.)
+#[test]
+fn short_request_is_not_head_of_line_blocked_by_long_generation() {
+    let b = base();
+    let server = Arc::new(Server::with_backend(
+        b.clone(),
+        ServerOptions {
+            batch_window: Duration::from_millis(0),
+            sched: Some(SchedOptions { max_running: 8, ..Default::default() }),
+            ..Default::default()
+        },
+        Arc::new(SlowStepBackend {
+            inner: NativeBackend::default(),
+            delay: Duration::from_millis(3),
+        }),
+    ));
+    server.register_tenant("t", deltas_for(&b, 41));
+
+    // each stream is drained by its own thread, so a Done timestamp is
+    // taken the moment the scheduler emits it (receive ≈ send)
+    let drain = |rx: std::sync::mpsc::Receiver<StreamEvent>| {
+        std::thread::spawn(move || {
+            let mut tokens = 0usize;
+            loop {
+                match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+                    StreamEvent::Token(_) => tokens += 1,
+                    StreamEvent::Done(resp) => {
+                        assert!(resp.error.is_none(), "{:?}", resp.error);
+                        return (tokens, Instant::now());
+                    }
+                }
+            }
+        })
+    };
+
+    // start the long request and wait for its first streamed token —
+    // it is mid-decode when the short request arrives (3ms per decode
+    // step keeps it on the wall clock long enough to overlap)
+    let long_rx = server.submit_stream("t", vec![1, 20, 4, 21, 3], 40).unwrap();
+    let first = long_rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    let long_handle = match first {
+        StreamEvent::Done(_) => None, // EOS on the very first token
+        StreamEvent::Token(_) => Some(drain(long_rx)),
+    };
+
+    let short_rx = server.submit_stream("t", vec![1, 16, 17], 2).unwrap();
+    let short_handle = drain(short_rx);
+
+    let (_, short_done_at) = short_handle.join().unwrap();
+    if let Some(handle) = long_handle {
+        let (long_tokens, long_done_at) = handle.join().unwrap();
+        // only meaningful if the long generation actually ran long
+        // (EOS could legitimately cut it short on some seeds)
+        if long_tokens + 1 >= 8 {
+            assert!(
+                short_done_at <= long_done_at,
+                "short request head-of-line blocked behind the long generation"
+            );
+        }
+    }
+    Arc::try_unwrap(server).ok().unwrap().shutdown();
+}
