@@ -16,6 +16,7 @@ use crate::tensor::Matrix;
 /// the delta weight vs the full fine-tuned weight on the same inputs.
 #[derive(Debug, Clone)]
 pub struct BalancedResultReport {
+    /// Tensor the statistics were computed for.
     pub tensor: String,
     /// Median partial-product variance, delta weight.
     pub delta_variance: f64,
@@ -82,13 +83,17 @@ pub fn balanced_results_sweep(
 /// quantization (same bins for comparability).
 #[derive(Debug, Clone)]
 pub struct QuantDistributionReport {
+    /// Value histogram of the raw delta.
     pub before: Histogram,
+    /// Histogram after quantize→dequantize, same bins.
     pub after: Histogram,
+    /// Quantization bit width.
     pub bits: u32,
     /// Quantization MSE.
     pub mse: f64,
 }
 
+/// Compute the Fig. 6 before/after histograms and quantization MSE.
 pub fn quant_distribution(delta: &Matrix, bits: u32, bins: usize) -> QuantDistributionReport {
     let before = Histogram::of_matrix(delta, bins);
     let (quantized, _) = fake_quantize(delta, bits);

@@ -1078,21 +1078,154 @@ struct DecodePhase {
     elapsed_s: f64,
     preempted: u64,
     steps: u64,
+    decode_groups: u64,
+    decode_lanes: u64,
+    prefill_chunks: u64,
+    /// Per-step batch occupancy (all-zero for the legacy phase).
+    occupancy: crate::util::hist::LatencyHistogram,
+    /// Per-group lane counts (all-zero off the batched path).
+    group_sizes: crate::util::hist::LatencyHistogram,
 }
 
-/// E14: iteration-level scheduling vs run-to-completion batching on a
-/// mixed workload — a few long generations submitted ahead of many
-/// short ones, the pattern where run-to-completion head-of-line-blocks
-/// every short request behind the longs. Measures per-class TTFT
-/// (streaming, in-process) and aggregate tokens/s for both disciplines
-/// over the *same* requests, asserts the outputs are bit-identical, and
-/// writes machine-readable `BENCH_decode.json`.
+impl DecodePhase {
+    fn total_tokens(&self) -> usize {
+        self.samples.iter().map(|s| s.tokens.len()).sum()
+    }
+
+    fn tokens_per_s(&self) -> f64 {
+        self.total_tokens() as f64 / self.elapsed_s.max(1e-9)
+    }
+}
+
+/// Count histogram → JSON (values are integer counts, so mean is the
+/// only fractional field).
+fn count_hist_json(h: &crate::util::hist::LatencyHistogram) -> Json {
+    let mut o = Json::obj();
+    o.set("count", h.count()).set("mean", h.mean()).set("max", h.max());
+    o
+}
+
+/// Result of the depth-8 stacked-decode microbenchmark.
+struct StackedDepthResult {
+    depth: usize,
+    steps: usize,
+    batched_tokens_per_s: f64,
+    per_seq_tokens_per_s: f64,
+}
+
+/// Microbenchmark the tentpole kernel win in isolation: `depth`
+/// identical sequences of one Cold tenant decoded for `steps`
+/// iterations, once through a single [`ExecutionBackend::decode_steps`]
+/// call per iteration (one fused t=depth matmul per layer) and once
+/// through `depth` separate `decode_step` calls. Asserts the two paths
+/// produce bit-identical token streams, then reports tokens/s of each.
+fn stacked_depth_bench(
+    backend: &Arc<dyn ExecutionBackend>,
+    base: &ModelWeights,
+    delta: &crate::delta::format::DeltaSet,
+    prompt: &[u32],
+    depth: usize,
+    steps: usize,
+) -> Result<StackedDepthResult> {
+    use crate::runtime::DecodeLane;
+    use crate::sched::{BlockPool, PagedKvCache};
+    use crate::tensor::ops::argmax_rows;
+
+    let positions = prompt.len() + steps + 1;
+    let block_size = 16usize;
+    let blocks = 2 * depth * positions.div_ceil(block_size) + 2;
+    let pool = Arc::new(BlockPool::with_blocks(&base.config, block_size, blocks));
+
+    // Prefill `depth` lanes and return (caches, first decode token per
+    // lane). Lanes share a prompt, so the streams must stay identical.
+    let prefill_lanes = |pool: &Arc<BlockPool>| -> Result<(Vec<PagedKvCache>, Vec<u32>)> {
+        let mut caches = Vec::with_capacity(depth);
+        let mut tokens = Vec::with_capacity(depth);
+        for _ in 0..depth {
+            let mut cache = PagedKvCache::new(pool.clone());
+            anyhow::ensure!(cache.grow(prompt.len()), "stacked bench pool exhausted");
+            let logits = backend.prefill_step(base, Some(delta), prompt, &mut cache)?;
+            tokens.push(argmax_rows(&logits)[0]);
+            caches.push(cache);
+        }
+        Ok((caches, tokens))
+    };
+
+    // Batched: one decode_steps call per iteration.
+    let (mut caches, mut tokens) = prefill_lanes(&pool)?;
+    let mut batched_stream: Vec<Vec<u32>> = vec![Vec::new(); depth];
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let pos = prompt.len() + step;
+        for cache in caches.iter_mut() {
+            anyhow::ensure!(cache.grow(pos + 1), "stacked bench pool exhausted");
+        }
+        let mut lanes: Vec<DecodeLane<'_>> = caches
+            .iter_mut()
+            .zip(tokens.iter())
+            .map(|(cache, &token)| DecodeLane { token, pos, cache })
+            .collect();
+        let logits = backend.decode_steps(base, Some(delta), &mut lanes)?;
+        tokens = argmax_rows(&logits);
+        for (lane, &t) in batched_stream.iter_mut().zip(tokens.iter()) {
+            lane.push(t);
+        }
+    }
+    let batched_s = t0.elapsed().as_secs_f64();
+    drop(caches); // blocks return to the pool for the next pass
+
+    // Per-sequence: `depth` decode_step calls per iteration.
+    let (mut caches, mut tokens) = prefill_lanes(&pool)?;
+    let mut per_seq_stream: Vec<Vec<u32>> = vec![Vec::new(); depth];
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let pos = prompt.len() + step;
+        for (i, cache) in caches.iter_mut().enumerate() {
+            anyhow::ensure!(cache.grow(pos + 1), "stacked bench pool exhausted");
+            let logits = backend.decode_step(base, Some(delta), tokens[i], pos, cache)?;
+            tokens[i] = argmax_rows(&logits)[0];
+            per_seq_stream[i].push(tokens[i]);
+        }
+    }
+    let per_seq_s = t0.elapsed().as_secs_f64();
+    drop(caches); // blocks return to the pool for the next pass
+
+    anyhow::ensure!(
+        batched_stream == per_seq_stream,
+        "stacked decode diverged from per-sequence decode at depth {depth}"
+    );
+    let total = (depth * steps) as f64;
+    Ok(StackedDepthResult {
+        depth,
+        steps,
+        batched_tokens_per_s: total / batched_s.max(1e-9),
+        per_seq_tokens_per_s: total / per_seq_s.max(1e-9),
+    })
+}
+
+/// E14: scheduling disciplines on a mixed workload — a few long
+/// generations submitted ahead of many short ones, the pattern where
+/// run-to-completion head-of-line-blocks every short request behind the
+/// longs. Three phases run the *same* requests:
+///
+/// * **continuous** — the scheduler's default batched drive loop (one
+///   stacked forward per tenant group per iteration),
+/// * **per_sequence** — the scheduler with [`StepExec::PerSequence`]
+///   (one forward per sequence per iteration),
+/// * **run_to_completion** — the legacy worker pool.
+///
+/// Measures per-class TTFT (streaming, in-process), aggregate tokens/s,
+/// and the batched path's group-size/occupancy histograms; asserts all
+/// three token streams are bit-identical; and isolates the kernel win
+/// with a depth-8 stacked-decode microbenchmark
+/// (`stacked_depth8.speedup`, gated > 1 in CI). Writes machine-readable
+/// `BENCH_decode.json`.
 ///
 /// `DELTADQ_BENCH_QUICK=1` switches to CI mode: 8 short + 2 long
-/// requests per phase.
+/// requests per phase, fewer microbench iterations.
 pub fn decode(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<String> {
     use crate::coordinator::StreamEvent;
-    use crate::sched::SchedOptions;
+    use crate::sched::{SchedOptions, StepExec};
 
     let quick = std::env::var("DELTADQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let (shorts, longs) = if quick { (8usize, 2usize) } else { (32, 4) };
@@ -1134,16 +1267,18 @@ pub fn decode(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<S
         })
         .collect();
 
-    let run_phase = |sched: bool| -> Result<DecodePhase> {
+    let run_phase = |sched: Option<StepExec>| -> Result<DecodePhase> {
         let options = ServerOptions {
             workers: 1, // equivalent compute either way: one drive thread
             max_batch: 8,
             batch_window: Duration::from_micros(200),
             queue_depth: 1024,
-            sched: sched.then(|| SchedOptions {
+            sched: sched.map(|step_exec| SchedOptions {
                 kv_pool_bytes: 8 << 20,
                 block_size: BLOCK_SIZE,
                 max_running: longs + shorts,
+                step_exec,
+                ..Default::default()
             }),
             ..Default::default()
         };
@@ -1192,12 +1327,17 @@ pub fn decode(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<S
             .collect();
         let samples = samples?;
         let elapsed_s = t0.elapsed().as_secs_f64();
-        let stats = server.sched_stats();
+        let stats = server.metrics.sched.stats();
         let phase = DecodePhase {
             samples,
             elapsed_s,
-            preempted: stats.map(|s| s.preempted_total).unwrap_or(0),
-            steps: stats.map(|s| s.steps_executed).unwrap_or(0),
+            preempted: stats.preempted_total,
+            steps: stats.steps_executed,
+            decode_groups: stats.decode_groups_total,
+            decode_lanes: stats.decode_lanes_total,
+            prefill_chunks: stats.prefill_chunks_total,
+            occupancy: server.metrics.sched.occupancy_histogram(),
+            group_sizes: server.metrics.sched.group_size_histogram(),
         };
         match Arc::try_unwrap(server) {
             Ok(s) => s.shutdown(),
@@ -1206,28 +1346,50 @@ pub fn decode(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<S
         Ok(phase)
     };
 
-    let continuous = run_phase(true)?;
-    let legacy = run_phase(false)?;
+    let continuous = run_phase(Some(StepExec::Batched))?;
+    let per_sequence = run_phase(Some(StepExec::PerSequence))?;
+    let legacy = run_phase(None)?;
 
-    let tokens_match = continuous
-        .samples
-        .iter()
-        .zip(legacy.samples.iter())
-        .all(|(a, b)| a.tokens == b.tokens);
+    let streams =
+        |p: &DecodePhase| -> Vec<&Vec<u32>> { p.samples.iter().map(|s| &s.tokens).collect() };
+    let tokens_match =
+        streams(&continuous) == streams(&per_sequence) && streams(&continuous) == streams(&legacy);
+
+    // The tentpole gate, isolated from scheduling noise: at batch depth
+    // 8, one stacked decode_steps call per iteration must out-throughput
+    // eight per-sequence decode_step calls (and bit-match them).
+    let micro_steps = if quick { 12 } else { 48 };
+    let micro_prompt = plan[0].1.clone();
+    let stacked =
+        stacked_depth_bench(backend, &base, &tenant_sets[0], &micro_prompt, 8, micro_steps)?;
+    let stacked_speedup = stacked.batched_tokens_per_s / stacked.per_seq_tokens_per_s.max(1e-9);
+
     let phase_json = |p: &DecodePhase| -> Json {
         let short_ttft: Vec<f64> =
             p.samples.iter().filter(|s| !s.long).map(|s| s.ttft_ms).collect();
         let long_ttft: Vec<f64> =
             p.samples.iter().filter(|s| s.long).map(|s| s.ttft_ms).collect();
-        let total_tokens: usize = p.samples.iter().map(|s| s.tokens.len()).sum();
         let mut o = Json::obj();
         o.set("ttft_short_ms", latency_stats(&short_ttft))
             .set("ttft_long_ms", latency_stats(&long_ttft))
-            .set("tokens", total_tokens)
-            .set("tokens_per_s", total_tokens as f64 / p.elapsed_s.max(1e-9))
+            .set("tokens", p.total_tokens())
+            .set("tokens_per_s", p.tokens_per_s())
             .set("elapsed_s", p.elapsed_s)
             .set("preempted", p.preempted)
-            .set("steps", p.steps);
+            .set("steps", p.steps)
+            .set("decode_groups", p.decode_groups)
+            .set("decode_lanes", p.decode_lanes)
+            .set(
+                "decode_group_mean",
+                if p.decode_groups == 0 {
+                    0.0
+                } else {
+                    p.decode_lanes as f64 / p.decode_groups as f64
+                },
+            )
+            .set("prefill_chunks", p.prefill_chunks)
+            .set("occupancy", count_hist_json(&p.occupancy))
+            .set("group_sizes", count_hist_json(&p.group_sizes));
         o
     };
     let short_p99 = |p: &DecodePhase| -> f64 {
@@ -1236,9 +1398,17 @@ pub fn decode(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<S
     };
     let speedup = short_p99(&legacy) / short_p99(&continuous).max(1e-9);
 
+    let mut stacked_json = Json::obj();
+    stacked_json
+        .set("depth", stacked.depth)
+        .set("steps", stacked.steps)
+        .set("batched_tokens_per_s", stacked.batched_tokens_per_s)
+        .set("per_seq_tokens_per_s", stacked.per_seq_tokens_per_s)
+        .set("speedup", stacked_speedup);
+
     let mut root = Json::obj();
     root.set("bench", "decode")
-        .set("schema", 1u64)
+        .set("schema", 2u64)
         .set("quick", quick)
         .set("model", "tiny")
         .set("shorts", shorts)
@@ -1247,37 +1417,44 @@ pub fn decode(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<S
         .set("long_max_tokens", long_max)
         .set("block_size", BLOCK_SIZE)
         .set("continuous", phase_json(&continuous))
+        .set("per_sequence", phase_json(&per_sequence))
         .set("run_to_completion", phase_json(&legacy))
         .set("short_ttft_p99_speedup", speedup)
+        .set("stacked_depth8", stacked_json)
         .set("tokens_match", tokens_match);
     std::fs::write(json_path, root.to_pretty_string())
         .with_context(|| format!("write {json_path:?}"))?;
 
     let mut out = format!(
-        "## Decode — continuous batching vs run-to-completion: {shorts} short \
+        "## Decode — scheduling disciplines: {shorts} short \
          (≤{short_max} tok) + {longs} long (≤{long_max} tok) requests, longs first\n"
     );
-    out.push_str(&format!(
-        "continuous:        short TTFT p99 {:.2}ms, {:.1} tok/s over {:.2}s ({} steps, {} preemptions)\n",
-        short_p99(&continuous),
-        continuous.samples.iter().map(|s| s.tokens.len()).sum::<usize>() as f64
-            / continuous.elapsed_s.max(1e-9),
-        continuous.elapsed_s,
-        continuous.steps,
-        continuous.preempted,
-    ));
-    out.push_str(&format!(
-        "run-to-completion: short TTFT p99 {:.2}ms, {:.1} tok/s over {:.2}s\n",
-        short_p99(&legacy),
-        legacy.samples.iter().map(|s| s.tokens.len()).sum::<usize>() as f64
-            / legacy.elapsed_s.max(1e-9),
-        legacy.elapsed_s,
-    ));
+    let phase_line = |name: &str, p: &DecodePhase| -> String {
+        format!(
+            "{name}: short TTFT p99 {:.2}ms, {:.1} tok/s over {:.2}s ({} steps, {} preemptions, \
+             {} groups / {} lanes, mean occupancy {:.1})\n",
+            short_p99(p),
+            p.tokens_per_s(),
+            p.elapsed_s,
+            p.steps,
+            p.preempted,
+            p.decode_groups,
+            p.decode_lanes,
+            p.occupancy.mean(),
+        )
+    };
+    out.push_str(&phase_line("continuous (batched)  ", &continuous));
+    out.push_str(&phase_line("continuous (per-seq)  ", &per_sequence));
+    out.push_str(&phase_line("run-to-completion     ", &legacy));
     out.push_str(&format!(
         "short-request p99 TTFT speedup: {speedup:.2}x; outputs bit-identical: {tokens_match}\n"
     ));
+    out.push_str(&format!(
+        "stacked depth-{}: {:.1} tok/s batched vs {:.1} tok/s per-seq ({stacked_speedup:.2}x)\n",
+        stacked.depth, stacked.batched_tokens_per_s, stacked.per_seq_tokens_per_s,
+    ));
     out.push_str(&format!("wrote {}\n", json_path.display()));
-    anyhow::ensure!(tokens_match, "scheduler output diverged from the run-to-completion path");
+    anyhow::ensure!(tokens_match, "scheduler output diverged across disciplines");
     Ok(out)
 }
 

@@ -15,10 +15,12 @@ use crate::tensor::{Matrix, Pcg64};
 /// The DARE compressor at ratio α.
 #[derive(Debug, Clone, Copy)]
 pub struct Dare {
+    /// Target compression ratio (keep probability = 1/α).
     pub alpha: f64,
 }
 
 impl Dare {
+    /// DARE at ratio `alpha` (≥ 1).
     pub fn new(alpha: f64) -> Dare {
         assert!(alpha >= 1.0);
         Dare { alpha }

@@ -64,10 +64,12 @@ impl DeltaDqConfig {
 /// The DeltaDQ compressor.
 #[derive(Debug, Clone)]
 pub struct DeltaDq {
+    /// Operating point (dropout ratio, group size, quantization widths).
     pub config: DeltaDqConfig,
 }
 
 impl DeltaDq {
+    /// DeltaDQ at the given operating point.
     pub fn new(config: DeltaDqConfig) -> DeltaDq {
         DeltaDq { config }
     }

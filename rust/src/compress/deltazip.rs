@@ -38,10 +38,12 @@ pub struct DeltaZipConfig {
 }
 
 impl DeltaZipConfig {
+    /// Pure sparsification at ratio `alpha` (no quantization).
     pub fn sparsify_only(alpha: f64) -> DeltaZipConfig {
         DeltaZipConfig { alpha, block_size: 128, quant_bits: None, damping: 0.01 }
     }
 
+    /// Sparsify at `alpha` then quantize survivors to `bits` bits.
     pub fn with_quant(alpha: f64, bits: u32) -> DeltaZipConfig {
         DeltaZipConfig { alpha, block_size: 128, quant_bits: Some(bits), damping: 0.01 }
     }
@@ -62,10 +64,12 @@ impl DeltaZipConfig {
 /// The DELTAZIP compressor.
 #[derive(Debug, Clone, Copy)]
 pub struct DeltaZip {
+    /// Operating point (ratio, block size, quantization, damping).
     pub config: DeltaZipConfig,
 }
 
 impl DeltaZip {
+    /// DELTAZIP at the given operating point.
     pub fn new(config: DeltaZipConfig) -> DeltaZip {
         DeltaZip { config }
     }

@@ -10,10 +10,12 @@ use crate::tensor::{Matrix, Pcg64};
 /// Global magnitude pruner at ratio α.
 #[derive(Debug, Clone, Copy)]
 pub struct Magnitude {
+    /// Target compression ratio (keeps the top 1/α by |value|).
     pub alpha: f64,
 }
 
 impl Magnitude {
+    /// Magnitude pruner at ratio `alpha` (≥ 1).
     pub fn new(alpha: f64) -> Magnitude {
         assert!(alpha >= 1.0);
         Magnitude { alpha }

@@ -23,6 +23,7 @@ pub struct RecordingSource<'a, S: WeightSource> {
 }
 
 impl<'a, S: WeightSource> RecordingSource<'a, S> {
+    /// Wrap `inner`, capturing at most `max_rows` input rows per tensor.
     pub fn new(inner: &'a S, max_rows: usize) -> RecordingSource<'a, S> {
         RecordingSource { inner, records: RefCell::new(BTreeMap::new()), max_rows }
     }

@@ -44,13 +44,18 @@ pub fn storage_ratio(elems: u64, compressed_bits: u64) -> f64 {
 /// Aggregate accounting across layers of a model.
 #[derive(Debug, Clone, Default)]
 pub struct RatioReport {
+    /// Dense fp16 bits the deltas would occupy uncompressed.
     pub dense_bits: u64,
+    /// Measured compressed bits.
     pub compressed_bits: u64,
+    /// Total dense elements across layers.
     pub total_elems: u64,
+    /// Total surviving non-zeros across layers.
     pub total_nnz: u64,
 }
 
 impl RatioReport {
+    /// Accumulate one layer's element/nnz/bit counts.
     pub fn add_layer(&mut self, elems: u64, nnz: u64, compressed_bits: u64) {
         self.dense_bits += dense_fp16_bits(elems);
         self.compressed_bits += compressed_bits;

@@ -14,14 +14,20 @@ use anyhow::{bail, Context, Result};
 /// A parsed scalar (or flat array) config value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Double-quoted string.
     Str(String),
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Flat `[a, b, c]` array of scalars.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string value, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -29,6 +35,7 @@ impl Value {
         }
     }
 
+    /// The integer value, if this is a [`Value::Int`].
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -36,6 +43,7 @@ impl Value {
         }
     }
 
+    /// The numeric value as `f64` (floats and integers both qualify).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -44,6 +52,7 @@ impl Value {
         }
     }
 
+    /// The boolean value, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -112,26 +121,32 @@ impl Config {
         Ok(())
     }
 
+    /// Raw value at `section.key`, if present.
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.values.get(key)
     }
 
+    /// String at `key`, or `default` when absent or not a string.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
     }
 
+    /// Integer at `key`, or `default` when absent or not an integer.
     pub fn int_or(&self, key: &str, default: i64) -> i64 {
         self.get(key).and_then(|v| v.as_int()).unwrap_or(default)
     }
 
+    /// Float at `key`, or `default` when absent or not numeric.
     pub fn float_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.as_float()).unwrap_or(default)
     }
 
+    /// Boolean at `key`, or `default` when absent or not a boolean.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
 
+    /// All `section.key` names present, in sorted order.
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.values.keys()
     }
@@ -237,9 +252,17 @@ pub struct ServeConfig {
     /// Max concurrently decoding sequences (`[sched] max_running`;
     /// 0 = inherit `max_batch`).
     pub sched_max_running: usize,
+    /// Max prompt positions prefilled per sequence per scheduler
+    /// iteration (`[sched] prefill_chunk`; 0 = whole prompt in one
+    /// call). Bounding the chunk keeps a long prompt from stalling
+    /// every decoding sequence for a full-prompt prefill; chunking
+    /// never changes any generated bit.
+    pub sched_prefill_chunk: usize,
 }
 
 impl ServeConfig {
+    /// Resolve the typed serving config from a parsed [`Config`],
+    /// filling defaults for every absent key.
     pub fn from_config(c: &Config) -> ServeConfig {
         ServeConfig {
             model: c.str_or("serve.model", "tiny"),
@@ -263,6 +286,7 @@ impl ServeConfig {
             sched_kv_pool_mib: c.int_or("sched.kv_pool_mib", 64) as u64,
             sched_block_size: c.int_or("sched.block_size", 16) as usize,
             sched_max_running: c.int_or("sched.max_running", 0) as usize,
+            sched_prefill_chunk: c.int_or("sched.prefill_chunk", 64) as usize,
         }
     }
 }
@@ -338,12 +362,13 @@ ratios = [2, 4, 8]
         assert_eq!(sc.sched_kv_pool_mib, 64);
         assert_eq!(sc.sched_block_size, 16);
         assert_eq!(sc.sched_max_running, 0);
+        assert_eq!(sc.sched_prefill_chunk, 64);
     }
 
     #[test]
     fn serve_config_reads_sched_section() {
         let c = Config::parse(
-            "[sched]\nenabled = false\nkv_pool_mib = 128\nblock_size = 32\nmax_running = 12",
+            "[sched]\nenabled = false\nkv_pool_mib = 128\nblock_size = 32\nmax_running = 12\nprefill_chunk = 24",
         )
         .unwrap();
         let sc = ServeConfig::from_config(&c);
@@ -351,6 +376,13 @@ ratios = [2, 4, 8]
         assert_eq!(sc.sched_kv_pool_mib, 128);
         assert_eq!(sc.sched_block_size, 32);
         assert_eq!(sc.sched_max_running, 12);
+        assert_eq!(sc.sched_prefill_chunk, 24);
+    }
+
+    #[test]
+    fn serve_config_prefill_chunk_zero_means_whole_prompt() {
+        let c = Config::parse("[sched]\nprefill_chunk = 0").unwrap();
+        assert_eq!(ServeConfig::from_config(&c).sched_prefill_chunk, 0);
     }
 
     #[test]

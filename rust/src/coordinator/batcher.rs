@@ -16,10 +16,15 @@ use std::time::{Duration, Instant};
 /// One generation request.
 #[derive(Debug)]
 pub struct Request {
+    /// Server-assigned request id (monotonic).
     pub id: u64,
+    /// Tenant the request is addressed to.
     pub tenant: String,
+    /// Prompt token ids.
     pub prompt: Vec<u32>,
+    /// Max tokens to generate.
     pub max_new: usize,
+    /// When the request entered the queue.
     pub submitted: Instant,
     /// Channel(s) the worker answers on — final-only or per-token.
     pub respond: ReplySink,
@@ -80,10 +85,15 @@ pub enum StreamEvent {
 /// One generation response.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// The request's id.
     pub id: u64,
+    /// The tenant that served it.
     pub tenant: String,
+    /// Generated token ids.
     pub tokens: Vec<u32>,
+    /// Time spent queued before pickup.
     pub queue_wait: Duration,
+    /// Submission-to-completion wall time.
     pub total: Duration,
     /// Whether the tenant was Hot (dense cache) when executed.
     pub served_hot: bool,
@@ -126,12 +136,17 @@ struct Inner {
 pub struct Batcher {
     inner: Mutex<Inner>,
     cv: Condvar,
+    /// Max requests per tenant batch.
     pub max_batch: usize,
+    /// How long a batch is held open for same-tenant joiners.
     pub batch_window: Duration,
+    /// Per-tenant queue bound (beyond → backpressure).
     pub queue_depth: usize,
 }
 
 impl Batcher {
+    /// Batcher with the given batch size, window, and queue bound
+    /// (each clamped to at least 1 where zero makes no sense).
     pub fn new(max_batch: usize, batch_window: Duration, queue_depth: usize) -> Batcher {
         Batcher {
             inner: Mutex::new(Inner { queues: BTreeMap::new(), closed: false }),

@@ -13,12 +13,20 @@ use crate::util::json::Json;
 /// Coordinator-wide metrics. Cheap to update from any worker thread.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests accepted by `submit`/`submit_stream`.
     pub requests_submitted: AtomicU64,
+    /// Requests that produced a final `Response`.
     pub requests_completed: AtomicU64,
+    /// Requests refused at admission (queue full → 429).
     pub requests_rejected: AtomicU64,
+    /// Tokens generated across all requests.
     pub tokens_generated: AtomicU64,
+    /// Tenant batches executed (legacy loop) or scheduler iterations
+    /// that ran at least one sequence.
     pub batches_executed: AtomicU64,
+    /// Cold→Hot tenant promotions.
     pub promotions: AtomicU64,
+    /// Hot-tier evictions back to Cold.
     pub evictions: AtomicU64,
     /// Requests whose execution backend returned an error.
     pub backend_errors: AtomicU64,
@@ -45,6 +53,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh metrics with private tier counters.
     pub fn new() -> Metrics {
         Metrics::default()
     }
@@ -55,22 +64,27 @@ impl Metrics {
         Metrics { tiers, ..Metrics::default() }
     }
 
+    /// Record one request's end-to-end latency.
     pub fn observe_latency(&self, seconds: f64) {
         self.latency.lock().unwrap().record(seconds);
     }
 
+    /// Record one request's queue wait before pickup.
     pub fn observe_queue_wait(&self, seconds: f64) {
         self.queue_wait.lock().unwrap().record(seconds);
     }
 
+    /// Record one batch's execution time.
     pub fn observe_batch_exec(&self, seconds: f64) {
         self.batch_exec.lock().unwrap().record(seconds);
     }
 
+    /// Mean end-to-end request latency in seconds.
     pub fn mean_latency(&self) -> f64 {
         self.latency.lock().unwrap().mean()
     }
 
+    /// End-to-end latency percentile `p` (0–100) in seconds.
     pub fn latency_percentile(&self, p: f64) -> f64 {
         self.latency.lock().unwrap().percentile(p)
     }
@@ -116,6 +130,10 @@ impl Metrics {
         o.set("kv_blocks_free", sched.kv_blocks_free);
         o.set("kv_blocks_total", sched.kv_blocks_total);
         o.set("step_occupancy_mean", self.sched.occupancy_histogram().mean());
+        o.set("decode_groups_total", sched.decode_groups_total);
+        o.set("decode_lanes_total", sched.decode_lanes_total);
+        o.set("prefill_chunks_total", sched.prefill_chunks_total);
+        o.set("decode_group_mean", self.sched.group_size_histogram().mean());
         let completed = self.requests_completed.load(Ordering::Relaxed);
         let batches = self.batches_executed.load(Ordering::Relaxed).max(1);
         o.set("mean_batch_size", completed as f64 / batches as f64);
@@ -165,6 +183,21 @@ mod tests {
         assert!(snap.contains("\"disk_loads\":3"), "{snap}");
         assert!(snap.contains("\"demotions\":2"), "{snap}");
         assert!(snap.contains("\"store_bytes_read\":4096"), "{snap}");
+    }
+
+    #[test]
+    fn snapshot_reports_batched_decode_counters() {
+        let m = Metrics::new();
+        m.sched.decode_groups_total.fetch_add(2, Ordering::Relaxed);
+        m.sched.decode_lanes_total.fetch_add(7, Ordering::Relaxed);
+        m.sched.prefill_chunks_total.fetch_add(3, Ordering::Relaxed);
+        m.sched.observe_group(3);
+        m.sched.observe_group(4);
+        let snap = m.snapshot().to_string();
+        assert!(snap.contains("\"decode_groups_total\":2"), "{snap}");
+        assert!(snap.contains("\"decode_lanes_total\":7"), "{snap}");
+        assert!(snap.contains("\"prefill_chunks_total\":3"), "{snap}");
+        assert!(snap.contains("\"decode_group_mean\":3.5"), "{snap}");
     }
 
     #[test]

@@ -83,6 +83,8 @@ pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
                 kv_pool_bytes: serve.sched_kv_pool_mib.max(1) * 1024 * 1024,
                 block_size: serve.sched_block_size,
                 max_running: serve.sched_max_running,
+                prefill_chunk: serve.sched_prefill_chunk,
+                step_exec: Default::default(),
             })
         } else {
             None

@@ -25,9 +25,14 @@ use crate::store::DeltaStore;
 /// resolved to concrete values).
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
+    /// Max requests per tenant batch (legacy loop) and the default
+    /// `max_running` for the scheduler.
     pub max_batch: usize,
+    /// How long a batch is held open for same-tenant joiners.
     pub batch_window: Duration,
+    /// Per-tenant queue bound (beyond → backpressure).
     pub queue_depth: usize,
+    /// Worker threads for the legacy run-to-completion loop.
     pub workers: usize,
     /// Dense-cache byte budget (None = unbounded).
     pub cache_budget: Option<u64>,
@@ -65,6 +70,8 @@ impl Default for ServerOptions {
 pub struct Server {
     store: Arc<TenantStore>,
     batcher: Arc<Batcher>,
+    /// Serving metrics, shared with whatever front-end drives this
+    /// server (snapshot via [`Metrics::snapshot`]).
     pub metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
@@ -211,6 +218,7 @@ impl Server {
         self.store.remove(tenant)
     }
 
+    /// Registered tenant names (any tier).
     pub fn tenants(&self) -> Vec<String> {
         self.store.tenants()
     }

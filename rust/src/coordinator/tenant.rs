@@ -129,8 +129,11 @@ pub struct TenantStore {
 /// Outcome of an acquire: the view plus whether a promotion/evictions
 /// happened (for metrics) and whether the caller waited on hydration.
 pub struct Acquired {
+    /// The execution view (Hot dense weights or Cold compressed deltas).
     pub view: TenantView,
+    /// Whether this acquire promoted the tenant Cold→Hot.
     pub promoted: bool,
+    /// Hot entries evicted to make room for a promotion.
     pub evicted: usize,
     /// This acquire found the tenant on Disk and waited for the loader.
     pub hydrated: bool,
@@ -205,6 +208,7 @@ impl TenantStore {
         TenantStore { shared, loader_tx, loader_handle: Mutex::new(loader_handle) }
     }
 
+    /// The shared base model every tenant's delta applies to.
     pub fn base(&self) -> &Arc<ModelWeights> {
         &self.shared.base
     }
@@ -308,10 +312,12 @@ impl TenantStore {
         Ok(existed || on_store)
     }
 
+    /// Registered tenant names, sorted.
     pub fn tenants(&self) -> Vec<String> {
         self.shared.slots.lock().unwrap().keys().cloned().collect()
     }
 
+    /// Whether `tenant` is registered (any tier).
     pub fn contains(&self, tenant: &str) -> bool {
         self.shared.slots.lock().unwrap().contains_key(tenant)
     }

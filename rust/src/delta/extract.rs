@@ -29,6 +29,7 @@ pub struct DeltaNormReport {
 }
 
 impl DeltaNormReport {
+    /// Frobenius norms of each delta tensor and its base counterpart.
     pub fn compute(base: &ModelWeights, deltas: &BTreeMap<String, Matrix>) -> DeltaNormReport {
         let per_tensor = deltas
             .iter()

@@ -47,12 +47,16 @@ const MIN_VERSION: u32 = 1;
 /// A named set of compressed deltas plus provenance metadata.
 #[derive(Debug, Clone)]
 pub struct DeltaSet {
+    /// Compression method that produced the set (e.g. "deltadq").
     pub method: String,
+    /// Ratio the method was configured for (target, not measured).
     pub nominal_ratio: f64,
+    /// Compressed delta per tensor name.
     pub tensors: BTreeMap<String, CompressedDelta>,
 }
 
 impl DeltaSet {
+    /// Empty set tagged with its producing method and target ratio.
     pub fn new(method: &str, nominal_ratio: f64) -> DeltaSet {
         DeltaSet { method: method.to_string(), nominal_ratio, tensors: BTreeMap::new() }
     }

@@ -27,12 +27,15 @@ pub enum Residency {
 /// One tenant's registered model delta.
 #[derive(Debug)]
 pub struct TenantEntry {
+    /// Owning tenant's identifier.
     pub tenant_id: String,
+    /// The tenant's compressed deltas (always resident).
     pub deltas: DeltaSet,
     /// Densified weights, present iff `Hot`.
     pub dense_cache: Option<ModelWeights>,
     /// Monotone counter of last use (LRU clock).
     pub last_used: u64,
+    /// Requests this tenant has served since registration.
     pub requests_served: u64,
 }
 
@@ -50,6 +53,7 @@ impl TenantEntry {
             .unwrap_or(0)
     }
 
+    /// Current residency tier (Hot iff the dense cache is present).
     pub fn residency(&self) -> Residency {
         if self.dense_cache.is_some() {
             Residency::Hot
@@ -69,6 +73,7 @@ pub struct DeltaRegistry {
 }
 
 impl DeltaRegistry {
+    /// Empty registry; `cache_budget` caps dense-cache bytes (None = unbounded).
     pub fn new(cache_budget: Option<u64>) -> DeltaRegistry {
         DeltaRegistry { tenants: BTreeMap::new(), clock: 0, cache_budget }
     }
@@ -88,10 +93,12 @@ impl DeltaRegistry {
         );
     }
 
+    /// Remove a tenant entirely; returns whether it existed.
     pub fn unregister(&mut self, tenant_id: &str) -> bool {
         self.tenants.remove(tenant_id).is_some()
     }
 
+    /// Look up a tenant's entry without touching the LRU clock.
     pub fn get(&self, tenant_id: &str) -> Option<&TenantEntry> {
         self.tenants.get(tenant_id)
     }
@@ -110,14 +117,17 @@ impl DeltaRegistry {
         }
     }
 
+    /// Registered tenant ids, sorted.
     pub fn tenant_ids(&self) -> Vec<String> {
         self.tenants.keys().cloned().collect()
     }
 
+    /// Number of registered tenants.
     pub fn len(&self) -> usize {
         self.tenants.len()
     }
 
+    /// Whether no tenants are registered.
     pub fn is_empty(&self) -> bool {
         self.tenants.is_empty()
     }

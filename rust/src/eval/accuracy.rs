@@ -8,7 +8,9 @@ use crate::model::forward::{generate, WeightSource};
 /// Evaluation result over a dataset.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AccuracyReport {
+    /// Samples whose greedy decode matched the reference exactly.
     pub correct: usize,
+    /// Samples evaluated.
     pub total: usize,
 }
 

@@ -8,11 +8,14 @@ use crate::tensor::ops::cross_entropy;
 /// Mean next-token cross-entropy (nats) and perplexity over samples.
 #[derive(Debug, Clone, Copy)]
 pub struct PerplexityReport {
+    /// Mean per-token cross-entropy in nats.
     pub mean_ce: f64,
+    /// Tokens the mean was taken over.
     pub tokens: usize,
 }
 
 impl PerplexityReport {
+    /// Perplexity = exp(mean cross-entropy).
     pub fn perplexity(&self) -> f64 {
         self.mean_ce.exp()
     }

@@ -16,22 +16,36 @@ use crate::tensor::Pcg64;
 
 /// Shared vocabulary layout (vocab_size ≥ 272).
 pub mod vocab {
+    /// Padding token.
     pub const PAD: u32 = 0;
+    /// Beginning-of-sequence token.
     pub const BOS: u32 = 1;
+    /// End-of-sequence token (greedy decode stops here).
     pub const EOS: u32 = 2;
+    /// `=` — separates a math problem from its answer.
     pub const EQ: u32 = 3;
+    /// `+` operator.
     pub const PLUS: u32 = 4;
+    /// `−` operator.
     pub const MINUS: u32 = 5;
+    /// `×` operator.
     pub const TIMES: u32 = 6;
+    /// `(` — code-task bracket.
     pub const OPEN_P: u32 = 7;
+    /// `)` — code-task bracket.
     pub const CLOSE_P: u32 = 8;
+    /// `[` — code-task bracket.
     pub const OPEN_B: u32 = 9;
+    /// `]` — code-task bracket.
     pub const CLOSE_B: u32 = 10;
+    /// Prompt/payload separator for the chat task.
     pub const SEP: u32 = 11;
     /// Numbers 0..=255 map to tokens NUM0..NUM0+255.
     pub const NUM0: u32 = 16;
+    /// Size of the number token range.
     pub const NUM_COUNT: u32 = 256;
 
+    /// Token for the number `v` (`v < NUM_COUNT`).
     pub fn num(v: u32) -> u32 {
         assert!(v < NUM_COUNT);
         NUM0 + v
@@ -41,12 +55,16 @@ pub mod vocab {
 /// Which downstream task a tenant model is fine-tuned for.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TaskKind {
+    /// Modular arithmetic (`WizardMath` stand-in).
     Math,
+    /// Bracket completion (`WizardCoder` stand-in).
     Code,
+    /// Permutation echo (`WizardLM` stand-in).
     Chat,
 }
 
 impl TaskKind {
+    /// Stable lower-case name ("math" / "code" / "chat").
     pub fn name(&self) -> &'static str {
         match self {
             TaskKind::Math => "math",
@@ -55,6 +73,7 @@ impl TaskKind {
         }
     }
 
+    /// Inverse of [`name`](Self::name).
     pub fn parse(s: &str) -> Option<TaskKind> {
         match s {
             "math" => Some(TaskKind::Math),
@@ -68,7 +87,9 @@ impl TaskKind {
 /// One evaluation sample.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Sample {
+    /// Conditioning tokens fed to the model.
     pub prompt: Vec<u32>,
+    /// Reference completion the model must reproduce (without EOS).
     pub completion: Vec<u32>,
 }
 

@@ -20,12 +20,15 @@ const MAX_HEAD_BYTES: usize = 16 * 1024;
 /// One parsed HTTP request.
 #[derive(Debug)]
 pub struct HttpRequest {
+    /// Request method verbatim ("GET", "POST", ...).
     pub method: String,
+    /// Request target as sent (path + optional query string).
     pub path: String,
     /// "HTTP/1.1" or "HTTP/1.0".
     pub version: String,
     /// Header names lower-cased; values trimmed.
     pub headers: Vec<(String, String)>,
+    /// Raw request body (empty when no `content-length` was sent).
     pub body: Vec<u8>,
 }
 
@@ -212,12 +215,17 @@ impl<W: Write> ChunkedWriter<W> {
 /// One parsed client-side HTTP response.
 #[derive(Debug)]
 pub struct HttpResponse {
+    /// Numeric status code from the status line.
     pub status: u16,
+    /// Header names lower-cased; values trimmed.
     pub headers: Vec<(String, String)>,
+    /// Response body (filled by [`read_response`]; empty from
+    /// [`read_response_head`]).
     pub body: Vec<u8>,
 }
 
 impl HttpResponse {
+    /// Case-insensitive header lookup (first match).
     pub fn header(&self, name: &str) -> Option<&str> {
         let name = name.to_ascii_lowercase();
         self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
@@ -277,6 +285,7 @@ pub struct ChunkReader {
 }
 
 impl ChunkReader {
+    /// Fresh reader positioned before the first chunk.
     pub fn new() -> ChunkReader {
         ChunkReader::default()
     }

@@ -86,6 +86,7 @@ impl Default for LoadgenOptions {
 /// Aggregated results of one loadgen run (merge-able across threads).
 #[derive(Debug, Clone, Default)]
 pub struct LoadReport {
+    /// Requests attempted (every outcome below is a subset of these).
     pub submitted: usize,
     /// 2xx responses with a well-formed body.
     pub ok: usize,
@@ -113,6 +114,8 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
+    /// Fold another worker's report into this one (counters add,
+    /// histograms merge; `elapsed_s` is left to the caller).
     pub fn merge(&mut self, other: &LoadReport) {
         self.submitted += other.submitted;
         self.ok += other.ok;

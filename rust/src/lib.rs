@@ -27,6 +27,9 @@
 // Index loops over matrix rows/columns are the house style of the
 // numeric kernels (they mirror the math and autovectorize fine).
 #![allow(clippy::needless_range_loop)]
+// Every public item documents itself; CI builds rustdoc with
+// `-D warnings`, which upgrades this to an error there.
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod bench_harness;

@@ -149,7 +149,9 @@ fn print_usage() {
                      address is printed; serves until killed)\n\
                      [--sched.kv_pool_mib M] [--sched.block_size B]\n\
                      [--sched.max_running N] [--sched.enabled B]\n\
-                     (continuous-batching scheduler knobs)\n\
+                     [--sched.prefill_chunk P] (continuous-batching\n\
+                     scheduler knobs; prefill_chunk bounds prompt\n\
+                     positions cached per iteration, 0 = whole prompt)\n\
            loadgen   --addr HOST:PORT [--requests N] [--rps R]\n\
                      [--tenants LIST] [--zipf S] [--prompt-len P]\n\
                      [--max-tokens M] [--long-frac F]\n\

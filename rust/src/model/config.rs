@@ -12,11 +12,17 @@
 /// causal attention, SwiGLU MLP, learned positional embeddings).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ModelConfig {
+    /// Vocabulary size (lm_head / tok_emb rows).
     pub vocab_size: usize,
+    /// Residual-stream width.
     pub hidden: usize,
+    /// Transformer blocks.
     pub n_layers: usize,
+    /// Attention heads per block.
     pub n_heads: usize,
+    /// SwiGLU MLP inner width.
     pub ffn_hidden: usize,
+    /// Max sequence length (pos_emb rows, KV capacity).
     pub max_seq: usize,
 }
 

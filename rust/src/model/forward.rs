@@ -43,7 +43,9 @@ impl WeightSource for ModelWeights {
 /// term runs on the compressed representation (CSR / decomposed parts),
 /// exactly the deployment scheme of §3.1.
 pub struct DeltaView<'a> {
+    /// The shared base model.
     pub base: &'a ModelWeights,
+    /// One tenant's compressed per-tensor deltas.
     pub deltas: &'a BTreeMap<String, CompressedDelta>,
 }
 
@@ -135,28 +137,50 @@ pub fn forward<S: WeightSource>(source: &S, tokens: &[u32]) -> Matrix {
     source.linear("lm_head", &x)
 }
 
-/// Single-token decode step with KV cache. `pos` is the absolute
-/// position of `token`; the cache must hold positions `0..pos`.
-/// Returns logits (`1 × vocab`).
+/// One sequence's contribution to a stacked step: the token to feed,
+/// its absolute position, and the KV slot it appends to / attends
+/// through. Independent sequences become independent lanes of one
+/// [`forward_steps`] call.
+pub struct StepLane<'a, K: KvSlot + ?Sized> {
+    /// Token fed at this lane's position.
+    pub token: u32,
+    /// Absolute position of `token` (the cache holds `0..pos`).
+    pub pos: usize,
+    /// The lane's per-sequence KV cache.
+    pub cache: &'a mut K,
+}
+
+/// The stacked transformer step shared by [`forward_steps`] (one lane
+/// per sequence, distinct caches) and [`prefill_into`] (consecutive
+/// positions of one sequence, one shared cache). All dense work —
+/// embeds, norms, and every linear — runs over the `t`-row stack in one
+/// call; only attention is per-row, driven by `attend(layer, q, k, v)`
+/// which must append row `i` before attending it (causality when rows
+/// share a cache).
 ///
-/// Generic over the cache layout ([`KvSlot`]): the monolithic
-/// [`KvCache`] and the scheduler's paged cache attend through the same
-/// kernel, so the layout never changes a single output bit.
-pub fn forward_step<S: WeightSource, K: KvSlot + ?Sized>(
+/// `last_only` restricts the lm_head projection to the final row
+/// (`1 × vocab`) — the prefill case, where earlier rows' logits are
+/// never read. Row bits are unchanged either way: the tiled kernel's
+/// per-element sums do not depend on how many activation rows share a
+/// call, so row `i` of a stacked product is bit-identical to the same
+/// activation pushed through alone.
+fn forward_stacked<S: WeightSource>(
     source: &S,
-    token: u32,
-    pos: usize,
-    cache: &mut K,
+    tokens: &[u32],
+    positions: &[usize],
+    last_only: bool,
+    attend: &mut dyn FnMut(usize, &Matrix, &Matrix, &Matrix) -> Matrix,
 ) -> Matrix {
     let c = source.config();
-    assert!(pos < c.max_seq, "position {pos} ≥ max_seq {}", c.max_seq);
-    assert_eq!(cache.len(), pos, "cache holds {} positions, expected {pos}", cache.len());
-    let d = c.head_dim();
-    let mut x = ops::embed(source.dense("tok_emb"), &[token]);
-    for (a, b) in x.data_mut().iter_mut().zip(source.dense("pos_emb").row(pos)) {
-        *a += b;
+    let t = tokens.len();
+    assert!(t > 0, "stacked step over zero lanes");
+    let mut x = ops::embed(source.dense("tok_emb"), tokens);
+    let pos_emb = source.dense("pos_emb");
+    for (row, &pos) in x.data_mut().chunks_exact_mut(c.hidden).zip(positions) {
+        for (a, b) in row.iter_mut().zip(pos_emb.row(pos)) {
+            *a += b;
+        }
     }
-    let scale = 1.0 / (d as f32).sqrt();
     for layer in 0..c.n_layers {
         let p = |tname: &str| format!("layers.{layer}.{tname}");
         let mut normed = x.clone();
@@ -164,8 +188,7 @@ pub fn forward_step<S: WeightSource, K: KvSlot + ?Sized>(
         let q = source.linear(&p("attn.wq"), &normed);
         let k = source.linear(&p("attn.wk"), &normed);
         let v = source.linear(&p("attn.wv"), &normed);
-        cache.append(layer, k.row(0), v.row(0));
-        let ctx = cache.attend(layer, &q, c.n_heads, d, scale);
+        let ctx = attend(layer, &q, &k, &v);
         let attn_out = source.linear(&p("attn.wo"), &ctx);
         x.add_assign(&attn_out);
         let mut normed = x.clone();
@@ -173,28 +196,113 @@ pub fn forward_step<S: WeightSource, K: KvSlot + ?Sized>(
         let mlp_out = mlp(source, layer, &normed);
         x.add_assign(&mlp_out);
     }
-    ops::rmsnorm_rows(&mut x, source.dense("final_norm").row(0), 1e-6);
-    source.linear("lm_head", &x)
+    if last_only {
+        let mut last = Matrix::from_vec(1, c.hidden, x.row(t - 1).to_vec());
+        ops::rmsnorm_rows(&mut last, source.dense("final_norm").row(0), 1e-6);
+        source.linear("lm_head", &last)
+    } else {
+        ops::rmsnorm_rows(&mut x, source.dense("final_norm").row(0), 1e-6);
+        source.linear("lm_head", &x)
+    }
 }
 
-/// Step-level prefill: feed `tokens` through [`forward_step`] one
-/// position at a time, starting at the cache's current length, and
-/// return the last position's logits (`1 × vocab`). This is the entry
-/// point the iteration-level scheduler uses to (re)prime a sequence —
-/// after a preemption, `tokens` is the prompt plus everything already
-/// generated, and the deterministic greedy decode continues exactly
-/// where it left off.
+/// Stacked decode step over independent sequences: one token per lane,
+/// each lane with its own KV cache, all dense work fused into `t`-row
+/// matmuls. Returns logits row `i` for lane `i` (`t × vocab`).
+///
+/// Row `i` is **bit-identical** to a separate [`forward_step`] call for
+/// the same lane: the tiled matmul's per-element sums are invariant to
+/// the number of activation rows in a call, norms are per-row, and each
+/// lane's attention still runs as a single query row over its own
+/// cache. This is the invariant the scheduler's batched drive loop
+/// rests on — stacking sequences changes throughput, never bits.
+pub fn forward_steps<S: WeightSource, K: KvSlot + ?Sized>(
+    source: &S,
+    lanes: &mut [StepLane<'_, K>],
+) -> Matrix {
+    let c = source.config();
+    let d = c.head_dim();
+    let scale = 1.0 / (d as f32).sqrt();
+    let tokens: Vec<u32> = lanes.iter().map(|l| l.token).collect();
+    let positions: Vec<usize> = lanes.iter().map(|l| l.pos).collect();
+    for lane in lanes.iter() {
+        assert!(lane.pos < c.max_seq, "position {} ≥ max_seq {}", lane.pos, c.max_seq);
+        assert_eq!(
+            lane.cache.len(),
+            lane.pos,
+            "cache holds {} positions, expected {}",
+            lane.cache.len(),
+            lane.pos
+        );
+    }
+    forward_stacked(source, &tokens, &positions, false, &mut |layer, q, k, v| {
+        let mut ctx = Matrix::zeros(lanes.len(), c.hidden);
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            lane.cache.append(layer, k.row(i), v.row(i));
+            let qi = Matrix::from_vec(1, c.hidden, q.row(i).to_vec());
+            let out = lane.cache.attend(layer, &qi, c.n_heads, d, scale);
+            ctx.row_mut(i).copy_from_slice(out.row(0));
+        }
+        ctx
+    })
+}
+
+/// Single-token decode step with KV cache. `pos` is the absolute
+/// position of `token`; the cache must hold positions `0..pos`.
+/// Returns logits (`1 × vocab`).
+///
+/// Generic over the cache layout ([`KvSlot`]): the monolithic
+/// [`KvCache`] and the scheduler's paged cache attend through the same
+/// kernel, so the layout never changes a single output bit. This is
+/// the one-lane case of [`forward_steps`].
+pub fn forward_step<S: WeightSource, K: KvSlot + ?Sized>(
+    source: &S,
+    token: u32,
+    pos: usize,
+    cache: &mut K,
+) -> Matrix {
+    let mut lanes = [StepLane { token, pos, cache }];
+    forward_steps(source, &mut lanes)
+}
+
+/// Step-level prefill: cache `tokens` starting at the cache's current
+/// length and return the last position's logits (`1 × vocab`). This is
+/// the entry point the iteration-level scheduler uses to (re)prime a
+/// sequence — after a preemption, `tokens` is the prompt plus
+/// everything already generated, and the deterministic greedy decode
+/// continues exactly where it left off.
+///
+/// All positions run as one stacked pass: each layer computes its
+/// q/k/v/mlp projections for the whole span in `t`-row matmuls, while
+/// K/V rows are appended and attended position-by-position (append `i`,
+/// attend `i`, then `i+1` — exactly the per-step order, so the cached
+/// bits and the returned logits match a loop of [`forward_step`] calls
+/// exactly). Chunked prefill (several `prefill_into` calls over
+/// consecutive spans) is likewise bit-identical to one call: the stack
+/// boundary never changes any row's arithmetic.
 pub fn prefill_into<S: WeightSource, K: KvSlot + ?Sized>(
     source: &S,
     tokens: &[u32],
     cache: &mut K,
 ) -> Matrix {
     assert!(!tokens.is_empty(), "prefill over an empty prefix");
-    let mut last = forward_step(source, tokens[0], cache.len(), cache);
-    for &tok in &tokens[1..] {
-        last = forward_step(source, tok, cache.len(), cache);
-    }
-    last
+    let c = source.config();
+    let d = c.head_dim();
+    let scale = 1.0 / (d as f32).sqrt();
+    let start = cache.len();
+    let end = start + tokens.len();
+    assert!(end <= c.max_seq, "position {} ≥ max_seq {}", end - 1, c.max_seq);
+    let positions: Vec<usize> = (start..end).collect();
+    forward_stacked(source, tokens, &positions, true, &mut |layer, q, k, v| {
+        let mut ctx = Matrix::zeros(tokens.len(), c.hidden);
+        for i in 0..tokens.len() {
+            cache.append(layer, k.row(i), v.row(i));
+            let qi = Matrix::from_vec(1, c.hidden, q.row(i).to_vec());
+            let out = cache.attend(layer, &qi, c.n_heads, d, scale);
+            ctx.row_mut(i).copy_from_slice(out.row(0));
+        }
+        ctx
+    })
 }
 
 /// Greedy decode: feed `prompt`, then generate up to `max_new` tokens
@@ -327,6 +435,100 @@ mod tests {
         let a = forward(&merged, &[7, 8, 9, 10]);
         let b = forward(&view, &[7, 8, 9, 10]);
         assert!(a.allclose(&b, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn stacked_steps_bit_match_single_lane_steps() {
+        // The batched drive loop's core invariant: row i of a stacked
+        // forward_steps call is bit-identical to a lone forward_step for
+        // the same lane, even when lanes sit at different positions.
+        let w = model(11);
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[4, 5, 6, 7], &[9]];
+        let decode_steps = 4;
+
+        // Reference: each lane decodes alone.
+        let mut ref_logits: Vec<Vec<Vec<f32>>> = Vec::new();
+        let mut ref_streams: Vec<Vec<u32>> = Vec::new();
+        for prompt in prompts {
+            let mut cache = KvCache::new(w.config.n_layers, w.config.hidden);
+            let logits = prefill_into(&w, prompt, &mut cache);
+            let mut token = ops::argmax_rows(&logits)[0];
+            let mut per_step = Vec::new();
+            let mut stream = Vec::new();
+            for step in 0..decode_steps {
+                let l = forward_step(&w, token, prompt.len() + step, &mut cache);
+                token = ops::argmax_rows(&l)[0];
+                per_step.push(l.data().to_vec());
+                stream.push(token);
+            }
+            ref_logits.push(per_step);
+            ref_streams.push(stream);
+        }
+
+        // Stacked: all three lanes share each forward_steps call.
+        let mut caches: Vec<KvCache> = Vec::new();
+        let mut tokens: Vec<u32> = Vec::new();
+        for prompt in prompts {
+            let mut cache = KvCache::new(w.config.n_layers, w.config.hidden);
+            let logits = prefill_into(&w, prompt, &mut cache);
+            tokens.push(ops::argmax_rows(&logits)[0]);
+            caches.push(cache);
+        }
+        let vocab = w.config.vocab_size;
+        for step in 0..decode_steps {
+            let mut lanes: Vec<StepLane<'_, KvCache>> = caches
+                .iter_mut()
+                .enumerate()
+                .map(|(i, cache)| StepLane {
+                    token: tokens[i],
+                    pos: prompts[i].len() + step,
+                    cache,
+                })
+                .collect();
+            let stacked = forward_steps(&w, &mut lanes);
+            assert_eq!(stacked.shape(), (prompts.len(), vocab));
+            tokens = ops::argmax_rows(&stacked);
+            for i in 0..prompts.len() {
+                assert_eq!(
+                    stacked.row(i),
+                    &ref_logits[i][step][..],
+                    "lane {i} step {step}: stacked logits diverged from solo decode"
+                );
+                assert_eq!(tokens[i], ref_streams[i][step]);
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_bit_matches_whole_prefill() {
+        // prefill_into resumes from cache.len(), so splitting a prompt
+        // into chunks of any size must reproduce the one-call run
+        // bit-for-bit — final logits and every cached K/V row.
+        let w = model(12);
+        let prompt: Vec<u32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let mut whole_cache = KvCache::new(w.config.n_layers, w.config.hidden);
+        let whole = prefill_into(&w, &prompt, &mut whole_cache);
+
+        for chunk in [1usize, 3, 8] {
+            let mut cache = KvCache::new(w.config.n_layers, w.config.hidden);
+            let mut last = None;
+            for span in prompt.chunks(chunk) {
+                last = Some(prefill_into(&w, span, &mut cache));
+            }
+            let last = last.unwrap();
+            assert_eq!(
+                last.data(),
+                whole.data(),
+                "chunk size {chunk}: final logits diverged from whole-prompt prefill"
+            );
+            assert_eq!(cache.len(), whole_cache.len());
+            for layer in 0..w.config.n_layers {
+                let (k, v) = cache.layer(layer);
+                let (wk, wv) = whole_cache.layer(layer);
+                assert_eq!(k.data(), wk.data(), "chunk {chunk} layer {layer}: keys diverged");
+                assert_eq!(v.data(), wv.data(), "chunk {chunk} layer {layer}: values diverged");
+            }
+        }
     }
 
     #[test]

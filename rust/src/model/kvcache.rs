@@ -84,6 +84,7 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Empty cache for `n_layers` layers of width `hidden`.
     pub fn new(n_layers: usize, hidden: usize) -> KvCache {
         KvCache {
             keys: (0..n_layers).map(|_| Matrix::zeros(0, hidden)).collect(),
@@ -97,10 +98,12 @@ impl KvCache {
         self.len
     }
 
+    /// Whether no positions are cached yet.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Number of layers the cache covers.
     pub fn n_layers(&self) -> usize {
         self.keys.len()
     }

@@ -13,6 +13,7 @@ use crate::tensor::{Matrix, Pcg64};
 /// All weights of one model, addressable by name.
 #[derive(Debug, Clone)]
 pub struct ModelWeights {
+    /// The architecture these weights instantiate.
     pub config: ModelConfig,
     tensors: BTreeMap<String, Matrix>,
 }
@@ -48,6 +49,7 @@ impl ModelWeights {
         ModelWeights { config, tensors: BTreeMap::new() }
     }
 
+    /// Insert (or replace) a named tensor.
     pub fn insert(&mut self, name: &str, tensor: Matrix) {
         self.tensors.insert(name.to_string(), tensor);
     }
@@ -59,12 +61,14 @@ impl ModelWeights {
             .unwrap_or_else(|| panic!("missing tensor '{name}'"))
     }
 
+    /// Mutable named tensor (panics if missing).
     pub fn get_mut(&mut self, name: &str) -> &mut Matrix {
         self.tensors
             .get_mut(name)
             .unwrap_or_else(|| panic!("missing tensor '{name}'"))
     }
 
+    /// Named tensor, or `None` if absent.
     pub fn try_get(&self, name: &str) -> Option<&Matrix> {
         self.tensors.get(name)
     }
@@ -74,14 +78,17 @@ impl ModelWeights {
         self.tensors.iter()
     }
 
+    /// All tensor names, sorted.
     pub fn tensor_names(&self) -> Vec<String> {
         self.tensors.keys().cloned().collect()
     }
 
+    /// Number of named tensors.
     pub fn len(&self) -> usize {
         self.tensors.len()
     }
 
+    /// Whether the container holds no tensors.
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
     }

@@ -12,10 +12,13 @@ use crate::tensor::Matrix;
 /// Group-wise fake-quantized matrix plus its parameter table.
 #[derive(Debug, Clone)]
 pub struct GroupQuantized {
+    /// The fake-quantized (quantize→dequantize) values.
     pub matrix: Matrix,
     /// One `QuantParams` per (row, group).
     pub params: Vec<QuantParams>,
+    /// Elements per group along the input dimension.
     pub group_size: usize,
+    /// Quantization bit width.
     pub bits: u32,
 }
 

@@ -161,16 +161,19 @@ impl DecomposedDelta {
         Ok(DecomposedDelta { rows, cols, params, m, parts })
     }
 
+    /// Logical (dense) row count of the delta tensor.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Logical (dense) column count of the delta tensor.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Logical (rows, cols) shape.
     #[inline]
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)

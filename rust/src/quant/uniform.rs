@@ -11,8 +11,11 @@ use crate::tensor::Matrix;
 /// Quantization parameters: scale `s`, zero point `z`, bit width `k`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QuantParams {
+    /// Scale `s`.
     pub scale: f32,
+    /// Zero point `z`.
     pub zero_point: i32,
+    /// Bit width `k`.
     pub bits: u32,
 }
 

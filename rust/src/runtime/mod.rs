@@ -38,6 +38,20 @@ use crate::model::weights::ModelWeights;
 use crate::sched::PagedKvCache;
 use crate::tensor::Matrix;
 
+/// One sequence's slot in a batched decode step ([`ExecutionBackend::decode_steps`]):
+/// the token to feed, its absolute position, and the sequence's paged
+/// KV cache. Lanes in one call share a tenant (one `(base, Δ)` pair)
+/// but nothing else — each lane appends to and attends over its own
+/// cache.
+pub struct DecodeLane<'a> {
+    /// Token fed at this lane's position.
+    pub token: u32,
+    /// Absolute position of `token` (the cache holds `0..pos`).
+    pub pos: usize,
+    /// The sequence's KV cache.
+    pub cache: &'a mut PagedKvCache,
+}
+
 /// A pluggable execution engine for prefill and greedy decoding.
 ///
 /// `delta = None` is the dense path (the base model, or a merged Hot
@@ -127,6 +141,60 @@ pub trait ExecutionBackend: Send + Sync {
         _cache: &mut PagedKvCache,
     ) -> Result<Matrix> {
         bail!("backend '{}' does not implement iteration-level stepping", self.name())
+    }
+
+    /// One decode step for a whole tenant group: lane `i` of the result
+    /// (`lanes.len() × vocab`) holds the logits [`decode_step`](ExecutionBackend::decode_step)
+    /// would return for lane `i` alone — **bit-identical**, which is
+    /// the contract the batched scheduler drive loop pins its oracle
+    /// tests on.
+    ///
+    /// The default decodes lane-by-lane and stacks the rows (correct
+    /// for every stepping backend, no speedup). Backends whose kernels
+    /// are invariant to the activation row count should override it to
+    /// issue one fused `t=k` matmul per layer — that is the whole
+    /// batching win.
+    fn decode_steps(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        lanes: &mut [DecodeLane<'_>],
+    ) -> Result<Matrix> {
+        let vocab = base.config.vocab_size;
+        let mut out = Matrix::zeros(lanes.len(), vocab);
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            let logits = self.decode_step(base, delta, lane.token, lane.pos, lane.cache)?;
+            out.row_mut(i).copy_from_slice(logits.row(0));
+        }
+        Ok(out)
+    }
+
+    /// Cache one bounded chunk of a sequence's prefix: `tokens` are the
+    /// positions starting at the cache's current length. Returns the
+    /// chunk's last-position logits (`1 × vocab`) — only meaningful
+    /// once the final chunk lands, matching what a single
+    /// [`prefill_step`](ExecutionBackend::prefill_step) over the whole
+    /// prefix returns.
+    ///
+    /// The default delegates to `prefill_step`, which already resumes
+    /// at the cache's fill point; chunking a prefix across several
+    /// calls must not change any cached bit.
+    fn prefill_chunk(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        tokens: &[u32],
+        cache: &mut PagedKvCache,
+    ) -> Result<Matrix> {
+        self.prefill_step(base, delta, tokens, cache)
+    }
+
+    /// The worker pool the scheduler may fan independent tenant groups
+    /// over (`None` = execute groups sequentially on the drive thread).
+    /// Nested use is safe for [`ThreadPool`]: a group task's own pooled
+    /// matmuls run on the same pool without deadlock.
+    fn exec_pool(&self) -> Option<&ThreadPool> {
+        None
     }
 }
 

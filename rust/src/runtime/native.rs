@@ -9,13 +9,14 @@ use anyhow::Result;
 use crate::compress::CompressedDelta;
 use crate::delta::format::DeltaSet;
 use crate::model::forward::{
-    forward, forward_step, generate, generate_with, prefill_into, WeightSource,
+    forward, forward_step, forward_steps, generate, generate_with, prefill_into, StepLane,
+    WeightSource,
 };
 use crate::model::weights::ModelWeights;
 use crate::model::ModelConfig;
 use crate::runtime::fused::{fused_matmul_nt, matmul_nt_pooled};
 use crate::runtime::pool::ThreadPool;
-use crate::runtime::ExecutionBackend;
+use crate::runtime::{DecodeLane, ExecutionBackend};
 use crate::sched::PagedKvCache;
 use crate::tensor::Matrix;
 
@@ -24,7 +25,9 @@ use crate::tensor::Matrix;
 /// materialization (contrast [`crate::model::forward::DeltaView`],
 /// which runs base and delta as two separate matmuls).
 pub struct FusedDeltaView<'a> {
+    /// The shared base model.
     pub base: &'a ModelWeights,
+    /// One tenant's compressed per-tensor deltas.
     pub deltas: &'a BTreeMap<String, CompressedDelta>,
     /// The backend's persistent worker pool — shared by every tenant,
     /// layer, and request (no per-call thread spawns).
@@ -204,6 +207,35 @@ impl ExecutionBackend for NativeBackend {
             Some(set) => forward_step(&self.view(base, set), token, pos, cache),
         })
     }
+
+    fn decode_steps(
+        &self,
+        base: &ModelWeights,
+        delta: Option<&DeltaSet>,
+        lanes: &mut [DecodeLane<'_>],
+    ) -> Result<Matrix> {
+        if lanes.is_empty() {
+            return Ok(Matrix::zeros(0, base.config.vocab_size));
+        }
+        // stack the group into one t=k forward: every linear layer runs
+        // as a single fused matmul over all lanes; row i carries the
+        // exact bits of a lone decode_step for lane i (the tiled kernel
+        // is invariant to the activation row count)
+        let mut stacked: Vec<StepLane<'_, PagedKvCache>> = lanes
+            .iter_mut()
+            .map(|l| StepLane { token: l.token, pos: l.pos, cache: &mut *l.cache })
+            .collect();
+        Ok(match delta {
+            None => {
+                forward_steps(&PooledWeights { weights: base, pool: &self.pool }, &mut stacked)
+            }
+            Some(set) => forward_steps(&self.view(base, set), &mut stacked),
+        })
+    }
+
+    fn exec_pool(&self) -> Option<&ThreadPool> {
+        Some(&self.pool)
+    }
 }
 
 #[cfg(test)]
@@ -318,6 +350,80 @@ mod tests {
             pos += 1;
         }
         assert_eq!(got, want, "stepped decode == run-to-completion decode");
+    }
+
+    #[test]
+    fn decode_steps_bit_match_decode_step_loop_across_lane_counts() {
+        // The fused decode_steps entry point must return, in row i, the
+        // exact bits a lone decode_step would produce for lane i — at
+        // any lane count. Different prompts per lane, shared position.
+        use crate::runtime::DecodeLane;
+        use crate::sched::BlockPool;
+        use crate::tensor::ops;
+
+        let w = base(13);
+        let set = delta_set(&w, 14, Some((4, 8)));
+        let b = NativeBackend::default();
+        let decode_steps = 4;
+
+        for lanes_n in [1usize, 3, 8] {
+            let prompts: Vec<Vec<u32>> =
+                (0..lanes_n).map(|i| vec![1, 20 + i as u32, 4, 21 + i as u32, 3]).collect();
+            let positions = prompts[0].len() + decode_steps + 1;
+            let blocks = 2 * lanes_n * positions.div_ceil(4) + 2;
+            let pool = Arc::new(BlockPool::with_blocks(&w.config, 4, blocks));
+
+            let prefill = |caches: &mut Vec<PagedKvCache>, tokens: &mut Vec<u32>| {
+                for prompt in &prompts {
+                    let mut cache = PagedKvCache::new(pool.clone());
+                    assert!(cache.grow(prompt.len()));
+                    let logits = b.prefill_step(&w, Some(&set), prompt, &mut cache).unwrap();
+                    tokens.push(ops::argmax_rows(&logits)[0]);
+                    caches.push(cache);
+                }
+            };
+
+            // Reference: one decode_step call per lane per iteration.
+            let (mut caches, mut tokens) = (Vec::new(), Vec::new());
+            prefill(&mut caches, &mut tokens);
+            let mut ref_logits: Vec<Vec<Vec<f32>>> = vec![Vec::new(); lanes_n];
+            for step in 0..decode_steps {
+                let pos = prompts[0].len() + step;
+                for (i, cache) in caches.iter_mut().enumerate() {
+                    assert!(cache.grow(pos + 1));
+                    let l = b.decode_step(&w, Some(&set), tokens[i], pos, cache).unwrap();
+                    tokens[i] = ops::argmax_rows(&l)[0];
+                    ref_logits[i].push(l.data().to_vec());
+                }
+            }
+            let ref_tokens = tokens.clone();
+            drop(caches); // return blocks before the batched pass
+
+            // Batched: one decode_steps call over all lanes.
+            let (mut caches, mut tokens) = (Vec::new(), Vec::new());
+            prefill(&mut caches, &mut tokens);
+            for step in 0..decode_steps {
+                let pos = prompts[0].len() + step;
+                for cache in caches.iter_mut() {
+                    assert!(cache.grow(pos + 1));
+                }
+                let mut lanes: Vec<DecodeLane<'_>> = caches
+                    .iter_mut()
+                    .zip(tokens.iter())
+                    .map(|(cache, &token)| DecodeLane { token, pos, cache })
+                    .collect();
+                let stacked = b.decode_steps(&w, Some(&set), &mut lanes).unwrap();
+                tokens = ops::argmax_rows(&stacked);
+                for i in 0..lanes_n {
+                    assert_eq!(
+                        stacked.row(i),
+                        &ref_logits[i][step][..],
+                        "{lanes_n} lanes, lane {i}, step {step}: batched logits diverged"
+                    );
+                }
+            }
+            assert_eq!(tokens, ref_tokens, "{lanes_n} lanes: final tokens diverged");
+        }
     }
 
     #[test]

@@ -37,6 +37,7 @@ impl PjrtRuntime {
         Ok(PjrtRuntime { client, cache: Mutex::new(Vec::new()) })
     }
 
+    /// The PJRT client's platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -155,6 +156,8 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Backend over the AOT artifacts for `preset` under
+    /// `artifacts_dir`, compiled for fixed sequence length `seq_len`.
     pub fn new(artifacts_dir: &Path, preset: &str, seq_len: usize) -> Result<PjrtBackend> {
         anyhow::ensure!(seq_len > 0, "pjrt seq_len must be positive");
         Ok(PjrtBackend {

@@ -247,15 +247,18 @@ unsafe impl<T: Send> Send for SharedSliceMut<'_, T> {}
 unsafe impl<T: Send> Sync for SharedSliceMut<'_, T> {}
 
 impl<'a, T> SharedSliceMut<'a, T> {
+    /// Wrap a mutable slice for disjoint-range concurrent writes.
     pub fn new(slice: &'a mut [T]) -> SharedSliceMut<'a, T> {
         SharedSliceMut { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
     }
 
+    /// Length of the wrapped slice.
     #[inline]
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the wrapped slice is empty.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len == 0

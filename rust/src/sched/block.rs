@@ -93,14 +93,17 @@ impl BlockPool {
         positions.div_ceil(self.block_size)
     }
 
+    /// Fixed block budget of the pool.
     pub fn total_blocks(&self) -> usize {
         self.total
     }
 
+    /// Blocks currently leased out to sequences.
     pub fn used_blocks(&self) -> usize {
         self.inner.lock().unwrap().outstanding
     }
 
+    /// Blocks still available to lease.
     pub fn free_blocks(&self) -> usize {
         self.total - self.used_blocks()
     }
@@ -145,6 +148,7 @@ pub struct PagedKvCache {
 }
 
 impl PagedKvCache {
+    /// Empty cache that will lease from `pool` as it grows.
     pub fn new(pool: Arc<BlockPool>) -> PagedKvCache {
         let n_layers = pool.n_layers;
         PagedKvCache {
@@ -161,6 +165,7 @@ impl PagedKvCache {
         self.blocks.len() * self.pool.block_size
     }
 
+    /// Blocks currently leased by this sequence.
     pub fn n_blocks(&self) -> usize {
         self.blocks.len()
     }

@@ -17,9 +17,14 @@
 //!                its tenant view, lease prompt blocks from the pool
 //!     plan       StepBatch = {prefill slots, decode slots} over every
 //!                running sequence — mixed tenants in one step
-//!     execute    prefill_step / decode_step per slot; each decoded
-//!                token streams out immediately; a dead stream cancels
-//!                the sequence and frees its blocks
+//!     execute    prefill slots cache one bounded chunk each
+//!                (`prefill_chunk`); decode slots are decided in plan
+//!                order, grouped by tenant, and each group runs as ONE
+//!                stacked t=k forward — one fused X·(W_b+ΔŴ)ᵀ per
+//!                (tenant, layer) — with independent groups fanned over
+//!                the backend's worker pool. Each decoded token streams
+//!                out immediately; a dead stream cancels the sequence
+//!                and frees its blocks
 //!     preempt    a sequence that cannot lease its next block preempts
 //!                the *youngest* running sequence back to the queue
 //!                (its blocks free instantly; it resumes later by
@@ -48,6 +53,20 @@ use std::sync::Mutex;
 
 use crate::util::hist::LatencyHistogram;
 
+/// How the drive loop executes the decode half of a [`StepBatch`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StepExec {
+    /// Group decode slots by tenant and run one stacked `t=k` forward
+    /// per group, fanning independent groups over the backend's worker
+    /// pool. Streams are bit-identical to [`StepExec::PerSequence`].
+    #[default]
+    Batched,
+    /// One `decode_step` call per slot, in plan order — the PR 5
+    /// baseline, kept as the bit-identity oracle and the reference
+    /// phase of `bench --name decode`.
+    PerSequence,
+}
+
 /// Scheduler construction knobs (the `[sched]` config section resolved
 /// to concrete values).
 #[derive(Debug, Clone)]
@@ -59,11 +78,24 @@ pub struct SchedOptions {
     /// Max sequences decoding concurrently (`0` = inherit the server's
     /// `max_batch`).
     pub max_running: usize,
+    /// Max prompt positions cached per sequence per iteration (`0` =
+    /// the whole prompt in one go). Bounding the chunk keeps long
+    /// prompts from stalling every decoding sequence for a full-prompt
+    /// prefill; chunking never changes any cached bit.
+    pub prefill_chunk: usize,
+    /// Decode execution strategy (see [`StepExec`]).
+    pub step_exec: StepExec,
 }
 
 impl Default for SchedOptions {
     fn default() -> SchedOptions {
-        SchedOptions { kv_pool_bytes: 64 << 20, block_size: 16, max_running: 0 }
+        SchedOptions {
+            kv_pool_bytes: 64 << 20,
+            block_size: 16,
+            max_running: 0,
+            prefill_chunk: 64,
+            step_exec: StepExec::Batched,
+        }
     }
 }
 
@@ -88,11 +120,22 @@ pub struct SchedCounters {
     pub kv_blocks_total: AtomicU64,
     /// Scheduler iterations executed.
     pub steps_executed: AtomicU64,
+    /// Tenant groups executed by the batched decode path (one stacked
+    /// forward each).
+    pub decode_groups_total: AtomicU64,
+    /// Decode lanes executed through the batched path (sequences
+    /// stacked into groups; `lanes / groups` = mean group depth).
+    pub decode_lanes_total: AtomicU64,
+    /// Bounded prefill chunks executed (one backend call each).
+    pub prefill_chunks_total: AtomicU64,
     /// Per-step batch occupancy (running sequences per iteration).
     occupancy: Mutex<LatencyHistogram>,
+    /// Per-group lane count of every batched decode group executed.
+    group_sizes: Mutex<LatencyHistogram>,
 }
 
 impl SchedCounters {
+    /// Record one iteration's batch occupancy.
     pub fn observe_occupancy(&self, slots: usize) {
         self.occupancy.lock().unwrap().record(slots as f64);
     }
@@ -100,6 +143,16 @@ impl SchedCounters {
     /// Copy of the per-step occupancy histogram.
     pub fn occupancy_histogram(&self) -> LatencyHistogram {
         self.occupancy.lock().unwrap().clone()
+    }
+
+    /// Record one executed decode group's lane count.
+    pub fn observe_group(&self, lanes: usize) {
+        self.group_sizes.lock().unwrap().record(lanes as f64);
+    }
+
+    /// Copy of the per-group lane-count histogram.
+    pub fn group_size_histogram(&self) -> LatencyHistogram {
+        self.group_sizes.lock().unwrap().clone()
     }
 
     /// Point-in-time snapshot of every gauge/counter.
@@ -113,6 +166,9 @@ impl SchedCounters {
             kv_blocks_free: self.kv_blocks_free.load(Ordering::Relaxed),
             kv_blocks_total: self.kv_blocks_total.load(Ordering::Relaxed),
             steps_executed: self.steps_executed.load(Ordering::Relaxed),
+            decode_groups_total: self.decode_groups_total.load(Ordering::Relaxed),
+            decode_lanes_total: self.decode_lanes_total.load(Ordering::Relaxed),
+            prefill_chunks_total: self.prefill_chunks_total.load(Ordering::Relaxed),
         }
     }
 }
@@ -120,12 +176,26 @@ impl SchedCounters {
 /// Snapshot of [`SchedCounters`] (`Server::sched_stats`).
 #[derive(Debug, Clone, Copy)]
 pub struct SchedStats {
+    /// Sequences currently holding a running slot.
     pub running: u64,
+    /// Requests waiting: queued in the batcher plus preempted.
     pub waiting: u64,
+    /// Preemptions (youngest sequence pushed back to the queue).
     pub preempted_total: u64,
+    /// Sequences cancelled because their stream receiver vanished.
     pub cancelled_total: u64,
+    /// KV pool blocks currently leased.
     pub kv_blocks_used: u64,
+    /// KV pool blocks available.
     pub kv_blocks_free: u64,
+    /// KV pool capacity in blocks.
     pub kv_blocks_total: u64,
+    /// Scheduler iterations executed.
     pub steps_executed: u64,
+    /// Tenant groups executed by the batched decode path.
+    pub decode_groups_total: u64,
+    /// Decode lanes executed through the batched path.
+    pub decode_lanes_total: u64,
+    /// Bounded prefill chunks executed.
+    pub prefill_chunks_total: u64,
 }

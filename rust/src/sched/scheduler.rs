@@ -1,19 +1,25 @@
 //! The iteration-level scheduler drive loop: per-decode-step batching
-//! with FCFS admission, KV-pool admission control, and preemption of
-//! the youngest sequence when the pool runs dry.
+//! with FCFS admission, KV-pool admission control, preemption of the
+//! youngest sequence when the pool runs dry, and batched step
+//! execution — decode slots grouped by tenant into stacked `t=k`
+//! forwards, long prompts prefilled in bounded chunks.
 
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use anyhow::Result;
+
 use crate::coordinator::batcher::{Batcher, Request, Response};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::tenant::{Poke, TenantStore, TenantView};
 use crate::eval::tasks::vocab;
-use crate::runtime::ExecutionBackend;
+use crate::model::kvcache::KvSlot;
+use crate::model::weights::ModelWeights;
+use crate::runtime::{DecodeLane, ExecutionBackend, SharedSliceMut};
 use crate::sched::block::{BlockPool, PagedKvCache};
-use crate::sched::SchedOptions;
+use crate::sched::{SchedOptions, StepExec};
 use crate::tensor::ops;
 use crate::tensor::Matrix;
 
@@ -63,7 +69,9 @@ impl Sequence {
 /// prefill and which run a single decode step. Mixed tenants share one
 /// step batch — that is the whole point.
 pub struct StepBatch {
+    /// Slot indices that run a (possibly chunked) prefill this step.
     pub prefill: Vec<usize>,
+    /// Slot indices that decode one token this step.
     pub decode: Vec<usize>,
 }
 
@@ -95,6 +103,8 @@ pub fn drive_loop(
         backend,
         pool,
         max_running: max_running.max(1),
+        prefill_chunk: opts.prefill_chunk,
+        step_exec: opts.step_exec,
         running: Vec::new(),
         preempted: VecDeque::new(),
         admissions: 0,
@@ -120,6 +130,17 @@ pub fn drive_loop(
     }
 }
 
+/// Tenant-group identity for batched decode: two slots share a stacked
+/// forward iff their views point at the same Arc-backed weights or
+/// delta set (pointer identity — same tenant, same tier).
+fn same_view(a: &TenantView, b: &TenantView) -> bool {
+    match (a, b) {
+        (TenantView::Hot(x), TenantView::Hot(y)) => Arc::ptr_eq(x, y),
+        (TenantView::Cold(x), TenantView::Cold(y)) => Arc::ptr_eq(x, y),
+        _ => false,
+    }
+}
+
 struct Scheduler<'a> {
     store: &'a TenantStore,
     batcher: &'a Batcher,
@@ -127,6 +148,10 @@ struct Scheduler<'a> {
     backend: &'a dyn ExecutionBackend,
     pool: Arc<BlockPool>,
     max_running: usize,
+    /// Max prompt positions prefetched per sequence per iteration
+    /// (`0` = the whole prefix at once).
+    prefill_chunk: usize,
+    step_exec: StepExec,
     running: Vec<Sequence>,
     /// Preempted sequences awaiting re-admission, oldest arrival first.
     preempted: VecDeque<Sequence>,
@@ -293,8 +318,13 @@ impl Scheduler<'_> {
         for i in plan.prefill {
             self.prefill_slot(i);
         }
-        for i in plan.decode {
-            self.decode_slot(i);
+        match self.step_exec {
+            StepExec::PerSequence => {
+                for i in plan.decode {
+                    self.decode_slot(i);
+                }
+            }
+            StepExec::Batched => self.decode_batched(&plan.decode),
         }
         self.metrics.observe_batch_exec(step_start.elapsed().as_secs_f64());
         self.metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
@@ -314,24 +344,42 @@ impl Scheduler<'_> {
         batch
     }
 
-    /// Prefill slot: run the whole prefix (prompt, plus generated after
-    /// a preemption) through the backend; blocks were leased at
-    /// admission.
+    /// Prefill slot: cache the next bounded chunk of the prefix
+    /// (prompt, plus generated after a preemption); blocks were leased
+    /// at admission. Progress lives in the cache's own fill count, so a
+    /// partially-prefilled slot simply plans as a prefill slot again
+    /// next iteration — decode slots share every one of those
+    /// iterations instead of stalling behind one long prompt. Only the
+    /// final chunk's logits are kept (they are what a whole-prefix
+    /// prefill returns, bit-for-bit).
     fn prefill_slot(&mut self, i: usize) {
         if !matches!(self.running[i].state, SeqState::Active) {
             return; // preempted earlier in this same iteration
         }
-        let tokens: Vec<u32> = {
+        let (tokens, done) = {
             let seq = &self.running[i];
-            seq.req.prompt.iter().chain(seq.generated.iter()).copied().collect()
+            let start = seq.cache.len();
+            let total = seq.prefix_len();
+            let end =
+                if self.prefill_chunk == 0 { total } else { total.min(start + self.prefill_chunk) };
+            let tokens: Vec<u32> = seq
+                .req
+                .prompt
+                .iter()
+                .chain(seq.generated.iter())
+                .skip(start)
+                .take(end - start)
+                .copied()
+                .collect();
+            (tokens, end == total)
         };
         let result = {
             let seq = &mut self.running[i];
             match &seq.view {
                 TenantView::Hot(weights) => {
-                    self.backend.prefill_step(weights.as_ref(), None, &tokens, &mut seq.cache)
+                    self.backend.prefill_chunk(weights.as_ref(), None, &tokens, &mut seq.cache)
                 }
-                TenantView::Cold(deltas) => self.backend.prefill_step(
+                TenantView::Cold(deltas) => self.backend.prefill_chunk(
                     self.store.base().as_ref(),
                     Some(deltas.as_ref()),
                     &tokens,
@@ -339,32 +387,39 @@ impl Scheduler<'_> {
                 ),
             }
         };
+        self.metrics.sched.prefill_chunks_total.fetch_add(1, Ordering::Relaxed);
         match result {
-            Ok(logits) => self.running[i].last_logits = Some(logits),
+            Ok(logits) => {
+                if done {
+                    self.running[i].last_logits = Some(logits);
+                }
+            }
             Err(e) => self.backend_failure(i, &e),
         }
     }
 
-    /// Decode slot: emit the token the last logits imply, then run one
-    /// forward step for it. The decision order (max_seq check → argmax
-    /// → EOS check → emit → step) mirrors `generate_with` exactly, so
-    /// the emitted token sequence is bit-identical to the
-    /// run-to-completion path.
-    fn decode_slot(&mut self, i: usize) {
+    /// Decision half of a decode slot: emit the token the last logits
+    /// imply and lease capacity for its forward step. The decision
+    /// order (token budget → max_seq check → argmax → EOS check → emit
+    /// → second budget check → capacity) mirrors `generate_with`
+    /// exactly, so the emitted token sequence is bit-identical to the
+    /// run-to-completion path. Returns `Some((token, pos))` when a
+    /// forward step must run for this slot.
+    fn decide_decode(&mut self, i: usize) -> Option<(u32, usize)> {
         if !matches!(self.running[i].state, SeqState::Active) {
-            return;
+            return None;
         }
         // the token budget bounds emissions exactly like generate_with's
         // `for _ in 0..max_new` loop — checked BEFORE emitting, so
         // max_tokens = 0 yields zero tokens on both paths
         if self.running[i].generated.len() >= self.running[i].req.max_new {
             self.answer_at(i, None);
-            return;
+            return None;
         }
         let pos = self.running[i].prefix_len();
         if pos >= self.store.base().config.max_seq {
             self.answer_at(i, None);
-            return;
+            return None;
         }
         let next = {
             let seq = &self.running[i];
@@ -372,19 +427,19 @@ impl Scheduler<'_> {
         };
         if next == vocab::EOS {
             self.answer_at(i, None);
-            return;
+            return None;
         }
         let live = self.running[i].req.respond.send_token(next);
         self.running[i].generated.push(next);
         if !live {
             self.cancel(i);
-            return;
+            return None;
         }
         if self.running[i].generated.len() >= self.running[i].req.max_new {
             // the token limit is reached; the forward step for this
             // token would only compute logits nobody reads
             self.answer_at(i, None);
-            return;
+            return None;
         }
         if self.pool.blocks_for(pos + 1) > self.pool.total_blocks() {
             let msg = format!(
@@ -393,11 +448,21 @@ impl Scheduler<'_> {
                 self.pool.total_blocks()
             );
             self.answer_at(i, Some(msg));
-            return;
+            return None;
         }
         if !self.ensure_capacity(i, pos + 1) {
-            return; // preempted itself making room
+            return None; // preempted itself making room
         }
+        Some((next, pos))
+    }
+
+    /// Per-sequence decode slot ([`StepExec::PerSequence`]): decide,
+    /// then run the forward step immediately — the PR 5 execution
+    /// order, kept as the batched path's bit-identity baseline.
+    fn decode_slot(&mut self, i: usize) {
+        let Some((next, pos)) = self.decide_decode(i) else {
+            return;
+        };
         let result = {
             let seq = &mut self.running[i];
             match &seq.view {
@@ -416,6 +481,107 @@ impl Scheduler<'_> {
         match result {
             Ok(logits) => self.running[i].last_logits = Some(logits),
             Err(e) => self.backend_failure(i, &e),
+        }
+    }
+
+    /// Batched decode ([`StepExec::Batched`]): run every slot's
+    /// *decision* in plan order (identical side effects to the
+    /// per-sequence loop — forward steps never touch another slot's
+    /// decision state), then group the surviving slots by tenant view
+    /// and execute each group as ONE stacked forward — one fused
+    /// `X·(W_b+ΔŴ)ᵀ` per (tenant, layer) — fanning independent groups
+    /// over the backend's worker pool.
+    ///
+    /// Streams are bit-identical to the per-sequence loop: decisions
+    /// are order-identical, a slot preempted after its decision lands
+    /// in the same state either way (token already emitted, blocks
+    /// freed, re-prefills on resume), and `decode_steps` row `i`
+    /// carries the exact bits of a lone `decode_step` for lane `i`.
+    fn decode_batched(&mut self, slots: &[usize]) {
+        let mut pending: Vec<(usize, u32, usize)> = Vec::with_capacity(slots.len());
+        for &i in slots {
+            if let Some((token, pos)) = self.decide_decode(i) {
+                pending.push((i, token, pos));
+            }
+        }
+        // a later decision's ensure_capacity may have preempted an
+        // earlier pending slot — its step must not run (its blocks are
+        // gone; it resumes by re-prefilling)
+        pending.retain(|&(i, _, _)| matches!(self.running[i].state, SeqState::Active));
+        if pending.is_empty() {
+            return;
+        }
+        // group by tenant view (Arc identity): lanes in a group share
+        // one (base, Δ) pair and therefore one stacked forward
+        let mut groups: Vec<(TenantView, Vec<(usize, u32, usize)>)> = Vec::new();
+        for entry in pending {
+            let view = self.running[entry.0].view.clone();
+            match groups.iter_mut().find(|(v, _)| same_view(v, &view)) {
+                Some((_, members)) => members.push(entry),
+                None => groups.push((view, vec![entry])),
+            }
+        }
+        for (_, members) in &groups {
+            self.metrics.sched.decode_groups_total.fetch_add(1, Ordering::Relaxed);
+            self.metrics.sched.decode_lanes_total.fetch_add(members.len() as u64, Ordering::Relaxed);
+            self.metrics.sched.observe_group(members.len());
+        }
+        let mut results: Vec<Option<Result<Matrix>>> = (0..groups.len()).map(|_| None).collect();
+        {
+            let backend = self.backend;
+            let store = self.store;
+            let base: &Arc<ModelWeights> = store.base();
+            let seqs = SharedSliceMut::new(&mut self.running);
+            let out = SharedSliceMut::new(&mut results);
+            let run_group = |gi: usize| {
+                let (view, members) = &groups[gi];
+                let mut lanes: Vec<DecodeLane<'_>> = Vec::with_capacity(members.len());
+                for &(slot, token, pos) in members {
+                    // SAFETY: every slot index appears in exactly one
+                    // group, so concurrent groups touch disjoint slots.
+                    let seq = unsafe { &mut seqs.slice_mut(slot, 1)[0] };
+                    lanes.push(DecodeLane { token, pos, cache: &mut seq.cache });
+                }
+                let r = match view {
+                    TenantView::Hot(weights) => {
+                        backend.decode_steps(weights.as_ref(), None, &mut lanes)
+                    }
+                    TenantView::Cold(deltas) => {
+                        backend.decode_steps(base.as_ref(), Some(deltas.as_ref()), &mut lanes)
+                    }
+                };
+                // SAFETY: result cell gi is owned by group gi alone.
+                unsafe { out.slice_mut(gi, 1)[0] = Some(r) };
+            };
+            match backend.exec_pool() {
+                // nested pool use is deadlock-free: each group's own
+                // pooled matmuls run as inner jobs on the same pool
+                Some(pool) if groups.len() > 1 => pool.run(groups.len(), &run_group),
+                _ => {
+                    for gi in 0..groups.len() {
+                        run_group(gi);
+                    }
+                }
+            }
+        }
+        // distribute each group's logit rows back to its slots (or fail
+        // every slot of an errored group, as lane-by-lane calls would)
+        let vocab = self.store.base().config.vocab_size;
+        for (gi, (_, members)) in groups.iter().enumerate() {
+            match results[gi].take().expect("every group ran") {
+                Ok(logits) => {
+                    debug_assert_eq!(logits.rows(), members.len());
+                    for (li, &(slot, _, _)) in members.iter().enumerate() {
+                        let row = Matrix::from_vec(1, vocab, logits.row(li).to_vec());
+                        self.running[slot].last_logits = Some(row);
+                    }
+                }
+                Err(e) => {
+                    for &(slot, _, _) in members {
+                        self.backend_failure(slot, &e);
+                    }
+                }
+            }
         }
     }
 

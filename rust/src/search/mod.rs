@@ -39,7 +39,9 @@ pub struct SearchResult {
 /// Selection method (Table 4 compares both).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SearchMethod {
+    /// Full compression + full accuracy eval per candidate.
     Direct,
+    /// First-layer attention-score-error probe per candidate.
     Proxy,
 }
 

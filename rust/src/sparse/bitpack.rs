@@ -41,6 +41,7 @@ impl PackedCodes {
         self.len
     }
 
+    /// Whether no codes are stored.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len == 0

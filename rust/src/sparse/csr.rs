@@ -96,16 +96,19 @@ impl CsrMatrix {
         }
     }
 
+    /// Logical (dense) row count.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Logical (dense) column count.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Logical (rows, cols) shape.
     #[inline]
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
@@ -125,21 +128,27 @@ impl CsrMatrix {
         self.nnz() as f64 / (self.rows * self.cols) as f64
     }
 
+    /// CSR row-offset array (`rows + 1` entries; row r spans
+    /// `row_offsets[r]..row_offsets[r+1]`).
     #[inline]
     pub fn row_offsets(&self) -> &[u32] {
         &self.row_offsets
     }
 
+    /// Column index of each stored non-zero, in row-major order.
     #[inline]
     pub fn col_indices(&self) -> &[u32] {
         &self.col_indices
     }
 
+    /// Value of each stored non-zero, parallel to [`col_indices`](Self::col_indices).
     #[inline]
     pub fn values(&self) -> &[f32] {
         &self.values
     }
 
+    /// Mutable non-zero values (in-place requantization keeps the
+    /// sparsity pattern, so indices stay shared).
     #[inline]
     pub fn values_mut(&mut self) -> &mut [f32] {
         &mut self.values

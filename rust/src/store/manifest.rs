@@ -16,6 +16,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// File name of the manifest inside a store root.
 pub const MANIFEST_FILE: &str = "MANIFEST.json";
 /// Manifest schema version (`"version"` in the JSON).
 pub const MANIFEST_VERSION: u64 = 1;
@@ -25,11 +26,15 @@ pub const MANIFEST_FORMAT: &str = "deltastore";
 /// Where one tensor's record lives: `shards[shard]` at `offset..offset+len`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorRecord {
+    /// Tensor name (matches the delta set's tensor key).
     pub name: String,
     /// Index into the owning tenant's `shards` list.
     pub shard: usize,
+    /// Byte offset of the record inside the shard file.
     pub offset: u64,
+    /// Record length in bytes.
     pub len: u64,
+    /// CRC-32 of the record bytes (verified on read).
     pub crc32: u32,
 }
 
@@ -39,23 +44,29 @@ pub struct TenantRecord {
     /// Store-assigned numeric id (names the shard files, so tenant ids
     /// never need filesystem-safe escaping).
     pub id: u64,
+    /// Compression method recorded at push time.
     pub method: String,
+    /// Target compression ratio recorded at push time.
     pub nominal_ratio: f64,
     /// Total payload bytes across all tensor records.
     pub bytes: u64,
     /// Store-relative shard paths ("shards/t<id>.<k>.ddq").
     pub shards: Vec<String>,
+    /// Location of every tensor across the shard files.
     pub tensors: Vec<TensorRecord>,
 }
 
 /// The parsed manifest.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Manifest {
+    /// Next store-assigned numeric tenant id.
     pub next_id: u64,
+    /// Tenant records keyed by tenant name.
     pub tenants: BTreeMap<String, TenantRecord>,
 }
 
 impl Manifest {
+    /// Serialize to the on-disk JSON shape.
     pub fn to_json(&self) -> Json {
         let mut tenants = Json::obj();
         for (name, t) in &self.tenants {
@@ -86,6 +97,7 @@ impl Manifest {
         root
     }
 
+    /// Parse a manifest, validating format marker and version.
     pub fn from_json(j: &Json) -> Result<Manifest> {
         if j.get("format").and_then(Json::as_str) != Some(MANIFEST_FORMAT) {
             bail!("not a delta store manifest (missing format marker)");

@@ -61,7 +61,9 @@ pub const DEFAULT_SHARD_BUDGET: u64 = 1 << 20;
 /// What `gc` swept.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct GcReport {
+    /// Orphan shard files deleted.
     pub files_removed: usize,
+    /// Bytes those files occupied.
     pub bytes_freed: u64,
 }
 
@@ -117,6 +119,7 @@ impl DeltaStore {
         })
     }
 
+    /// Store root directory.
     pub fn root(&self) -> &Path {
         &self.root
     }
@@ -126,14 +129,17 @@ impl DeltaStore {
         self.bytes_read.load(Ordering::Relaxed)
     }
 
+    /// Names of every stored tenant, sorted.
     pub fn tenants(&self) -> Vec<String> {
         self.manifest.lock().unwrap().tenants.keys().cloned().collect()
     }
 
+    /// Whether a tenant exists in the store.
     pub fn contains(&self, tenant: &str) -> bool {
         self.manifest.lock().unwrap().tenants.contains_key(tenant)
     }
 
+    /// Number of stored tenants.
     pub fn tenant_count(&self) -> usize {
         self.manifest.lock().unwrap().tenants.len()
     }

@@ -71,11 +71,13 @@ impl Matrix {
         m
     }
 
+    /// Row count.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
@@ -93,16 +95,19 @@ impl Matrix {
         self.data.len()
     }
 
+    /// Whether the matrix holds no elements.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// The row-major element buffer.
     #[inline]
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major element buffer.
     #[inline]
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
@@ -113,12 +118,14 @@ impl Matrix {
         self.data
     }
 
+    /// Element at `(r, c)`.
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
+    /// Set element `(r, c)` to `v`.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         debug_assert!(r < self.rows && c < self.cols);
@@ -211,8 +218,9 @@ impl Matrix {
     /// `h_out×h_in` throughout.
     ///
     /// Dispatches to the register-tiled, cache-blocked kernel in
-    /// [`super::ops`] (which itself falls back to the dot-product path
-    /// for shapes too small to amortize panel packing).
+    /// [`super::ops`]; every shape (including t = 1) goes through the
+    /// packed microkernel so row `p` of a stacked product is
+    /// bit-identical to a single-row product of the same activation.
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
         crate::tensor::ops::matmul_nt_blocked(self, other)
     }

@@ -5,7 +5,7 @@
 
 use std::cell::RefCell;
 
-use crate::tensor::matrix::{dot, Matrix};
+use crate::tensor::matrix::Matrix;
 
 /// Row-wise numerically-stable softmax (attention probabilities).
 pub fn softmax_rows(m: &mut Matrix) {
@@ -123,10 +123,16 @@ pub fn argmax_rows(m: &Matrix) -> Vec<u32> {
 // autovectorizes the same way `dot` does.
 //
 // Determinism: every output element is a plain sequential sum over k
-// (k-blocks in order, lanes are per-element scalar chains), so results
-// are bit-identical regardless of panel alignment, stripe boundaries,
-// or thread count — which is what lets the pooled drivers chunk the
-// q-range freely (pinned by `tests/tiled_matmul.rs`).
+// (k-blocks in order, accumulators are per-element scalar chains), so
+// results are bit-identical regardless of panel alignment, stripe
+// boundaries, thread count, or — crucially — the number of activation
+// rows `t` in the call: row `p` of a t-row product carries exactly the
+// bits of a 1-row product of the same activation. That t-invariance is
+// what lets the scheduler stack concurrent sequences into one t=k
+// matmul per (tenant, layer) and stay bit-identical to per-sequence
+// stepping (pinned by `tests/tiled_matmul.rs`). Every shape goes
+// through the packed microkernel for this reason; there is no
+// small-t dot-product fallback.
 
 /// Panel width: weight rows per packed panel (one 8-lane vector).
 pub const TILE_NR: usize = 8;
@@ -134,10 +140,6 @@ pub const TILE_NR: usize = 8;
 pub const TILE_MR: usize = 4;
 /// k-block: a packed panel is `TILE_KC × TILE_NR` f32 = 16 KiB (≈ L1).
 pub const TILE_KC: usize = 512;
-/// Below this many activation rows the dot-product path wins (panel
-/// packing costs ~one pass over the weight block; with t < 4 the
-/// compute doesn't amortize it).
-const MIN_T_BLOCKED: usize = 4;
 
 thread_local! {
     /// Per-worker packed-panel scratch (one allocation per pool worker
@@ -178,23 +180,6 @@ pub unsafe fn matmul_nt_block_raw(
         if !accumulate {
             for p in 0..t {
                 std::slice::from_raw_parts_mut(out.add(p * out_stride + q0), q1 - q0).fill(0.0);
-            }
-        }
-        return;
-    }
-    if t < MIN_T_BLOCKED {
-        // dot path: one pass per (p, q); fastest when packing can't be
-        // amortized across activation rows.
-        for p in 0..t {
-            let xrow = x.row(p);
-            let orow = std::slice::from_raw_parts_mut(out.add(p * out_stride + q0), q1 - q0);
-            for (q, o) in (q0..q1).zip(orow.iter_mut()) {
-                let v = dot(xrow, w.row(q));
-                if accumulate {
-                    *o += v;
-                } else {
-                    *o = v;
-                }
             }
         }
         return;

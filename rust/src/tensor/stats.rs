@@ -11,9 +11,13 @@ use crate::tensor::matrix::Matrix;
 /// Summary statistics of a sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SampleStats {
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population variance.
     pub variance: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
@@ -134,14 +138,20 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// Fixed-width histogram over `[lo, hi]` (figure 6 weight distributions).
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Lower bound of the binned range.
     pub lo: f64,
+    /// Upper bound of the binned range.
     pub hi: f64,
+    /// Per-bin counts.
     pub counts: Vec<u64>,
+    /// Samples below `lo`.
     pub underflow: u64,
+    /// Samples above `hi`.
     pub overflow: u64,
 }
 
 impl Histogram {
+    /// Empty histogram of `bins` equal-width bins over `[lo, hi]`.
     pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
         assert!(hi > lo && bins > 0);
         Histogram { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
@@ -157,6 +167,7 @@ impl Histogram {
         h
     }
 
+    /// Bin one sample (out-of-range samples count as under/overflow).
     pub fn add(&mut self, x: f64) {
         if x < self.lo {
             self.underflow += 1;
@@ -172,6 +183,7 @@ impl Histogram {
         }
     }
 
+    /// Total samples recorded, including under/overflow.
     pub fn total(&self) -> u64 {
         self.counts.iter().sum::<u64>() + self.underflow + self.overflow
     }
@@ -209,10 +221,12 @@ pub struct Accumulator {
 }
 
 impl Accumulator {
+    /// Empty accumulator.
     pub fn new() -> Accumulator {
         Accumulator { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample in (Welford update).
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -222,10 +236,12 @@ impl Accumulator {
         self.max = self.max.max(x);
     }
 
+    /// Samples folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -234,6 +250,7 @@ impl Accumulator {
         }
     }
 
+    /// Running population variance (0 below two samples).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -242,10 +259,12 @@ impl Accumulator {
         }
     }
 
+    /// Running standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample seen (0 when empty).
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -254,6 +273,7 @@ impl Accumulator {
         }
     }
 
+    /// Largest sample seen (0 when empty).
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             0.0

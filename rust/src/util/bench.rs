@@ -7,11 +7,17 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark case name.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean per-iteration time.
     pub mean: Duration,
+    /// Median per-iteration time.
     pub p50: Duration,
+    /// 95th-percentile per-iteration time.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 

@@ -39,10 +39,12 @@ pub struct Hasher {
 }
 
 impl Hasher {
+    /// Fresh hasher (state for an empty stream).
     pub fn new() -> Hasher {
         Hasher { state: !0 }
     }
 
+    /// Fold `bytes` into the running checksum.
     pub fn update(&mut self, bytes: &[u8]) {
         let mut crc = self.state;
         for &b in bytes {
@@ -51,6 +53,7 @@ impl Hasher {
         self.state = crc;
     }
 
+    /// The checksum of everything updated so far.
     pub fn finalize(&self) -> u32 {
         !self.state
     }

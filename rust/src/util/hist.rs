@@ -40,6 +40,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Empty histogram.
     pub fn new() -> LatencyHistogram {
         LatencyHistogram {
             counts: vec![0; BUCKETS],
@@ -76,14 +77,17 @@ impl LatencyHistogram {
         self.max = self.max.max(s);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Whether no samples have been recorded.
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }
 
+    /// Exact sum of all recorded values (seconds).
     pub fn sum(&self) -> f64 {
         self.sum
     }
@@ -97,6 +101,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Exact smallest recorded value (0 when empty).
     pub fn min(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -105,6 +110,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Exact largest recorded value (0 when empty).
     pub fn max(&self) -> f64 {
         self.max
     }

@@ -14,19 +14,27 @@ use anyhow::{bail, Result};
 /// A JSON value. `BTreeMap` keeps object keys sorted → stable output.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys sorted).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Empty array.
     pub fn arr() -> Json {
         Json::Arr(Vec::new())
     }
@@ -71,6 +79,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -78,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -95,6 +105,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a [`Json::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -102,6 +113,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is a [`Json::Arr`].
     pub fn as_array(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(items) => Some(items),
@@ -109,6 +121,7 @@ impl Json {
         }
     }
 
+    /// The key → value map, if this is a [`Json::Obj`].
     pub fn as_object(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(map) => Some(map),

@@ -10,6 +10,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -18,6 +19,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn add_row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row width");
         self.rows.push(cells);

@@ -18,6 +18,7 @@ pub struct SegmentTimer {
 }
 
 impl SegmentTimer {
+    /// Stopwatch with no segments yet.
     pub fn new() -> SegmentTimer {
         SegmentTimer::default()
     }
@@ -33,10 +34,13 @@ impl SegmentTimer {
         out
     }
 
+    /// The recorded `(name, accumulated time)` segments, in first-seen
+    /// order.
     pub fn segments(&self) -> &[(String, Duration)] {
         &self.segments
     }
 
+    /// Sum of all segment times.
     pub fn total(&self) -> Duration {
         self.segments.iter().map(|(_, d)| *d).sum()
     }

@@ -10,6 +10,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Sampler over `n` ranks with skew exponent `s`.
     pub fn new(n: usize, s: f64) -> Zipf {
         let weights: Vec<f64> = (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(s)).collect();
         let sum: f64 = weights.iter().sum();

@@ -26,7 +26,7 @@ use deltadq::delta::format::DeltaSet;
 use deltadq::eval::tasks::vocab;
 use deltadq::model::{ModelConfig, ModelWeights};
 use deltadq::runtime::{ExecutionBackend, NativeBackend};
-use deltadq::sched::{BlockPool, SchedOptions};
+use deltadq::sched::{BlockPool, SchedOptions, SchedStats, StepExec};
 use deltadq::tensor::{Matrix, Pcg64};
 
 fn base() -> Arc<ModelWeights> {
@@ -100,6 +100,128 @@ fn scheduler_streams_bit_identical_to_run_to_completion() {
     }
 }
 
+/// Submit every request up front (so they run concurrently), drain each
+/// stream to completion, and return the token streams in submit order
+/// plus the final scheduler stats. A per-decode-step delay keeps the
+/// sequences overlapped long enough that the batched drive loop really
+/// groups them.
+fn run_workload(
+    b: &Arc<ModelWeights>,
+    sched: Option<SchedOptions>,
+    reqs: &[(&str, Vec<u32>, usize)],
+    delay: Duration,
+) -> (Vec<Vec<u32>>, Option<SchedStats>) {
+    let server = Arc::new(Server::with_backend(
+        b.clone(),
+        ServerOptions { batch_window: Duration::from_millis(0), sched, ..Default::default() },
+        Arc::new(SlowStepBackend { inner: NativeBackend::default(), delay }),
+    ));
+    server.register_tenant("a", deltas_for(b, 21));
+    server.register_tenant("b", deltas_for(b, 22));
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(tenant, prompt, max_new)| {
+            server.submit_stream(tenant, prompt.clone(), *max_new).unwrap()
+        })
+        .collect();
+    let outs: Vec<Vec<u32>> = rxs
+        .into_iter()
+        .map(|rx| {
+            let mut tokens = Vec::new();
+            loop {
+                match rx.recv_timeout(Duration::from_secs(120)).unwrap() {
+                    StreamEvent::Token(t) => tokens.push(t),
+                    StreamEvent::Done(resp) => {
+                        assert!(resp.error.is_none(), "{:?}", resp.error);
+                        assert_eq!(resp.tokens, tokens);
+                        return tokens;
+                    }
+                }
+            }
+        })
+        .collect();
+    let stats = server.sched_stats();
+    Arc::try_unwrap(server).ok().unwrap().shutdown();
+    (outs, stats)
+}
+
+/// Tentpole pin: the batched drive loop (one stacked forward per tenant
+/// group per iteration) streams exactly the tokens the per-sequence
+/// drive loop and the legacy run-to-completion loop do, at group sizes
+/// 1, 3, and 8 of one tenant and on a mixed-tenant batch — and the
+/// group-size counters prove the batched path actually grouped.
+#[test]
+fn batched_drive_loop_bit_matches_per_sequence_and_legacy_across_group_sizes() {
+    let b = base();
+    let req = |tenant: &'static str, i: u32| -> (&'static str, Vec<u32>, usize) {
+        (tenant, vec![1, 20 + i, 4, 21 + i, 3], 6)
+    };
+    let cases: Vec<Vec<(&str, Vec<u32>, usize)>> = vec![
+        vec![req("a", 0)],
+        (0..3).map(|i| req("a", i)).collect(),
+        (0..8).map(|i| req("a", i)).collect(),
+        (0..8).map(|i| req(if i % 2 == 0 { "a" } else { "b" }, i)).collect(),
+    ];
+    let delay = Duration::from_millis(1);
+    for (case_no, reqs) in cases.iter().enumerate() {
+        let sched = |step_exec: StepExec| {
+            Some(SchedOptions { max_running: 8, step_exec, ..Default::default() })
+        };
+        let (batched, batched_stats) = run_workload(&b, sched(StepExec::Batched), reqs, delay);
+        let (per_seq, per_seq_stats) =
+            run_workload(&b, sched(StepExec::PerSequence), reqs, delay);
+        let (legacy, _) = run_workload(&b, None, reqs, delay);
+        assert_eq!(batched, per_seq, "case {case_no}: batched vs per-sequence");
+        assert_eq!(batched, legacy, "case {case_no}: batched vs run-to-completion");
+
+        let bs = batched_stats.unwrap();
+        let ps = per_seq_stats.unwrap();
+        if batched.iter().any(|t| t.len() > 1) {
+            assert!(bs.decode_groups_total > 0, "case {case_no}: batched path never ran");
+        }
+        assert!(bs.decode_lanes_total >= bs.decode_groups_total, "case {case_no}: {bs:?}");
+        assert_eq!(ps.decode_groups_total, 0, "case {case_no}: per-sequence must not group");
+    }
+}
+
+/// Chunked prefill is a latency/fairness knob, never a correctness
+/// knob: prompts landing exactly on a chunk boundary, one past it, and
+/// several chunks long — prefilled while a long generation is actively
+/// decoding — produce bit-identical streams whether the prefix is
+/// cached whole (`prefill_chunk: 0`) or in bounded chunks, and the
+/// chunk counter shows the split actually happened.
+#[test]
+fn chunked_prefill_is_bit_identical_across_chunk_sizes() {
+    let b = base();
+    const CHUNK: usize = 4;
+    // long generation first: its decode steps share iterations with
+    // every later chunk; then boundary prompts of len CHUNK, CHUNK+1,
+    // and 2·CHUNK+1
+    let reqs: Vec<(&str, Vec<u32>, usize)> = vec![
+        ("a", vec![1, 20, 4, 21, 3, 7], 24),
+        ("a", vec![1, 16, 17, 18], 6),
+        ("b", vec![1, 16, 17, 18, 19], 6),
+        ("a", vec![1, 30, 5, 31, 3, 7, 20, 21, 22], 6),
+    ];
+    let delay = Duration::from_millis(2);
+    let sched = |prefill_chunk: usize| {
+        Some(SchedOptions { max_running: 8, prefill_chunk, ..Default::default() })
+    };
+    let (whole, whole_stats) = run_workload(&b, sched(0), &reqs, delay);
+    let (chunked, chunked_stats) = run_workload(&b, sched(CHUNK), &reqs, delay);
+    let (legacy, _) = run_workload(&b, None, &reqs, delay);
+    assert_eq!(whole, chunked, "chunk size must never change a generated bit");
+    assert_eq!(whole, legacy, "scheduler vs run-to-completion");
+
+    // no preemption here (default pool is ample), so chunk counts are
+    // exact: one per request unchunked; ⌈len/CHUNK⌉ per request chunked
+    let whole_chunks = whole_stats.unwrap().prefill_chunks_total;
+    let chunked_chunks = chunked_stats.unwrap().prefill_chunks_total;
+    assert_eq!(whole_chunks, reqs.len() as u64);
+    let expected: usize = reqs.iter().map(|(_, p, _)| p.len().div_ceil(CHUNK)).sum();
+    assert_eq!(chunked_chunks, expected as u64, "prompts must split into bounded chunks");
+}
+
 /// Pinned: filling the KV pool preempts the youngest sequence, the pool
 /// never exceeds its block budget, and every preempted sequence still
 /// completes with exactly the output an unconstrained server produces.
@@ -129,7 +251,12 @@ fn pool_exhaustion_preempts_youngest_and_completes_correctly() {
     let server = Server::start(b.clone(), ServerOptions {
         batch_window: Duration::from_millis(0),
         promote_after: u64::MAX, // stay Cold: the fused path
-        sched: Some(SchedOptions { kv_pool_bytes, block_size: 1, max_running: 4 }),
+        sched: Some(SchedOptions {
+            kv_pool_bytes,
+            block_size: 1,
+            max_running: 4,
+            ..Default::default()
+        }),
         ..Default::default()
     });
     server.register_tenant("t", set);

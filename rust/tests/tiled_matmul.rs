@@ -163,6 +163,36 @@ fn one_pool_serves_many_calls() {
     }
 }
 
+/// Property: row p of a t-row product is **bit-identical** to the 1-row
+/// product of that activation row alone, for every t and for both the
+/// plain tiled kernel and the fused base+delta kernel. This is the
+/// invariant the scheduler's batched drive loop rests on: stacking
+/// decode lanes into one matmul call changes throughput, never bits.
+/// (It holds because each output element's k-sum runs entirely within
+/// one stripe, in a fixed order that does not depend on t.)
+#[test]
+fn prop_row_bits_invariant_to_stack_depth() {
+    let mut rng = Pcg64::seeded(8);
+    let pool = ThreadPool::new(4);
+    for &(k, h_out) in &[(37usize, 29usize), (64, 67), (129, 45)] {
+        let w = Matrix::randn(h_out, k, 0.1, &mut rng);
+        let dm = sparse_random(h_out, k, 0.15, &mut rng);
+        let delta = CompressedDelta::Sparse(CsrMatrix::from_dense(&dm));
+        for t in 1..=8usize {
+            let x = Matrix::randn(t, k, 1.0, &mut rng);
+            let tiled = matmul_nt_blocked(&x, &w);
+            let fused = fused_matmul_nt(&x, &w, &delta, &pool);
+            for p in 0..t {
+                let xp = Matrix::from_vec(1, k, x.row(p).to_vec());
+                let tiled_one = matmul_nt_blocked(&xp, &w);
+                let fused_one = fused_matmul_nt(&xp, &w, &delta, &pool);
+                assert_eq!(tiled.row(p), tiled_one.row(0), "tiled k={k} h={h_out} t={t} p={p}");
+                assert_eq!(fused.row(p), fused_one.row(0), "fused k={k} h={h_out} t={t} p={p}");
+            }
+        }
+    }
+}
+
 /// matmul_nn (k-blocked) still matches matmul_nt of the transpose
 /// across remainder shapes (k % 4 ∈ {0,1,2,3}).
 #[test]
