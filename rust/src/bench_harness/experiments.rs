@@ -1643,3 +1643,222 @@ pub fn gateway(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<
     }
     Ok(out)
 }
+
+// --------------------------------------------------------------- chaos
+
+/// E14: failure containment end to end — the gateway/coordinator stack
+/// under injected faults ([`crate::util::failpoint`]). Three load
+/// phases over one server: a fault-free baseline, a fault phase with
+/// backend prefill errors and decode-group panics armed (every faulted
+/// request must still get a well-formed HTTP answer), and a recovery
+/// phase after disarming (throughput must come back). Two targeted
+/// probes ride along: expired per-request deadlines must answer
+/// `deadline exceeded`, and injected gateway socket-write failures must
+/// drop only their own connection. Writes machine-readable
+/// `BENCH_chaos.json`; the CI gate asserts `wedged_requests == 0` and
+/// `recovery_ratio > 0.8`.
+///
+/// `DELTADQ_BENCH_QUICK=1` switches to the CI-sized run.
+pub fn chaos(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<String> {
+    use crate::gateway::http::read_response;
+    use crate::gateway::loadgen::{self, LoadgenOptions};
+    use crate::gateway::{Gateway, GatewayOptions};
+    use crate::util::failpoint;
+    use std::io::{BufReader, Write as _};
+    use std::net::TcpStream;
+
+    let quick = std::env::var("DELTADQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (n_tenants, requests, rps) = if quick { (3usize, 24usize, 32.0) } else { (6, 96, 48.0) };
+    const MAX_TOKENS: usize = 4;
+
+    // a clean slate in case the harness process armed anything earlier
+    failpoint::disarm_all();
+    failpoint::set_seed(0xC1A05);
+
+    let mut rng = Pcg64::seeded(0xC1A05);
+    let base = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(DEFAULT_GROUP)));
+    let server = Arc::new(Server::with_backend(
+        base.clone(),
+        ServerOptions {
+            workers: 2,
+            max_batch: 4,
+            batch_window: Duration::from_micros(200),
+            queue_depth: 64,
+            ..Default::default()
+        },
+        backend.clone(),
+    ));
+    for i in 0..n_tenants {
+        let mut ft = (*base).clone();
+        for name in base.config.delta_tensor_names() {
+            let (r, c) = ft.get(&name).shape();
+            ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, &mut rng));
+        }
+        let set = compress_model_deltas(&extract_deltas(&base, &ft), &dq, &BTreeMap::new(), &mut rng);
+        server.register_tenant(&format!("t{i}"), set);
+    }
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions {
+        max_connections: 32,
+        ..Default::default()
+    })?;
+    let addr = gw.local_addr().to_string();
+    let tenants: Vec<String> = (0..n_tenants).map(|i| format!("t{i}")).collect();
+    let lg = |seed: u64| LoadgenOptions {
+        addr: addr.clone(),
+        tenants: tenants.clone(),
+        requests,
+        rps,
+        zipf_s: 1.1,
+        prompt_len: 6,
+        max_tokens: MAX_TOKENS,
+        stream: true,
+        seed,
+        ..Default::default()
+    };
+
+    // phase 1: fault-free baseline
+    let baseline = loadgen::run(&lg(0xBA5E))?;
+
+    // phase 2: faults armed. Both kinds are server-internal, so every
+    // request still gets a well-formed answer: prefill errors surface
+    // as error responses, decode panics are contained per group by the
+    // scheduler's catch_unwind and surface the same way.
+    failpoint::arm("backend.prefill=err(3);backend.decode=panic(2)")?;
+    let fault = loadgen::run(&lg(0xFA17))?;
+
+    // deadline probe: an already-expired TTL must answer `deadline
+    // exceeded` (and free its KV blocks) rather than execute or hang
+    let deadline_probe = 4usize;
+    let mut deadline_expired = 0usize;
+    for _ in 0..deadline_probe {
+        let rx = server
+            .submit_with_ttl("t0", vec![1, 2, 3], MAX_TOKENS, Duration::from_micros(1))
+            .map_err(|e| anyhow::anyhow!("deadline probe submit: {e}"))?;
+        let resp = rx.recv_timeout(Duration::from_secs(30))?;
+        if resp.error.as_deref().is_some_and(|e| e.contains("deadline")) {
+            deadline_expired += 1;
+        }
+    }
+
+    // gateway-write probe: a failed socket write must drop only its
+    // own connection — the worker logs it and serves the next one
+    failpoint::arm("gateway.write=err(2)")?;
+    let (mut gw_dropped, mut gw_ok) = (0usize, 0usize);
+    for _ in 0..6 {
+        let probe = (|| -> Result<u16> {
+            let conn = TcpStream::connect(addr.as_str())?;
+            conn.set_read_timeout(Some(Duration::from_secs(10)))?;
+            let mut w = conn.try_clone()?;
+            write!(w, "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")?;
+            w.flush()?;
+            Ok(read_response(&mut BufReader::new(conn))?.status)
+        })();
+        match probe {
+            Ok(200) => gw_ok += 1,
+            Ok(s) => anyhow::bail!("gateway probe answered {s}"),
+            Err(_) => gw_dropped += 1,
+        }
+    }
+
+    let fault_counts = failpoint::triggered_counts();
+    failpoint::disarm_all();
+
+    // recovery latency: disarm → first clean end-to-end completion
+    let recover_t0 = Instant::now();
+    loop {
+        let rx = server
+            .submit("t0", vec![1, 2, 3], MAX_TOKENS)
+            .map_err(|e| anyhow::anyhow!("recovery submit: {e}"))?;
+        let resp = rx.recv_timeout(Duration::from_secs(30))?;
+        if resp.error.is_none() {
+            break;
+        }
+        anyhow::ensure!(
+            recover_t0.elapsed() < Duration::from_secs(10),
+            "server did not recover within 10s of disarming faults"
+        );
+    }
+    let recovery_latency_ms = recover_t0.elapsed().as_secs_f64() * 1e3;
+
+    // phase 3: recovery throughput must come back to the baseline's
+    let recovery = loadgen::run(&lg(0x2EC0))?;
+    gw.shutdown();
+
+    let wedged = fault.transport_errors + recovery.transport_errors;
+    let recovery_ratio = if baseline.achieved_rps() > 0.0 {
+        recovery.achieved_rps() / baseline.achieved_rps()
+    } else {
+        0.0
+    };
+    let m = &server.metrics;
+    let sched = m.sched.stats();
+    let backend_errors = m.backend_errors.load(std::sync::atomic::Ordering::Relaxed);
+
+    let mut counts = Json::obj();
+    for (name, n) in &fault_counts {
+        counts.set(name.as_str(), *n);
+    }
+    let mut probes = Json::obj();
+    probes
+        .set("deadline_submitted", deadline_probe)
+        .set("deadline_expired", deadline_expired)
+        .set("gateway_write_attempted", 6u64)
+        .set("gateway_write_dropped", gw_dropped)
+        .set("gateway_write_ok", gw_ok);
+    let mut root = Json::obj();
+    root.set("bench", "chaos")
+        .set("schema", 1u64)
+        .set("quick", quick)
+        .set("tenants", n_tenants)
+        .set("requests_per_phase", requests)
+        .set("rps_target", rps)
+        .set("baseline", baseline.to_json())
+        .set("fault", fault.to_json())
+        .set("recovery", recovery.to_json())
+        .set("fault_counts", counts)
+        .set("probes", probes)
+        .set("decode_group_panics_total", sched.decode_group_panics_total)
+        .set("deadline_expired_total", sched.deadline_expired_total)
+        .set("backend_errors", backend_errors)
+        .set("load_retries_total", m.tiers.load_retries.load(std::sync::atomic::Ordering::Relaxed))
+        .set("wedged_requests", wedged)
+        .set("recovery_ratio", recovery_ratio)
+        .set("recovery_latency_ms", recovery_latency_ms);
+    std::fs::write(json_path, root.to_pretty_string())
+        .with_context(|| format!("write {json_path:?}"))?;
+
+    let mut out = format!(
+        "## Chaos — fault injection over {addr}: {n_tenants} tenants, {requests} req/phase\n"
+    );
+    out.push_str("baseline phase:\n");
+    out.push_str(&baseline.render());
+    out.push_str("fault phase (backend.prefill=err(3); backend.decode=panic(2)):\n");
+    out.push_str(&fault.render());
+    out.push_str("recovery phase:\n");
+    out.push_str(&recovery.render());
+    out.push_str(&format!(
+        "faults fired: {:?}; decode-group panics contained: {}; deadline probe: {}/{} expired\n",
+        fault_counts, sched.decode_group_panics_total, deadline_expired, deadline_probe
+    ));
+    out.push_str(&format!(
+        "gateway-write probe: {gw_dropped} dropped / {gw_ok} served of 6 (workers survived)\n"
+    ));
+    out.push_str(&format!(
+        "wedged: {wedged}; recovery ratio {recovery_ratio:.2}; \
+         recovery latency {recovery_latency_ms:.1}ms\n"
+    ));
+    out.push_str(&format!("wrote {}\n", json_path.display()));
+
+    anyhow::ensure!(wedged == 0, "{wedged} requests wedged (no well-formed answer)");
+    anyhow::ensure!(
+        deadline_expired == deadline_probe,
+        "deadline probe: only {deadline_expired}/{deadline_probe} answered deadline exceeded"
+    );
+    anyhow::ensure!(gw_ok >= 4, "gateway workers did not survive injected write failures");
+    anyhow::ensure!(
+        sched.decode_group_panics_total >= 1,
+        "decode panic fault armed but never contained"
+    );
+    Ok(out)
+}

@@ -51,6 +51,11 @@ pub fn run(
         // TTFT, plus a bit-identity check between the two paths
         // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
         "decode" => experiments::decode(backend, Path::new("BENCH_decode.json")),
+        // fault injection end to end: baseline / fault / recovery load
+        // phases plus deadline and gateway-write containment probes —
+        // every injected fault must stay contained (no wedged requests)
+        // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
+        "chaos" => experiments::chaos(backend, Path::new("BENCH_chaos.json")),
         "all" => {
             let mut out = String::new();
             for exp in [

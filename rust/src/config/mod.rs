@@ -258,6 +258,27 @@ pub struct ServeConfig {
     /// every decoding sequence for a full-prompt prefill; chunking
     /// never changes any generated bit.
     pub sched_prefill_chunk: usize,
+    /// Default per-request deadline in ms (`[serve] request_ttl_ms`;
+    /// 0 = none). Requests not finished within the TTL terminate with
+    /// a "deadline exceeded" error frame and free their KV blocks.
+    pub request_ttl_ms: u64,
+    /// In-cycle Disk→Cold load re-attempts after a failure (`[store]
+    /// load_retries`).
+    pub load_retries: u64,
+    /// Backoff in ms before the first load retry, doubling per retry
+    /// and seeding the between-cycle cooldown (`[store]
+    /// load_backoff_ms`).
+    pub load_backoff_ms: u64,
+    /// Consecutive failed hydration cycles before a tenant is
+    /// quarantined (`[store] quarantine_after`; min 1).
+    pub quarantine_after: u64,
+    /// Quarantine probe period in ms (`[store] probe_interval_ms`) —
+    /// how often the loader retries quarantined tenants, and the
+    /// `Retry-After` hint clients see.
+    pub probe_interval_ms: u64,
+    /// Failpoint spec armed at server load (`[serve] failpoints`, same
+    /// grammar as the `DELTADQ_FAILPOINTS` env var). None = no faults.
+    pub failpoints: Option<String>,
 }
 
 impl ServeConfig {
@@ -287,6 +308,12 @@ impl ServeConfig {
             sched_block_size: c.int_or("sched.block_size", 16) as usize,
             sched_max_running: c.int_or("sched.max_running", 0) as usize,
             sched_prefill_chunk: c.int_or("sched.prefill_chunk", 64) as usize,
+            request_ttl_ms: c.int_or("serve.request_ttl_ms", 0) as u64,
+            load_retries: c.int_or("store.load_retries", 2) as u64,
+            load_backoff_ms: c.int_or("store.load_backoff_ms", 50) as u64,
+            quarantine_after: c.int_or("store.quarantine_after", 3) as u64,
+            probe_interval_ms: c.int_or("store.probe_interval_ms", 2000) as u64,
+            failpoints: c.get("serve.failpoints").and_then(|v| v.as_str()).map(str::to_string),
         }
     }
 }
@@ -363,6 +390,29 @@ ratios = [2, 4, 8]
         assert_eq!(sc.sched_block_size, 16);
         assert_eq!(sc.sched_max_running, 0);
         assert_eq!(sc.sched_prefill_chunk, 64);
+        assert_eq!(sc.request_ttl_ms, 0);
+        assert_eq!(sc.load_retries, 2);
+        assert_eq!(sc.load_backoff_ms, 50);
+        assert_eq!(sc.quarantine_after, 3);
+        assert_eq!(sc.probe_interval_ms, 2000);
+        assert_eq!(sc.failpoints, None);
+    }
+
+    #[test]
+    fn serve_config_reads_failure_policy() {
+        let c = Config::parse(
+            "[serve]\nrequest_ttl_ms = 5000\nfailpoints = \"store.shard_read=err(2)\"\n\
+             [store]\nload_retries = 1\nload_backoff_ms = 10\nquarantine_after = 2\n\
+             probe_interval_ms = 100",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert_eq!(sc.request_ttl_ms, 5000);
+        assert_eq!(sc.failpoints.as_deref(), Some("store.shard_read=err(2)"));
+        assert_eq!(sc.load_retries, 1);
+        assert_eq!(sc.load_backoff_ms, 10);
+        assert_eq!(sc.quarantine_after, 2);
+        assert_eq!(sc.probe_interval_ms, 100);
     }
 
     #[test]

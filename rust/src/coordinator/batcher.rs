@@ -26,6 +26,11 @@ pub struct Request {
     pub max_new: usize,
     /// When the request entered the queue.
     pub submitted: Instant,
+    /// Absolute deadline (TTL resolved at submission): past this
+    /// instant the request is terminated with a "deadline exceeded"
+    /// error frame — at admission, or mid-decode with its KV blocks
+    /// freed. `None` = no deadline.
+    pub deadline: Option<Instant>,
     /// Channel(s) the worker answers on — final-only or per-token.
     pub respond: ReplySink,
 }
@@ -109,6 +114,15 @@ pub enum SubmitError {
     Backpressure { tenant: String, depth: usize },
     /// Tenant not registered.
     UnknownTenant(String),
+    /// Tenant quarantined after repeated hydration failures; retried by
+    /// the loader's background probe. Clients should retry after
+    /// `retry_after_s` (the gateway maps this to 503 + `Retry-After`).
+    Quarantined {
+        /// The quarantined tenant.
+        tenant: String,
+        /// Suggested client retry interval, in whole seconds (≥ 1).
+        retry_after_s: u64,
+    },
     /// Batcher shut down.
     Closed,
 }
@@ -120,6 +134,9 @@ impl std::fmt::Display for SubmitError {
                 write!(f, "tenant '{tenant}' queue full (depth {depth})")
             }
             SubmitError::UnknownTenant(t) => write!(f, "unknown tenant '{t}'"),
+            SubmitError::Quarantined { tenant, retry_after_s } => {
+                write!(f, "tenant '{tenant}' quarantined (retry after {retry_after_s}s)")
+            }
             SubmitError::Closed => write!(f, "batcher closed"),
         }
     }
@@ -314,6 +331,7 @@ mod tests {
                 prompt: vec![1, 2, 3],
                 max_new: 4,
                 submitted: Instant::now(),
+                deadline: None,
                 respond: ReplySink::Batch(tx),
             },
             rx,

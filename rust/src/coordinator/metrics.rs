@@ -137,6 +137,9 @@ impl Metrics {
         let completed = self.requests_completed.load(Ordering::Relaxed);
         let batches = self.batches_executed.load(Ordering::Relaxed).max(1);
         o.set("mean_batch_size", completed as f64 / batches as f64);
+        o.set("load_retries_total", self.tiers.load_retries.load(Ordering::Relaxed));
+        o.set("decode_group_panics_total", sched.decode_group_panics_total);
+        o.set("deadline_expired_total", sched.deadline_expired_total);
         o
     }
 }

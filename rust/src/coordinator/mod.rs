@@ -29,7 +29,7 @@ pub mod tenant;
 pub use batcher::{Batcher, ReplySink, Request, Response, StreamEvent, SubmitError};
 pub use metrics::Metrics;
 pub use server::{Server, ServerOptions};
-pub use tenant::{Poke, TenantStore, TenantView, Tier, TierCounters};
+pub use tenant::{Poke, RetryPolicy, TenantStore, TenantView, Tier, TierCounters};
 
 use std::path::Path;
 use std::sync::Arc;
@@ -56,6 +56,11 @@ use crate::tensor::Pcg64;
 /// requested tenants *not* yet in the store are compressed/loaded once
 /// and pushed — so the next launch serves them straight from the store.
 pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
+    if let Some(spec) = &serve.failpoints {
+        // config-armed fault injection ([`crate::util::failpoint`]) —
+        // same grammar as the DELTADQ_FAILPOINTS env var
+        crate::util::failpoint::arm(spec)?;
+    }
     let dir = Path::new(&serve.artifacts_dir);
     let scale_dir = dir.join(&serve.model);
     let base_path = scale_dir.join("base.dqw");
@@ -88,6 +93,17 @@ pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
             })
         } else {
             None
+        },
+        request_ttl: if serve.request_ttl_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(serve.request_ttl_ms))
+        },
+        retry: RetryPolicy {
+            load_retries: serve.load_retries as u32,
+            backoff: Duration::from_millis(serve.load_backoff_ms),
+            quarantine_after: (serve.quarantine_after as u32).max(1),
+            probe_interval: Duration::from_millis(serve.probe_interval_ms.max(1)),
         },
     };
     let backend = crate::runtime::backend_from_name(&serve.backend, serve)?;

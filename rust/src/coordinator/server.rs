@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::{Batcher, ReplySink, Request, Response, StreamEvent, SubmitError};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::tenant::{TenantStore, TenantView, Tier};
+use crate::coordinator::tenant::{RetryPolicy, TenantStore, TenantView, Tier};
 use crate::delta::format::DeltaSet;
 use crate::eval::tasks::vocab;
 use crate::model::weights::ModelWeights;
@@ -49,6 +49,14 @@ pub struct ServerOptions {
     /// the stepping API, e.g. pjrt). Streamed tokens are bit-identical
     /// either way.
     pub sched: Option<SchedOptions>,
+    /// Default per-request deadline (TTL): a request not finished this
+    /// long after submission is terminated with a "deadline exceeded"
+    /// error frame and its KV blocks freed. `None` = no deadline unless
+    /// the caller passes one per request.
+    pub request_ttl: Option<Duration>,
+    /// Disk→Cold hydration retry/backoff/quarantine policy (only
+    /// meaningful with an attached delta store).
+    pub retry: RetryPolicy,
 }
 
 impl Default for ServerOptions {
@@ -62,6 +70,8 @@ impl Default for ServerOptions {
             delta_budget: None,
             promote_after: 8,
             sched: Some(SchedOptions::default()),
+            request_ttl: None,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -79,6 +89,8 @@ pub struct Server {
     /// Whether the continuous-batching scheduler (vs the legacy
     /// run-to-completion worker pool) drives execution.
     sched_active: bool,
+    /// Default per-request TTL applied when the caller passes none.
+    request_ttl: Option<Duration>,
 }
 
 impl Server {
@@ -113,12 +125,13 @@ impl Server {
         backend: Arc<dyn ExecutionBackend>,
         delta_store: Arc<DeltaStore>,
     ) -> Result<Server> {
-        let store = Arc::new(TenantStore::with_disk(
+        let store = Arc::new(TenantStore::with_disk_retry(
             base,
             options.cache_budget,
             options.delta_budget,
             options.promote_after,
             delta_store.clone(),
+            options.retry.clone(),
         ));
         let server = Server::over_store(store, options, backend);
         for tenant in delta_store.tenants() {
@@ -188,6 +201,7 @@ impl Server {
             next_id: AtomicU64::new(1),
             backend,
             sched_active,
+            request_ttl: options.request_ttl,
         }
     }
 
@@ -231,7 +245,21 @@ impl Server {
         max_new: usize,
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
         let (tx, rx) = mpsc::channel();
-        self.submit_with_sink(tenant, prompt, max_new, ReplySink::Batch(tx))?;
+        self.submit_with_sink(tenant, prompt, max_new, None, ReplySink::Batch(tx))?;
+        Ok(rx)
+    }
+
+    /// As [`Server::submit`] with an explicit per-request TTL that
+    /// overrides the server-wide `request_ttl` default.
+    pub fn submit_with_ttl(
+        &self,
+        tenant: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        ttl: Duration,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with_sink(tenant, prompt, max_new, Some(ttl), ReplySink::Batch(tx))?;
         Ok(rx)
     }
 
@@ -247,7 +275,21 @@ impl Server {
         max_new: usize,
     ) -> Result<mpsc::Receiver<StreamEvent>, SubmitError> {
         let (tx, rx) = mpsc::channel();
-        self.submit_with_sink(tenant, prompt, max_new, ReplySink::Stream(tx))?;
+        self.submit_with_sink(tenant, prompt, max_new, None, ReplySink::Stream(tx))?;
+        Ok(rx)
+    }
+
+    /// As [`Server::submit_stream`] with an explicit per-request TTL
+    /// that overrides the server-wide `request_ttl` default.
+    pub fn submit_stream_with_ttl(
+        &self,
+        tenant: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        ttl: Duration,
+    ) -> Result<mpsc::Receiver<StreamEvent>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with_sink(tenant, prompt, max_new, Some(ttl), ReplySink::Stream(tx))?;
         Ok(rx)
     }
 
@@ -256,15 +298,29 @@ impl Server {
         tenant: &str,
         prompt: Vec<u32>,
         max_new: usize,
+        ttl: Option<Duration>,
         respond: ReplySink,
     ) -> Result<(), SubmitError> {
+        // quarantined tenants are rejected at submission so request
+        // threads never queue work behind (or re-trigger) a failing
+        // hydration — clients get the retry-after hint instead
+        if let Some(retry_after) = self.store.quarantined(tenant) {
+            self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+            self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Quarantined {
+                tenant: tenant.to_string(),
+                retry_after_s: retry_after.as_secs().max(1),
+            });
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let submitted = Instant::now();
         let req = Request {
             id,
             tenant: tenant.to_string(),
             prompt,
             max_new,
-            submitted: Instant::now(),
+            submitted,
+            deadline: ttl.or(self.request_ttl).map(|t| submitted + t),
             respond,
         };
         self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
@@ -306,6 +362,17 @@ impl Server {
     /// run-to-completion worker pool drives execution.
     pub fn sched_stats(&self) -> Option<SchedStats> {
         self.sched_active.then(|| self.metrics.sched.stats())
+    }
+
+    /// Number of quarantined tenants (the `deltadq_tenant_quarantined`
+    /// metrics gauge).
+    pub fn quarantined_count(&self) -> usize {
+        self.store.quarantined_count()
+    }
+
+    /// If `tenant` is quarantined, the suggested client retry interval.
+    pub fn quarantined(&self, tenant: &str) -> Option<Duration> {
+        self.store.quarantined(tenant)
     }
 
     /// Residency snapshot (tenant, hot?, requests served).
@@ -362,6 +429,24 @@ fn worker_loop(
         metrics.evictions.fetch_add(acquired.evicted as u64, Ordering::Relaxed);
         let served_hot = matches!(acquired.view, TenantView::Hot(_));
         for req in batch {
+            // deadline check before execution (the legacy loop cannot
+            // interrupt a running generation, so expiry is only
+            // enforced between requests here — the scheduler path
+            // enforces it per iteration)
+            if req.deadline.is_some_and(|d| Instant::now() >= d) {
+                metrics.sched.deadline_expired_total.fetch_add(1, Ordering::Relaxed);
+                metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                req.respond.send_done(Response {
+                    id: req.id,
+                    tenant: tenant.clone(),
+                    tokens: Vec::new(),
+                    queue_wait: exec_start.duration_since(req.submitted),
+                    total: req.submitted.elapsed(),
+                    served_hot: false,
+                    error: Some("deadline exceeded".to_string()),
+                });
+                continue;
+            }
             let queue_wait = exec_start.duration_since(req.submitted);
             metrics.observe_queue_wait(queue_wait.as_secs_f64());
             // tokens flow to streaming sinks as they decode (batch

@@ -24,6 +24,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -53,6 +54,41 @@ pub struct TierCounters {
     pub demotions: AtomicU64,
     /// Shard payload bytes read from the store.
     pub store_bytes_read: AtomicU64,
+    /// Hydration load attempts retried after a failure (in-cycle
+    /// backoff retries on the loader thread).
+    pub load_retries: AtomicU64,
+}
+
+/// Disk→Cold load-failure containment policy: bounded in-cycle retries
+/// with exponential backoff, a cooldown between failed cycles so
+/// request threads can never hot-loop a dead artifact, and a per-tenant
+/// quarantine (probed by the loader thread, not request threads) once
+/// failures persist.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first failed load within one hydration
+    /// cycle (exponential backoff between attempts).
+    pub load_retries: u32,
+    /// Backoff before the first in-cycle retry; doubles per retry, and
+    /// seeds the between-cycle cooldown (doubling per failed cycle).
+    pub backoff: Duration,
+    /// Consecutive failed hydration cycles before the tenant is
+    /// quarantined.
+    pub quarantine_after: u32,
+    /// How often the loader thread probes quarantined tenants (also the
+    /// `Retry-After` hint surfaced to clients).
+    pub probe_interval: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            load_retries: 2,
+            backoff: Duration::from_millis(50),
+            quarantine_after: 3,
+            probe_interval: Duration::from_secs(2),
+        }
+    }
 }
 
 /// Execution view handed to a worker: everything needed to run one
@@ -65,6 +101,30 @@ pub enum TenantView {
     Cold(Arc<DeltaSet>),
 }
 
+/// Per-slot load-failure containment state (guarded by the slots
+/// lock). This replaces the old consumed-by-one-waiter `failed` flag,
+/// which made a dead artifact immediately retriable by every next
+/// request — a hot retry storm from request threads.
+#[derive(Debug, Default)]
+struct SlotHealth {
+    /// Consecutive failed hydration cycles (one cycle = a loader
+    /// attempt including its bounded in-cycle retries). Reset to 0 by
+    /// any successful load or a fresh `push`/`register`.
+    fail_cycles: u32,
+    /// Quarantined: request threads never trigger loads; only the
+    /// loader thread's background probe retries, and clients see
+    /// 503 + `Retry-After` at the gateway.
+    quarantined: bool,
+    /// Cooldown gate: no new hydration cycle may start before this.
+    retry_at: Option<Instant>,
+}
+
+impl SlotHealth {
+    fn in_cooldown(&self, now: Instant) -> bool {
+        self.retry_at.is_some_and(|t| t > now)
+    }
+}
+
 struct TenantSlot {
     /// `None` = Disk tier (hydrated on demand; requires `on_disk`).
     deltas: Option<Arc<DeltaSet>>,
@@ -73,10 +133,8 @@ struct TenantSlot {
     on_disk: bool,
     /// A hydration request is queued or in flight.
     loading: bool,
-    /// The last hydration attempt errored (consumed by one waiter, so a
-    /// mere demotion between hydration and wake-up reads as "retry",
-    /// not "failed").
-    failed: bool,
+    /// Load-failure containment state (backoff cooldown + quarantine).
+    health: SlotHealth,
     last_used: u64,
     requests: u64,
 }
@@ -117,6 +175,8 @@ struct Shared {
     promote_after: u64,
     store: Option<Arc<DeltaStore>>,
     tiers: Arc<TierCounters>,
+    /// Hydration retry/backoff/quarantine policy.
+    retry: RetryPolicy,
 }
 
 /// Thread-safe tenant store with tiered residency and byte budgets.
@@ -146,9 +206,14 @@ pub enum Poke {
     Ready,
     /// On Disk with a hydration queued/in flight — check back later.
     Pending,
-    /// Unknown tenant, or the last hydration attempt failed (consumed:
-    /// the next probe retries).
+    /// Unknown tenant, or a failed hydration cooling down — requests
+    /// answer unavailable *without* re-arming the loader; the cooldown
+    /// (not the next request) decides when hydration is retried.
     Missing,
+    /// Quarantined after repeated failed hydration cycles: only the
+    /// loader thread's background probe retries; the gateway answers
+    /// 503 + `Retry-After`.
+    Quarantined,
 }
 
 impl TenantStore {
@@ -159,7 +224,7 @@ impl TenantStore {
         cache_budget: Option<u64>,
         promote_after: u64,
     ) -> TenantStore {
-        TenantStore::build(base, cache_budget, None, promote_after, None)
+        TenantStore::build(base, cache_budget, None, promote_after, None, RetryPolicy::default())
     }
 
     /// Tiered store over an on-disk [`DeltaStore`]: tenants hydrate
@@ -172,7 +237,27 @@ impl TenantStore {
         promote_after: u64,
         store: Arc<DeltaStore>,
     ) -> TenantStore {
-        TenantStore::build(base, cache_budget, delta_budget, promote_after, Some(store))
+        TenantStore::build(
+            base,
+            cache_budget,
+            delta_budget,
+            promote_after,
+            Some(store),
+            RetryPolicy::default(),
+        )
+    }
+
+    /// As [`with_disk`](TenantStore::with_disk) with an explicit
+    /// hydration retry/backoff/quarantine policy.
+    pub fn with_disk_retry(
+        base: Arc<ModelWeights>,
+        cache_budget: Option<u64>,
+        delta_budget: Option<u64>,
+        promote_after: u64,
+        store: Arc<DeltaStore>,
+        retry: RetryPolicy,
+    ) -> TenantStore {
+        TenantStore::build(base, cache_budget, delta_budget, promote_after, Some(store), retry)
     }
 
     fn build(
@@ -181,6 +266,7 @@ impl TenantStore {
         delta_budget: Option<u64>,
         promote_after: u64,
         store: Option<Arc<DeltaStore>>,
+        retry: RetryPolicy,
     ) -> TenantStore {
         let shared = Arc::new(Shared {
             base,
@@ -192,6 +278,7 @@ impl TenantStore {
             promote_after,
             store,
             tiers: Arc::new(TierCounters::default()),
+            retry,
         });
         let (loader_tx, loader_handle) = match &shared.store {
             Some(_) => {
@@ -235,7 +322,7 @@ impl TenantStore {
                 dense: None,
                 on_disk: false,
                 loading: false,
-                failed: false,
+                health: SlotHealth::default(),
                 last_used: clock,
                 requests: 0,
             },
@@ -260,7 +347,7 @@ impl TenantStore {
                 dense: None,
                 on_disk: true,
                 loading: false,
-                failed: false,
+                health: SlotHealth::default(),
                 last_used: clock,
                 requests: 0,
             },
@@ -286,7 +373,7 @@ impl TenantStore {
                 dense: None,
                 on_disk: true,
                 loading: false,
-                failed: false,
+                health: SlotHealth::default(),
                 last_used: clock,
                 requests: 0,
             },
@@ -356,29 +443,34 @@ impl TenantStore {
         if slot.dense.is_some() || slot.deltas.is_some() {
             return Poke::Ready;
         }
-        if slot.failed {
-            // consumed, like acquire(): the caller answers unavailable
-            // and the next request retries the hydration
-            slot.failed = false;
-            return Poke::Missing;
+        if slot.health.quarantined {
+            return Poke::Quarantined;
         }
         if !slot.on_disk {
             return Poke::Missing; // unreachable: memory slots always hold deltas
         }
-        if !slot.loading {
-            slot.loading = true;
-            if self.send_loader(LoaderMsg::Hydrate(tenant.to_string())).is_none() {
-                slot.loading = false;
-                return Poke::Missing; // loader gone (shutdown)
-            }
+        if slot.loading {
+            return Poke::Pending;
+        }
+        if slot.health.in_cooldown(Instant::now()) {
+            // Failed recently: answer unavailable *without* re-arming the
+            // loader. The cooldown expiring — not request pressure —
+            // decides when the next hydration cycle starts.
+            return Poke::Missing;
+        }
+        slot.loading = true;
+        if self.send_loader(LoaderMsg::Hydrate(tenant.to_string())).is_none() {
+            slot.loading = false;
+            return Poke::Missing; // loader gone (shutdown)
         }
         Poke::Pending
     }
 
     /// Acquire an execution view for `batch_size` requests, applying
     /// the hydration + promotion policies. Returns `None` for unknown
-    /// tenants and for tenants whose hydration failed (the next request
-    /// retries).
+    /// tenants and for tenants whose hydration failed (retried by the
+    /// loader after the backoff cooldown, or by the background probe
+    /// once quarantined — never by request threads).
     pub fn acquire(&self, tenant: &str, batch_size: u64) -> Option<Acquired> {
         let clock = self.shared.clock.fetch_add(1, Ordering::Relaxed);
         let mut slots = self.shared.slots.lock().unwrap();
@@ -399,12 +491,12 @@ impl TenantStore {
             }
             // Disk tier: queue a hydration (once) and wait for the
             // loader; other workers keep serving resident tenants. A
-            // failed attempt is consumed by exactly one waiter (the
-            // rest retry), so a demotion racing the wake-up is a retry,
-            // never a dropped request.
-            if slot.failed {
-                slot.failed = false;
-                return None; // hydration failed; error already logged
+            // failed cycle parks the slot in cooldown (or quarantine),
+            // so every waiter — and every subsequent request until the
+            // cooldown expires — answers unavailable instead of
+            // re-arming the loader in a hot retry storm.
+            if slot.health.quarantined || slot.health.in_cooldown(Instant::now()) {
+                return None; // hydration failing; error already logged
             }
             if !slot.loading {
                 if !slot.on_disk {
@@ -461,6 +553,19 @@ impl TenantStore {
             slot.dense = Some(dense.clone());
         }
         Some(Acquired { view: TenantView::Hot(dense), promoted: true, evicted, hydrated })
+    }
+
+    /// Number of quarantined tenants (the `deltadq_tenant_quarantined`
+    /// metrics gauge).
+    pub fn quarantined_count(&self) -> usize {
+        self.shared.slots.lock().unwrap().values().filter(|s| s.health.quarantined).count()
+    }
+
+    /// If `tenant` is quarantined, the suggested client retry interval
+    /// (the background probe period, surfaced as `Retry-After`).
+    pub fn quarantined(&self, tenant: &str) -> Option<Duration> {
+        let slots = self.shared.slots.lock().unwrap();
+        slots.get(tenant).filter(|s| s.health.quarantined).map(|_| self.shared.retry.probe_interval)
     }
 
     /// Residency snapshot for reporting: (tenant, hot?, requests).
@@ -527,59 +632,142 @@ fn enforce_delta_budget(
     }
 }
 
-/// The background loader/evictor: hydrates Disk→Cold on request and
-/// applies `delta_budget` demotion after each hydration. All file I/O
-/// happens with no slot lock held.
+/// The background loader/evictor: hydrates Disk→Cold on request (with
+/// bounded in-cycle retries), applies `delta_budget` demotion after
+/// each hydration, and — between messages — probes quarantined tenants
+/// every `retry.probe_interval`. All file I/O happens with no slot
+/// lock held.
 fn loader_loop(shared: &Shared, rx: &mpsc::Receiver<LoaderMsg>) {
     let Some(store) = shared.store.as_ref() else {
         return; // never spawned without a store
     };
-    while let Ok(msg) = rx.recv() {
-        let tenant = match msg {
-            LoaderMsg::Shutdown => return,
-            LoaderMsg::Hydrate(t) => t,
-        };
-        let needed = {
-            let slots = shared.slots.lock().unwrap();
-            matches!(slots.get(&tenant), Some(s) if s.deltas.is_none() && s.dense.is_none())
-        };
-        if !needed {
-            // slot vanished or was re-registered resident meanwhile
-            let mut slots = shared.slots.lock().unwrap();
-            if let Some(slot) = slots.get_mut(&tenant) {
-                slot.loading = false;
+    loop {
+        let tenant = match rx.recv_timeout(shared.retry.probe_interval) {
+            Ok(LoaderMsg::Shutdown) => return,
+            Ok(LoaderMsg::Hydrate(t)) => t,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                probe_quarantined(shared, store);
+                continue;
             }
-            drop(slots);
-            shared.cv.notify_all();
-            continue;
-        }
-        let disk_bytes = store.tenant_info(&tenant).map(|r| r.bytes).unwrap_or(0);
-        let loaded = store.load(&tenant); // file I/O — no lock held
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        hydrate_one(shared, store, &tenant);
+    }
+}
+
+/// One hydration cycle for `tenant`: bounded retries with exponential
+/// backoff around the store load, then install-or-contain under the
+/// slots lock. Runs on the loader thread only (hydration requests and
+/// quarantine probes both funnel here).
+fn hydrate_one(shared: &Shared, store: &DeltaStore, tenant: &str) {
+    let needed = {
+        let slots = shared.slots.lock().unwrap();
+        matches!(slots.get(tenant), Some(s) if s.deltas.is_none() && s.dense.is_none())
+    };
+    if !needed {
+        // slot vanished or was re-registered resident meanwhile
         let mut slots = shared.slots.lock().unwrap();
-        // install only into a slot that still wants THIS hydration: a
-        // concurrent push() may have replaced the slot with a fresh
-        // resident artifact (loading = false), which must neither be
-        // clobbered with the stale load nor marked failed by it.
-        match (slots.get_mut(&tenant), loaded) {
-            (Some(slot), Ok(set)) if slot.loading && slot.deltas.is_none() => {
-                slot.deltas = Some(Arc::new(set));
-                slot.loading = false;
-                shared.tiers.disk_loads.fetch_add(1, Ordering::Relaxed);
-                shared.tiers.store_bytes_read.fetch_add(disk_bytes, Ordering::Relaxed);
-                enforce_delta_budget(shared, &mut slots, &tenant);
-            }
-            (Some(slot), Err(e)) if slot.loading && slot.deltas.is_none() => {
-                slot.loading = false;
-                slot.failed = true;
-                eprintln!("delta store: hydrating tenant '{tenant}' failed: {e:#}");
-            }
-            (Some(slot), _) => {
-                slot.loading = false; // superseded by a racing register/push
-            }
-            (None, _) => {} // removed while loading
+        if let Some(slot) = slots.get_mut(tenant) {
+            slot.loading = false;
         }
         drop(slots);
         shared.cv.notify_all();
+        return;
+    }
+    let disk_bytes = store.tenant_info(tenant).map(|r| r.bytes).unwrap_or(0);
+    let loaded = load_with_retries(shared, store, tenant); // file I/O — no lock held
+    let mut slots = shared.slots.lock().unwrap();
+    // install only into a slot that still wants THIS hydration: a
+    // concurrent push() may have replaced the slot with a fresh
+    // resident artifact (loading = false), which must neither be
+    // clobbered with the stale load nor marked failed by it.
+    match (slots.get_mut(tenant), loaded) {
+        (Some(slot), Ok(set)) if slot.loading && slot.deltas.is_none() => {
+            slot.deltas = Some(Arc::new(set));
+            slot.loading = false;
+            slot.health = SlotHealth::default(); // served again: forgiven
+            shared.tiers.disk_loads.fetch_add(1, Ordering::Relaxed);
+            shared.tiers.store_bytes_read.fetch_add(disk_bytes, Ordering::Relaxed);
+            enforce_delta_budget(shared, &mut slots, tenant);
+        }
+        (Some(slot), Err(e)) if slot.loading && slot.deltas.is_none() => {
+            slot.loading = false;
+            slot.health.fail_cycles += 1;
+            if slot.health.fail_cycles >= shared.retry.quarantine_after {
+                slot.health.quarantined = true;
+                slot.health.retry_at = Some(Instant::now() + shared.retry.probe_interval);
+                eprintln!(
+                    "delta store: quarantining tenant '{tenant}' after {} failed \
+                     hydration cycles: {e:#}",
+                    slot.health.fail_cycles
+                );
+            } else {
+                // between-cycle cooldown, doubling per failed cycle
+                let factor = 2u32.saturating_pow(slot.health.fail_cycles.min(10));
+                slot.health.retry_at = Some(Instant::now() + shared.retry.backoff * factor);
+                eprintln!("delta store: hydrating tenant '{tenant}' failed: {e:#}");
+            }
+        }
+        (Some(slot), _) => {
+            slot.loading = false; // superseded by a racing register/push
+        }
+        (None, _) => {} // removed while loading
+    }
+    drop(slots);
+    shared.cv.notify_all();
+}
+
+/// `store.load` wrapped in the in-cycle retry policy: up to
+/// `retry.load_retries` re-attempts with doubling backoff, each retry
+/// counted in [`TierCounters::load_retries`]. The `tenant.hydrate`
+/// failpoint guards every attempt so chaos runs can inject transient
+/// (retryable) and persistent (quarantining) load failures.
+fn load_with_retries(shared: &Shared, store: &DeltaStore, tenant: &str) -> Result<DeltaSet> {
+    let attempt =
+        || crate::util::failpoint::hit("tenant.hydrate").and_then(|()| store.load(tenant));
+    let mut last = match attempt() {
+        Ok(set) => return Ok(set),
+        Err(e) => e,
+    };
+    let mut backoff = shared.retry.backoff;
+    for _ in 0..shared.retry.load_retries {
+        std::thread::sleep(backoff);
+        backoff *= 2;
+        shared.tiers.load_retries.fetch_add(1, Ordering::Relaxed);
+        match attempt() {
+            Ok(set) => return Ok(set),
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+/// Retry quarantined tenants from the loader thread — never from
+/// request threads. Each tenant whose `retry_at` has passed gets one
+/// fresh hydration cycle; success clears the quarantine, failure
+/// re-arms `retry_at` for the next probe.
+fn probe_quarantined(shared: &Shared, store: &DeltaStore) {
+    let now = Instant::now();
+    let due: Vec<String> = {
+        let mut slots = shared.slots.lock().unwrap();
+        let due: Vec<String> = slots
+            .iter()
+            .filter(|(_, s)| {
+                s.health.quarantined
+                    && !s.loading
+                    && s.deltas.is_none()
+                    && s.dense.is_none()
+                    && !s.health.in_cooldown(now)
+            })
+            .map(|(id, _)| id.clone())
+            .collect();
+        for id in &due {
+            slots.get_mut(id).expect("key from this map").loading = true;
+        }
+        due
+    };
+    for tenant in due {
+        hydrate_one(shared, store, &tenant);
     }
 }
 
@@ -854,5 +1042,67 @@ mod tests {
         // the slot survives; a later push makes the tenant servable again
         store.push("t", deltas(21)).unwrap();
         assert!(store.acquire("t", 1).is_some());
+    }
+
+    /// Full containment lifecycle: failed cycles → cooldown (requests
+    /// do NOT re-arm the loader) → quarantine → background probe heals
+    /// the tenant once the artifact is restored.
+    #[test]
+    fn repeated_failures_quarantine_and_probe_heals() {
+        let disk = tmp_store("quarantine");
+        let retry = RetryPolicy {
+            load_retries: 0,
+            backoff: Duration::from_millis(100),
+            quarantine_after: 2,
+            probe_interval: Duration::from_millis(50),
+        };
+        let store = TenantStore::with_disk_retry(base(), None, None, u64::MAX, disk.clone(), retry);
+        disk.push("t", &deltas(22)).unwrap();
+        store.register_disk("t").unwrap();
+        // destroy the artifact behind the manifest's back, keeping the
+        // bytes around so the probe can heal it later
+        let info = disk.tenant_info("t").unwrap();
+        let saved: Vec<(std::path::PathBuf, Vec<u8>)> = info
+            .shards
+            .iter()
+            .map(|rel| {
+                let path = disk.root().join(rel);
+                let bytes = std::fs::read(&path).unwrap();
+                std::fs::remove_file(&path).unwrap();
+                (path, bytes)
+            })
+            .collect();
+
+        // cycle 1: fails → cooldown; waiters answer unavailable
+        assert!(store.acquire("t", 1).is_none());
+        assert_eq!(store.poke("t"), Poke::Missing, "cooldown: poke must not re-arm the loader");
+        assert_eq!(store.quarantined_count(), 0);
+
+        // cycle 2 (after cooldown): fails → quarantined
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while store.quarantined_count() == 0 {
+            assert!(Instant::now() < deadline, "never quarantined");
+            let _ = store.acquire("t", 1); // None until quarantine engages
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(store.poke("t"), Poke::Quarantined);
+        assert!(store.quarantined("t").is_some(), "retry-after hint exposed");
+        assert!(store.acquire("t", 1).is_none(), "quarantined: no request-thread loads");
+
+        // restore the artifact; the loader's probe — not a request —
+        // brings the tenant back
+        for (path, bytes) in &saved {
+            std::fs::write(path, bytes).unwrap();
+        }
+        while store.poke("t") != Poke::Ready {
+            assert!(Instant::now() < deadline, "probe never healed the tenant");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(store.quarantined_count(), 0);
+        assert!(store.acquire("t", 1).is_some(), "serves again after the probe clears it");
+        assert!(
+            store.tiers().load_retries.load(Ordering::Relaxed) == 0,
+            "load_retries counts in-cycle retries only (policy had none)"
+        );
     }
 }

@@ -263,6 +263,9 @@ fn serve_connection(shared: &Shared, stream: TcpStream) -> Result<()> {
         // about to perform, so keep-alive clients don't fire a next
         // request into a dead socket
         let draining = shared.closing.load(Ordering::Acquire);
+        // fault injection: a failed socket write mid-exchange closes
+        // only this connection (connection_worker logs and moves on)
+        crate::util::failpoint::hit("gateway.write")?;
         let keep = routes::handle(&shared.server, &req, &mut writer, draining)?;
         writer.flush()?;
         if !keep {

@@ -61,11 +61,27 @@ pub fn handle(
 pub fn error_response(w: &mut impl Write, status: u16, msg: &str, keep: bool) -> Result<()> {
     let mut o = Json::obj();
     o.set("error", msg);
-    let extra: &[(&str, &str)] = if status == 429 { RETRY_AFTER_HEADER } else { &[] };
+    let extra: &[(&str, &str)] =
+        if status == 429 || status == 503 { RETRY_AFTER_HEADER } else { &[] };
     write_response(w, status, CT_JSON, o.to_string().as_bytes(), keep, extra)
 }
 
 const RETRY_AFTER_HEADER: &[(&str, &str)] = &[("Retry-After", "1")];
+
+/// Answer a [`SubmitError`] with its mapped status; a quarantined
+/// tenant's 503 carries the actual probe interval as `Retry-After`
+/// instead of the generic 1-second hint.
+fn submit_error_response(w: &mut impl Write, e: &SubmitError, keep: bool) -> Result<()> {
+    let (status, msg) = submit_error_status(e);
+    if let SubmitError::Quarantined { retry_after_s, .. } = e {
+        let secs = retry_after_s.to_string();
+        let mut o = Json::obj();
+        o.set("error", msg.as_str());
+        let headers: [(&str, &str); 1] = [("Retry-After", secs.as_str())];
+        return write_response(w, status, CT_JSON, o.to_string().as_bytes(), keep, &headers);
+    }
+    error_response(w, status, &msg, keep)
+}
 
 /// The JSON body shared by the non-streaming response and the SSE
 /// `done` frame.
@@ -90,6 +106,9 @@ struct CompletionParams {
     prompt: Vec<u32>,
     max_tokens: usize,
     stream: bool,
+    /// Per-request deadline (optional `ttl_ms` body field); overrides
+    /// the server-wide `request_ttl` default.
+    ttl: Option<Duration>,
 }
 
 fn parse_params(body: &[u8]) -> Result<CompletionParams, String> {
@@ -117,7 +136,17 @@ fn parse_params(body: &[u8]) -> Result<CompletionParams, String> {
         Some(v) => v.as_bool().ok_or("'stream' must be a boolean")?,
         None => false,
     };
-    Ok(CompletionParams { tenant, prompt, max_tokens, stream })
+    let ttl = match j.get("ttl_ms") {
+        Some(v) => {
+            let ms = v.as_u64().ok_or("'ttl_ms' must be a positive integer")?;
+            if ms == 0 {
+                return Err("'ttl_ms' must be a positive integer".to_string());
+            }
+            Some(Duration::from_millis(ms))
+        }
+        None => None,
+    };
+    Ok(CompletionParams { tenant, prompt, max_tokens, stream, ttl })
 }
 
 fn submit_error_status(e: &SubmitError) -> (u16, String) {
@@ -127,6 +156,10 @@ fn submit_error_status(e: &SubmitError) -> (u16, String) {
             format!("tenant '{tenant}' queue full (depth {depth}); retry after backoff"),
         ),
         SubmitError::UnknownTenant(t) => (404, format!("unknown tenant '{t}'")),
+        SubmitError::Quarantined { tenant, retry_after_s } => (
+            503,
+            format!("tenant '{tenant}' quarantined; retry after {retry_after_s}s"),
+        ),
         SubmitError::Closed => (503, "server is shutting down".to_string()),
     }
 }
@@ -170,11 +203,16 @@ fn completions_batch(
     w: &mut impl Write,
     keep: bool,
 ) -> Result<bool> {
-    let rx = match server.submit(&params.tenant, params.prompt, params.max_tokens) {
+    let submitted = match params.ttl {
+        Some(ttl) => {
+            server.submit_with_ttl(&params.tenant, params.prompt, params.max_tokens, ttl)
+        }
+        None => server.submit(&params.tenant, params.prompt, params.max_tokens),
+    };
+    let rx = match submitted {
         Ok(rx) => rx,
         Err(e) => {
-            let (status, msg) = submit_error_status(&e);
-            error_response(w, status, &msg, keep)?;
+            submit_error_response(w, &e, keep)?;
             return Ok(keep);
         }
     };
@@ -202,13 +240,18 @@ fn completions_stream(
     w: &mut impl Write,
     keep: bool,
 ) -> Result<bool> {
-    let rx = match server.submit_stream(&params.tenant, params.prompt, params.max_tokens) {
+    let submitted = match params.ttl {
+        Some(ttl) => {
+            server.submit_stream_with_ttl(&params.tenant, params.prompt, params.max_tokens, ttl)
+        }
+        None => server.submit_stream(&params.tenant, params.prompt, params.max_tokens),
+    };
+    let rx = match submitted {
         Ok(rx) => rx,
         Err(e) => {
             // nothing streamed yet — a plain status response is still
-            // possible (this is where the 429/Retry-After surfaces)
-            let (status, msg) = submit_error_status(&e);
-            error_response(w, status, &msg, keep)?;
+            // possible (this is where the 429/503 + Retry-After surfaces)
+            submit_error_response(w, &e, keep)?;
             return Ok(keep);
         }
     };
@@ -325,6 +368,21 @@ pub fn render_prometheus(server: &Server) -> String {
         "Sequences cancelled after their streaming client disconnected.",
         sched.cancelled_total,
     );
+    counter(
+        "load_retries_total",
+        "Disk→Cold hydration attempts retried after a transient failure.",
+        m.tiers.load_retries.load(Ordering::Relaxed),
+    );
+    counter(
+        "decode_group_panics_total",
+        "Decode groups whose backend call panicked (contained per group).",
+        sched.decode_group_panics_total,
+    );
+    counter(
+        "deadline_expired_total",
+        "Requests answered with a deadline-exceeded error.",
+        sched.deadline_expired_total,
+    );
 
     let mut gauge = |name: &str, help: &str, value: f64| {
         let _ = writeln!(out, "# HELP deltadq_{name} {help}");
@@ -350,6 +408,11 @@ pub fn render_prometheus(server: &Server) -> String {
         "sched_waiting_sequences",
         "Requests waiting for admission (queued + preempted).",
         sched.waiting as f64,
+    );
+    gauge(
+        "tenant_quarantined",
+        "Tenants currently quarantined after repeated hydration failures.",
+        server.quarantined_count() as f64,
     );
 
     let _ = writeln!(out, "# HELP deltadq_kv_pool_blocks Paged KV-cache block pool occupancy.");
@@ -438,6 +501,23 @@ mod tests {
         assert_eq!(s, 404);
         let (s, _) = submit_error_status(&SubmitError::Closed);
         assert_eq!(s, 503);
+        let (s, msg) = submit_error_status(&SubmitError::Quarantined {
+            tenant: "q".into(),
+            retry_after_s: 2,
+        });
+        assert_eq!(s, 503);
+        assert!(msg.contains("quarantined"));
+        assert!(msg.contains("2s"));
+    }
+
+    #[test]
+    fn ttl_ms_parses_and_validates() {
+        let p = parse_params(br#"{"tenant":"t","prompt":[1],"ttl_ms":250}"#).unwrap();
+        assert_eq!(p.ttl, Some(Duration::from_millis(250)));
+        let none = parse_params(br#"{"tenant":"t","prompt":[1]}"#).unwrap();
+        assert_eq!(none.ttl, None);
+        assert!(parse_params(br#"{"tenant":"t","prompt":[1],"ttl_ms":0}"#).is_err());
+        assert!(parse_params(br#"{"tenant":"t","prompt":[1],"ttl_ms":"soon"}"#).is_err());
     }
 
     #[test]

@@ -167,10 +167,10 @@ fn print_usage() {
            ls        --store DIR\n\
            bench     --name table1|table2|table3|table4|fig4|fig5|fig6|\n\
                      fig7|fig8|ablations|serving|kernels|churn|gateway|\n\
-                     decode\n\
+                     decode|chaos\n\
                      [--models DIR] [--out FILE] [--backend native|pjrt]\n\
                      [--fused-threads N] [--artifacts DIR]\n\
-                     (kernels/churn/gateway/decode write\n\
+                     (kernels/churn/gateway/decode/chaos write\n\
                      BENCH_<name>.json; set DELTADQ_BENCH_QUICK=1 for\n\
                      the CI-sized run)"
     );

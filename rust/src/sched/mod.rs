@@ -128,6 +128,12 @@ pub struct SchedCounters {
     pub decode_lanes_total: AtomicU64,
     /// Bounded prefill chunks executed (one backend call each).
     pub prefill_chunks_total: AtomicU64,
+    /// Requests terminated because their deadline (TTL) expired —
+    /// at admission or mid-decode; KV blocks were freed either way.
+    pub deadline_expired_total: AtomicU64,
+    /// Decode groups whose backend call panicked and was contained by
+    /// `catch_unwind` (only that group's sequences got error frames).
+    pub decode_group_panics_total: AtomicU64,
     /// Per-step batch occupancy (running sequences per iteration).
     occupancy: Mutex<LatencyHistogram>,
     /// Per-group lane count of every batched decode group executed.
@@ -169,6 +175,8 @@ impl SchedCounters {
             decode_groups_total: self.decode_groups_total.load(Ordering::Relaxed),
             decode_lanes_total: self.decode_lanes_total.load(Ordering::Relaxed),
             prefill_chunks_total: self.prefill_chunks_total.load(Ordering::Relaxed),
+            deadline_expired_total: self.deadline_expired_total.load(Ordering::Relaxed),
+            decode_group_panics_total: self.decode_group_panics_total.load(Ordering::Relaxed),
         }
     }
 }
@@ -198,4 +206,8 @@ pub struct SchedStats {
     pub decode_lanes_total: u64,
     /// Bounded prefill chunks executed.
     pub prefill_chunks_total: u64,
+    /// Requests terminated by an expired deadline (TTL).
+    pub deadline_expired_total: u64,
+    /// Decode-group panics contained by `catch_unwind`.
+    pub decode_group_panics_total: u64,
 }

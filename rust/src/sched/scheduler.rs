@@ -130,6 +130,18 @@ pub fn drive_loop(
     }
 }
 
+/// Best-effort text of a caught panic payload (`panic!` with a string
+/// literal or a formatted message; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "<non-string panic payload>"
+    }
+}
+
 /// Tenant-group identity for batched decode: two slots share a stacked
 /// forward iff their views point at the same Arc-backed weights or
 /// delta set (pointer identity — same tenant, same tier).
@@ -187,6 +199,21 @@ impl Scheduler<'_> {
     /// Re-admit the oldest preempted sequence. Returns false when it
     /// must keep waiting for blocks.
     fn try_resume(&mut self) -> bool {
+        let front_expired = self
+            .preempted
+            .front()
+            .expect("caller checked")
+            .req
+            .deadline
+            .is_some_and(|d| Instant::now() >= d);
+        if front_expired {
+            // expired while preempted: answer without re-leasing blocks
+            let mut seq = self.preempted.pop_front().unwrap();
+            self.metrics.sched.deadline_expired_total.fetch_add(1, Ordering::Relaxed);
+            seq.state = SeqState::Done;
+            Self::respond(self.metrics, &mut seq, Some("deadline exceeded".to_string()));
+            return true;
+        }
         let needed = {
             let seq = self.preempted.front().expect("caller checked");
             self.pool.blocks_for(seq.prefix_len())
@@ -222,6 +249,13 @@ impl Scheduler<'_> {
         let Some(req) = self.batcher.pop_oldest() else {
             return false;
         };
+        // deadline check at admission: a request that expired in the
+        // queue must never lease KV blocks
+        if req.deadline.is_some_and(|d| Instant::now() >= d) {
+            self.metrics.sched.deadline_expired_total.fetch_add(1, Ordering::Relaxed);
+            self.answer_unadmitted(req, "deadline exceeded".to_string());
+            return true;
+        }
         // validate against the model limits up front: a malformed
         // direct submission must answer with an error, not panic the
         // single drive thread inside forward_step (the gateway rejects
@@ -274,6 +308,13 @@ impl Scheduler<'_> {
                 self.answer_unadmitted(req, msg);
                 return true;
             }
+            Poke::Quarantined => {
+                // containment: only the loader's background probe may
+                // retry a quarantined tenant — requests answer instantly
+                let msg = format!("tenant '{}' quarantined", req.tenant);
+                self.answer_unadmitted(req, msg);
+                return true;
+            }
         }
         let exec_start = Instant::now();
         let Some(acquired) = self.store.acquire(&req.tenant, 1) else {
@@ -312,6 +353,7 @@ impl Scheduler<'_> {
 
     /// One scheduler iteration over every running sequence.
     fn step(&mut self) {
+        self.expire_deadlines();
         let plan = self.plan();
         self.metrics.sched.observe_occupancy(plan.occupancy());
         let step_start = Instant::now();
@@ -330,6 +372,23 @@ impl Scheduler<'_> {
         self.metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
         self.metrics.sched.steps_executed.fetch_add(1, Ordering::Relaxed);
         self.sweep();
+    }
+
+    /// Terminate every active sequence whose deadline has passed: free
+    /// its KV blocks and answer the stream with a well-formed error
+    /// frame. Runs once per scheduler iteration, before planning, so an
+    /// expired request costs at most one extra iteration of latency.
+    fn expire_deadlines(&mut self) {
+        let now = Instant::now();
+        for i in 0..self.running.len() {
+            if !matches!(self.running[i].state, SeqState::Active) {
+                continue;
+            }
+            if self.running[i].req.deadline.is_some_and(|d| now >= d) {
+                self.metrics.sched.deadline_expired_total.fetch_add(1, Ordering::Relaxed);
+                self.answer_at(i, Some("deadline exceeded".to_string()));
+            }
+        }
     }
 
     fn plan(&self) -> StepBatch {
@@ -375,7 +434,7 @@ impl Scheduler<'_> {
         };
         let result = {
             let seq = &mut self.running[i];
-            match &seq.view {
+            crate::util::failpoint::hit("backend.prefill").and_then(|()| match &seq.view {
                 TenantView::Hot(weights) => {
                     self.backend.prefill_chunk(weights.as_ref(), None, &tokens, &mut seq.cache)
                 }
@@ -385,7 +444,7 @@ impl Scheduler<'_> {
                     &tokens,
                     &mut seq.cache,
                 ),
-            }
+            })
         };
         self.metrics.sched.prefill_chunks_total.fetch_add(1, Ordering::Relaxed);
         match result {
@@ -465,7 +524,7 @@ impl Scheduler<'_> {
         };
         let result = {
             let seq = &mut self.running[i];
-            match &seq.view {
+            crate::util::failpoint::hit("backend.decode").and_then(|()| match &seq.view {
                 TenantView::Hot(weights) => {
                     self.backend.decode_step(weights.as_ref(), None, next, pos, &mut seq.cache)
                 }
@@ -476,7 +535,7 @@ impl Scheduler<'_> {
                     pos,
                     &mut seq.cache,
                 ),
-            }
+            })
         };
         match result {
             Ok(logits) => self.running[i].last_logits = Some(logits),
@@ -531,6 +590,7 @@ impl Scheduler<'_> {
             let backend = self.backend;
             let store = self.store;
             let base: &Arc<ModelWeights> = store.base();
+            let sched_counters = &self.metrics.sched;
             let seqs = SharedSliceMut::new(&mut self.running);
             let out = SharedSliceMut::new(&mut results);
             let run_group = |gi: usize| {
@@ -542,12 +602,29 @@ impl Scheduler<'_> {
                     let seq = unsafe { &mut seqs.slice_mut(slot, 1)[0] };
                     lanes.push(DecodeLane { token, pos, cache: &mut seq.cache });
                 }
-                let r = match view {
-                    TenantView::Hot(weights) => {
-                        backend.decode_steps(weights.as_ref(), None, &mut lanes)
-                    }
-                    TenantView::Cold(deltas) => {
-                        backend.decode_steps(base.as_ref(), Some(deltas.as_ref()), &mut lanes)
+                // Panic containment: a panicking group (backend bug, or
+                // the `backend.decode` failpoint's panic policy) fails
+                // only its own lanes — it lands in the same Err path an
+                // ordinary backend error takes, so the drive loop keeps
+                // stepping every other group.
+                let call = || {
+                    crate::util::failpoint::hit("backend.decode").and_then(|()| match view {
+                        TenantView::Hot(weights) => {
+                            backend.decode_steps(weights.as_ref(), None, &mut lanes)
+                        }
+                        TenantView::Cold(deltas) => {
+                            backend.decode_steps(base.as_ref(), Some(deltas.as_ref()), &mut lanes)
+                        }
+                    })
+                };
+                let r = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(call)) {
+                    Ok(r) => r,
+                    Err(payload) => {
+                        sched_counters.decode_group_panics_total.fetch_add(1, Ordering::Relaxed);
+                        Err(anyhow::anyhow!(
+                            "decode group panicked: {}",
+                            panic_message(payload.as_ref())
+                        ))
                     }
                 };
                 // SAFETY: result cell gi is owned by group gi alone.

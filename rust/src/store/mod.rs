@@ -124,6 +124,20 @@ impl DeltaStore {
         &self.root
     }
 
+    /// Manifest lock accessor. The `expect` is infallible by invariant:
+    /// nothing panics while holding either store lock — all file I/O
+    /// and record decoding happen outside them — so the mutex can
+    /// never be poisoned.
+    fn manifest_lock(&self) -> std::sync::MutexGuard<'_, Manifest> {
+        self.manifest.lock().expect("manifest lock poisoned (nothing panics under it)")
+    }
+
+    /// Ops lock accessor; same poisoning invariant as
+    /// [`manifest_lock`](DeltaStore::manifest_lock).
+    fn ops_lock(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.ops.lock().expect("ops lock poisoned (nothing panics under it)")
+    }
+
     /// Total bytes of shard payload read since open (telemetry).
     pub fn bytes_read(&self) -> u64 {
         self.bytes_read.load(Ordering::Relaxed)
@@ -131,27 +145,27 @@ impl DeltaStore {
 
     /// Names of every stored tenant, sorted.
     pub fn tenants(&self) -> Vec<String> {
-        self.manifest.lock().unwrap().tenants.keys().cloned().collect()
+        self.manifest_lock().tenants.keys().cloned().collect()
     }
 
     /// Whether a tenant exists in the store.
     pub fn contains(&self, tenant: &str) -> bool {
-        self.manifest.lock().unwrap().tenants.contains_key(tenant)
+        self.manifest_lock().tenants.contains_key(tenant)
     }
 
     /// Number of stored tenants.
     pub fn tenant_count(&self) -> usize {
-        self.manifest.lock().unwrap().tenants.len()
+        self.manifest_lock().tenants.len()
     }
 
     /// Manifest entry for one tenant (cloned snapshot).
     pub fn tenant_info(&self, tenant: &str) -> Option<TenantRecord> {
-        self.manifest.lock().unwrap().tenants.get(tenant).cloned()
+        self.manifest_lock().tenants.get(tenant).cloned()
     }
 
     /// Total payload bytes across all registered tenants.
     pub fn total_bytes(&self) -> u64 {
-        self.manifest.lock().unwrap().tenants.values().map(|t| t.bytes).sum()
+        self.manifest_lock().tenants.values().map(|t| t.bytes).sum()
     }
 
     /// Re-read `MANIFEST.json` into the locked in-memory copy. Every
@@ -177,9 +191,9 @@ impl DeltaStore {
         for (name, tensor) in &set.tensors {
             blobs.push(shard::encode_tensor(name, tensor)?);
         }
-        let _ops = self.ops.lock().unwrap();
+        let _ops = self.ops_lock();
         let id = {
-            let mut m = self.manifest.lock().unwrap();
+            let mut m = self.manifest_lock();
             self.reload_locked(&mut m)?;
             let id = m.next_id;
             m.next_id += 1;
@@ -234,10 +248,30 @@ impl DeltaStore {
             tensors,
         };
         let replaced = {
-            let mut m = self.manifest.lock().unwrap();
+            let mut m = self.manifest_lock();
             self.reload_locked(&mut m)?;
             let old = m.tenants.insert(tenant.to_string(), record);
-            m.save(&self.root)?;
+            // `store.manifest_commit` models a crash/IO failure between
+            // the shard writes above and the manifest commit: the shards
+            // are on disk but unreachable (orphans for `gc`), and the
+            // tenant must be absent — not half-present — on reopen
+            let commit = crate::util::failpoint::hit("store.manifest_commit")
+                .and_then(|()| m.save(&self.root));
+            if let Err(e) = commit {
+                // disk is the commit point: a failed save must leave
+                // the in-memory manifest agreeing with it, so the new
+                // record (pointing at soon-to-be-orphan shards) is
+                // rolled back rather than served from memory
+                match old {
+                    Some(prev) => {
+                        m.tenants.insert(tenant.to_string(), prev);
+                    }
+                    None => {
+                        m.tenants.remove(tenant);
+                    }
+                }
+                return Err(e).with_context(|| format!("committing tenant '{tenant}'"));
+            }
             old
         };
         // the old artifact is unreachable now; delete best-effort
@@ -251,9 +285,9 @@ impl DeltaStore {
 
     /// Remove a tenant. Returns whether it existed.
     pub fn remove(&self, tenant: &str) -> Result<bool> {
-        let _ops = self.ops.lock().unwrap();
+        let _ops = self.ops_lock();
         let removed = {
-            let mut m = self.manifest.lock().unwrap();
+            let mut m = self.manifest_lock();
             self.reload_locked(&mut m)?;
             let removed = m.tenants.remove(tenant);
             if removed.is_some() {
@@ -285,9 +319,9 @@ impl DeltaStore {
     }
 
     fn sweep(&self, dry_run: bool) -> Result<GcReport> {
-        let _ops = self.ops.lock().unwrap();
+        let _ops = self.ops_lock();
         let live: std::collections::BTreeSet<PathBuf> = {
-            let mut m = self.manifest.lock().unwrap();
+            let mut m = self.manifest_lock();
             self.reload_locked(&mut m)?;
             m.tenants
                 .values()
@@ -311,6 +345,31 @@ impl DeltaStore {
         Ok(report)
     }
 
+    /// One shard-record read under the containment policy: any failure
+    /// — I/O error or CRC mismatch — earns exactly one immediate
+    /// re-read. A transient medium error heals on the retry; truly
+    /// corrupt bytes fail the CRC again and the error propagates (the
+    /// hydration layer then quarantines the tenant). Bad bytes are
+    /// never decoded: `read_record` verifies the CRC before returning.
+    /// Fault injection: `store.shard_read`.
+    fn read_record_contained(
+        &self,
+        file: &std::fs::File,
+        path: &Path,
+        rec: &TensorRecord,
+    ) -> Result<Vec<u8>> {
+        let read = || {
+            crate::util::failpoint::hit("store.shard_read")
+                .and_then(|()| shard::read_record(file, path, rec.offset, rec.len, rec.crc32))
+        };
+        match read() {
+            Ok(raw) => Ok(raw),
+            Err(first) => {
+                read().with_context(|| format!("after one re-read (first error: {first:#})"))
+            }
+        }
+    }
+
     /// Page in one tensor: a single positioned read + CRC verify.
     pub fn load_tensor(&self, tenant: &str, name: &str) -> Result<CompressedDelta> {
         let record = self.tenant_info(tenant);
@@ -320,7 +379,7 @@ impl DeltaStore {
         let rel = &record.shards[rec.shard];
         let path = self.root.join(rel);
         let file = shard::open_shard(&path)?;
-        let raw = shard::read_record(&file, &path, rec.offset, rec.len, rec.crc32)?;
+        let raw = self.read_record_contained(&file, &path, rec)?;
         self.bytes_read.fetch_add(rec.len, Ordering::Relaxed);
         shard::decode_tensor(name, &raw)
     }
@@ -338,7 +397,8 @@ impl DeltaStore {
                 Entry::Occupied(e) => e.into_mut(),
                 Entry::Vacant(v) => v.insert(shard::open_shard(&path)?),
             };
-            let raw = shard::read_record(file, &path, rec.offset, rec.len, rec.crc32)
+            let raw = self
+                .read_record_contained(file, &path, rec)
                 .with_context(|| format!("tenant '{tenant}', tensor '{}'", rec.name))?;
             let tensor = shard::decode_tensor(&rec.name, &raw)
                 .with_context(|| format!("tenant '{tenant}'"))?;

@@ -1,0 +1,407 @@
+//! Deterministic fault injection: a process-wide registry of *named
+//! failpoints* that production code evaluates at the places that can
+//! fail for real (shard reads, manifest commits, hydration, backend
+//! steps, socket writes).
+//!
+//! With nothing armed — the production default — every [`hit`] is a
+//! single relaxed atomic load and an early return: failpoints compile
+//! to a no-op branch. Arming happens either programmatically
+//! ([`arm`], used by the chaos bench and tests) or via the
+//! `DELTADQ_FAILPOINTS` environment variable read once on first use:
+//!
+//! ```text
+//! DELTADQ_FAILPOINTS='store.shard_read=err(2);backend.decode=delay(50)'
+//! ```
+//!
+//! Policy grammar (one policy per point):
+//!
+//! | spec        | behaviour                                          |
+//! |-------------|----------------------------------------------------|
+//! | `err`       | fail every hit                                     |
+//! | `err(N)`    | fail the next N hits, then no-op (`err(1)` = once) |
+//! | `prob(P)`   | fail each hit with probability P (seeded RNG)      |
+//! | `delay(MS)` | sleep MS milliseconds, then proceed                |
+//! | `panic`     | panic every hit                                    |
+//! | `panic(N)`  | panic the next N hits, then no-op                  |
+//! | `off`       | disarm the point                                   |
+//!
+//! The probabilistic policy draws from one registry-owned generator
+//! seeded by [`set_seed`] (default fixed), so a faulty run replays
+//! bit-for-bit. Injected errors carry the point name
+//! (`failpoint '<name>' injected error`) so logs and tests can tell
+//! injected faults from organic ones.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+/// What an armed failpoint does when evaluated.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Policy {
+    /// Fail with an injected error; `None` = every hit, `Some(n)` = the
+    /// next `n` hits only.
+    Err(Option<u64>),
+    /// Fail each hit independently with this probability.
+    Prob(f64),
+    /// Sleep this long on every hit, then proceed normally.
+    Delay(Duration),
+    /// Panic; `None` = every hit, `Some(n)` = the next `n` hits only.
+    Panic(Option<u64>),
+}
+
+/// One armed point plus its accounting.
+struct Point {
+    policy: Policy,
+    /// Remaining trigger budget for bounded policies.
+    remaining: Option<u64>,
+    /// Times this point fired (injected an error/delay/panic).
+    triggered: u64,
+}
+
+/// The process-wide registry. `BTreeMap` keeps [`triggered_counts`]
+/// output deterministic.
+struct Registry {
+    points: BTreeMap<String, Point>,
+    /// splitmix64 state backing `prob(..)` draws.
+    rng: u64,
+}
+
+const DEFAULT_SEED: u64 = 0x5EED_FA11;
+
+/// Fast-path guard: false ⇒ [`hit`] returns immediately without
+/// touching the registry lock.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+/// One-shot read of `DELTADQ_FAILPOINTS` (first `hit`/`arm` wins).
+static ENV_INIT: OnceLock<()> = OnceLock::new();
+
+fn registry() -> &'static Mutex<Registry> {
+    REGISTRY.get_or_init(|| {
+        Mutex::new(Registry { points: BTreeMap::new(), rng: DEFAULT_SEED })
+    })
+}
+
+fn env_init() {
+    ENV_INIT.get_or_init(|| {
+        if let Ok(spec) = std::env::var("DELTADQ_FAILPOINTS") {
+            if !spec.trim().is_empty() {
+                if let Err(e) = arm(&spec) {
+                    eprintln!("failpoint: ignoring invalid DELTADQ_FAILPOINTS: {e:#}");
+                }
+            }
+        }
+    });
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Outcome decided under the registry lock, acted on outside it.
+enum Action {
+    Proceed,
+    Sleep(Duration),
+    Fail(u64),
+    Panic,
+}
+
+/// Evaluate the failpoint `name`. Returns `Err` when an error policy
+/// fires (callers propagate it exactly like the organic failure the
+/// point models), sleeps through delay policies, and panics for panic
+/// policies. With nothing armed this is one atomic load.
+pub fn hit(name: &str) -> Result<()> {
+    env_init();
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    let action = {
+        let mut reg = match registry().lock() {
+            Ok(g) => g,
+            // a panic policy poisons the lock by design; keep injecting
+            Err(p) => p.into_inner(),
+        };
+        // stage 1: budget check (no rng needed), policy cloned out so
+        // the point borrow ends before the rng draw below needs `reg`
+        let decision = match reg.points.get_mut(name) {
+            None => None,
+            Some(point) => {
+                let in_budget = match point.remaining {
+                    Some(0) => false,
+                    Some(ref mut n) => {
+                        *n -= 1;
+                        true
+                    }
+                    None => true,
+                };
+                if in_budget {
+                    Some(point.policy.clone())
+                } else {
+                    None
+                }
+            }
+        };
+        match decision {
+            None => Action::Proceed,
+            Some(policy) => {
+                let fires = match policy {
+                    Policy::Prob(p) => {
+                        let draw = splitmix64(&mut reg.rng) as f64 / u64::MAX as f64;
+                        draw < p
+                    }
+                    _ => true,
+                };
+                if !fires {
+                    Action::Proceed
+                } else {
+                    // the point cannot have vanished: the lock is held
+                    let point = reg.points.get_mut(name).expect("armed point present");
+                    point.triggered += 1;
+                    match policy {
+                        Policy::Err(_) | Policy::Prob(_) => Action::Fail(point.triggered),
+                        Policy::Panic(_) => Action::Panic,
+                        Policy::Delay(d) => Action::Sleep(d),
+                    }
+                }
+            }
+        }
+    };
+    match action {
+        Action::Proceed => Ok(()),
+        Action::Sleep(d) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Action::Fail(k) => Err(anyhow!("failpoint '{name}' injected error (trigger {k})")),
+        Action::Panic => panic!("failpoint '{name}' injected panic"),
+    }
+}
+
+/// Arm failpoints from a spec string: `name=policy` pairs separated by
+/// `;`. Existing points with the same name are replaced; `name=off`
+/// disarms one point. Whitespace around separators is ignored.
+pub fn arm(spec: &str) -> Result<()> {
+    env_init();
+    let mut parsed: Vec<(String, Option<Policy>)> = Vec::new();
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, policy) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("failpoint spec '{part}': expected name=policy"))?;
+        let (name, policy) = (name.trim(), policy.trim());
+        if name.is_empty() {
+            bail!("failpoint spec '{part}': empty point name");
+        }
+        parsed.push((name.to_string(), parse_policy(policy)?));
+    }
+    let mut reg = match registry().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    for (name, policy) in parsed {
+        match policy {
+            None => {
+                reg.points.remove(&name);
+            }
+            Some(policy) => {
+                let remaining = match policy {
+                    Policy::Err(n) | Policy::Panic(n) => n,
+                    Policy::Prob(_) | Policy::Delay(_) => None,
+                };
+                reg.points.insert(name, Point { policy, remaining, triggered: 0 });
+            }
+        }
+    }
+    ARMED.store(!reg.points.is_empty(), Ordering::Relaxed);
+    Ok(())
+}
+
+/// Parse one policy spec (`None` = `off`).
+fn parse_policy(s: &str) -> Result<Option<Policy>> {
+    let (head, arg) = match s.find('(') {
+        Some(i) if s.ends_with(')') => (&s[..i], Some(&s[i + 1..s.len() - 1])),
+        Some(_) => bail!("policy '{s}': unbalanced parentheses"),
+        None => (s, None),
+    };
+    let parse_n = |arg: Option<&str>| -> Result<Option<u64>> {
+        match arg {
+            None => Ok(None),
+            Some(a) => Ok(Some(
+                a.trim().parse::<u64>().map_err(|_| anyhow!("policy '{s}': bad count"))?,
+            )),
+        }
+    };
+    match head {
+        "off" => {
+            if arg.is_some() {
+                bail!("policy '{s}': off takes no argument");
+            }
+            Ok(None)
+        }
+        "err" => Ok(Some(Policy::Err(parse_n(arg)?))),
+        "panic" => Ok(Some(Policy::Panic(parse_n(arg)?))),
+        "prob" => {
+            let a = arg.ok_or_else(|| anyhow!("policy '{s}': prob needs a probability"))?;
+            let p: f64 =
+                a.trim().parse().map_err(|_| anyhow!("policy '{s}': bad probability"))?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("policy '{s}': probability must be in [0,1]");
+            }
+            Ok(Some(Policy::Prob(p)))
+        }
+        "delay" => {
+            let a = arg.ok_or_else(|| anyhow!("policy '{s}': delay needs milliseconds"))?;
+            let ms: u64 =
+                a.trim().parse().map_err(|_| anyhow!("policy '{s}': bad milliseconds"))?;
+            Ok(Some(Policy::Delay(Duration::from_millis(ms))))
+        }
+        other => bail!("unknown failpoint policy '{other}' (err|prob|delay|panic|off)"),
+    }
+}
+
+/// Disarm every point and reset trigger accounting. The chaos bench
+/// and tests call this between phases.
+pub fn disarm_all() {
+    env_init();
+    let mut reg = match registry().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    reg.points.clear();
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Reseed the probabilistic-policy generator (runs replay when the
+/// seed and the hit order are fixed).
+pub fn set_seed(seed: u64) {
+    let mut reg = match registry().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    reg.rng = seed;
+}
+
+/// Times the named point actually fired (0 if never armed).
+pub fn triggered(name: &str) -> u64 {
+    if REGISTRY.get().is_none() {
+        return 0;
+    }
+    let reg = match registry().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    reg.points.get(name).map_or(0, |p| p.triggered)
+}
+
+/// `(name, times fired)` for every armed point, in name order.
+pub fn triggered_counts() -> Vec<(String, u64)> {
+    if REGISTRY.get().is_none() {
+        return Vec::new();
+    }
+    let reg = match registry().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    reg.points.iter().map(|(k, v)| (k.clone(), v.triggered)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the registry is process-global and unit tests share one
+    // process, so every test here uses point names under `test.` that
+    // no production code evaluates, and distinct names per test so
+    // parallel execution cannot interleave budgets.
+
+    #[test]
+    fn unarmed_is_noop() {
+        assert!(hit("test.never_armed").is_ok());
+        assert_eq!(triggered("test.never_armed"), 0);
+    }
+
+    #[test]
+    fn err_n_fails_exactly_n_times() {
+        arm("test.err_n=err(2)").unwrap();
+        let e = hit("test.err_n").unwrap_err();
+        assert!(e.to_string().contains("failpoint 'test.err_n'"), "{e}");
+        assert!(hit("test.err_n").is_err());
+        assert!(hit("test.err_n").is_ok(), "budget exhausted → no-op");
+        assert_eq!(triggered("test.err_n"), 2);
+        arm("test.err_n=off").unwrap();
+    }
+
+    #[test]
+    fn unbounded_err_and_off() {
+        arm("test.err_always=err").unwrap();
+        for _ in 0..5 {
+            assert!(hit("test.err_always").is_err());
+        }
+        arm("test.err_always=off").unwrap();
+        assert!(hit("test.err_always").is_ok());
+    }
+
+    #[test]
+    fn delay_sleeps_then_proceeds() {
+        arm("test.delay=delay(20)").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(hit("test.delay").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(15), "{:?}", t0.elapsed());
+        assert_eq!(triggered("test.delay"), 1);
+        arm("test.delay=off").unwrap();
+    }
+
+    #[test]
+    fn panic_policy_panics_with_budget() {
+        arm("test.panic=panic(1)").unwrap();
+        let r = std::panic::catch_unwind(|| hit("test.panic"));
+        assert!(r.is_err(), "first hit must panic");
+        assert!(hit("test.panic").is_ok(), "budget spent → proceeds");
+        arm("test.panic=off").unwrap();
+    }
+
+    #[test]
+    fn prob_is_seeded_and_bounded() {
+        arm("test.prob=prob(0.5)").unwrap();
+        set_seed(42);
+        let first: Vec<bool> = (0..32).map(|_| hit("test.prob").is_err()).collect();
+        set_seed(42);
+        let second: Vec<bool> = (0..32).map(|_| hit("test.prob").is_err()).collect();
+        assert_eq!(first, second, "same seed must replay the same fault pattern");
+        let fired = first.iter().filter(|b| **b).count();
+        assert!(fired > 0 && fired < 32, "p=0.5 over 32 draws fired {fired} times");
+        arm("test.prob=off").unwrap();
+    }
+
+    #[test]
+    fn spec_parsing_rejects_garbage() {
+        assert!(arm("test.bad").is_err(), "missing =policy");
+        assert!(arm("test.bad=explode").is_err(), "unknown policy");
+        assert!(arm("test.bad=prob(1.5)").is_err(), "probability out of range");
+        assert!(arm("test.bad=err(x)").is_err(), "bad count");
+        assert!(arm("=err").is_err(), "empty name");
+        // a failed arm must not leave partial state behind
+        assert!(hit("test.bad").is_ok());
+    }
+
+    #[test]
+    fn multi_point_spec_and_counts() {
+        arm("test.multi_a=err(1); test.multi_b=delay(1)").unwrap();
+        assert!(hit("test.multi_a").is_err());
+        assert!(hit("test.multi_b").is_ok());
+        let counts = triggered_counts();
+        let get = |n: &str| counts.iter().find(|(k, _)| k == n).map(|(_, v)| *v);
+        assert_eq!(get("test.multi_a"), Some(1));
+        assert_eq!(get("test.multi_b"), Some(1));
+        arm("test.multi_a=off;test.multi_b=off").unwrap();
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod bench;
 pub mod crc32;
+pub mod failpoint;
 pub mod hist;
 pub mod json;
 pub mod linalg;

@@ -1,0 +1,197 @@
+//! Chaos integration: one serving run over the tiered store with every
+//! fault class from the containment matrix injected — transient
+//! hydration failures (healed by in-cycle retries), a corrupt shard
+//! (CRC failure → tenant quarantine → background probe heal), a decode
+//! group panic (contained by the scheduler), and an expired per-request
+//! deadline. Every request must terminate with a well-formed response,
+//! unaffected tenants must stay bit-identical to the fault-free eager
+//! path, and the KV pool must drain back to zero.
+//!
+//! Lives in its own integration binary: the failpoint registry is
+//! process-global, so arming here must not race other tests.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use deltadq::compress::pipeline::compress_model_deltas;
+use deltadq::compress::{DeltaDq, DeltaDqConfig};
+use deltadq::coordinator::{RetryPolicy, Server, ServerOptions, SubmitError};
+use deltadq::delta::extract_deltas;
+use deltadq::delta::format::DeltaSet;
+use deltadq::eval::tasks::vocab;
+use deltadq::model::{ModelConfig, ModelWeights};
+use deltadq::runtime::{ExecutionBackend, NativeBackend};
+use deltadq::store::DeltaStore;
+use deltadq::tensor::{Matrix, Pcg64};
+use deltadq::util::failpoint;
+
+const MAX_NEW: usize = 6;
+
+fn deltas_for(base: &ModelWeights, seed: u64) -> DeltaSet {
+    let mut rng = Pcg64::seeded(seed);
+    let mut ft = base.clone();
+    for name in base.config.delta_tensor_names() {
+        let (r, c) = ft.get(&name).shape();
+        ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, &mut rng));
+    }
+    let d = extract_deltas(base, &ft);
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(16)));
+    compress_model_deltas(&d, &dq, &Default::default(), &mut rng)
+}
+
+/// Submit and wait for the final response (every phase must terminate).
+fn ask(server: &Server, tenant: &str, prompt: &[u32]) -> deltadq::coordinator::Response {
+    let rx = server.submit(tenant, prompt.to_vec(), MAX_NEW).unwrap();
+    rx.recv_timeout(Duration::from_secs(120)).unwrap()
+}
+
+#[test]
+fn faults_are_contained_end_to_end() {
+    failpoint::disarm_all();
+    let mut rng = Pcg64::seeded(1);
+    let base = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+    let prompt = vec![1u32, 20, 4, 21, 3];
+    let sets: Vec<DeltaSet> = (0..3u64).map(|i| deltas_for(&base, 40 + i)).collect();
+
+    // fault-free oracle: the eager in-memory path
+    let oracle = NativeBackend::default();
+    let expected: Vec<Vec<u32>> = sets
+        .iter()
+        .map(|s| oracle.generate(&base, Some(s), &prompt, MAX_NEW, Some(vocab::EOS)).unwrap())
+        .collect();
+
+    let root = std::env::temp_dir()
+        .join("deltadq-test-chaos")
+        .join(format!("serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = Arc::new(DeltaStore::open_or_create(&root).unwrap());
+    for (name, set) in [("t0", &sets[0]), ("t1", &sets[1]), ("tq", &sets[2])] {
+        store.push(name, set).unwrap();
+    }
+
+    let server = Server::with_store(
+        base.clone(),
+        ServerOptions {
+            workers: 2,
+            batch_window: Duration::from_micros(200),
+            promote_after: u64::MAX, // stay Cold: the fused serving path
+            retry: RetryPolicy {
+                load_retries: 2,
+                backoff: Duration::from_millis(10),
+                quarantine_after: 1,
+                probe_interval: Duration::from_millis(100),
+            },
+            ..Default::default()
+        },
+        Arc::new(NativeBackend::default()),
+        store.clone(),
+    )
+    .unwrap();
+
+    // ---- fault 1: two transient hydration failures heal in-cycle
+    failpoint::arm("tenant.hydrate=err(2)").unwrap();
+    let resp = ask(&server, "t0", &prompt);
+    assert!(resp.error.is_none(), "retries must absorb the transients: {:?}", resp.error);
+    assert_eq!(resp.tokens, expected[0], "tokens bit-identical despite retries");
+    assert_eq!(failpoint::triggered("tenant.hydrate"), 2);
+    let retries = server.metrics.tiers.load_retries.load(Ordering::Relaxed);
+    assert!(retries >= 2, "retry counter must record both transients, got {retries}");
+
+    // ---- fault 2: corrupt shard → CRC failure → quarantine
+    let shard_rel = store.tenant_info("tq").unwrap().shards[0].clone();
+    let shard_path = root.join(&shard_rel);
+    let pristine = std::fs::read(&shard_path).unwrap();
+    let mut corrupt = pristine.clone();
+    let mid = corrupt.len() / 2;
+    corrupt[mid] ^= 0x01;
+    std::fs::write(&shard_path, &corrupt).unwrap();
+
+    let resp = ask(&server, "tq", &prompt);
+    let err = resp.error.expect("a corrupt tenant must answer with an error, not hang");
+    assert!(
+        err.contains("quarantined") || err.contains("unavailable"),
+        "well-formed containment error, got: {err}"
+    );
+    let t0 = Instant::now();
+    while server.quarantined_count() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "tenant never quarantined");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(server.quarantined("tq").is_some());
+    // further submissions are rejected up front with a retry hint
+    match server.submit("tq", prompt.clone(), MAX_NEW) {
+        Err(SubmitError::Quarantined { tenant, retry_after_s }) => {
+            assert_eq!(tenant, "tq");
+            assert!(retry_after_s >= 1);
+        }
+        other => panic!("expected Quarantined, got {other:?}"),
+    }
+
+    // ---- fault 3: one decode-group panic, contained by the scheduler
+    failpoint::arm("backend.decode=panic(1)").unwrap();
+    let resp = ask(&server, "t1", &prompt);
+    let err = resp.error.expect("the panicking group must answer an error frame");
+    assert!(err.contains("panicked"), "got: {err}");
+    let stats = server.sched_stats().expect("scheduler path active");
+    assert_eq!(stats.decode_group_panics_total, 1, "panic counted once");
+    // the drive loop kept stepping: the very next request is clean
+    let resp = ask(&server, "t1", &prompt);
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.tokens, expected[1], "bit-identical after the contained panic");
+
+    // ---- fault 4: an already-expired deadline answers without executing
+    let rx = server
+        .submit_with_ttl("t0", prompt.clone(), MAX_NEW, Duration::from_micros(1))
+        .unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    let err = resp.error.expect("expired deadline must answer an error");
+    assert!(err.contains("deadline"), "got: {err}");
+    assert!(server.sched_stats().unwrap().deadline_expired_total >= 1);
+
+    // ---- unaffected tenant still bit-identical to the fault-free run
+    let resp = ask(&server, "t0", &prompt);
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.tokens, expected[0]);
+
+    // ---- heal: restore the shard; the background probe un-quarantines
+    std::fs::write(&shard_path, &pristine).unwrap();
+    let t0 = Instant::now();
+    let healed = loop {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "quarantined tenant never healed after the shard was restored"
+        );
+        match server.submit("tq", prompt.clone(), MAX_NEW) {
+            Err(SubmitError::Quarantined { .. }) => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(other) => panic!("unexpected submit error while healing: {other:?}"),
+            Ok(rx) => {
+                let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+                match resp.error {
+                    // admitted before the probe finished — retry
+                    Some(_) => std::thread::sleep(Duration::from_millis(25)),
+                    None => break resp,
+                }
+            }
+        }
+    };
+    assert_eq!(healed.tokens, expected[2], "healed tenant serves bit-identically");
+    assert_eq!(server.quarantined_count(), 0, "probe success clears the quarantine");
+
+    // ---- every terminated request released its KV blocks
+    let t0 = Instant::now();
+    loop {
+        let used = server.sched_stats().unwrap().kv_blocks_used;
+        if used == 0 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "{used} KV blocks leaked");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    failpoint::disarm_all();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,118 @@
+//! Failpoint-armed store containment tests.
+//!
+//! These live in an integration test binary (their own process) because
+//! the failpoint registry is process-global: arming `store.*` here must
+//! not race the library unit tests. Within this binary the tests
+//! serialize on a mutex for the same reason.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use deltadq::compress::{Compressor, DeltaDq, DeltaDqConfig, LayerContext};
+use deltadq::delta::format::DeltaSet;
+use deltadq::store::{DeltaStore, GcReport};
+use deltadq::tensor::{Matrix, Pcg64};
+use deltadq::util::failpoint;
+
+/// Serializes the tests in this binary (shared global registry).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // a failed assertion in another test must not cascade here
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmp_store(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("deltadq-test-failpoints")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sample_set(seed: u64) -> DeltaSet {
+    let mut rng = Pcg64::seeded(seed);
+    let dq = DeltaDq::new(DeltaDqConfig { alpha: 4.0, group_size: Some(8), quant: None });
+    let mut set = DeltaSet::new(&dq.name(), dq.nominal_ratio());
+    for i in 0..4 {
+        let d = Matrix::randn(16, 32, 0.01, &mut rng);
+        let name = format!("layers.{i}.attn.wq");
+        let c = dq.compress(&d, &LayerContext::data_free(i, &name), &mut rng);
+        set.tensors.insert(name, c);
+    }
+    set
+}
+
+fn assert_sets_equal(a: &DeltaSet, b: &DeltaSet) {
+    assert_eq!(a.tensors.len(), b.tensors.len());
+    for (name, t) in &a.tensors {
+        assert_eq!(t.to_dense(), b.tensors[name].to_dense(), "{name}");
+    }
+}
+
+/// A push that dies between its shard writes and the manifest commit is
+/// atomic: the tenant is absent (in memory and on reopen), the written
+/// shards are gc-able orphans, and a clean re-push then succeeds.
+#[test]
+fn push_crash_before_manifest_commit_is_atomic() {
+    let _guard = lock();
+    let root = tmp_store("push-crash");
+    let store = DeltaStore::open_or_create(&root).unwrap();
+    let keep = sample_set(1);
+    store.push("keep", &keep).unwrap();
+
+    failpoint::arm("store.manifest_commit=err(1)").unwrap();
+    let set = sample_set(2);
+    let err = store.push("victim", &set).unwrap_err();
+    assert!(format!("{err:#}").contains("failpoint"), "{err:#}");
+    assert_eq!(failpoint::triggered("store.manifest_commit"), 1);
+
+    // absent in the live instance...
+    assert!(!store.contains("victim"));
+    assert!(store.load("victim").is_err());
+    // ...and on a fresh open of the on-disk state
+    let reopened = DeltaStore::open(&root).unwrap();
+    assert!(!reopened.contains("victim"), "manifest commit never happened");
+    assert_sets_equal(&reopened.load("keep").unwrap(), &keep);
+
+    // the victim's shards hit disk before the crash: orphans for gc
+    let dry = store.gc_dry_run().unwrap();
+    assert!(dry.files_removed >= 1, "orphan shards reported, got {dry:?}");
+    assert!(dry.bytes_freed > 0);
+    let swept = store.gc().unwrap();
+    assert_eq!(swept, dry);
+    assert_eq!(store.gc_dry_run().unwrap(), GcReport::default());
+
+    // the failpoint is spent — the retry commits cleanly
+    store.push("victim", &set).unwrap();
+    assert_sets_equal(&store.load("victim").unwrap(), &set);
+    assert_sets_equal(&store.load("keep").unwrap(), &keep);
+
+    failpoint::arm("store.manifest_commit=off").unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// One transient shard-read failure heals via the immediate re-read; a
+/// persistent failure propagates with the containment context attached.
+#[test]
+fn shard_read_retries_once_then_propagates() {
+    let _guard = lock();
+    let root = tmp_store("shard-read");
+    let store = DeltaStore::open_or_create(&root).unwrap();
+    let set = sample_set(3);
+    store.push("t", &set).unwrap();
+
+    failpoint::arm("store.shard_read=err(1)").unwrap();
+    assert_sets_equal(&store.load("t").unwrap(), &set);
+    assert_eq!(failpoint::triggered("store.shard_read"), 1, "healed by the one re-read");
+
+    failpoint::arm("store.shard_read=err(100)").unwrap();
+    let err = store.load("t").unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("after one re-read"), "{text}");
+    failpoint::arm("store.shard_read=off").unwrap();
+
+    // still readable once the fault clears
+    assert_sets_equal(&store.load("t").unwrap(), &set);
+    let _ = std::fs::remove_dir_all(&root);
+}

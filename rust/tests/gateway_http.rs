@@ -244,6 +244,12 @@ fn concurrent_streaming_over_disk_tenants_matches_in_process() {
             "{text}"
         );
     }
+    // failure-containment series: retry/panic/deadline counters and the
+    // quarantine gauge are exported even when everything is healthy
+    assert!(text.contains("deltadq_load_retries_total "), "{text}");
+    assert!(text.contains("deltadq_decode_group_panics_total "), "{text}");
+    assert!(text.contains("deltadq_deadline_expired_total "), "{text}");
+    assert!((metric_value("deltadq_tenant_quarantined") - 0.0).abs() < f64::EPSILON, "{text}");
 
     // health + unknown tenant semantics on the same live server
     assert_eq!(get(addr, "/healthz").status, 200);
