@@ -20,7 +20,7 @@ use crate::compress::{
     CompressedDelta, Compressor, Dare, DeltaDq, DeltaDqConfig, DeltaZip, DeltaZipConfig, Magnitude,
 };
 use crate::coordinator::{Server, ServerOptions};
-use crate::delta::extract_deltas;
+use crate::delta::{extract_deltas, DeltaSet};
 use crate::dropout::{dropout, DropoutKind};
 use crate::eval::{evaluate, gen_dataset, load_dataset, Sample, TaskKind};
 use crate::model::{forward, load_weights, ModelConfig, ModelWeights};
@@ -1860,5 +1860,236 @@ pub fn chaos(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<St
         sched.decode_group_panics_total >= 1,
         "decode panic fault armed but never contained"
     );
+    Ok(out)
+}
+
+// --------------------------------------------------------------- trace
+
+/// Synthesize one small-perturbation fine-tune delta off `base` and
+/// compress it (the serving benches' standard tenant recipe).
+fn synth_delta(base: &ModelWeights, dq: &DeltaDq, rng: &mut Pcg64) -> DeltaSet {
+    let mut ft = base.clone();
+    for name in base.config.delta_tensor_names() {
+        let (r, c) = ft.get(&name).shape();
+        ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, rng));
+    }
+    compress_model_deltas(&extract_deltas(base, &ft), dq, &BTreeMap::new(), rng)
+}
+
+/// Recursive span-name census over a request_tree document.
+fn count_spans(node: &Json, counts: &mut BTreeMap<String, u64>) {
+    if let Some(name) = node.get("name").and_then(Json::as_str) {
+        *counts.entry(name.to_string()).or_insert(0) += 1;
+    }
+    if let Some(kids) = node.get("children").and_then(Json::as_array) {
+        for kid in kids {
+            count_spans(kid, counts);
+        }
+    }
+}
+
+/// Fraction of the root span's interval covered by the union of its
+/// direct children's intervals (clamped to the root).
+fn child_coverage(tree: &Json) -> f64 {
+    let root_start = tree.get("start_us").and_then(Json::as_f64).unwrap_or(0.0);
+    let root_dur = tree.get("dur_us").and_then(Json::as_f64).unwrap_or(0.0);
+    if root_dur <= 0.0 {
+        return 0.0;
+    }
+    let mut intervals: Vec<(f64, f64)> = Vec::new();
+    if let Some(kids) = tree.get("children").and_then(Json::as_array) {
+        for kid in kids {
+            let s = kid.get("start_us").and_then(Json::as_f64).unwrap_or(0.0);
+            let d = kid.get("dur_us").and_then(Json::as_f64).unwrap_or(0.0);
+            let lo = s.max(root_start);
+            let hi = (s + d).min(root_start + root_dur);
+            if hi > lo {
+                intervals.push((lo, hi));
+            }
+        }
+    }
+    intervals.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut covered = 0.0;
+    let mut cursor = f64::NEG_INFINITY;
+    for (lo, hi) in intervals {
+        let lo = lo.max(cursor);
+        if hi > lo {
+            covered += hi - lo;
+        }
+        cursor = cursor.max(hi);
+    }
+    covered / root_dur
+}
+
+/// E15: tracing overhead and span coverage — the flight recorder's two
+/// promises, measured. Phase 1 runs the same in-process request burst
+/// with the recorder enabled and disabled (alternating rounds, best-of
+/// each side) and reports the throughput cost; the gate holds it at
+/// ≤2%. Phase 2 serves one request for a Disk tenant out of a scratch
+/// delta store with tracing on and checks the span tree: queue wait,
+/// hydration, prefill chunks, and decode groups must all be present,
+/// and the root's children must cover ≥90% of its interval. Writes
+/// machine-readable `BENCH_trace.json`.
+///
+/// `DELTADQ_BENCH_QUICK=1` switches to the CI-sized run.
+pub fn trace(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<String> {
+    use crate::util::trace;
+
+    let quick = std::env::var("DELTADQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (rounds, burst) = if quick { (4usize, 32usize) } else { (6, 96) };
+    const MAX_TOKENS: usize = 4;
+    const N_TENANTS: usize = 3;
+
+    let was_enabled = trace::enabled();
+    let mut rng = Pcg64::seeded(0x7124CE);
+    let base = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(DEFAULT_GROUP)));
+    let server = Arc::new(Server::with_backend(
+        base.clone(),
+        ServerOptions {
+            workers: 2,
+            max_batch: 4,
+            batch_window: Duration::from_micros(200),
+            queue_depth: 256,
+            ..Default::default()
+        },
+        backend.clone(),
+    ));
+    for i in 0..N_TENANTS {
+        server.register_tenant(&format!("t{i}"), synth_delta(&base, &dq, &mut rng));
+    }
+    let prompts: Vec<Vec<u32>> =
+        gen_dataset(TaskKind::Math, 16, 5).into_iter().map(|s| s.prompt).collect();
+
+    // one burst: submit a wave, drain it, return completed req/s
+    let round = |on: bool| -> Result<f64> {
+        trace::set_enabled(on);
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(burst);
+        for k in 0..burst {
+            let tenant = format!("t{}", k % N_TENANTS);
+            let prompt = prompts[k % prompts.len()].clone();
+            let rx = server
+                .submit(&tenant, prompt, MAX_TOKENS)
+                .map_err(|e| anyhow::anyhow!("burst submit: {e}"))?;
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120))?;
+            if let Some(e) = &resp.error {
+                anyhow::bail!("burst request failed: {e}");
+            }
+        }
+        Ok(burst as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+    };
+
+    round(true)?; // warm-up: lazy pools, cold caches
+    let (mut best_on, mut best_off) = (0.0f64, 0.0f64);
+    for _ in 0..rounds {
+        best_off = best_off.max(round(false)?);
+        best_on = best_on.max(round(true)?);
+    }
+    server.shutdown();
+    // best-of-rounds on each side filters scheduler jitter; negative
+    // overhead (noise) is reported as measured
+    let overhead_pct = (1.0 - best_on / best_off) * 100.0;
+
+    // phase 2: traced Disk-tenant request → span-tree shape + coverage
+    trace::set_enabled(true);
+    trace::clear();
+    let store_root =
+        std::env::temp_dir().join(format!("deltadq-bench-trace-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_root);
+    let store = Arc::new(DeltaStore::open_or_create(&store_root)?);
+    store.push("probe", &synth_delta(&base, &dq, &mut rng))?;
+    let probe_server = Server::with_store(
+        base.clone(),
+        ServerOptions {
+            workers: 2,
+            max_batch: 4,
+            batch_window: Duration::from_micros(200),
+            ..Default::default()
+        },
+        backend.clone(),
+        store,
+    )?;
+    let rx = probe_server
+        .submit("probe", prompts[0].clone(), MAX_TOKENS)
+        .map_err(|e| anyhow::anyhow!("probe submit: {e}"))?;
+    let resp = rx.recv_timeout(Duration::from_secs(120))?;
+    anyhow::ensure!(resp.error.is_none(), "probe request failed: {:?}", resp.error);
+    // the final scheduler iteration may still be flushing its spans
+    // when the response lands; give the drive loop a beat
+    std::thread::sleep(Duration::from_millis(50));
+    let tree = trace::request_tree(resp.id)
+        .ok_or_else(|| anyhow::anyhow!("no span tree recorded for request {}", resp.id))?;
+    let flight = trace::flight_json(None);
+    let flight_events =
+        flight.get("traceEvents").and_then(Json::as_array).map(|a| a.len()).unwrap_or(0);
+    let ring_len = trace::ring_len();
+    probe_server.shutdown();
+    let _ = std::fs::remove_dir_all(&store_root);
+    trace::set_enabled(was_enabled);
+
+    let mut counts: BTreeMap<String, u64> = BTreeMap::new();
+    count_spans(&tree, &mut counts);
+    let n = |name: &str| counts.get(name).copied().unwrap_or(0);
+    let coverage = child_coverage(&tree);
+    let prefill_chunks = n("prefill.chunk");
+    let decode_groups = n("decode.group");
+    let hydrations = n("tenant.hydrate");
+    let queue_waits = n("queue.wait");
+
+    let mut root_json = Json::obj();
+    root_json
+        .set("bench", "trace")
+        .set("schema", 1u64)
+        .set("quick", quick)
+        .set("rounds", rounds)
+        .set("burst", burst)
+        .set("rps_enabled", best_on)
+        .set("rps_disabled", best_off)
+        .set("overhead_pct", overhead_pct)
+        .set("coverage", coverage)
+        .set("prefill_chunk_spans", prefill_chunks)
+        .set("decode_group_spans", decode_groups)
+        .set("hydration_spans", hydrations)
+        .set("queue_wait_present", queue_waits >= 1)
+        .set("flight_events", flight_events)
+        .set("ring_len", ring_len);
+    std::fs::write(json_path, root_json.to_pretty_string())
+        .with_context(|| format!("write {json_path:?}"))?;
+
+    let mut out = format!(
+        "## Trace — recorder overhead + coverage: {rounds}x{burst} requests per side\n"
+    );
+    out.push_str(&format!(
+        "throughput: {best_on:.1} req/s traced vs {best_off:.1} req/s untraced \
+         ({overhead_pct:+.2}% overhead)\n"
+    ));
+    out.push_str(&format!(
+        "probe tree: coverage {:.1}%, {prefill_chunks} prefill chunk(s), \
+         {decode_groups} decode group(s), {hydrations} hydration(s), \
+         {queue_waits} queue wait(s)\n",
+        coverage * 100.0
+    ));
+    out.push_str(&format!("flight recorder: {flight_events} events, ring {ring_len} span(s)\n"));
+    out.push_str(&trace::render_tree(&tree));
+    out.push_str(&format!("wrote {}\n", json_path.display()));
+
+    anyhow::ensure!(
+        overhead_pct <= 2.0,
+        "tracing costs {overhead_pct:.2}% throughput (budget: 2%)"
+    );
+    anyhow::ensure!(
+        coverage >= 0.9,
+        "span tree covers {:.1}% of the root interval (need 90%)",
+        coverage * 100.0
+    );
+    anyhow::ensure!(prefill_chunks >= 1, "no prefill.chunk span in the probe tree");
+    anyhow::ensure!(decode_groups >= 1, "no decode.group span in the probe tree");
+    anyhow::ensure!(hydrations >= 1, "no tenant.hydrate span in the probe tree");
+    anyhow::ensure!(queue_waits >= 1, "no queue.wait span in the probe tree");
+    anyhow::ensure!(flight_events > 0, "flight dump is empty");
     Ok(out)
 }

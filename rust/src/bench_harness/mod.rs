@@ -56,6 +56,11 @@ pub fn run(
         // every injected fault must stay contained (no wedged requests)
         // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
         "chaos" => experiments::chaos(backend, Path::new("BENCH_chaos.json")),
+        // tracing overhead + coverage: throughput with the recorder on
+        // vs off (gate: ≤2% cost), then a traced store-backed request
+        // whose span tree must cover ≥90% of its root interval
+        // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
+        "trace" => experiments::trace(backend, Path::new("BENCH_trace.json")),
         "all" => {
             let mut out = String::new();
             for exp in [

@@ -279,12 +279,23 @@ pub struct ServeConfig {
     /// Failpoint spec armed at server load (`[serve] failpoints`, same
     /// grammar as the `DELTADQ_FAILPOINTS` env var). None = no faults.
     pub failpoints: Option<String>,
+    /// Request-tracing toggle (`[trace] enabled`, default true). Off =
+    /// every span call is a no-op and the debug endpoints return empty.
+    pub trace_enabled: bool,
+    /// Flight-recorder ring capacity in spans (`[trace] ring_spans`).
+    /// Older spans are overwritten once the ring wraps.
+    pub trace_ring_spans: usize,
+    /// `/debug/flight` lookback window in seconds (`[trace]
+    /// flight_window_s`).
+    pub trace_flight_window_s: u64,
 }
 
 impl ServeConfig {
     /// Resolve the typed serving config from a parsed [`Config`],
     /// filling defaults for every absent key.
     pub fn from_config(c: &Config) -> ServeConfig {
+        let ring_default = crate::util::trace::DEFAULT_RING_SPANS as i64;
+        let window_default = crate::util::trace::DEFAULT_FLIGHT_WINDOW_S as i64;
         ServeConfig {
             model: c.str_or("serve.model", "tiny"),
             artifacts_dir: c.str_or("serve.artifacts_dir", "artifacts"),
@@ -314,6 +325,9 @@ impl ServeConfig {
             quarantine_after: c.int_or("store.quarantine_after", 3) as u64,
             probe_interval_ms: c.int_or("store.probe_interval_ms", 2000) as u64,
             failpoints: c.get("serve.failpoints").and_then(|v| v.as_str()).map(str::to_string),
+            trace_enabled: c.bool_or("trace.enabled", true),
+            trace_ring_spans: c.int_or("trace.ring_spans", ring_default) as usize,
+            trace_flight_window_s: c.int_or("trace.flight_window_s", window_default) as u64,
         }
     }
 }
@@ -396,6 +410,9 @@ ratios = [2, 4, 8]
         assert_eq!(sc.quarantine_after, 3);
         assert_eq!(sc.probe_interval_ms, 2000);
         assert_eq!(sc.failpoints, None);
+        assert!(sc.trace_enabled);
+        assert_eq!(sc.trace_ring_spans, crate::util::trace::DEFAULT_RING_SPANS);
+        assert_eq!(sc.trace_flight_window_s, crate::util::trace::DEFAULT_FLIGHT_WINDOW_S);
     }
 
     #[test]
@@ -427,6 +444,16 @@ ratios = [2, 4, 8]
         assert_eq!(sc.sched_block_size, 32);
         assert_eq!(sc.sched_max_running, 12);
         assert_eq!(sc.sched_prefill_chunk, 24);
+    }
+
+    #[test]
+    fn serve_config_reads_trace_section() {
+        let c = Config::parse("[trace]\nenabled = false\nring_spans = 1024\nflight_window_s = 5")
+            .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert!(!sc.trace_enabled);
+        assert_eq!(sc.trace_ring_spans, 1024);
+        assert_eq!(sc.trace_flight_window_s, 5);
     }
 
     #[test]

@@ -64,8 +64,12 @@ impl ReplySink {
         }
     }
 
-    /// Deliver the final response on either sink flavor.
+    /// Deliver the final response on either sink flavor. Also closes
+    /// the request's root trace span *before* the send, so by the time
+    /// the caller observes the response its span tree is fully
+    /// assembled and queryable at `/debug/trace/<id>`.
     pub fn send_done(&self, response: Response) {
+        crate::util::trace::end_request(response.id, response.error.as_deref());
         match self {
             ReplySink::Batch(tx) => {
                 let _ = tx.send(response);

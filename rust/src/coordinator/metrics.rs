@@ -100,6 +100,11 @@ impl Metrics {
         self.queue_wait.lock().unwrap().clone()
     }
 
+    /// Copy of the per-batch execution-time histogram.
+    pub fn batch_exec_histogram(&self) -> LatencyHistogram {
+        self.batch_exec.lock().unwrap().clone()
+    }
+
     /// JSON snapshot (stable key order).
     pub fn snapshot(&self) -> Json {
         let mut o = Json::obj();

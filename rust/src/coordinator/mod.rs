@@ -61,6 +61,11 @@ pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
         // same grammar as the DELTADQ_FAILPOINTS env var
         crate::util::failpoint::arm(spec)?;
     }
+    // flight-recorder knobs ([trace]) apply process-wide before the
+    // first request can open a span
+    crate::util::trace::set_enabled(serve.trace_enabled);
+    crate::util::trace::configure(serve.trace_ring_spans);
+    crate::util::trace::set_flight_window(serve.trace_flight_window_s);
     let dir = Path::new(&serve.artifacts_dir);
     let scale_dir = dir.join(&serve.model);
     let base_path = scale_dir.join("base.dqw");

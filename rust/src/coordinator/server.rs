@@ -20,6 +20,7 @@ use crate::model::weights::ModelWeights;
 use crate::runtime::{ExecutionBackend, NativeBackend};
 use crate::sched::{self, SchedOptions, SchedStats};
 use crate::store::DeltaStore;
+use crate::util::trace;
 
 /// Server construction knobs (a subset of [`crate::config::ServeConfig`]
 /// resolved to concrete values).
@@ -76,6 +77,11 @@ impl Default for ServerOptions {
     }
 }
 
+/// Process-global request id counter. Ids must be unique across every
+/// `Server` in the process — they key the trace registry's span-tree
+/// join, and two servers reusing an id would cross their traces.
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
 /// Multi-tenant delta-serving coordinator.
 pub struct Server {
     store: Arc<TenantStore>,
@@ -84,7 +90,6 @@ pub struct Server {
     /// server (snapshot via [`Metrics::snapshot`]).
     pub metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
-    next_id: AtomicU64,
     backend: Arc<dyn ExecutionBackend>,
     /// Whether the continuous-batching scheduler (vs the legacy
     /// run-to-completion worker pool) drives execution.
@@ -198,7 +203,6 @@ impl Server {
             batcher,
             metrics,
             workers,
-            next_id: AtomicU64::new(1),
             backend,
             sched_active,
             request_ttl: options.request_ttl,
@@ -312,8 +316,9 @@ impl Server {
                 retry_after_s: retry_after.as_secs().max(1),
             });
         }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
         let submitted = Instant::now();
+        let prompt_len = prompt.len();
         let req = Request {
             id,
             tenant: tenant.to_string(),
@@ -324,9 +329,14 @@ impl Server {
             respond,
         };
         self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        // root trace span: opened before the queue hand-off (a fast
+        // request may complete — and close the root — before submit
+        // returns) and closed by the reply sink's terminal send
+        trace::begin_request(id, tenant, prompt_len, max_new, submitted);
         match self.batcher.submit(req) {
             Ok(()) => Ok(()),
             Err(e) => {
+                trace::end_request(id, Some("rejected at submission"));
                 self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
                 Err(e)
             }

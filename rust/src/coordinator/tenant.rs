@@ -675,7 +675,16 @@ fn hydrate_one(shared: &Shared, store: &DeltaStore, tenant: &str) {
         return;
     }
     let disk_bytes = store.tenant_info(tenant).map(|r| r.bytes).unwrap_or(0);
-    let loaded = load_with_retries(shared, store, tenant); // file I/O — no lock held
+    let loaded = {
+        // tenant-scoped trace span: joins the span tree of every
+        // request that overlaps this Disk→Cold hydration
+        let mut span = crate::util::trace::span("tenant.hydrate");
+        span.set_tenant(tenant);
+        span.attr_u64("disk_bytes", disk_bytes);
+        let loaded = load_with_retries(shared, store, tenant); // file I/O — no lock held
+        span.attr_u64("ok", loaded.is_ok() as u64);
+        loaded
+    };
     let mut slots = shared.slots.lock().unwrap();
     // install only into a slot that still wants THIS hydration: a
     // concurrent push() may have replaced the slot with a fresh

@@ -111,6 +111,10 @@ pub struct LoadReport {
     pub total: LatencyHistogram,
     /// Wall-clock of the whole run (seconds; set by [`run`]).
     pub elapsed_s: f64,
+    /// `(request_id, total_seconds)` of every ok response — the ids the
+    /// server returned over the wire, kept so `--trace-slowest` can
+    /// fetch the span trees of the slowest requests after the run.
+    pub samples: Vec<(u64, f64)>,
 }
 
 impl LoadReport {
@@ -128,6 +132,16 @@ impl LoadReport {
         self.ttft_long.merge(&other.ttft_long);
         self.inter_token.merge(&other.inter_token);
         self.total.merge(&other.total);
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    /// The `n` slowest ok requests as `(request_id, total_seconds)`,
+    /// slowest first.
+    pub fn slowest(&self, n: usize) -> Vec<(u64, f64)> {
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| b.1.total_cmp(&a.1));
+        sorted.truncate(n);
+        sorted
     }
 
     /// Completed-request throughput actually achieved.
@@ -255,6 +269,25 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadReport> {
     Ok(report)
 }
 
+/// Fetch one request's span tree from `GET /debug/trace/<id>` (used by
+/// `loadgen --trace-slowest` after the run finishes, so the fetch never
+/// perturbs the measured requests).
+pub fn fetch_trace(addr: &str, id: u64, timeout: Duration) -> Result<Json> {
+    let conn = TcpStream::connect(addr).context("connect")?;
+    conn.set_read_timeout(Some(timeout)).context("set timeout")?;
+    let mut w = conn.try_clone().context("clone stream")?;
+    write!(w, "GET /debug/trace/{id} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")
+        .context("send request")?;
+    w.flush().context("flush request")?;
+    let mut reader = BufReader::new(conn);
+    let resp = read_response(&mut reader).context("response")?;
+    if resp.status != 200 {
+        bail!("GET /debug/trace/{id} returned status {}", resp.status);
+    }
+    let text = std::str::from_utf8(&resp.body).context("utf8 body")?;
+    Json::parse(text).context("trace json")
+}
+
 /// Everything one worker thread needs to fire its request.
 struct RequestSpec {
     addr: String,
@@ -336,6 +369,7 @@ fn try_request(spec: &RequestSpec, report: &mut LoadReport) -> Result<(), Reques
         let mut gaps: Vec<f64> = Vec::new();
         let mut n_tokens = 0u64;
         let mut saw_done = false;
+        let mut req_id: Option<u64> = None;
         while let Some(chunk) = chunks.next_chunk(&mut reader).context("read chunk")? {
             let Some(payload) = sse::payload_of(&chunk) else { continue };
             if payload == sse::DONE_SENTINEL {
@@ -354,6 +388,7 @@ fn try_request(spec: &RequestSpec, report: &mut LoadReport) -> Result<(), Reques
                 if event.get("error").is_some() {
                     return Err(RequestError::Status(500));
                 }
+                req_id = event.get("id").and_then(Json::as_u64);
                 saw_done = true;
             }
         }
@@ -367,9 +402,13 @@ fn try_request(spec: &RequestSpec, report: &mut LoadReport) -> Result<(), Reques
         for gap in gaps {
             report.inter_token.record(gap);
         }
-        report.total.record(started.elapsed().as_secs_f64());
+        let total_s = started.elapsed().as_secs_f64();
+        report.total.record(total_s);
         report.tokens += n_tokens;
         report.ok += 1;
+        if let Some(id) = req_id {
+            report.samples.push((id, total_s));
+        }
     } else {
         let resp = read_response(&mut reader).context("response")?;
         if resp.status != 200 {
@@ -384,9 +423,13 @@ fn try_request(spec: &RequestSpec, report: &mut LoadReport) -> Result<(), Reques
             .and_then(Json::as_array)
             .map(|a| a.len())
             .ok_or_else(|| anyhow::anyhow!("response missing 'tokens'"))?;
-        report.total.record(started.elapsed().as_secs_f64());
+        let total_s = started.elapsed().as_secs_f64();
+        report.total.record(total_s);
         report.tokens += n as u64;
         report.ok += 1;
+        if let Some(id) = j.get("id").and_then(Json::as_u64) {
+            report.samples.push((id, total_s));
+        }
     }
     Ok(())
 }
@@ -429,6 +472,18 @@ mod tests {
         let rendered = a.render();
         assert!(rendered.contains("ttft[short]"), "{rendered}");
         assert!(rendered.contains("ttft[long]"), "{rendered}");
+    }
+
+    #[test]
+    fn slowest_orders_samples_across_merges() {
+        let mut a = LoadReport::default();
+        a.samples.push((1, 0.5));
+        a.samples.push((2, 0.1));
+        let mut b = LoadReport::default();
+        b.samples.push((3, 0.9));
+        a.merge(&b);
+        assert_eq!(a.slowest(2), vec![(3, 0.9), (1, 0.5)]);
+        assert_eq!(a.slowest(10).len(), 3, "n past the sample count clamps");
     }
 
     #[test]

@@ -263,11 +263,17 @@ fn serve_connection(shared: &Shared, stream: TcpStream) -> Result<()> {
         // about to perform, so keep-alive clients don't fire a next
         // request into a dead socket
         let draining = shared.closing.load(Ordering::Acquire);
+        // trace the exchange, not the keep-alive idle time: the span
+        // opens after read_request returns a parsed request
+        let mut handle_span = crate::util::trace::span("gw.handle");
+        handle_span.attr_str("method", &req.method);
+        handle_span.attr_str("path", &req.path);
         // fault injection: a failed socket write mid-exchange closes
         // only this connection (connection_worker logs and moves on)
         crate::util::failpoint::hit("gateway.write")?;
         let keep = routes::handle(&shared.server, &req, &mut writer, draining)?;
         writer.flush()?;
+        drop(handle_span);
         if !keep {
             return Ok(());
         }

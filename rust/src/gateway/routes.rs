@@ -1,7 +1,10 @@
 //! Route handlers for the gateway: `POST /v1/completions` (batch and
-//! SSE-streaming), `GET /metrics` (Prometheus text), `GET /healthz` —
-//! plus the [`SubmitError`] → HTTP status mapping that turns batcher
-//! backpressure into 429 + `Retry-After` and unknown tenants into 404.
+//! SSE-streaming), `GET /metrics` (Prometheus text), `GET /healthz`
+//! (the readiness report), `GET /debug/trace/<id>` (one request's span
+//! tree) and `GET /debug/flight` (the flight recorder as Chrome Trace
+//! Event Format) — plus the [`SubmitError`] → HTTP status mapping that
+//! turns batcher backpressure into 429 + `Retry-After` and unknown
+//! tenants into 404.
 
 use std::io::Write;
 use std::sync::mpsc::RecvTimeoutError;
@@ -12,12 +15,21 @@ use anyhow::Result;
 use crate::coordinator::{Response, Server, StreamEvent, SubmitError, Tier};
 use crate::gateway::http::{write_response, ChunkedWriter, HttpRequest};
 use crate::gateway::sse;
+use crate::sched::SchedStage;
 use crate::util::json::Json;
+use crate::util::trace;
 
 /// How long a connection worker waits on the coordinator before
 /// answering 504 (the batcher has accepted the request, so this only
 /// fires if the model is pathologically slow or a worker died).
 pub const RESPONSE_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Drive-thread heartbeat age past which `/healthz` reports the
+/// scheduler wedged. The drive loop stamps its heartbeat every
+/// iteration and every idle tick (a few milliseconds apart), so five
+/// silent seconds mean the thread is stuck inside a backend call or
+/// dead.
+const SCHED_WEDGED_AFTER: Duration = Duration::from_secs(5);
 
 const CT_JSON: &str = "application/json";
 const CT_SSE: &str = "text/event-stream";
@@ -35,15 +47,28 @@ pub fn handle(
     let keep = req.keep_alive() && !draining;
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/v1/completions") => completions(server, req, w, keep),
-        ("GET", "/healthz") => {
-            let mut o = Json::obj();
-            o.set("status", "ok").set("tenants", server.tenants().len());
-            write_response(w, 200, CT_JSON, o.to_string().as_bytes(), keep, &[])?;
-            Ok(keep)
-        }
+        ("GET", "/healthz") => healthz(server, w, keep),
         ("GET", "/metrics") => {
             let body = render_prometheus(server);
             write_response(w, 200, CT_PROM, body.as_bytes(), keep, &[])?;
+            Ok(keep)
+        }
+        ("GET", "/debug/flight") => {
+            let body = trace::flight_json(None).to_string();
+            write_response(w, 200, CT_JSON, body.as_bytes(), keep, &[])?;
+            Ok(keep)
+        }
+        ("GET", p) if p.starts_with("/debug/trace/") => {
+            let suffix = &p["/debug/trace/".len()..];
+            match suffix.parse::<u64>().ok().and_then(trace::request_tree) {
+                Some(tree) => {
+                    write_response(w, 200, CT_JSON, tree.to_string().as_bytes(), keep, &[])?;
+                }
+                None => {
+                    let msg = format!("no trace recorded for request '{suffix}'");
+                    error_response(w, 404, &msg, keep)?;
+                }
+            }
             Ok(keep)
         }
         ("GET" | "POST", _) => {
@@ -55,6 +80,50 @@ pub fn handle(
             Ok(keep)
         }
     }
+}
+
+/// `GET /healthz`: a readiness report, not a bare 200. The JSON body
+/// carries scheduler drive-thread liveness (age of its last iteration),
+/// the quarantined-tenant count, and KV-pool state; the status is 503
+/// `"degraded"` when the drive thread has gone silent past
+/// [`SCHED_WEDGED_AFTER`] or every registered tenant is quarantined.
+fn healthz(server: &Server, w: &mut impl Write, keep: bool) -> Result<bool> {
+    let tenants = server.tenants().len();
+    let quarantined = server.quarantined_count();
+    let sched = server.sched_stats();
+    let mut wedged = false;
+    let sched_json = match &sched {
+        Some(s) => {
+            // heartbeat 0 = the loop hasn't published yet (it stamps on
+            // its first iteration, microseconds after spawn) — treat as
+            // healthy rather than flagging a server that just started
+            let age_us = match s.last_heartbeat_us {
+                0 => 0,
+                hb => trace::now_us().saturating_sub(hb),
+            };
+            wedged = s.last_heartbeat_us != 0 && Duration::from_micros(age_us) > SCHED_WEDGED_AFTER;
+            let mut j = Json::obj();
+            j.set("active", true)
+                .set("last_iteration_age_ms", age_us as f64 / 1e3)
+                .set("running", s.running)
+                .set("waiting", s.waiting)
+                .set("kv_blocks_used", s.kv_blocks_used)
+                .set("kv_blocks_free", s.kv_blocks_free)
+                .set("kv_blocks_total", s.kv_blocks_total);
+            j
+        }
+        None => Json::Null, // legacy worker pool: no drive thread to watch
+    };
+    let all_quarantined = tenants > 0 && quarantined >= tenants;
+    let degraded = wedged || all_quarantined;
+    let mut o = Json::obj();
+    o.set("status", if degraded { "degraded" } else { "ok" })
+        .set("tenants", tenants)
+        .set("quarantined", quarantined)
+        .set("sched", sched_json);
+    let status = if degraded { 503 } else { 200 };
+    write_response(w, status, CT_JSON, o.to_string().as_bytes(), keep, &[])?;
+    Ok(keep)
 }
 
 /// `{"error": msg}` with the given status.
@@ -458,6 +527,54 @@ pub fn render_prometheus(server: &Server) -> String {
         }
         let _ = writeln!(out, "deltadq_{name}_sum {}", hist.sum());
         let _ = writeln!(out, "deltadq_{name}_count {}", hist.count());
+    }
+
+    // native histograms (aggregatable across shards, unlike the
+    // summaries above): cumulative `le` buckets straight from the
+    // log-bucket boundaries, only occupied buckets emitted
+    let batch_exec = m.batch_exec_histogram();
+    for (name, help, hist) in [
+        ("request_latency_hist_seconds", "End-to-end request latency.", &latency),
+        ("queue_wait_hist_seconds", "Queue wait before batch pickup.", &queue_wait),
+        ("batch_exec_hist_seconds", "Per-iteration batch execution time.", &batch_exec),
+    ] {
+        let _ = writeln!(out, "# HELP deltadq_{name} {help}");
+        let _ = writeln!(out, "# TYPE deltadq_{name} histogram");
+        for (le, c) in hist.cumulative_buckets() {
+            let _ = writeln!(out, "deltadq_{name}_bucket{{le=\"{le}\"}} {c}");
+        }
+        let _ = writeln!(out, "deltadq_{name}_bucket{{le=\"+Inf\"}} {}", hist.count());
+        let _ = writeln!(out, "deltadq_{name}_sum {}", hist.sum());
+        let _ = writeln!(out, "deltadq_{name}_count {}", hist.count());
+    }
+
+    // per-stage scheduler-iteration breakdown: one histogram family,
+    // a `stage` label per iteration phase
+    let _ = writeln!(
+        out,
+        "# HELP deltadq_sched_stage_seconds Scheduler iteration wall time by stage."
+    );
+    let _ = writeln!(out, "# TYPE deltadq_sched_stage_seconds histogram");
+    for stage in SchedStage::ALL {
+        let hist = m.sched.stage_histogram(stage);
+        let s = stage.name();
+        for (le, c) in hist.cumulative_buckets() {
+            let _ = writeln!(
+                out,
+                "deltadq_sched_stage_seconds_bucket{{stage=\"{s}\",le=\"{le}\"}} {c}"
+            );
+        }
+        let _ = writeln!(
+            out,
+            "deltadq_sched_stage_seconds_bucket{{stage=\"{s}\",le=\"+Inf\"}} {}",
+            hist.count()
+        );
+        let _ = writeln!(out, "deltadq_sched_stage_seconds_sum{{stage=\"{s}\"}} {}", hist.sum());
+        let _ = writeln!(
+            out,
+            "deltadq_sched_stage_seconds_count{{stage=\"{s}\"}} {}",
+            hist.count()
+        );
     }
     out
 }

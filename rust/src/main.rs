@@ -145,21 +145,26 @@ fn print_usage() {
                      [--store DIR] (tiered serving out of a delta store)\n\
                      [--listen HOST:PORT] (HTTP gateway: POST\n\
                      /v1/completions with SSE streaming, GET /metrics,\n\
-                     GET /healthz; port 0 = ephemeral, the bound\n\
+                     GET /healthz, GET /debug/trace/<id>, GET\n\
+                     /debug/flight; port 0 = ephemeral, the bound\n\
                      address is printed; serves until killed)\n\
                      [--sched.kv_pool_mib M] [--sched.block_size B]\n\
                      [--sched.max_running N] [--sched.enabled B]\n\
                      [--sched.prefill_chunk P] (continuous-batching\n\
                      scheduler knobs; prefill_chunk bounds prompt\n\
                      positions cached per iteration, 0 = whole prompt)\n\
+                     [--trace.enabled B] [--trace.ring_spans N]\n\
+                     [--trace.flight_window_s S] (request-tracing /\n\
+                     flight-recorder knobs; see docs/OBSERVABILITY.md)\n\
            loadgen   --addr HOST:PORT [--requests N] [--rps R]\n\
                      [--tenants LIST] [--zipf S] [--prompt-len P]\n\
                      [--max-tokens M] [--long-frac F]\n\
                      [--long-max-tokens M] [--stream true|false]\n\
-                     [--seed S] [--out REPORT.json]\n\
+                     [--seed S] [--out REPORT.json] [--trace-slowest N]\n\
                      (open-loop HTTP load: TTFT / inter-token / total\n\
                      latency histograms split short-vs-long, 429\n\
-                     accounting)\n\
+                     accounting; --trace-slowest fetches and prints the\n\
+                     server-side span tree of the N slowest requests)\n\
            push      --store DIR --tenant NAME --delta F.ddq\n\
            gc        --store DIR [--remove TENANT[,TENANT...]]\n\
                      [--dry-run true] (report orphans/bytes without\n\
@@ -167,10 +172,10 @@ fn print_usage() {
            ls        --store DIR\n\
            bench     --name table1|table2|table3|table4|fig4|fig5|fig6|\n\
                      fig7|fig8|ablations|serving|kernels|churn|gateway|\n\
-                     decode|chaos\n\
+                     decode|chaos|trace\n\
                      [--models DIR] [--out FILE] [--backend native|pjrt]\n\
                      [--fused-threads N] [--artifacts DIR]\n\
-                     (kernels/churn/gateway/decode/chaos write\n\
+                     (kernels/churn/gateway/decode/chaos/trace write\n\
                      BENCH_<name>.json; set DELTADQ_BENCH_QUICK=1 for\n\
                      the CI-sized run)"
     );
@@ -369,7 +374,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .flags
         .iter()
         .filter(|(k, _)| {
-            k.starts_with("serve.") || k.starts_with("store.") || k.starts_with("sched.")
+            k.starts_with("serve.")
+                || k.starts_with("store.")
+                || k.starts_with("sched.")
+                || k.starts_with("trace.")
         })
         .map(|(k, v)| format!("{k}={v}"))
         .collect();
@@ -422,6 +430,18 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     };
     let report = deltadq::gateway::loadgen::run(&opts)?;
     print!("{}", report.render());
+    let slowest = args.usize_or("trace-slowest", 0)?;
+    for (rank, (id, total_s)) in report.slowest(slowest).into_iter().enumerate() {
+        match deltadq::gateway::loadgen::fetch_trace(&opts.addr, id, opts.timeout) {
+            Ok(tree) => {
+                println!("slowest #{}: request {id}, total {:.1}ms", rank + 1, total_s * 1e3);
+                print!("{}", deltadq::util::trace::render_tree(&tree));
+            }
+            // traces are best-effort: the ring may have evicted an old
+            // request's spans by the time the run ends
+            Err(e) => println!("slowest #{}: request {id} trace unavailable: {e:#}", rank + 1),
+        }
+    }
     if let Some(out) = args.get("out") {
         std::fs::write(out, report.to_json().to_string())?;
         println!("wrote {out}");

@@ -50,8 +50,49 @@ pub use scheduler::{drive_loop, StepBatch};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use crate::util::hist::LatencyHistogram;
+
+/// One stage of a scheduler iteration, timed per step and exported as
+/// a native Prometheus histogram (`deltadq_sched_stage_seconds`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedStage {
+    /// Deadline sweep + step planning (building the [`StepBatch`]).
+    Plan,
+    /// Bounded prefill chunks for every prefill slot.
+    Prefill,
+    /// Decode execution (token decisions + grouped stacked forwards).
+    Decode,
+    /// Post-execute bookkeeping: finished-sequence sweep, slot frees,
+    /// gauge publication.
+    Emit,
+}
+
+impl SchedStage {
+    /// Every stage, in execution order.
+    pub const ALL: [SchedStage; 4] =
+        [SchedStage::Plan, SchedStage::Prefill, SchedStage::Decode, SchedStage::Emit];
+
+    /// The stage's label value on `/metrics`.
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedStage::Plan => "plan",
+            SchedStage::Prefill => "prefill",
+            SchedStage::Decode => "decode",
+            SchedStage::Emit => "emit",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            SchedStage::Plan => 0,
+            SchedStage::Prefill => 1,
+            SchedStage::Decode => 2,
+            SchedStage::Emit => 3,
+        }
+    }
+}
 
 /// How the drive loop executes the decode half of a [`StepBatch`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -134,10 +175,18 @@ pub struct SchedCounters {
     /// Decode groups whose backend call panicked and was contained by
     /// `catch_unwind` (only that group's sequences got error frames).
     pub decode_group_panics_total: AtomicU64,
+    /// Trace-epoch µs timestamp of the drive loop's latest iteration
+    /// (stamped every `publish`, idle or busy) — `0` until the loop has
+    /// run once. `GET /healthz` reports its age as drive-thread
+    /// liveness.
+    pub last_heartbeat_us: AtomicU64,
     /// Per-step batch occupancy (running sequences per iteration).
     occupancy: Mutex<LatencyHistogram>,
     /// Per-group lane count of every batched decode group executed.
     group_sizes: Mutex<LatencyHistogram>,
+    /// Per-iteration wall time of each [`SchedStage`], indexed by
+    /// `SchedStage::index`.
+    stages: [Mutex<LatencyHistogram>; 4],
 }
 
 impl SchedCounters {
@@ -161,6 +210,16 @@ impl SchedCounters {
         self.group_sizes.lock().unwrap().clone()
     }
 
+    /// Record one iteration's wall time for `stage`.
+    pub fn observe_stage(&self, stage: SchedStage, elapsed: Duration) {
+        self.stages[stage.index()].lock().unwrap().record(elapsed.as_secs_f64());
+    }
+
+    /// Copy of one stage's per-iteration wall-time histogram.
+    pub fn stage_histogram(&self, stage: SchedStage) -> LatencyHistogram {
+        self.stages[stage.index()].lock().unwrap().clone()
+    }
+
     /// Point-in-time snapshot of every gauge/counter.
     pub fn stats(&self) -> SchedStats {
         SchedStats {
@@ -177,6 +236,7 @@ impl SchedCounters {
             prefill_chunks_total: self.prefill_chunks_total.load(Ordering::Relaxed),
             deadline_expired_total: self.deadline_expired_total.load(Ordering::Relaxed),
             decode_group_panics_total: self.decode_group_panics_total.load(Ordering::Relaxed),
+            last_heartbeat_us: self.last_heartbeat_us.load(Ordering::Relaxed),
         }
     }
 }
@@ -210,4 +270,7 @@ pub struct SchedStats {
     pub deadline_expired_total: u64,
     /// Decode-group panics contained by `catch_unwind`.
     pub decode_group_panics_total: u64,
+    /// Trace-epoch µs stamp of the drive loop's latest iteration
+    /// (`0` until the loop has run once).
+    pub last_heartbeat_us: u64,
 }

@@ -19,9 +19,10 @@ use crate::model::kvcache::KvSlot;
 use crate::model::weights::ModelWeights;
 use crate::runtime::{DecodeLane, ExecutionBackend, SharedSliceMut};
 use crate::sched::block::{BlockPool, PagedKvCache};
-use crate::sched::{SchedOptions, StepExec};
+use crate::sched::{SchedOptions, SchedStage, StepExec};
 use crate::tensor::ops;
 use crate::tensor::Matrix;
+use crate::util::trace;
 
 /// How long the drive loop parks when it has nothing running and
 /// nothing queued (also the gauge refresh cadence while idle).
@@ -54,6 +55,9 @@ struct Sequence {
     /// Monotonic admission stamp — the preemption victim is the
     /// sequence with the largest (youngest) stamp.
     admission: u64,
+    /// When the sequence last gained a running slot (re-stamped on
+    /// resume); bounds the `sched.exec` trace span.
+    admitted_at: Instant,
     state: SeqState,
 }
 
@@ -233,11 +237,17 @@ impl Scheduler<'_> {
             return false;
         }
         let mut seq = self.preempted.pop_front().unwrap();
-        let grown = seq.cache.grow(seq.prefix_len());
-        debug_assert!(grown, "free-block check precedes the lease");
+        {
+            let mut resume_span = trace::span_for("sched.resume", seq.req.id);
+            resume_span.set_tenant(&seq.req.tenant);
+            resume_span.attr_u64("prefix_len", seq.prefix_len() as u64);
+            let grown = seq.cache.grow(seq.prefix_len());
+            debug_assert!(grown, "free-block check precedes the lease");
+        }
         seq.last_logits = None; // re-prefill prompt + generated
         self.admissions += 1;
         seq.admission = self.admissions;
+        seq.admitted_at = Instant::now();
         seq.state = SeqState::Active;
         self.running.push(seq);
         true
@@ -330,9 +340,14 @@ impl Scheduler<'_> {
         self.metrics.evictions.fetch_add(acquired.evicted as u64, Ordering::Relaxed);
         let queue_wait = exec_start.duration_since(req.submitted);
         self.metrics.observe_queue_wait(queue_wait.as_secs_f64());
+        trace::span_between("queue.wait", req.id, req.submitted, exec_start);
         let mut cache = PagedKvCache::new(self.pool.clone());
-        let grown = cache.grow(req.prompt.len());
-        debug_assert!(grown, "free-block check precedes the lease");
+        {
+            let mut alloc_span = trace::span_for("kv.alloc", req.id);
+            alloc_span.attr_u64("blocks", needed as u64);
+            let grown = cache.grow(req.prompt.len());
+            debug_assert!(grown, "free-block check precedes the lease");
+        }
         let served_hot = matches!(acquired.view, TenantView::Hot(_));
         self.admissions += 1;
         self.running.push(Sequence {
@@ -344,6 +359,7 @@ impl Scheduler<'_> {
             last_logits: None,
             queue_wait,
             admission: self.admissions,
+            admitted_at: exec_start,
             state: SeqState::Active,
         });
         true
@@ -351,15 +367,25 @@ impl Scheduler<'_> {
 
     // ---------------------------------------------------- stepping
 
-    /// One scheduler iteration over every running sequence.
+    /// One scheduler iteration over every running sequence. Each stage
+    /// (plan/prefill/decode/emit) is timed into the per-stage
+    /// histograms behind `deltadq_sched_stage_seconds`; the whole
+    /// iteration records a `sched.step` trace span.
     fn step(&mut self) {
+        let mut step_span = trace::span("sched.step");
+        let plan_start = Instant::now();
         self.expire_deadlines();
         let plan = self.plan();
         self.metrics.sched.observe_occupancy(plan.occupancy());
-        let step_start = Instant::now();
+        step_span.attr_u64("prefill_slots", plan.prefill.len() as u64);
+        step_span.attr_u64("decode_slots", plan.decode.len() as u64);
+        let prefill_start = Instant::now();
+        self.metrics.sched.observe_stage(SchedStage::Plan, prefill_start - plan_start);
         for i in plan.prefill {
             self.prefill_slot(i);
         }
+        let decode_start = Instant::now();
+        self.metrics.sched.observe_stage(SchedStage::Prefill, decode_start - prefill_start);
         match self.step_exec {
             StepExec::PerSequence => {
                 for i in plan.decode {
@@ -368,10 +394,13 @@ impl Scheduler<'_> {
             }
             StepExec::Batched => self.decode_batched(&plan.decode),
         }
-        self.metrics.observe_batch_exec(step_start.elapsed().as_secs_f64());
+        let emit_start = Instant::now();
+        self.metrics.sched.observe_stage(SchedStage::Decode, emit_start - decode_start);
+        self.metrics.observe_batch_exec((emit_start - prefill_start).as_secs_f64());
         self.metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
         self.metrics.sched.steps_executed.fetch_add(1, Ordering::Relaxed);
         self.sweep();
+        self.metrics.sched.observe_stage(SchedStage::Emit, emit_start.elapsed());
     }
 
     /// Terminate every active sequence whose deadline has passed: free
@@ -415,7 +444,7 @@ impl Scheduler<'_> {
         if !matches!(self.running[i].state, SeqState::Active) {
             return; // preempted earlier in this same iteration
         }
-        let (tokens, done) = {
+        let (tokens, start, done) = {
             let seq = &self.running[i];
             let start = seq.cache.len();
             let total = seq.prefix_len();
@@ -430,8 +459,12 @@ impl Scheduler<'_> {
                 .take(end - start)
                 .copied()
                 .collect();
-            (tokens, end == total)
+            (tokens, start, end == total)
         };
+        let mut chunk_span = trace::span_for("prefill.chunk", self.running[i].req.id);
+        chunk_span.set_tenant(&self.running[i].req.tenant);
+        chunk_span.attr_u64("start_pos", start as u64);
+        chunk_span.attr_u64("n_tokens", tokens.len() as u64);
         let result = {
             let seq = &mut self.running[i];
             crate::util::failpoint::hit("backend.prefill").and_then(|()| match &seq.view {
@@ -446,6 +479,7 @@ impl Scheduler<'_> {
                 ),
             })
         };
+        drop(chunk_span);
         self.metrics.sched.prefill_chunks_total.fetch_add(1, Ordering::Relaxed);
         match result {
             Ok(logits) => {
@@ -580,10 +614,18 @@ impl Scheduler<'_> {
                 None => groups.push((view, vec![entry])),
             }
         }
+        // per-group trace identity: tenant plus the member request ids
+        // (the attribute that joins the group span into each member's
+        // tree and nobody else's)
+        let mut group_meta: Vec<(String, String)> = Vec::with_capacity(groups.len());
         for (_, members) in &groups {
             self.metrics.sched.decode_groups_total.fetch_add(1, Ordering::Relaxed);
             self.metrics.sched.decode_lanes_total.fetch_add(members.len() as u64, Ordering::Relaxed);
             self.metrics.sched.observe_group(members.len());
+            let tenant = self.running[members[0].0].req.tenant.clone();
+            let ids: Vec<String> =
+                members.iter().map(|&(slot, _, _)| self.running[slot].req.id.to_string()).collect();
+            group_meta.push((tenant, ids.join(",")));
         }
         let mut results: Vec<Option<Result<Matrix>>> = (0..groups.len()).map(|_| None).collect();
         {
@@ -591,10 +633,17 @@ impl Scheduler<'_> {
             let store = self.store;
             let base: &Arc<ModelWeights> = store.base();
             let sched_counters = &self.metrics.sched;
+            let n_layers = base.config.n_layers.max(1);
             let seqs = SharedSliceMut::new(&mut self.running);
             let out = SharedSliceMut::new(&mut results);
             let run_group = |gi: usize| {
                 let (view, members) = &groups[gi];
+                let mut group_span = trace::span("decode.group");
+                let (tenant, requests) = &group_meta[gi];
+                group_span.set_tenant(tenant);
+                group_span.attr_str("requests", requests);
+                group_span.attr_u64("lanes", members.len() as u64);
+                let group_start = Instant::now();
                 let mut lanes: Vec<DecodeLane<'_>> = Vec::with_capacity(members.len());
                 for &(slot, token, pos) in members {
                     // SAFETY: every slot index appears in exactly one
@@ -627,6 +676,8 @@ impl Scheduler<'_> {
                         ))
                     }
                 };
+                let layer_ms = group_start.elapsed().as_secs_f64() * 1e3 / n_layers as f64;
+                group_span.attr_f64("layer_ms", layer_ms);
                 // SAFETY: result cell gi is owned by group gi alone.
                 unsafe { out.slice_mut(gi, 1)[0] = Some(r) };
             };
@@ -689,6 +740,10 @@ impl Scheduler<'_> {
 
     fn preempt(&mut self, j: usize) {
         let seq = &mut self.running[j];
+        let mut preempt_span = trace::span_for("sched.preempt", seq.req.id);
+        preempt_span.set_tenant(&seq.req.tenant);
+        preempt_span.attr_u64("generated", seq.generated.len() as u64);
+        drop(preempt_span);
         seq.cache.release();
         seq.last_logits = None;
         seq.state = SeqState::Preempted;
@@ -730,6 +785,7 @@ impl Scheduler<'_> {
     /// unknown/failed tenant, impossible block demand) — mirrors the
     /// legacy loop's unavailable-tenant response.
     fn answer_unadmitted(&self, req: Request, error: String) {
+        trace::span_between("queue.wait", req.id, req.submitted, Instant::now());
         self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
         let total = req.submitted.elapsed();
         req.respond.send_done(Response {
@@ -744,6 +800,7 @@ impl Scheduler<'_> {
     }
 
     fn respond(metrics: &Metrics, seq: &mut Sequence, error: Option<String>) {
+        trace::span_between("sched.exec", seq.req.id, seq.admitted_at, Instant::now());
         seq.cache.release();
         let tokens = std::mem::take(&mut seq.generated);
         let total = seq.req.submitted.elapsed();
@@ -783,9 +840,11 @@ impl Scheduler<'_> {
         self.preempted.insert(at, seq);
     }
 
-    /// Refresh the shared gauges.
+    /// Refresh the shared gauges and stamp the drive-thread heartbeat
+    /// (`/healthz` liveness).
     fn publish(&self) {
         let s = &self.metrics.sched;
+        s.last_heartbeat_us.store(trace::now_us(), Ordering::Relaxed);
         s.running.store(self.running.len() as u64, Ordering::Relaxed);
         let waiting = self.batcher.queued() + self.preempted.len();
         s.waiting.store(waiting as u64, Ordering::Relaxed);

@@ -172,14 +172,38 @@ pub fn hit(name: &str) -> Result<()> {
             }
         }
     };
+    // every fire lands in the flight recorder (the Sleep span's
+    // duration is the injected delay itself)
+    let mut fire_span = match action {
+        Action::Proceed => None,
+        _ => {
+            let mut s = crate::util::trace::span("failpoint.fire");
+            s.attr_str("point", name);
+            Some(s)
+        }
+    };
     match action {
         Action::Proceed => Ok(()),
         Action::Sleep(d) => {
+            if let Some(s) = &mut fire_span {
+                s.attr_str("action", "delay");
+            }
             std::thread::sleep(d);
             Ok(())
         }
-        Action::Fail(k) => Err(anyhow!("failpoint '{name}' injected error (trigger {k})")),
-        Action::Panic => panic!("failpoint '{name}' injected panic"),
+        Action::Fail(k) => {
+            if let Some(s) = &mut fire_span {
+                s.attr_str("action", "error");
+            }
+            Err(anyhow!("failpoint '{name}' injected error (trigger {k})"))
+        }
+        Action::Panic => {
+            if let Some(s) = &mut fire_span {
+                s.attr_str("action", "panic");
+            }
+            drop(fire_span);
+            panic!("failpoint '{name}' injected panic")
+        }
     }
 }
 

@@ -140,6 +140,27 @@ impl LatencyHistogram {
         self.max
     }
 
+    /// Cumulative `(upper_bound_seconds, cumulative_count)` pairs over
+    /// the occupied log buckets — the finite `le` series of a native
+    /// Prometheus histogram. Only non-empty buckets are emitted (a
+    /// scrape line per occupied bucket, not per possible bucket); the
+    /// caller appends the `+Inf` bucket as [`count`](Self::count).
+    /// Samples clamped into the final catch-all bucket carry no finite
+    /// upper bound and are folded into `+Inf` only.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate().take(BUCKETS - 1) {
+            if c > 0 {
+                cum += c;
+                // exclusive-upper edge of bucket b (`le` is ≤, and the
+                // edge itself lands in bucket b+1 — still correct)
+                out.push((MIN_S * 2f64.powf((b + 1) as f64 / SUB as f64), cum));
+            }
+        }
+        out
+    }
+
     /// Fold another histogram into this one (exact: bucket-wise add).
     pub fn merge(&mut self, other: &LatencyHistogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
@@ -244,6 +265,29 @@ mod tests {
         for p in [10.0, 50.0, 95.0, 99.0] {
             assert_eq!(a.percentile(p), all.percentile(p), "p{p}");
         }
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_bound_samples() {
+        let mut h = LatencyHistogram::new();
+        let samples = [1e-4, 2e-4, 2e-4, 5e-3, 0.12];
+        for s in samples {
+            h.record(s);
+        }
+        let buckets = h.cumulative_buckets();
+        assert!(!buckets.is_empty());
+        let mut prev_le = 0.0;
+        let mut prev_c = 0;
+        for &(le, c) in &buckets {
+            assert!(le > prev_le, "upper bounds strictly increase");
+            assert!(c >= prev_c, "cumulative counts never decrease");
+            // the cumulative count at `le` bounds the samples ≤ le
+            let at_most = samples.iter().filter(|&&s| s <= le).count() as u64;
+            assert!(c <= at_most, "le={le}: cumulative {c} > actual {at_most}");
+            prev_le = le;
+            prev_c = c;
+        }
+        assert_eq!(buckets.last().unwrap().1, h.count(), "all samples below the catch-all");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Shared utilities: small linear algebra, JSON emission/parsing,
-//! CRC-32, the log-bucketed latency histogram, table rendering, and
-//! timing — all in-tree because the
+//! CRC-32, the log-bucketed latency histogram, table rendering,
+//! timing, fault injection, and the request-tracing flight recorder
+//! ([`trace`]) — all in-tree because the
 //! crate's only default dependency is `anyhow` (see Cargo.toml; the
 //! `xla` stub rides behind the optional `pjrt` feature).
 
@@ -12,4 +13,5 @@ pub mod json;
 pub mod linalg;
 pub mod table;
 pub mod timer;
+pub mod trace;
 pub mod zipf;

@@ -1,0 +1,726 @@
+//! End-to-end request tracing and the serving flight recorder (S17).
+//!
+//! Every stage of a request's life — gateway handling, batcher queue
+//! wait, scheduler admission, tenant hydration, KV block churn, each
+//! prefill chunk, each decode group, every failpoint fire — records a
+//! [`Span`]: an id, a parent id, monotonic microsecond timestamps, and
+//! a handful of `key=value` attributes. Spans are buffered per thread
+//! (lock-light: one registry lock per flushed batch, not per span) and
+//! drain into a bounded global flight-recorder ring.
+//!
+//! Three consumers:
+//!
+//! * [`request_tree`] — the span tree of one request (the gateway's
+//!   `GET /debug/trace/<request_id>`), assembled from the ring: spans
+//!   carrying the request id attach directly; tenant-scoped spans
+//!   (hydration, decode groups) attach when their tenant matches and
+//!   their interval overlaps the request.
+//! * [`flight_json`] — the last N seconds of the ring in Chrome Trace
+//!   Event Format (the gateway's `GET /debug/flight`), loadable in
+//!   `chrome://tracing` or Perfetto; one `tid` lane per recording
+//!   thread.
+//! * The per-request root spans themselves ([`begin_request`] /
+//!   [`end_request`]), which bound the wall time the recorded tree is
+//!   benchmarked against (`bench --name trace`).
+//!
+//! When tracing is disabled ([`set_enabled`]) every recording call is
+//! one relaxed atomic load and an early return — the serving hot path
+//! pays nothing measurable (gated at ≤2% by `BENCH_trace.json`).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Default flight-recorder ring capacity, in spans (`[trace] ring_spans`).
+pub const DEFAULT_RING_SPANS: usize = 65_536;
+/// Default `GET /debug/flight` window, in seconds (`[trace] flight_window_s`).
+pub const DEFAULT_FLIGHT_WINDOW_S: u64 = 60;
+/// Per-thread buffer size that forces a flush even mid-span-stack.
+const FLUSH_EVERY: usize = 64;
+/// Cap on simultaneously open request roots; the oldest are evicted to
+/// the ring (marked `abandoned`) so a sink that never answers cannot
+/// leak memory.
+const MAX_OPEN: usize = 1024;
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_SPANS);
+static FLIGHT_WINDOW_S: AtomicU64 = AtomicU64::new(DEFAULT_FLIGHT_WINDOW_S);
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+static NEXT_LANE: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+
+/// One attribute value on a [`Span`].
+#[derive(Debug, Clone)]
+pub enum AttrVal {
+    /// Unsigned integer attribute.
+    U64(u64),
+    /// Floating-point attribute.
+    F64(f64),
+    /// String attribute.
+    Str(String),
+}
+
+fn attr_json(v: &AttrVal) -> Json {
+    match v {
+        AttrVal::U64(n) => Json::from(*n),
+        AttrVal::F64(x) => Json::from(*x),
+        AttrVal::Str(s) => Json::from(s.as_str()),
+    }
+}
+
+/// One recorded interval: a named stage of work with monotonic
+/// microsecond timestamps relative to the process trace epoch.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Unique span id (process-wide, monotonically allocated).
+    pub id: u64,
+    /// Enclosing span's id on the recording thread (`0` = none).
+    pub parent: u64,
+    /// The request this span belongs to (`0` = not request-scoped).
+    pub request: u64,
+    /// Stage name, dot-namespaced (`"sched.step"`, `"prefill.chunk"`).
+    pub name: &'static str,
+    /// Tenant the span serves, when the work is tenant-scoped rather
+    /// than request-scoped (hydration, decode groups).
+    pub tenant: Option<Box<str>>,
+    /// Recording thread's lane id (`0` = the cross-thread request lane).
+    pub lane: u64,
+    /// Start, µs since the trace epoch.
+    pub start_us: u64,
+    /// End, µs since the trace epoch.
+    pub end_us: u64,
+    /// `key=value` attributes.
+    pub attrs: Vec<(&'static str, AttrVal)>,
+}
+
+#[derive(Default)]
+struct Registry {
+    ring: VecDeque<Span>,
+    open: BTreeMap<u64, Span>,
+    lanes: Vec<(u64, String)>,
+}
+
+fn lock_registry() -> MutexGuard<'static, Registry> {
+    match REGISTRY.get_or_init(|| Mutex::new(Registry::default())).lock() {
+        Ok(g) => g,
+        // a panic mid-record leaves plain data; keep serving
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch (monotonic; independent
+/// of whether recording is enabled).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+fn us_of(at: Instant) -> u64 {
+    match at.checked_duration_since(epoch()) {
+        Some(d) => d.as_micros() as u64,
+        None => 0, // predates the epoch by construction-order microseconds
+    }
+}
+
+struct Lane {
+    id: u64,
+    buf: Vec<Span>,
+    stack: Vec<u64>,
+}
+
+thread_local! {
+    static LANE: RefCell<Lane> = RefCell::new(register_lane());
+}
+
+fn register_lane() -> Lane {
+    let id = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+    let name = match std::thread::current().name() {
+        Some(n) => n.to_string(),
+        None => format!("thread-{id}"),
+    };
+    lock_registry().lanes.push((id, name));
+    Lane { id, buf: Vec::new(), stack: Vec::new() }
+}
+
+fn push_ring(reg: &mut Registry, span: Span) {
+    let cap = RING_CAP.load(Ordering::Relaxed).max(1);
+    reg.ring.push_back(span);
+    while reg.ring.len() > cap {
+        reg.ring.pop_front();
+    }
+}
+
+fn push_batch(batch: Vec<Span>) {
+    let mut reg = lock_registry();
+    for span in batch {
+        push_ring(&mut reg, span);
+    }
+}
+
+/// Enable or disable recording. Disabled, every recording call is one
+/// relaxed atomic load; the ring and any open roots are left as-is.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether recording is currently enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Set the flight-recorder ring capacity, in spans.
+pub fn configure(ring_spans: usize) {
+    RING_CAP.store(ring_spans.max(1), Ordering::Relaxed);
+}
+
+/// Set the default `flight_json(None)` window, in seconds (`0` = the
+/// whole ring).
+pub fn set_flight_window(secs: u64) {
+    FLIGHT_WINDOW_S.store(secs, Ordering::Relaxed);
+}
+
+/// Drop every recorded span and open root (tests and benches).
+pub fn clear() {
+    let mut reg = lock_registry();
+    reg.ring.clear();
+    reg.open.clear();
+}
+
+/// Number of finished spans currently in the ring.
+pub fn ring_len() -> usize {
+    lock_registry().ring.len()
+}
+
+/// RAII guard for an in-progress span; the span is recorded when the
+/// guard drops. Guards on one thread nest: a guard opened while another
+/// is live records the outer span as its parent (drop order must be
+/// LIFO, which scoped `let` bindings give for free). Not `Send` — a
+/// span starts and ends on one thread ([`span_between`] covers
+/// cross-thread intervals, [`begin_request`] the request roots).
+pub struct SpanGuard {
+    span: Option<Span>,
+    _not_send: PhantomData<*mut ()>,
+}
+
+/// Open a span with no request association (scheduler iterations,
+/// gateway connection handling).
+pub fn span(name: &'static str) -> SpanGuard {
+    span_for(name, 0)
+}
+
+/// Open a span belonging to request `request` (`0` = none).
+pub fn span_for(name: &'static str, request: u64) -> SpanGuard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return SpanGuard { span: None, _not_send: PhantomData };
+    }
+    let span = LANE.with(|l| {
+        let mut l = l.borrow_mut();
+        let parent = l.stack.last().copied().unwrap_or(0);
+        let id = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
+        l.stack.push(id);
+        Span {
+            id,
+            parent,
+            request,
+            name,
+            tenant: None,
+            lane: l.id,
+            start_us: now_us(),
+            end_us: 0,
+            attrs: Vec::new(),
+        }
+    });
+    SpanGuard { span: Some(span), _not_send: PhantomData }
+}
+
+impl SpanGuard {
+    /// Attach an unsigned integer attribute.
+    pub fn attr_u64(&mut self, key: &'static str, value: u64) {
+        if let Some(s) = &mut self.span {
+            s.attrs.push((key, AttrVal::U64(value)));
+        }
+    }
+
+    /// Attach a floating-point attribute.
+    pub fn attr_f64(&mut self, key: &'static str, value: f64) {
+        if let Some(s) = &mut self.span {
+            s.attrs.push((key, AttrVal::F64(value)));
+        }
+    }
+
+    /// Attach a string attribute.
+    pub fn attr_str(&mut self, key: &'static str, value: &str) {
+        if let Some(s) = &mut self.span {
+            s.attrs.push((key, AttrVal::Str(value.to_string())));
+        }
+    }
+
+    /// Mark the span as serving `tenant` (joins it into the span trees
+    /// of that tenant's overlapping requests).
+    pub fn set_tenant(&mut self, tenant: &str) {
+        if let Some(s) = &mut self.span {
+            s.tenant = Some(tenant.into());
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(mut span) = self.span.take() else { return };
+        span.end_us = now_us();
+        let batch = LANE.with(|l| {
+            let mut l = l.borrow_mut();
+            l.stack.pop();
+            l.buf.push(span);
+            if l.stack.is_empty() || l.buf.len() >= FLUSH_EVERY {
+                std::mem::take(&mut l.buf)
+            } else {
+                Vec::new()
+            }
+        });
+        if !batch.is_empty() {
+            push_batch(batch);
+        }
+    }
+}
+
+/// Flush this thread's buffered spans into the ring.
+pub fn flush_thread() {
+    let batch = LANE.with(|l| std::mem::take(&mut l.borrow_mut().buf));
+    if !batch.is_empty() {
+        push_batch(batch);
+    }
+}
+
+/// Record an already-measured interval for request `request` (used
+/// where the start predates the recording site, e.g. queue wait
+/// measured at admission from the submit timestamp).
+pub fn span_between(name: &'static str, request: u64, start: Instant, end: Instant) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let (lane, parent) =
+        LANE.with(|l| (l.borrow().id, l.borrow().stack.last().copied().unwrap_or(0)));
+    let span = Span {
+        id: NEXT_SPAN.fetch_add(1, Ordering::Relaxed),
+        parent,
+        request,
+        name,
+        tenant: None,
+        lane,
+        start_us: us_of(start),
+        end_us: us_of(end),
+        attrs: Vec::new(),
+    };
+    push_batch(vec![span]);
+}
+
+/// Open request `id`'s root span (at submit time). The root stays open
+/// until [`end_request`]; [`request_tree`] renders in-flight requests
+/// with `"open": true`.
+pub fn begin_request(id: u64, tenant: &str, prompt_len: usize, max_new: usize, start: Instant) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let span = Span {
+        id: NEXT_SPAN.fetch_add(1, Ordering::Relaxed),
+        parent: 0,
+        request: id,
+        name: "request",
+        tenant: Some(tenant.into()),
+        lane: 0,
+        start_us: us_of(start),
+        end_us: 0,
+        attrs: vec![
+            ("prompt_len", AttrVal::U64(prompt_len as u64)),
+            ("max_new", AttrVal::U64(max_new as u64)),
+        ],
+    };
+    let mut reg = lock_registry();
+    while reg.open.len() >= MAX_OPEN {
+        let oldest = *reg.open.keys().next().expect("open map non-empty");
+        let mut stale = reg.open.remove(&oldest).expect("key just read");
+        stale.end_us = now_us();
+        stale.attrs.push(("abandoned", AttrVal::U64(1)));
+        push_ring(&mut reg, stale);
+    }
+    reg.open.insert(id, span);
+}
+
+/// Close request `id`'s root span (at response time) and flush the
+/// calling thread's buffer so the finished tree is immediately
+/// queryable. `error` is attached as an attribute when present.
+pub fn end_request(id: u64, error: Option<&str>) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    flush_thread();
+    let mut reg = lock_registry();
+    if let Some(mut root) = reg.open.remove(&id) {
+        root.end_us = now_us();
+        if let Some(e) = error {
+            root.attrs.push(("error", AttrVal::Str(e.to_string())));
+        }
+        push_ring(&mut reg, root);
+    }
+}
+
+fn belongs(s: &Span, root: &Span, request: u64, id_str: &str) -> bool {
+    if s.request == request {
+        return true;
+    }
+    if s.request != 0 {
+        return false;
+    }
+    // tenant-scoped span: join on tenant + interval overlap, narrowed
+    // by an explicit member list when the recorder supplied one
+    let Some(tenant) = &s.tenant else { return false };
+    if root.tenant.as_deref() != Some(tenant.as_ref()) {
+        return false;
+    }
+    if s.start_us > root.end_us || s.end_us < root.start_us {
+        return false;
+    }
+    match s.attrs.iter().find(|(k, _)| *k == "requests") {
+        Some((_, AttrVal::Str(list))) => list.split(',').any(|t| t == id_str),
+        _ => true,
+    }
+}
+
+fn span_json(s: &Span) -> Json {
+    let mut j = Json::obj();
+    j.set("name", s.name)
+        .set("id", s.id)
+        .set("start_us", s.start_us)
+        .set("dur_us", s.end_us.saturating_sub(s.start_us));
+    if s.request != 0 {
+        j.set("request", s.request);
+    }
+    if let Some(t) = &s.tenant {
+        j.set("tenant", t.as_ref());
+    }
+    if !s.attrs.is_empty() {
+        let mut attrs = Json::obj();
+        for (k, v) in &s.attrs {
+            attrs.set(k, attr_json(v));
+        }
+        j.set("attrs", attrs);
+    }
+    j
+}
+
+fn node_json(span: &Span, members: &[Span], children: &BTreeMap<u64, Vec<usize>>) -> Json {
+    let mut j = span_json(span);
+    let mut kids = Json::arr();
+    if let Some(list) = children.get(&span.id) {
+        for &i in list {
+            kids.push(node_json(&members[i], members, children));
+        }
+    }
+    j.set("children", kids);
+    j
+}
+
+/// Assemble request `request`'s span tree from the ring (and its root,
+/// open or closed). Spans recorded with the request id attach directly;
+/// tenant-scoped spans attach when tenant and interval match. A span
+/// whose recorded parent is outside the tree becomes a child of the
+/// root, so nesting survives partial ring eviction.
+pub fn request_tree(request: u64) -> Option<Json> {
+    let reg = lock_registry();
+    let (root, open) = match reg.open.get(&request) {
+        Some(r) => {
+            let mut r = r.clone();
+            r.end_us = now_us();
+            (r, true)
+        }
+        None => {
+            let r = reg
+                .ring
+                .iter()
+                .rev()
+                .find(|s| s.request == request && s.name == "request")?
+                .clone();
+            (r, false)
+        }
+    };
+    let id_str = request.to_string();
+    let members: Vec<Span> = reg
+        .ring
+        .iter()
+        .filter(|s| s.id != root.id && belongs(s, &root, request, &id_str))
+        .cloned()
+        .collect();
+    drop(reg);
+
+    let ids: BTreeSet<u64> = members.iter().map(|s| s.id).collect();
+    let mut children: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for (i, s) in members.iter().enumerate() {
+        let parent = if s.parent != 0 && ids.contains(&s.parent) { s.parent } else { root.id };
+        children.entry(parent).or_default().push(i);
+    }
+    for kids in children.values_mut() {
+        kids.sort_by_key(|&i| (members[i].start_us, members[i].id));
+    }
+    let mut tree = node_json(&root, &members, &children);
+    if open {
+        tree.set("open", true);
+    }
+    Some(tree)
+}
+
+/// Dump the ring's last `window` (default: the configured flight
+/// window) as Chrome Trace Event Format JSON — `{"traceEvents": [...]}`
+/// with one complete (`"ph": "X"`) event per span and `thread_name`
+/// metadata per recording lane. Loadable in `chrome://tracing` and
+/// Perfetto.
+pub fn flight_json(window: Option<Duration>) -> Json {
+    let window_s = match window {
+        Some(d) => d.as_secs(),
+        None => FLIGHT_WINDOW_S.load(Ordering::Relaxed),
+    };
+    let cutoff =
+        if window_s == 0 { 0 } else { now_us().saturating_sub(window_s.saturating_mul(1_000_000)) };
+    let reg = lock_registry();
+    let mut events = Json::arr();
+    let mut meta = Json::obj();
+    let mut args = Json::obj();
+    args.set("name", "requests");
+    meta.set("name", "thread_name").set("ph", "M").set("pid", 1u64).set("tid", 0u64);
+    meta.set("args", args);
+    events.push(meta);
+    for (id, name) in &reg.lanes {
+        let mut m = Json::obj();
+        let mut args = Json::obj();
+        args.set("name", name.as_str());
+        m.set("name", "thread_name").set("ph", "M").set("pid", 1u64).set("tid", *id);
+        m.set("args", args);
+        events.push(m);
+    }
+    for s in reg.ring.iter().filter(|s| s.end_us >= cutoff) {
+        let mut e = Json::obj();
+        e.set("name", s.name)
+            .set("cat", s.name.split('.').next().unwrap_or("span"))
+            .set("ph", "X")
+            .set("ts", s.start_us)
+            .set("dur", s.end_us.saturating_sub(s.start_us))
+            .set("pid", 1u64)
+            .set("tid", s.lane);
+        let mut args = Json::obj();
+        if s.request != 0 {
+            args.set("request", s.request);
+        }
+        if let Some(t) = &s.tenant {
+            args.set("tenant", t.as_ref());
+        }
+        for (k, v) in &s.attrs {
+            args.set(k, attr_json(v));
+        }
+        e.set("args", args);
+        events.push(e);
+    }
+    let mut root = Json::obj();
+    root.set("traceEvents", events).set("displayTimeUnit", "ms");
+    root
+}
+
+/// Render a [`request_tree`] JSON document as an indented text tree
+/// (the `loadgen --trace-slowest` output).
+pub fn render_tree(tree: &Json) -> String {
+    let mut out = String::new();
+    render_node(tree, 0, &mut out);
+    out
+}
+
+fn render_node(node: &Json, depth: usize, out: &mut String) {
+    use std::fmt::Write as _;
+    let name = node.get("name").and_then(Json::as_str).unwrap_or("?");
+    let start_ms = node.get("start_us").and_then(Json::as_f64).unwrap_or(0.0) / 1e3;
+    let dur_ms = node.get("dur_us").and_then(Json::as_f64).unwrap_or(0.0) / 1e3;
+    let _ = write!(out, "{:indent$}{name} @{start_ms:.2}ms +{dur_ms:.2}ms", "", indent = depth * 2);
+    if let Some(tenant) = node.get("tenant").and_then(Json::as_str) {
+        let _ = write!(out, " tenant={tenant}");
+    }
+    if let Some(attrs) = node.get("attrs").and_then(Json::as_object) {
+        for (k, v) in attrs {
+            let _ = write!(out, " {k}={}", v.to_string());
+        }
+    }
+    out.push('\n');
+    if let Some(kids) = node.get("children").and_then(Json::as_array) {
+        for kid in kids {
+            render_node(kid, depth + 1, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // trace state is process-global; these tests serialize against each
+    // other (other modules' tests record spans but never assert on them)
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> MutexGuard<'static, ()> {
+        match TEST_LOCK.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    #[test]
+    fn request_tree_assembles_with_nesting() {
+        let _g = locked();
+        set_enabled(true);
+        configure(DEFAULT_RING_SPANS);
+        let rid = 0xDEAD_0001u64;
+        let t0 = Instant::now();
+        begin_request(rid, "trace-tt", 4, 8, t0);
+        span_between("queue.wait", rid, t0, Instant::now());
+        {
+            let mut exec = span_for("sched.exec", rid);
+            exec.attr_u64("iter", 1);
+            let mut chunk = span_for("prefill.chunk", rid);
+            chunk.attr_u64("n_tokens", 4);
+            drop(chunk);
+        }
+        {
+            // tenant-scoped span on an unrelated stack: joins via tenant
+            let mut group = span("decode.group");
+            group.set_tenant("trace-tt");
+            group.attr_str("requests", &rid.to_string());
+            group.attr_u64("lanes", 1);
+        }
+        end_request(rid, None);
+
+        let tree = request_tree(rid).expect("tree recorded");
+        assert_eq!(tree.get("name").unwrap().as_str().unwrap(), "request");
+        assert_eq!(tree.get("tenant").unwrap().as_str().unwrap(), "trace-tt");
+        assert!(tree.get("open").is_none(), "closed root");
+        let kids = tree.get("children").unwrap().as_array().unwrap();
+        let names: Vec<&str> =
+            kids.iter().map(|k| k.get("name").unwrap().as_str().unwrap()).collect();
+        assert!(names.contains(&"queue.wait"), "{names:?}");
+        assert!(names.contains(&"sched.exec"), "{names:?}");
+        assert!(names.contains(&"decode.group"), "{names:?}");
+        let exec = kids
+            .iter()
+            .find(|k| k.get("name").unwrap().as_str() == Some("sched.exec"))
+            .unwrap();
+        let exec_kids = exec.get("children").unwrap().as_array().unwrap();
+        assert_eq!(exec_kids.len(), 1, "prefill chunk nests under its exec span");
+        assert_eq!(exec_kids[0].get("name").unwrap().as_str().unwrap(), "prefill.chunk");
+    }
+
+    #[test]
+    fn tenant_join_excludes_other_requests_groups() {
+        let _g = locked();
+        set_enabled(true);
+        configure(DEFAULT_RING_SPANS);
+        let rid = 0xDEAD_0002u64;
+        let t0 = Instant::now();
+        begin_request(rid, "trace-join", 1, 1, t0);
+        {
+            let mut ours = span("decode.group");
+            ours.set_tenant("trace-join");
+            ours.attr_str("requests", &format!("{rid},42"));
+        }
+        {
+            let mut theirs = span("decode.group");
+            theirs.set_tenant("trace-join");
+            theirs.attr_str("requests", "42,43");
+        }
+        end_request(rid, None);
+        let tree = request_tree(rid).unwrap();
+        let kids = tree.get("children").unwrap().as_array().unwrap();
+        let groups =
+            kids.iter().filter(|k| k.get("name").unwrap().as_str() == Some("decode.group"));
+        assert_eq!(groups.count(), 1, "member list filters foreign groups");
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = locked();
+        set_enabled(false);
+        let rid = 0xDEAD_0003u64;
+        begin_request(rid, "trace-off", 1, 1, Instant::now());
+        {
+            let _s = span_for("prefill.chunk", rid);
+        }
+        end_request(rid, None);
+        set_enabled(true);
+        assert!(request_tree(rid).is_none());
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let _g = locked();
+        set_enabled(true);
+        configure(8);
+        for i in 0..64u64 {
+            let mut s = span("bounded.probe");
+            s.attr_u64("i", i);
+        }
+        flush_thread();
+        assert!(ring_len() <= 8, "ring exceeded its capacity: {}", ring_len());
+        configure(DEFAULT_RING_SPANS);
+    }
+
+    #[test]
+    fn flight_dump_is_chrome_trace_format() {
+        let _g = locked();
+        set_enabled(true);
+        configure(DEFAULT_RING_SPANS);
+        {
+            let mut s = span("flight.probe");
+            s.attr_u64("k", 1);
+        }
+        flush_thread();
+        let flight = flight_json(None);
+        let events = flight.get("traceEvents").unwrap().as_array().unwrap();
+        assert!(
+            events.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("flight.probe")),
+            "probe span missing from the flight dump"
+        );
+        for e in events {
+            for key in ["name", "ph", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "event missing {key}: {e:?}");
+            }
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(ph == "X" || ph == "M", "unexpected phase {ph}");
+            if ph == "X" {
+                assert!(e.get("ts").is_some() && e.get("dur").is_some(), "{e:?}");
+            }
+        }
+        // round-trips through the parser (valid JSON)
+        let text = flight.to_string();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn render_tree_is_indented_text() {
+        let _g = locked();
+        set_enabled(true);
+        let rid = 0xDEAD_0004u64;
+        begin_request(rid, "trace-render", 2, 2, Instant::now());
+        {
+            let mut s = span_for("prefill.chunk", rid);
+            s.attr_u64("n_tokens", 2);
+        }
+        end_request(rid, None);
+        let text = render_tree(&request_tree(rid).unwrap());
+        assert!(text.starts_with("request "), "{text}");
+        assert!(text.contains("\n  prefill.chunk "), "{text}");
+        assert!(text.contains("n_tokens=2"), "{text}");
+    }
+}

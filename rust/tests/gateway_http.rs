@@ -8,7 +8,12 @@
 //! * a flood past `queue_depth` sheds with 429 + `Retry-After` while
 //!   every accepted request still completes (nothing dropped or hung);
 //! * `GET /metrics` exposes the tier counters (disk loads, demotions)
-//!   and queue-depth gauges in Prometheus text format.
+//!   and queue-depth gauges in well-formed Prometheus text format;
+//! * `GET /healthz` is a readiness report: 200 `"ok"` while serving,
+//!   503 `"degraded"` once every tenant is quarantined;
+//! * a traced request's span tree — queue wait, hydration, prefill
+//!   chunks, decode groups — is queryable at `GET /debug/trace/<id>`,
+//!   and `GET /debug/flight` dumps Chrome Trace Event Format.
 
 mod common;
 
@@ -20,7 +25,7 @@ use std::time::Duration;
 use common::SlowStepBackend;
 use deltadq::compress::pipeline::compress_model_deltas;
 use deltadq::compress::{DeltaDq, DeltaDqConfig};
-use deltadq::coordinator::{Server, ServerOptions, Tier};
+use deltadq::coordinator::{RetryPolicy, Server, ServerOptions, Tier};
 use deltadq::delta::extract_deltas;
 use deltadq::delta::format::DeltaSet;
 use deltadq::eval::tasks::vocab;
@@ -533,6 +538,329 @@ fn loadgen_smoke_against_live_gateway() {
         if stream {
             assert!(report.tokens > 0, "streamed tokens arrived");
         }
+    }
+
+    gw.shutdown();
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}
+
+/// Depth-first census of the span names in a `/debug/trace/<id>` tree.
+fn collect_span_names(node: &Json, out: &mut Vec<String>) {
+    if let Some(name) = node.get("name").and_then(Json::as_str) {
+        out.push(name.to_string());
+    }
+    if let Some(kids) = node.get("children").and_then(Json::as_array) {
+        for kid in kids {
+            collect_span_names(kid, out);
+        }
+    }
+}
+
+/// Tracing contract over the wire: a streamed request against a Disk
+/// tenant yields a `/debug/trace/<id>` span tree covering queue wait,
+/// hydration, prefill chunks, and decode groups nested under the
+/// request root; `/debug/flight` dumps parseable Chrome Trace Event
+/// Format; unknown ids answer 404.
+#[test]
+fn debug_trace_tree_and_flight_recorder_over_the_wire() {
+    deltadq::util::trace::set_enabled(true);
+    let b = base();
+    // a seed whose generation decodes several steps, so the span tree
+    // must contain decode.group spans (deterministic per seed)
+    let probe = NativeBackend::default();
+    let (seed, _) = (70u64..100)
+        .map(|s| {
+            let set = deltas_for(&b, s);
+            let len = probe
+                .generate(&b, Some(&set), &PROMPT, MAX_NEW, Some(vocab::EOS))
+                .unwrap()
+                .len();
+            (s, len)
+        })
+        .find(|&(_, len)| len >= 3)
+        .expect("some seed generates ≥3 tokens");
+
+    let root = std::env::temp_dir()
+        .join("deltadq-test-gateway")
+        .join(format!("trace-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = Arc::new(DeltaStore::open_or_create(&root).unwrap());
+    store.push("tr0", &deltas_for(&b, seed)).unwrap();
+    let server = Arc::new(
+        Server::with_store(
+            b.clone(),
+            ServerOptions {
+                workers: 2,
+                batch_window: Duration::from_micros(200),
+                promote_after: u64::MAX,
+                ..Default::default()
+            },
+            Arc::new(NativeBackend::default()),
+            store.clone(),
+        )
+        .unwrap(),
+    );
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions::default()).unwrap();
+    let addr = gw.local_addr();
+
+    let resp = post(addr, &completion_body("tr0", true));
+    assert_eq!(resp.status, 200, "{resp:?}");
+    let (tokens, done) = streamed_tokens(&resp.body);
+    assert!(tokens.len() >= 3, "decode steps happened: {tokens:?}");
+    let id = done.get("id").unwrap().as_u64().unwrap();
+
+    // spans from the final scheduler iteration may still be sitting in
+    // a recording thread's local buffer when the done frame lands
+    std::thread::sleep(Duration::from_millis(100));
+
+    let trace = get(addr, &format!("/debug/trace/{id}"));
+    assert_eq!(trace.status, 200, "trace missing for request {id}");
+    let tree = Json::parse(std::str::from_utf8(&trace.body).unwrap()).unwrap();
+    assert_eq!(tree.get("name").unwrap().as_str().unwrap(), "request");
+    assert_eq!(tree.get("request").unwrap().as_u64().unwrap(), id);
+    let mut names = Vec::new();
+    collect_span_names(&tree, &mut names);
+    let has = |name: &str| names.iter().any(|n| n == name);
+    assert!(has("queue.wait"), "queue.wait span missing: {names:?}");
+    assert!(has("kv.alloc"), "kv.alloc span missing: {names:?}");
+    assert!(has("sched.exec"), "sched.exec span missing: {names:?}");
+    assert!(has("prefill.chunk"), "prefill.chunk span missing: {names:?}");
+    assert!(has("decode.group"), "decode.group span missing: {names:?}");
+    assert!(has("tenant.hydrate"), "tenant.hydrate span missing: {names:?}");
+    // nesting intact: the stage spans hang off the root, not beside it
+    let kids: Vec<&str> = tree
+        .get("children")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|k| k.get("name").unwrap().as_str().unwrap())
+        .collect();
+    assert!(kids.contains(&"queue.wait"), "queue.wait nests under the root: {kids:?}");
+
+    let flight = get(addr, "/debug/flight");
+    assert_eq!(flight.status, 200);
+    let fj = Json::parse(std::str::from_utf8(&flight.body).unwrap()).unwrap();
+    let events = fj.get("traceEvents").unwrap().as_array().unwrap();
+    assert!(!events.is_empty(), "flight recorder carries events");
+    for e in events {
+        for key in ["name", "ph", "pid", "tid"] {
+            assert!(e.get(key).is_some(), "event missing {key}: {e:?}");
+        }
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        assert!(ph == "X" || ph == "M", "unexpected phase {ph}");
+        if ph == "X" {
+            assert!(e.get("ts").is_some() && e.get("dur").is_some(), "{e:?}");
+        }
+    }
+    assert!(
+        events.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("request")),
+        "the traced request's spans are in the flight window"
+    );
+
+    // unknown ids answer 404, not an empty 200
+    assert_eq!(get(addr, "/debug/trace/18446744073709551615").status, 404);
+
+    gw.shutdown();
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Readiness contract: `/healthz` answers a structured JSON report —
+/// 200 `"ok"` with tenant/scheduler gauges while serving, 503
+/// `"degraded"` once every registered tenant is quarantined (here: the
+/// lone tenant's shard corrupted on disk, so hydration fails and the
+/// quarantine flips the report).
+#[test]
+fn healthz_reports_ok_then_degraded_when_all_tenants_quarantined() {
+    let b = base();
+    let root = std::env::temp_dir()
+        .join("deltadq-test-gateway")
+        .join(format!("healthz-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = Arc::new(DeltaStore::open_or_create(&root).unwrap());
+    store.push("hz0", &deltas_for(&b, 81)).unwrap();
+    let server = Arc::new(
+        Server::with_store(
+            b.clone(),
+            ServerOptions {
+                workers: 1,
+                batch_window: Duration::from_micros(200),
+                promote_after: u64::MAX,
+                retry: RetryPolicy {
+                    load_retries: 0,
+                    backoff: Duration::from_millis(1),
+                    quarantine_after: 1,
+                    probe_interval: Duration::from_secs(600),
+                },
+                ..Default::default()
+            },
+            Arc::new(NativeBackend::default()),
+            store.clone(),
+        )
+        .unwrap(),
+    );
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions::default()).unwrap();
+    let addr = gw.local_addr();
+
+    let resp = get(addr, "/healthz");
+    assert_eq!(resp.status, 200, "{resp:?}");
+    let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(j.get("tenants").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(j.get("quarantined").unwrap().as_u64().unwrap(), 0);
+    let sched = j.get("sched").unwrap();
+    assert!(sched.get("active").unwrap().as_bool().unwrap());
+    assert!(sched.get("kv_blocks_total").unwrap().as_u64().unwrap() > 0);
+    assert!(sched.get("last_iteration_age_ms").is_some());
+
+    // corrupt the lone tenant's shard on disk: the next hydration hits
+    // a CRC failure, and with quarantine_after=1 the tenant is out
+    let shard_rel = store.tenant_info("hz0").unwrap().shards[0].clone();
+    let shard_path = root.join(&shard_rel);
+    let mut bytes = std::fs::read(&shard_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&shard_path, &bytes).unwrap();
+
+    let rx = server.submit("hz0", PROMPT.to_vec(), 2).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert!(resp.error.is_some(), "corrupt shard must fail the request");
+
+    // the report flips to 503 "degraded" once the quarantine registers
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let degraded = loop {
+        let resp = get(addr, "/healthz");
+        if resp.status == 503 {
+            break resp;
+        }
+        assert!(std::time::Instant::now() < deadline, "healthz never degraded: {resp:?}");
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    let j = Json::parse(std::str::from_utf8(&degraded.body).unwrap()).unwrap();
+    assert_eq!(j.get("status").unwrap().as_str().unwrap(), "degraded");
+    assert_eq!(j.get("quarantined").unwrap().as_u64().unwrap(), 1);
+
+    gw.shutdown();
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Exposition lint for `/metrics`: every line is a well-formed comment
+/// or `name[{labels}] value` sample with a finite non-negative value,
+/// every family carries HELP/TYPE, and the native histogram families
+/// are cumulative with their `+Inf` bucket equal to `_count`.
+#[test]
+fn metrics_exposition_is_well_formed_prometheus_text() {
+    let b = base();
+    let server = Arc::new(Server::with_backend(
+        b.clone(),
+        ServerOptions { batch_window: Duration::from_micros(200), ..Default::default() },
+        Arc::new(NativeBackend::default()),
+    ));
+    server.register_tenant("m0", deltas_for(&b, 83));
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions::default()).unwrap();
+    let addr = gw.local_addr();
+    // serve one request so the latency/queue-wait/exec histograms and
+    // the scheduler stage histograms all have observations
+    let resp = post(addr, &completion_body("m0", false));
+    assert_eq!(resp.status, 200, "{resp:?}");
+
+    let metrics = get(addr, "/metrics");
+    assert_eq!(metrics.status, 200);
+    let text = String::from_utf8(metrics.body).unwrap();
+
+    let mut typed: Vec<String> = Vec::new();
+    let mut helped: Vec<String> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let fam = rest.split(' ').next().unwrap().to_string();
+            assert!(!helped.contains(&fam), "duplicate HELP for {fam}");
+            helped.push(fam);
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split(' ');
+            let fam = parts.next().unwrap().to_string();
+            let kind = parts.next().expect("TYPE names a kind");
+            let kinds = ["counter", "gauge", "histogram", "summary"];
+            assert!(kinds.contains(&kind), "unknown kind: {line}");
+            assert!(!typed.contains(&fam), "duplicate TYPE for {fam}");
+            typed.push(fam);
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment form: {line}");
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+        assert!(v.is_finite(), "non-finite sample: {line}");
+        assert!(v >= 0.0, "negative sample: {line}");
+        let name = series.split('{').next().unwrap();
+        assert!(name.starts_with("deltadq_"), "unprefixed metric: {line}");
+        if let Some(labels) = series.strip_prefix(name).filter(|l| !l.is_empty()) {
+            assert!(labels.starts_with('{') && labels.ends_with('}'), "bad labels: {line}");
+            for pair in labels[1..labels.len() - 1].split(',') {
+                let (k, val) = pair.split_once('=').unwrap_or_else(|| panic!("{line}"));
+                assert!(!k.is_empty(), "empty label name: {line}");
+                assert!(val.starts_with('"') && val.ends_with('"'), "unquoted: {line}");
+            }
+        }
+        // histogram/summary samples attach to their family's TYPE
+        let stripped = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"));
+        let fam = match stripped {
+            Some(f) if typed.iter().any(|t| t == f) => f,
+            _ => name,
+        };
+        assert!(typed.iter().any(|t| t == fam), "sample without TYPE: {line}");
+    }
+    for fam in &typed {
+        assert!(helped.contains(fam), "TYPE without HELP: {fam}");
+    }
+
+    // native histograms: a `+Inf` bucket equal to `_count`, cumulative
+    // bucket counts, at least one observation after a served request
+    let sample = |prefix: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(prefix) && !l.starts_with('#'))
+            .unwrap_or_else(|| panic!("{prefix} missing from:\n{text}"))
+            .rsplit(' ')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap()
+    };
+    for fam in [
+        "deltadq_request_latency_hist_seconds",
+        "deltadq_queue_wait_hist_seconds",
+        "deltadq_batch_exec_hist_seconds",
+    ] {
+        let buckets: Vec<f64> = text
+            .lines()
+            .filter(|l| l.starts_with(&format!("{fam}_bucket")))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(!buckets.is_empty(), "{fam} exports no buckets");
+        assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "{fam} not cumulative: {buckets:?}");
+        let count = sample(&format!("{fam}_count"));
+        let inf = sample(&format!("{fam}_bucket{{le=\"+Inf\"}}"));
+        assert!((inf - count).abs() < f64::EPSILON, "{fam}: +Inf {inf} != count {count}");
+        assert!(count >= 1.0, "{fam} unobserved after a served request");
+    }
+    // the per-stage scheduler family exports every stage
+    for stage in ["plan", "prefill", "decode", "emit"] {
+        let line = format!("deltadq_sched_stage_seconds_bucket{{stage=\"{stage}\",le=\"+Inf\"}}");
+        assert!(text.contains(&line), "missing stage family line {line}");
     }
 
     gw.shutdown();
