@@ -2093,3 +2093,262 @@ pub fn trace(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<St
     anyhow::ensure!(flight_events > 0, "flight dump is empty");
     Ok(out)
 }
+
+// --------------------------------------------------------------- audit
+
+/// E16: compression-quality auditor — overhead, telemetry, detection.
+/// Phase 1 runs the same in-process burst against a server with the
+/// auditor off and one sampling at 1-in-64 (alternating rounds, best-of
+/// each side); the gate holds the cost at ≤2%. Phase 2 profiles a
+/// compressed tenant per layer (reconstruction error vs the recorded
+/// norm, BIR statistics). Phase 3 serves a clean store-backed tenant
+/// with `sample_every = 1` and requires every shadow audit to agree
+/// exactly with the served tokens; phase 4 corrupts the resident copy
+/// via the `tenant.corrupt_resident` failpoint and measures how many
+/// sampled audits the drift detector needs to raise its first warning.
+/// Writes machine-readable `BENCH_audit.json`.
+///
+/// `DELTADQ_BENCH_QUICK=1` switches to the CI-sized run.
+pub fn audit(backend: &Arc<dyn ExecutionBackend>, json_path: &Path) -> Result<String> {
+    use crate::audit::{layer_stat_json, layer_stats, AuditConfig};
+    use crate::util::failpoint;
+    use std::sync::atomic::Ordering;
+
+    let quick = std::env::var("DELTADQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (rounds, burst) = if quick { (4usize, 32usize) } else { (6, 96) };
+    const MAX_TOKENS: usize = 4;
+    const N_TENANTS: usize = 3;
+
+    failpoint::disarm_all();
+    let mut rng = Pcg64::seeded(0xA0D17);
+    let base = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(DEFAULT_GROUP)));
+    let prompts: Vec<Vec<u32>> =
+        gen_dataset(TaskKind::Math, 16, 5).into_iter().map(|s| s.prompt).collect();
+
+    let opts = |audit: AuditConfig| ServerOptions {
+        workers: 2,
+        max_batch: 4,
+        batch_window: Duration::from_micros(200),
+        queue_depth: 256,
+        audit,
+        ..Default::default()
+    };
+    let make_server = |audit: AuditConfig, rng: &mut Pcg64| -> Arc<Server> {
+        let server = Arc::new(Server::with_backend(base.clone(), opts(audit), backend.clone()));
+        for i in 0..N_TENANTS {
+            server.register_tenant(&format!("t{i}"), synth_delta(&base, &dq, rng));
+        }
+        server
+    };
+    // identical tenant sets on both sides: clone the rng so the two
+    // servers draw the same deltas
+    let mut rng_off = rng.clone();
+    let server_off =
+        make_server(AuditConfig { enabled: false, ..AuditConfig::default() }, &mut rng_off);
+    let server_on = make_server(AuditConfig::default(), &mut rng); // 1-in-64
+
+    // one burst: submit a wave, drain it, return completed req/s
+    let round = |server: &Server| -> Result<f64> {
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(burst);
+        for k in 0..burst {
+            let tenant = format!("t{}", k % N_TENANTS);
+            let prompt = prompts[k % prompts.len()].clone();
+            let rx = server
+                .submit(&tenant, prompt, MAX_TOKENS)
+                .map_err(|e| anyhow::anyhow!("burst submit: {e}"))?;
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120))?;
+            if let Some(e) = &resp.error {
+                anyhow::bail!("burst request failed: {e}");
+            }
+        }
+        Ok(burst as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+    };
+    round(&server_off)?; // warm-up: lazy pools, cold caches
+    round(&server_on)?;
+    let (mut best_on, mut best_off) = (0.0f64, 0.0f64);
+    for _ in 0..rounds {
+        best_off = best_off.max(round(&server_off)?);
+        best_on = best_on.max(round(&server_on)?);
+    }
+    let sampled_1in64 = server_on.metrics.audit.sampled_total.load(Ordering::Relaxed);
+    server_off.shutdown();
+    server_on.shutdown();
+    // best-of-rounds on each side filters scheduler jitter; negative
+    // overhead (noise) is reported as measured
+    let overhead_pct = (1.0 - best_on / best_off) * 100.0;
+
+    // phase 2: per-layer quality profile of one compressed tenant
+    let profile_set = synth_delta(&base, &dq, &mut rng);
+    let fallback_pool = ThreadPool::serial();
+    let pool = backend.exec_pool().unwrap_or(&fallback_pool);
+    let layers = layer_stats(&base, &profile_set, pool);
+    let max_recon_error = layers.iter().map(|l| l.recon_error).fold(0.0, f64::max);
+    let mean_bir_variance =
+        layers.iter().map(|l| l.bir.variance).sum::<f64>() / layers.len().max(1) as f64;
+
+    // a store-backed server auditing every request: reference = the
+    // CRC-verified store copy, serving = the resident set
+    let exhaustive = AuditConfig {
+        enabled: true,
+        sample_every: 1,
+        quarantine_below: 0.9,
+        enforce: false,
+        window: 4,
+    };
+    let store_server = |tag: &str, rng: &mut Pcg64| -> Result<(Arc<Server>, std::path::PathBuf)> {
+        let root =
+            std::env::temp_dir().join(format!("deltadq-bench-audit-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let store = Arc::new(DeltaStore::open_or_create(&root)?);
+        store.push("probe", &synth_delta(&base, &dq, rng))?;
+        let server =
+            Arc::new(Server::with_store(base.clone(), opts(exhaustive.clone()), backend.clone(), store)?);
+        Ok((server, root))
+    };
+    // wait for the async audit thread to drain everything it sampled
+    let drain_audits = |server: &Server| -> Result<()> {
+        let t0 = Instant::now();
+        loop {
+            let a = &server.metrics.audit;
+            let sampled = a.sampled_total.load(Ordering::Relaxed);
+            let done = a.completed_total.load(Ordering::Relaxed)
+                + a.errors_total.load(Ordering::Relaxed);
+            if done >= sampled {
+                return Ok(());
+            }
+            anyhow::ensure!(
+                t0.elapsed() < Duration::from_secs(60),
+                "audit thread did not drain ({done}/{sampled}) within 60s"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    };
+
+    // phase 3: clean tenant — every shadow audit must agree exactly
+    let clean_requests = if quick { 6usize } else { 12 };
+    let (clean_srv, clean_root) = store_server("clean", &mut rng)?;
+    for k in 0..clean_requests {
+        let rx = clean_srv
+            .submit("probe", prompts[k % prompts.len()].clone(), MAX_TOKENS)
+            .map_err(|e| anyhow::anyhow!("clean submit: {e}"))?;
+        let resp = rx.recv_timeout(Duration::from_secs(120))?;
+        anyhow::ensure!(resp.error.is_none(), "clean request failed: {:?}", resp.error);
+    }
+    drain_audits(&clean_srv)?;
+    let clean_hub = &clean_srv.metrics.audit;
+    let clean_audits = clean_hub.completed_total.load(Ordering::Relaxed);
+    let clean_errors = clean_hub.errors_total.load(Ordering::Relaxed);
+    let clean_agreement = clean_hub
+        .tenant_summaries()
+        .iter()
+        .find(|(t, ..)| t == "probe")
+        .map(|(_, a, ..)| *a)
+        .unwrap_or(0.0);
+    clean_srv.shutdown();
+    let _ = std::fs::remove_dir_all(&clean_root);
+
+    // phase 4: corrupt the resident copy at hydration and count the
+    // sampled audits until the drift detector's first warning
+    failpoint::set_seed(0xA0D17);
+    failpoint::arm("tenant.corrupt_resident=err(1)")?;
+    let (victim_srv, victim_root) = store_server("victim", &mut rng)?;
+    let max_probe = 16usize;
+    let mut detection_audits = 0u64;
+    let mut detected = false;
+    for k in 0..max_probe {
+        let rx = victim_srv
+            .submit("probe", prompts[k % prompts.len()].clone(), MAX_TOKENS)
+            .map_err(|e| anyhow::anyhow!("victim submit: {e}"))?;
+        let resp = rx.recv_timeout(Duration::from_secs(120))?;
+        anyhow::ensure!(resp.error.is_none(), "victim request failed: {:?}", resp.error);
+        drain_audits(&victim_srv)?;
+        let hub = &victim_srv.metrics.audit;
+        if hub.warn_total.load(Ordering::Relaxed) >= 1 {
+            detection_audits = hub.completed_total.load(Ordering::Relaxed);
+            detected = true;
+            break;
+        }
+    }
+    let victim_hub = &victim_srv.metrics.audit;
+    let corrupt_agreement = victim_hub
+        .tenant_summaries()
+        .iter()
+        .find(|(t, ..)| t == "probe")
+        .map(|(_, a, ..)| *a)
+        .unwrap_or(1.0);
+    let corruption_fired = failpoint::triggered_counts()
+        .iter()
+        .any(|(name, n)| name == "tenant.corrupt_resident" && *n >= 1);
+    failpoint::disarm_all();
+    victim_srv.shutdown();
+    let _ = std::fs::remove_dir_all(&victim_root);
+
+    let mut detection = Json::obj();
+    detection
+        .set("corruption_fired", corruption_fired)
+        .set("detected", detected)
+        .set("audits_to_detection", detection_audits)
+        .set("corrupt_agreement", corrupt_agreement);
+    let mut root_json = Json::obj();
+    root_json
+        .set("bench", "audit")
+        .set("schema", 1u64)
+        .set("quick", quick)
+        .set("rounds", rounds)
+        .set("burst", burst)
+        .set("rps_audit_off", best_off)
+        .set("rps_audit_on", best_on)
+        .set("sampled_at_1in64", sampled_1in64)
+        .set("overhead_pct", overhead_pct)
+        .set("max_recon_error", max_recon_error)
+        .set("mean_bir_variance", mean_bir_variance)
+        .set("layers", Json::Arr(layers.iter().map(layer_stat_json).collect()))
+        .set("clean_requests", clean_requests)
+        .set("clean_audits", clean_audits)
+        .set("clean_errors", clean_errors)
+        .set("clean_agreement", clean_agreement)
+        .set("detection", detection);
+    std::fs::write(json_path, root_json.to_pretty_string())
+        .with_context(|| format!("write {json_path:?}"))?;
+
+    let mut out = format!(
+        "## Audit — shadow-audit overhead + detection: {rounds}x{burst} requests per side\n"
+    );
+    out.push_str(&format!(
+        "throughput: {best_on:.1} req/s audited (1/64, {sampled_1in64} sampled) vs \
+         {best_off:.1} req/s unaudited ({overhead_pct:+.2}% overhead)\n"
+    ));
+    out.push_str(&format!(
+        "layers: max recon error {max_recon_error:.3e}, mean BIR variance {mean_bir_variance:.3e} \
+         over {} tensor(s)\n",
+        layers.len()
+    ));
+    out.push_str(&format!(
+        "clean tenant: {clean_audits} audit(s), agreement {clean_agreement:.4}, \
+         {clean_errors} error(s)\n"
+    ));
+    out.push_str(&format!(
+        "corrupt tenant: warned after {detection_audits} audit(s) \
+         (window agreement {corrupt_agreement:.4})\n"
+    ));
+    out.push_str(&format!("wrote {}\n", json_path.display()));
+
+    anyhow::ensure!(
+        overhead_pct <= 2.0,
+        "auditing at 1/64 costs {overhead_pct:.2}% throughput (budget: 2%)"
+    );
+    anyhow::ensure!(clean_audits >= 1, "clean phase completed no audits");
+    anyhow::ensure!(clean_errors == 0, "{clean_errors} clean audits errored");
+    anyhow::ensure!(
+        clean_agreement == 1.0,
+        "clean tenant audits disagree with served tokens (agreement {clean_agreement})"
+    );
+    anyhow::ensure!(corruption_fired, "corrupt_resident failpoint armed but never fired");
+    anyhow::ensure!(detected, "injected corruption not detected within {max_probe} audits");
+    Ok(out)
+}

@@ -61,6 +61,11 @@ pub fn run(
         // whose span tree must cover ≥90% of its root interval
         // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
         "trace" => experiments::trace(backend, Path::new("BENCH_trace.json")),
+        // compression-quality auditor: shadow-sampling overhead at
+        // 1-in-64 (gate: ≤2% cost), per-layer recon-error/BIR profile,
+        // clean-tenant exact agreement, and injected-corruption
+        // detection latency (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
+        "audit" => experiments::audit(backend, Path::new("BENCH_audit.json")),
         "all" => {
             let mut out = String::new();
             for exp in [

@@ -106,6 +106,9 @@ pub fn compress_model_deltas(
             calibration: calibration.get(name),
         };
         let _ = idx;
+        // pre-quantization norm: the audit subsystem's reconstruction-
+        // error reference, persisted through .ddq v3 and the store
+        set.norms.insert(name.clone(), delta.frobenius_norm() as f64);
         let compressed = method.compress(delta, &ctx, rng);
         set.tensors.insert(name.clone(), compressed);
     }

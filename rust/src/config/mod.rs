@@ -288,6 +288,22 @@ pub struct ServeConfig {
     /// `/debug/flight` lookback window in seconds (`[trace]
     /// flight_window_s`).
     pub trace_flight_window_s: u64,
+    /// Quality-audit toggle (`[audit] enabled`, default true). Off =
+    /// no audit thread is spawned and completion paths pay one load.
+    pub audit_enabled: bool,
+    /// Shadow-sample every Nth completed request (`[audit]
+    /// sample_every`, default 64).
+    pub audit_sample_every: u64,
+    /// Windowed token-agreement threshold below which a tenant counts
+    /// as drifted (`[audit] quarantine_below`, default 0.0 = drift
+    /// detection off, telemetry only).
+    pub audit_quarantine_below: f64,
+    /// Whether drift quarantines the tenant (`[audit] enforce`,
+    /// default false = warn and count only).
+    pub audit_enforce: bool,
+    /// Audited requests per tenant in the drift window (`[audit]
+    /// window`, default 16).
+    pub audit_window: usize,
 }
 
 impl ServeConfig {
@@ -328,6 +344,22 @@ impl ServeConfig {
             trace_enabled: c.bool_or("trace.enabled", true),
             trace_ring_spans: c.int_or("trace.ring_spans", ring_default) as usize,
             trace_flight_window_s: c.int_or("trace.flight_window_s", window_default) as u64,
+            audit_enabled: c.bool_or("audit.enabled", true),
+            audit_sample_every: c.int_or("audit.sample_every", 64).max(1) as u64,
+            audit_quarantine_below: c.float_or("audit.quarantine_below", 0.0),
+            audit_enforce: c.bool_or("audit.enforce", false),
+            audit_window: c.int_or("audit.window", 16).max(1) as usize,
+        }
+    }
+
+    /// The `[audit]` knobs resolved to the audit subsystem's config.
+    pub fn audit_config(&self) -> crate::audit::AuditConfig {
+        crate::audit::AuditConfig {
+            enabled: self.audit_enabled,
+            sample_every: self.audit_sample_every,
+            quarantine_below: self.audit_quarantine_below,
+            enforce: self.audit_enforce,
+            window: self.audit_window,
         }
     }
 }
@@ -413,6 +445,29 @@ ratios = [2, 4, 8]
         assert!(sc.trace_enabled);
         assert_eq!(sc.trace_ring_spans, crate::util::trace::DEFAULT_RING_SPANS);
         assert_eq!(sc.trace_flight_window_s, crate::util::trace::DEFAULT_FLIGHT_WINDOW_S);
+        assert!(sc.audit_enabled);
+        assert_eq!(sc.audit_sample_every, 64);
+        assert_eq!(sc.audit_quarantine_below, 0.0);
+        assert!(!sc.audit_enforce);
+        assert_eq!(sc.audit_window, 16);
+    }
+
+    #[test]
+    fn serve_config_reads_audit_section() {
+        let c = Config::parse(
+            "[audit]\nenabled = true\nsample_every = 8\nquarantine_below = 0.9\n\
+             enforce = true\nwindow = 4",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert!(sc.audit_enabled);
+        assert_eq!(sc.audit_sample_every, 8);
+        assert_eq!(sc.audit_quarantine_below, 0.9);
+        assert!(sc.audit_enforce);
+        assert_eq!(sc.audit_window, 4);
+        let ac = sc.audit_config();
+        assert_eq!(ac.sample_every, 8);
+        assert!(ac.enforce);
     }
 
     #[test]

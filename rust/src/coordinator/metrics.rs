@@ -42,6 +42,11 @@ pub struct Metrics {
     /// by the scheduler drive loop; all-zero under the legacy
     /// run-to-completion worker loop.
     pub sched: Arc<SchedCounters>,
+    /// Compression-quality audit state ([`crate::audit::AuditHub`]):
+    /// sampling counters, per-tenant shadow-audit windows, and cached
+    /// per-layer quality stats. Completion paths call
+    /// `audit.offer(..)`; the dedicated audit thread consumes.
+    pub audit: Arc<crate::audit::AuditHub>,
     /// End-to-end request latency (log-bucketed histogram; exact mean,
     /// percentiles to bucket precision over the *whole* history — the
     /// old bounded sample ring forgot everything but recent requests).
@@ -145,6 +150,11 @@ impl Metrics {
         o.set("load_retries_total", self.tiers.load_retries.load(Ordering::Relaxed));
         o.set("decode_group_panics_total", sched.decode_group_panics_total);
         o.set("deadline_expired_total", sched.deadline_expired_total);
+        o.set("audit_sampled_total", self.audit.sampled_total.load(Ordering::Relaxed));
+        o.set("audit_dropped_total", self.audit.dropped_total.load(Ordering::Relaxed));
+        o.set("audit_completed_total", self.audit.completed_total.load(Ordering::Relaxed));
+        o.set("audit_warn_total", self.audit.warn_total.load(Ordering::Relaxed));
+        o.set("audit_quarantined_total", self.audit.quarantined_total.load(Ordering::Relaxed));
         o
     }
 }

@@ -58,6 +58,10 @@ pub struct ServerOptions {
     /// Disk→Cold hydration retry/backoff/quarantine policy (only
     /// meaningful with an attached delta store).
     pub retry: RetryPolicy,
+    /// Compression-quality audit settings (`[audit]`): shadow-sampling
+    /// rate, drift threshold, enforcement. Enabled by default at 1-in-64
+    /// sampling with drift detection off (telemetry only).
+    pub audit: crate::audit::AuditConfig,
 }
 
 impl Default for ServerOptions {
@@ -73,6 +77,7 @@ impl Default for ServerOptions {
             sched: Some(SchedOptions::default()),
             request_ttl: None,
             retry: RetryPolicy::default(),
+            audit: crate::audit::AuditConfig::default(),
         }
     }
 }
@@ -158,6 +163,23 @@ impl Server {
         ));
         let metrics = Arc::new(Metrics::with_tiers(store.tiers()));
         let mut workers = Vec::new();
+        metrics.audit.configure(&options.audit);
+        if options.audit.enabled {
+            // shadow-audit consumer: low-priority, off the hot path.
+            // Completion threads only ever try_send into the bounded
+            // queue; everything expensive (dense reference
+            // reconstruction, prefills, layer profiling) happens here.
+            let (tx, rx) = mpsc::sync_channel(crate::audit::AUDIT_QUEUE_DEPTH);
+            metrics.audit.connect(tx);
+            let hub = metrics.audit.clone();
+            let store = store.clone();
+            let backend = backend.clone();
+            let handle = std::thread::Builder::new()
+                .name("deltadq-audit".to_string())
+                .spawn(move || crate::audit::worker_loop(rx, hub, backend, store))
+                .expect("spawn audit thread");
+            workers.push(handle);
+        }
         let sched_opts = match &options.sched {
             Some(opts) if backend.supports_stepping() => Some(opts.clone()),
             _ => None,
@@ -398,6 +420,9 @@ impl Server {
     /// Drain queues and stop workers.
     pub fn shutdown(mut self) {
         self.batcher.close();
+        // drop the audit channel's sender so the audit thread's recv
+        // hangs up once queued jobs drain (it is joined with the rest)
+        self.metrics.audit.disconnect();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -501,6 +526,11 @@ fn worker_loop(
             };
             metrics.tokens_generated.fetch_add(tokens.len() as u64, Ordering::Relaxed);
             metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+            // shadow-audit sampling: one atomic bump; clones only the
+            // sampled 1-in-N request
+            if error.is_none() {
+                metrics.audit.offer(&tenant, &req.prompt, &tokens);
+            }
             let total = req.submitted.elapsed();
             metrics.observe_latency(total.as_secs_f64());
             req.respond.send_done(Response {

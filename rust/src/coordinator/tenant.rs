@@ -568,6 +568,37 @@ impl TenantStore {
         slots.get(tenant).filter(|s| s.health.quarantined).map(|_| self.shared.retry.probe_interval)
     }
 
+    /// The tenant's resident compressed delta set, if any (Cold or Hot
+    /// with deltas still resident). The audit thread reads this to
+    /// shadow-compare what is actually serving; `None` for Disk tier.
+    pub fn resident_deltas(&self, tenant: &str) -> Option<Arc<DeltaSet>> {
+        self.shared.slots.lock().unwrap().get(tenant).and_then(|s| s.deltas.clone())
+    }
+
+    /// Route `tenant` into the quarantine lifecycle from outside the
+    /// loader (the audit subsystem's drift enforcement). Drops resident
+    /// deltas and dense cache so the background probe re-hydrates a
+    /// fresh copy from the store — which is also why only tenants with
+    /// a disk copy are quarantinable this way (no heal path otherwise).
+    /// Returns whether the quarantine was applied.
+    pub fn quarantine(&self, tenant: &str) -> bool {
+        let mut slots = self.shared.slots.lock().unwrap();
+        let Some(slot) = slots.get_mut(tenant) else {
+            return false;
+        };
+        if !slot.on_disk {
+            return false;
+        }
+        slot.deltas = None;
+        slot.dense = None;
+        slot.health.fail_cycles = self.shared.retry.quarantine_after;
+        slot.health.quarantined = true;
+        slot.health.retry_at = Some(Instant::now() + self.shared.retry.probe_interval);
+        drop(slots);
+        self.shared.cv.notify_all();
+        true
+    }
+
     /// Residency snapshot for reporting: (tenant, hot?, requests).
     pub fn snapshot(&self) -> Vec<(String, bool, u64)> {
         self.shared
@@ -692,6 +723,14 @@ fn hydrate_one(shared: &Shared, store: &DeltaStore, tenant: &str) {
     // clobbered with the stale load nor marked failed by it.
     match (slots.get_mut(tenant), loaded) {
         (Some(slot), Ok(set)) if slot.loading && slot.deltas.is_none() => {
+            // chaos hook: install a silently corrupted resident set
+            // (256×-scaled densified deltas) while the store copy stays
+            // pristine — the shadow audit must catch the divergence
+            let set = if crate::util::failpoint::hit("tenant.corrupt_resident").is_err() {
+                corrupt_delta_set(set)
+            } else {
+                set
+            };
             slot.deltas = Some(Arc::new(set));
             slot.loading = false;
             slot.health = SlotHealth::default(); // served again: forgiven
@@ -749,6 +788,20 @@ fn load_with_retries(shared: &Shared, store: &DeltaStore, tenant: &str) -> Resul
         }
     }
     Err(last)
+}
+
+/// The `tenant.corrupt_resident` chaos transform: every tensor becomes
+/// a 256×-scaled dense copy — structurally valid (serving keeps
+/// working), numerically wrong (shadow audits diverge). The scale is
+/// deliberately overwhelming so the corrupted weights dominate the
+/// model and greedy tokens are guaranteed to drift off the dense
+/// reference. Mirrors a resident-memory bit-rot / bad-dequant class of
+/// failure the store's CRCs cannot see.
+fn corrupt_delta_set(mut set: DeltaSet) -> DeltaSet {
+    for t in set.tensors.values_mut() {
+        *t = crate::compress::CompressedDelta::Dense(t.to_dense().scaled(256.0));
+    }
+    set
 }
 
 /// Retry quarantined tenants from the loader thread — never from

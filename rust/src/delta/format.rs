@@ -21,6 +21,10 @@
 //!   Quantized: rows u32 | cols u32 | k u32 | m u32 | scale f32 | zero i32
 //!              | per part: nnz u32 | offsets u32[rows+1] | cols u32[nnz]
 //!                | words u64: n_words u32 then u64[n_words]
+//! norms    (v3+)        count u32, then per entry: name str16 | f64 —
+//!                       pre-quantization Frobenius norm of each delta
+//!                       tensor, the audit subsystem's reconstruction-
+//!                       error reference
 //! crc32    u32 (v2+)    CRC-32 of every preceding byte — truncated or
 //!                       bit-flipped files fail loudly at load time
 //! ```
@@ -39,8 +43,9 @@ use crate::sparse::csr::CsrMatrix;
 use crate::util::crc32::crc32;
 
 const MAGIC: &[u8; 4] = b"DDQD";
-/// Current write version. v2 appends the trailing CRC-32.
-const VERSION: u32 = 2;
+/// Current write version. v2 appends the trailing CRC-32; v3 inserts the
+/// pre-quantization norms table between the body and the trailer.
+const VERSION: u32 = 3;
 /// Oldest version still readable (pre-checksum files).
 const MIN_VERSION: u32 = 1;
 
@@ -53,12 +58,21 @@ pub struct DeltaSet {
     pub nominal_ratio: f64,
     /// Compressed delta per tensor name.
     pub tensors: BTreeMap<String, CompressedDelta>,
+    /// Pre-quantization Frobenius norm per tensor name, recorded at
+    /// compression time (empty for sets from pre-v3 files). The audit
+    /// subsystem scores per-layer reconstruction error against these.
+    pub norms: BTreeMap<String, f64>,
 }
 
 impl DeltaSet {
     /// Empty set tagged with its producing method and target ratio.
     pub fn new(method: &str, nominal_ratio: f64) -> DeltaSet {
-        DeltaSet { method: method.to_string(), nominal_ratio, tensors: BTreeMap::new() }
+        DeltaSet {
+            method: method.to_string(),
+            nominal_ratio,
+            tensors: BTreeMap::new(),
+            norms: BTreeMap::new(),
+        }
     }
 
     /// Total measured storage (bits) across tensors.
@@ -183,13 +197,20 @@ fn write_set_body(w: &mut impl Write, set: &DeltaSet) -> Result<()> {
     Ok(())
 }
 
-/// Save a delta set to a `.ddq` file (current version, with the
-/// trailing CRC-32).
+/// Save a delta set to a `.ddq` file (current version, with the norms
+/// table and the trailing CRC-32).
 pub fn save_delta_set(path: &Path, set: &DeltaSet) -> Result<()> {
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
     w_u32(&mut buf, VERSION)?;
     write_set_body(&mut buf, set)?;
+    // v3: pre-quantization norms table (kept out of write_set_body so v1
+    // body bytes stay exactly reproducible for compat tests and shards)
+    w_u32(&mut buf, set.norms.len() as u32)?;
+    for (name, norm) in &set.norms {
+        w_str16(&mut buf, name)?;
+        buf.extend_from_slice(&norm.to_le_bytes());
+    }
     let crc = crc32(&buf);
     buf.extend_from_slice(&crc.to_le_bytes());
     std::fs::write(path, &buf).with_context(|| format!("write {path:?}"))?;
@@ -386,7 +407,16 @@ pub fn load_delta_set(path: &Path) -> Result<DeltaSet> {
         &buf[8..]
     };
     let mut r: &[u8] = body;
-    read_set_body(&mut r).with_context(|| format!("parse {path:?}"))
+    let mut set = read_set_body(&mut r).with_context(|| format!("parse {path:?}"))?;
+    if version >= 3 {
+        let count = r_u32(&mut r).with_context(|| format!("parse norms table in {path:?}"))?;
+        for _ in 0..count {
+            let name = r_str16(&mut r)?;
+            let norm = r_f64(&mut r)?;
+            set.norms.insert(name, norm);
+        }
+    }
+    Ok(set)
 }
 
 #[cfg(test)]
@@ -546,6 +576,34 @@ mod tests {
             .insert("x".into(), CompressedDelta::Dense(Matrix::zeros(2, 2)));
         let path = tmpfile("dense.ddq");
         assert!(save_delta_set(&path, &set).is_err());
+    }
+
+    /// The v3 norms table round-trips exactly; v2 files (checksum but
+    /// no norms table) still load with empty norms.
+    #[test]
+    fn norms_table_roundtrips_and_v2_files_load() {
+        let mut set = sample_set(Some((8, 4)));
+        for (i, name) in set.tensors.keys().cloned().enumerate() {
+            set.norms.insert(name, (i + 1) as f64 * 0.37);
+        }
+        let path = tmpfile("norms.ddq");
+        save_delta_set(&path, &set).unwrap();
+        let loaded = load_delta_set(&path).unwrap();
+        assert_eq!(loaded.norms, set.norms);
+
+        // a v2 file: body + CRC trailer, no norms table
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        w_u32(&mut buf, 2).unwrap();
+        write_set_body(&mut buf, &set).unwrap();
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        let path = tmpfile("v2-compat.ddq");
+        std::fs::write(&path, &buf).unwrap();
+        let loaded = load_delta_set(&path).unwrap();
+        assert_eq!(loaded.method, set.method);
+        assert!(loaded.norms.is_empty());
+        assert_eq!(loaded.tensors.len(), set.tensors.len());
     }
 
     /// v1 files (written before the checksum trailer) must stay

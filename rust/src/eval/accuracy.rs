@@ -25,6 +25,46 @@ impl AccuracyReport {
     }
 }
 
+/// Max-abs difference between two logit vectors (audit divergence).
+pub fn logit_maxabs(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "logit dims");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max)
+}
+
+/// KL divergence `KL(softmax(a) ‖ softmax(b))` in nats — the audit
+/// subsystem's distributional drift measure at the final position.
+pub fn logit_kl(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "logit dims");
+    let pa = softmax64(a);
+    let pb = softmax64(b);
+    let mut kl = 0.0;
+    for (p, q) in pa.iter().zip(&pb) {
+        if *p > 0.0 {
+            kl += p * (p / q.max(f64::MIN_POSITIVE)).ln();
+        }
+    }
+    kl.max(0.0) // guard the tiny negative from rounding when a == b
+}
+
+fn softmax64(xs: &[f32]) -> Vec<f64> {
+    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = xs.iter().map(|&x| ((x as f64) - max).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+/// Index of the largest logit, ties to the lowest index (greedy decode's
+/// argmax convention).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 /// Greedy-decode each prompt and exact-match the completion.
 pub fn evaluate<S: WeightSource>(source: &S, samples: &[Sample]) -> AccuracyReport {
     let mut correct = 0;
@@ -100,5 +140,24 @@ mod tests {
     fn percent_math() {
         assert_eq!(AccuracyReport { correct: 1, total: 2 }.percent(), 50.0);
         assert_eq!(AccuracyReport { correct: 0, total: 0 }.percent(), 0.0);
+    }
+
+    #[test]
+    fn divergence_zero_on_identical_logits() {
+        let a = [0.5f32, -1.0, 2.0, 0.0];
+        assert_eq!(logit_maxabs(&a, &a), 0.0);
+        assert_eq!(logit_kl(&a, &a), 0.0);
+        assert_eq!(argmax(&a), 2);
+        assert_eq!(argmax(&[1.0f32, 1.0]), 0); // ties go low
+    }
+
+    #[test]
+    fn divergence_grows_with_perturbation() {
+        let a = [0.5f32, -1.0, 2.0, 0.0];
+        let b = [0.5f32, -1.0, 1.0, 0.4];
+        assert!((logit_maxabs(&a, &b) - 1.0).abs() < 1e-6);
+        let small = logit_kl(&a, &[0.5f32, -1.0, 1.9, 0.05]);
+        let big = logit_kl(&a, &b);
+        assert!(big > small && small > 0.0, "big {big} small {small}");
     }
 }

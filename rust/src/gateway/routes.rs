@@ -1,8 +1,11 @@
 //! Route handlers for the gateway: `POST /v1/completions` (batch and
 //! SSE-streaming), `GET /metrics` (Prometheus text), `GET /healthz`
-//! (the readiness report), `GET /debug/trace/<id>` (one request's span
-//! tree) and `GET /debug/flight` (the flight recorder as Chrome Trace
-//! Event Format) — plus the [`SubmitError`] → HTTP status mapping that
+//! (the readiness report), `GET /debug/trace` (index of recent traced
+//! requests), `GET /debug/trace/<id>` (one request's span tree),
+//! `GET /debug/flight` (the flight recorder as Chrome Trace Event
+//! Format) and `GET /debug/quality[/<tenant>]` (shadow-audit and
+//! per-layer compression-quality telemetry) — plus the
+//! [`SubmitError`] → HTTP status mapping that
 //! turns batcher backpressure into 429 + `Retry-After` and unknown
 //! tenants into 404.
 
@@ -55,6 +58,33 @@ pub fn handle(
         }
         ("GET", "/debug/flight") => {
             let body = trace::flight_json(None).to_string();
+            write_response(w, 200, CT_JSON, body.as_bytes(), keep, &[])?;
+            Ok(keep)
+        }
+        ("GET", "/debug/quality") => {
+            // layer profiles are computed lazily on the audit thread:
+            // the first scrape enqueues the work, later scrapes see it
+            for t in server.tenants() {
+                server.metrics.audit.request_layer_stats(&t);
+            }
+            let body = server.metrics.audit.quality_json(None).to_string();
+            write_response(w, 200, CT_JSON, body.as_bytes(), keep, &[])?;
+            Ok(keep)
+        }
+        ("GET", p) if p.starts_with("/debug/quality/") => {
+            let tenant = &p["/debug/quality/".len()..];
+            if server.tenants().iter().any(|t| t == tenant) {
+                server.metrics.audit.request_layer_stats(tenant);
+                let body = server.metrics.audit.quality_json(Some(tenant)).to_string();
+                write_response(w, 200, CT_JSON, body.as_bytes(), keep, &[])?;
+            } else {
+                error_response(w, 404, &format!("unknown tenant '{tenant}'"), keep)?;
+            }
+            Ok(keep)
+        }
+        ("GET", "/debug/trace") => {
+            // bare index (no id): recent request roots, newest first
+            let body = trace::recent_requests(64).to_string();
             write_response(w, 200, CT_JSON, body.as_bytes(), keep, &[])?;
             Ok(keep)
         }
@@ -364,6 +394,7 @@ pub fn render_prometheus(server: &Server) -> String {
     use std::fmt::Write as _;
     use std::sync::atomic::Ordering;
 
+    let render_start = std::time::Instant::now();
     let m = &server.metrics;
     let mut out = String::with_capacity(2048);
     let mut counter = |name: &str, help: &str, value: u64| {
@@ -451,6 +482,37 @@ pub fn render_prometheus(server: &Server) -> String {
         "deadline_expired_total",
         "Requests answered with a deadline-exceeded error.",
         sched.deadline_expired_total,
+    );
+    let audit = &m.audit;
+    counter(
+        "audit_sampled_total",
+        "Completed requests enqueued for shadow audit.",
+        audit.sampled_total.load(Ordering::Relaxed),
+    );
+    counter(
+        "audit_dropped_total",
+        "Audit samples dropped (queue full or auditor stopped).",
+        audit.dropped_total.load(Ordering::Relaxed),
+    );
+    counter(
+        "audit_completed_total",
+        "Shadow audits finished (reference re-run compared).",
+        audit.completed_total.load(Ordering::Relaxed),
+    );
+    counter(
+        "audit_warn_total",
+        "Drift-window breaches of the agreement threshold.",
+        audit.warn_total.load(Ordering::Relaxed),
+    );
+    counter(
+        "audit_quarantined_total",
+        "Tenants quarantined by the auditor in enforce mode.",
+        audit.quarantined_total.load(Ordering::Relaxed),
+    );
+    counter(
+        "audit_errors_total",
+        "Shadow audits that failed to run (load/compare errors).",
+        audit.errors_total.load(Ordering::Relaxed),
     );
 
     let mut gauge = |name: &str, help: &str, value: f64| {
@@ -576,6 +638,88 @@ pub fn render_prometheus(server: &Server) -> String {
             hist.count()
         );
     }
+
+    // quality telemetry: shadow-audit agreement/divergence per tenant,
+    // reconstruction error + BIR variance per (tenant, layer)
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let summaries = m.audit.tenant_summaries();
+    if !summaries.is_empty() {
+        let _ = writeln!(
+            out,
+            "# HELP deltadq_audit_token_agreement Windowed greedy token agreement vs the dense reference."
+        );
+        let _ = writeln!(out, "# TYPE deltadq_audit_token_agreement gauge");
+        for (tenant, agreement, _, _, _) in &summaries {
+            let t = esc(tenant);
+            let _ = writeln!(out, "deltadq_audit_token_agreement{{tenant=\"{t}\"}} {agreement}");
+        }
+        let _ = writeln!(
+            out,
+            "# HELP deltadq_audit_logit_maxabs Max-abs final-position logit divergence of the latest shadow audit."
+        );
+        let _ = writeln!(out, "# TYPE deltadq_audit_logit_maxabs gauge");
+        for (tenant, _, _, maxabs, _) in &summaries {
+            let t = esc(tenant);
+            let _ = writeln!(out, "deltadq_audit_logit_maxabs{{tenant=\"{t}\"}} {maxabs}");
+        }
+    }
+    let layers = m.audit.layer_snapshot();
+    if !layers.is_empty() {
+        let _ = writeln!(
+            out,
+            "# HELP deltadq_layer_recon_error Relative reconstruction-norm error vs the manifest-recorded pre-quantization norm."
+        );
+        let _ = writeln!(out, "# TYPE deltadq_layer_recon_error gauge");
+        for (tenant, stats) in &layers {
+            let t = esc(tenant);
+            for s in stats {
+                let l = esc(&s.name);
+                let _ = writeln!(
+                    out,
+                    "deltadq_layer_recon_error{{tenant=\"{t}\",layer=\"{l}\"}} {}",
+                    s.recon_error
+                );
+            }
+        }
+        let _ = writeln!(
+            out,
+            "# HELP deltadq_bir_variance Variance of sampled balanced intermediate results (X*dW^T partials)."
+        );
+        let _ = writeln!(out, "# TYPE deltadq_bir_variance gauge");
+        for (tenant, stats) in &layers {
+            let t = esc(tenant);
+            for s in stats {
+                let l = esc(&s.name);
+                let _ = writeln!(
+                    out,
+                    "deltadq_bir_variance{{tenant=\"{t}\",layer=\"{l}\"}} {}",
+                    s.bir.variance
+                );
+            }
+        }
+    }
+
+    let _ = writeln!(out, "# HELP deltadq_build_info Build metadata (value is always 1).");
+    let _ = writeln!(out, "# TYPE deltadq_build_info gauge");
+    let _ = writeln!(
+        out,
+        "deltadq_build_info{{version=\"{}\",git_sha=\"{}\",features=\"{}\"}} 1",
+        env!("CARGO_PKG_VERSION"),
+        option_env!("DELTADQ_GIT_SHA").unwrap_or("unknown"),
+        if cfg!(feature = "pjrt") { "pjrt" } else { "default" },
+    );
+
+    // written last so it covers the whole render, including itself
+    let _ = writeln!(
+        out,
+        "# HELP deltadq_metrics_render_seconds Wall time spent rendering this exposition."
+    );
+    let _ = writeln!(out, "# TYPE deltadq_metrics_render_seconds gauge");
+    let _ = writeln!(
+        out,
+        "deltadq_metrics_render_seconds {}",
+        render_start.elapsed().as_secs_f64()
+    );
     out
 }
 

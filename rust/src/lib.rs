@@ -32,6 +32,7 @@
 #![warn(missing_docs)]
 
 pub mod analysis;
+pub mod audit;
 pub mod bench_harness;
 pub mod compress;
 pub mod config;

@@ -10,6 +10,7 @@
 //! * `push`       — register a `.ddq` artifact into a delta store
 //! * `gc`         — sweep a delta store (and optionally remove tenants)
 //! * `ls`         — list a delta store's tenants
+//! * `audit`      — offline shadow audit of a stored tenant (quality)
 //! * `bench`      — regenerate a paper table/figure (table1..4, fig4..8)
 //!
 //! CLI parsing is hand-rolled (the container vendors no clap); flags are
@@ -110,6 +111,7 @@ fn main() -> Result<()> {
         "push" => cmd_push(&args),
         "gc" => cmd_gc(&args),
         "ls" => cmd_ls(&args),
+        "audit" => cmd_audit(&args),
         "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -156,6 +158,10 @@ fn print_usage() {
                      [--trace.enabled B] [--trace.ring_spans N]\n\
                      [--trace.flight_window_s S] (request-tracing /\n\
                      flight-recorder knobs; see docs/OBSERVABILITY.md)\n\
+                     [--audit.enabled B] [--audit.sample_every N]\n\
+                     [--audit.quarantine_below A] [--audit.enforce B]\n\
+                     [--audit.window W] (online shadow-audit knobs;\n\
+                     scrape GET /debug/quality[/<tenant>])\n\
            loadgen   --addr HOST:PORT [--requests N] [--rps R]\n\
                      [--tenants LIST] [--zipf S] [--prompt-len P]\n\
                      [--max-tokens M] [--long-frac F]\n\
@@ -170,9 +176,17 @@ fn print_usage() {
                      [--dry-run true] (report orphans/bytes without\n\
                      deleting; removals print bytes per tenant)\n\
            ls        --store DIR\n\
+           audit     --store DIR --tenant NAME [--models DIR]\n\
+                     [--scale tiny|small|base|large] [--base F.dqw]\n\
+                     [--prompts N] [--max-tokens M] [--json true]\n\
+                     [--backend native|pjrt] [--fused-threads N]\n\
+                     (offline shadow audit: decode through the fused\n\
+                     serving path, re-score against a dense\n\
+                     reconstruction of the store copy, and print the\n\
+                     per-layer reconstruction-error / BIR table)\n\
            bench     --name table1|table2|table3|table4|fig4|fig5|fig6|\n\
                      fig7|fig8|ablations|serving|kernels|churn|gateway|\n\
-                     decode|chaos|trace\n\
+                     decode|chaos|trace|audit\n\
                      [--models DIR] [--out FILE] [--backend native|pjrt]\n\
                      [--fused-threads N] [--artifacts DIR]\n\
                      (kernels/churn/gateway/decode/chaos/trace write\n\
@@ -378,6 +392,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 || k.starts_with("store.")
                 || k.starts_with("sched.")
                 || k.starts_with("trace.")
+                || k.starts_with("audit.")
         })
         .map(|(k, v)| format!("{k}={v}"))
         .collect();
@@ -531,6 +546,134 @@ fn cmd_ls(args: &Args) -> Result<()> {
     }
     print!("{}", t.render());
     println!("total: {} tenant(s), {} payload bytes", store.tenant_count(), store.total_bytes());
+    Ok(())
+}
+
+// --------------------------------------------------------------- audit
+
+/// Offline shadow audit of one tenant against a delta store: every
+/// prompt is decoded through the fused serving path, then re-scored
+/// against a dense reconstruction of the CRC-verified store copy — the
+/// same comparison the online auditor samples at 1-in-N, run over a
+/// fixed prompt set without standing up a server. Prints per-prompt
+/// agreement/divergence plus the per-layer reconstruction-error / BIR
+/// table (`--json true` emits the same data as one JSON object).
+fn cmd_audit(args: &Args) -> Result<()> {
+    use deltadq::audit::{layer_stat_json, layer_stats, shadow_compare};
+    use deltadq::runtime::ThreadPool;
+    use deltadq::util::json::Json;
+
+    let tenant = args.get("tenant").context("--tenant required")?;
+    let root = PathBuf::from(args.get("store").context("--store required")?);
+    let models_dir = PathBuf::from(args.str_or("models", "artifacts/models"));
+    let scale = args.str_or("scale", "tiny");
+    let base_path = match args.get("base") {
+        Some(p) => PathBuf::from(p),
+        None => models_dir.join(&scale).join("base.dqw"),
+    };
+    let n_prompts = args.usize_or("prompts", 8)?.max(1);
+    let max_tokens = args.usize_or("max-tokens", 8)?.max(1);
+    let json_mode = args.bool_or("json", false)?;
+    let seed = args.u64_or("seed", 0xA0D17)?;
+
+    let base = load_weights(&base_path).with_context(|| format!("loading {base_path:?}"))?;
+    let store = DeltaStore::open(&root)?;
+    let set = store
+        .load(tenant)
+        .with_context(|| format!("loading tenant '{tenant}' from {}", root.display()))?;
+    let serve = ServeConfig {
+        backend: args.str_or("backend", "native"),
+        fused_threads: args.usize_or("fused-threads", 1)?,
+        ..ServeConfig::default()
+    };
+    let backend = deltadq::runtime::backend_from_name(&serve.backend, &serve)?;
+
+    let task = TaskKind::parse(tenant).unwrap_or(TaskKind::Math);
+    let samples = gen_dataset(task, n_prompts, seed);
+    let mut reports = Vec::new();
+    for s in &samples {
+        let served = backend.generate(&base, Some(&set), &s.prompt, max_tokens, None)?;
+        if served.is_empty() {
+            continue;
+        }
+        let report = shadow_compare(backend.as_ref(), &base, &set, &set, &s.prompt, &served)?;
+        reports.push((s.prompt.len(), report));
+    }
+    let fallback_pool = ThreadPool::serial();
+    let pool = backend.exec_pool().unwrap_or(&fallback_pool);
+    let layers = layer_stats(&base, &set, pool);
+
+    let n = reports.len().max(1) as f64;
+    let mean_agreement: f64 = reports.iter().map(|(_, r)| r.agreement).sum::<f64>() / n;
+    let worst_agreement =
+        reports.iter().map(|(_, r)| r.agreement).fold(f64::INFINITY, f64::min);
+    let max_maxabs = reports.iter().map(|(_, r)| r.logit_maxabs).fold(0.0, f64::max);
+    let max_kl = reports.iter().map(|(_, r)| r.logit_kl).fold(0.0, f64::max);
+
+    if json_mode {
+        let mut o = Json::obj();
+        o.set("tenant", tenant)
+            .set("method", set.method.as_str())
+            .set("prompts", reports.len() as u64)
+            .set("mean_agreement", mean_agreement)
+            .set("worst_agreement", if reports.is_empty() { 1.0 } else { worst_agreement })
+            .set("max_logit_maxabs", max_maxabs)
+            .set("max_logit_kl", max_kl);
+        let mut shadows = Vec::new();
+        for (prompt_len, r) in &reports {
+            let mut s = Json::obj();
+            s.set("prompt_len", *prompt_len as u64)
+                .set("tokens", r.tokens as u64)
+                .set("agreement", r.agreement)
+                .set("logit_maxabs", r.logit_maxabs)
+                .set("logit_kl", r.logit_kl);
+            shadows.push(s);
+        }
+        o.set("shadows", Json::Arr(shadows));
+        o.set("layers", Json::Arr(layers.iter().map(layer_stat_json).collect()));
+        println!("{}", o.to_pretty_string());
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        &format!("shadow audit: '{tenant}' ({}, {} prompt(s))", set.method, reports.len()),
+        &["prompt_len", "tokens", "agreement", "logit_maxabs", "logit_kl"],
+    );
+    for (prompt_len, r) in &reports {
+        t.add_row(vec![
+            prompt_len.to_string(),
+            r.tokens.to_string(),
+            format!("{:.4}", r.agreement),
+            format!("{:.3e}", r.logit_maxabs),
+            format!("{:.3e}", r.logit_kl),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "summary: mean agreement {:.4}, worst {:.4}, max |dlogit| {:.3e}, max KL {:.3e}",
+        mean_agreement,
+        if reports.is_empty() { 1.0 } else { worst_agreement },
+        max_maxabs,
+        max_kl
+    );
+
+    let mut lt = Table::new(
+        &format!("per-layer quality: '{tenant}'"),
+        &["layer", "shape", "density", "bits/param", "recon_err", "bir_var", "bir_min", "bir_max"],
+    );
+    for l in &layers {
+        lt.add_row(vec![
+            l.name.clone(),
+            format!("{}x{}", l.rows, l.cols),
+            format!("{:.4}", l.density),
+            format!("{:.2}", l.bits_per_param),
+            format!("{:.3e}", l.recon_error),
+            format!("{:.3e}", l.bir.variance),
+            format!("{:.3e}", l.bir.min),
+            format!("{:.3e}", l.bir.max),
+        ]);
+    }
+    print!("{}", lt.render());
     Ok(())
 }
 

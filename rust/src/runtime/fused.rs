@@ -22,12 +22,109 @@
 //! rather than gathered per activation row.
 
 use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 use crate::compress::CompressedDelta;
 use crate::quant::separate::DecomposedDelta;
 use crate::runtime::pool::{SharedSliceMut, ThreadPool};
 use crate::sparse::CsrMatrix;
+use crate::tensor::stats::{Accumulator, SampleStats};
 use crate::tensor::{ops, Matrix};
+
+/// Collector for sampled `X·ΔŴᵀ` intermediate columns (the paper's
+/// Balanced-Intermediate-Results signal, Fig. 4) captured *inside* the
+/// fused kernel as it runs.
+///
+/// The hot serving path never sees this type: [`fused_matmul_nt`]
+/// threads `None` through the kernel internals, so the disabled cost is
+/// a single branch per weight row (mirroring `util/trace.rs`'s
+/// discipline). Audit probes call [`fused_matmul_nt_sampled`] instead.
+///
+/// Sampling is deterministic: weight row `q` is accepted iff
+/// `q % every == 0` and fewer than `max_rows` such rows exist below it,
+/// so the sampled set is a pure function of the shape — independent of
+/// thread count and chunking. Decomposed deltas contribute per part;
+/// the sink accumulates parts into one column per row (each row is
+/// owned by exactly one chunk, so part order is sequential per worker
+/// and the accumulation is bit-deterministic).
+pub struct BirSink {
+    every: usize,
+    max_rows: usize,
+    /// Sampled delta-contribution columns keyed by weight row `q`;
+    /// each value has one entry per activation row `p`.
+    rows: Mutex<BTreeMap<usize, Vec<f32>>>,
+}
+
+impl BirSink {
+    /// Sink accepting every `every`-th weight row, up to `max_rows` rows.
+    pub fn new(every: usize, max_rows: usize) -> BirSink {
+        BirSink { every: every.max(1), max_rows, rows: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn accepts(&self, q: usize) -> bool {
+        q % self.every == 0 && q / self.every < self.max_rows
+    }
+
+    /// Register a zero column of width `t` for row `q` (delta rows with
+    /// no stored entries still contribute a sample — of zeros).
+    fn seed(&self, q: usize, t: usize) {
+        if !self.accepts(q) {
+            return;
+        }
+        self.rows.lock().unwrap().entry(q).or_insert_with(|| vec![0.0; t]);
+    }
+
+    /// Fold one computed delta-contribution column into row `q`
+    /// (accumulates across decomposed parts).
+    fn record(&self, q: usize, acc: &[f32]) {
+        if !self.accepts(q) {
+            return;
+        }
+        let mut rows = self.rows.lock().unwrap();
+        let row = rows.entry(q).or_insert_with(|| vec![0.0; acc.len()]);
+        for (r, &a) in row.iter_mut().zip(acc) {
+            *r += a;
+        }
+    }
+
+    /// Number of weight rows actually sampled.
+    pub fn sampled_rows(&self) -> usize {
+        self.rows.lock().unwrap().len()
+    }
+
+    /// The flattened sample stream in `(q asc, p asc)` order — the
+    /// exact stream [`finalize`](BirSink::finalize) folds, exposed so
+    /// tests can run the batch oracle over it.
+    pub fn samples(&self) -> Vec<f32> {
+        let rows = self.rows.lock().unwrap();
+        let mut out = Vec::new();
+        for row in rows.values() {
+            out.extend_from_slice(row);
+        }
+        out
+    }
+
+    /// Streamed statistics over the sampled intermediates, folded
+    /// online via [`Accumulator`] in `(q, p)` order — bitwise equal to
+    /// [`SampleStats::from_slice`] over [`samples`](BirSink::samples)
+    /// (identical Welford recurrence over the identical stream).
+    pub fn finalize(&self) -> SampleStats {
+        let rows = self.rows.lock().unwrap();
+        let mut acc = Accumulator::new();
+        for row in rows.values() {
+            for &v in row {
+                acc.add(v as f64);
+            }
+        }
+        SampleStats {
+            mean: acc.mean(),
+            variance: acc.variance(),
+            min: acc.min(),
+            max: acc.max(),
+        }
+    }
+}
 
 thread_local! {
     /// Per-worker scratch: (decoded values, t-length column accumulator).
@@ -80,6 +177,30 @@ pub fn fused_matmul_nt(
     delta: &CompressedDelta,
     pool: &ThreadPool,
 ) -> Matrix {
+    fused_matmul_nt_impl(x, w, delta, pool, None)
+}
+
+/// [`fused_matmul_nt`] with BIR sampling: identical output bits, plus
+/// every accepted weight row's delta-contribution column is folded into
+/// `sink`. Used by the audit subsystem's hydration probe — never by the
+/// serving hot path.
+pub fn fused_matmul_nt_sampled(
+    x: &Matrix,
+    w: &Matrix,
+    delta: &CompressedDelta,
+    pool: &ThreadPool,
+    sink: &BirSink,
+) -> Matrix {
+    fused_matmul_nt_impl(x, w, delta, pool, Some(sink))
+}
+
+fn fused_matmul_nt_impl(
+    x: &Matrix,
+    w: &Matrix,
+    delta: &CompressedDelta,
+    pool: &ThreadPool,
+    sink: Option<&BirSink>,
+) -> Matrix {
     let (h_out, h_in) = w.shape();
     assert_eq!(x.cols(), h_in, "fused inner dims: x is {}x{}", x.rows(), x.cols());
     assert_eq!(delta.shape(), (h_out, h_in), "delta shape vs w {h_out}x{h_in}");
@@ -98,18 +219,29 @@ pub fn fused_matmul_nt(
         // SAFETY: this chunk exclusively owns columns [q0, q1) of every
         // output row; chunks are pairwise disjoint.
         unsafe { ops::matmul_nt_block_raw(x, w, q0, q1, shared.as_ptr(), h_out, false) };
+        // Seed accepted rows with zero columns so delta rows without
+        // stored entries still contribute their (zero) samples.
+        if let Some(s) = sink {
+            for q in q0..q1 {
+                s.seed(q, t);
+            }
+        }
         match (delta, &xt) {
             (CompressedDelta::Sparse(csr), Some(xt)) => {
-                add_csr_rows(xt, csr, q0, q1, shared, h_out)
+                add_csr_rows(xt, csr, q0, q1, shared, h_out, sink)
             }
             (CompressedDelta::Quantized(d), Some(xt)) => {
-                add_decomposed_rows(xt, d, q0, q1, shared, h_out)
+                add_decomposed_rows(xt, d, q0, q1, shared, h_out, sink)
             }
             // Dense deltas reuse the blocked kernel in accumulate mode —
-            // no scalar dot loop, no temporary.
-            (CompressedDelta::Dense(m), _) => unsafe {
-                ops::matmul_nt_block_raw(x, m, q0, q1, shared.as_ptr(), h_out, true)
-            },
+            // no scalar dot loop, no temporary. Sampling runs a separate
+            // scalar pass (the blocked kernel has no per-row column).
+            (CompressedDelta::Dense(m), _) => {
+                unsafe { ops::matmul_nt_block_raw(x, m, q0, q1, shared.as_ptr(), h_out, true) };
+                if let Some(s) = sink {
+                    record_dense_rows(x, m, q0, q1, s);
+                }
+            }
             // xt is Some for every non-Dense delta by construction.
             _ => unreachable!("xt missing for sparse delta"),
         }
@@ -146,6 +278,7 @@ fn add_csr_rows(
     q1: usize,
     out: &SharedSliceMut<'_, f32>,
     stride: usize,
+    sink: Option<&BirSink>,
 ) {
     let t = xt.cols();
     SCRATCH.with(|s| {
@@ -163,12 +296,37 @@ fn add_csr_rows(
                     *a += xv * v;
                 }
             }
+            if let Some(s) = sink {
+                s.record(q, acc);
+            }
             for (p, &a) in acc.iter().enumerate() {
                 // SAFETY: column q lies in this chunk's stripe.
                 unsafe { out.slice_mut(p * stride + q, 1)[0] += a };
             }
         }
     });
+}
+
+/// BIR sampling pass for the Dense delta arm: the blocked kernel never
+/// materializes a per-row delta column, so accepted rows get a scalar
+/// `t`-wide dot computed here (sequential over `h_in`, deterministic).
+fn record_dense_rows(x: &Matrix, m: &Matrix, q0: usize, q1: usize, sink: &BirSink) {
+    let t = x.rows();
+    let mut acc = vec![0.0f32; t];
+    for q in q0..q1 {
+        if !sink.accepts(q) {
+            continue;
+        }
+        let wr = m.row(q);
+        for (p, a) in acc.iter_mut().enumerate() {
+            let mut sum = 0.0f32;
+            for (&xv, &wv) in x.row(p).iter().zip(wr) {
+                sum += xv * wv;
+            }
+            *a = sum;
+        }
+        sink.record(q, &acc);
+    }
 }
 
 /// Accumulate the decomposed-delta contribution for weight rows
@@ -182,6 +340,7 @@ fn add_decomposed_rows(
     q1: usize,
     out: &SharedSliceMut<'_, f32>,
     stride: usize,
+    sink: Option<&BirSink>,
 ) {
     let t = xt.cols();
     SCRATCH.with(|s| {
@@ -204,6 +363,11 @@ fn add_decomposed_rows(
                     for (a, &xv) in acc.iter_mut().zip(xcol) {
                         *a += xv * v;
                     }
+                }
+                // per-part fold: the sink sums parts into one column
+                // (this chunk owns q for every part, so order is fixed)
+                if let Some(s) = sink {
+                    s.record(q, acc);
                 }
                 for (p, &a) in acc.iter().enumerate() {
                     // SAFETY: column q lies in this chunk's stripe.
@@ -319,6 +483,107 @@ mod tests {
         let got = fused_matmul_nt(&x, &w, &delta, &pool);
         assert_eq!(got.shape(), (1, 12));
         assert!(got.allclose(&x.matmul_nt(&w.add(&dm)), 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn bir_sampling_does_not_change_output_bits() {
+        // the sampled entry point must be a pure observer: same output
+        // bits as the unsampled kernel for every delta representation
+        let mut rng = Pcg64::seeded(11);
+        let w = Matrix::randn(21, 24, 0.02, &mut rng);
+        let dm = sparse_random(21, 24, 0.2, &mut rng);
+        let x = Matrix::randn(6, 24, 1.0, &mut rng);
+        let dec = DecomposedDelta::compress(&CsrMatrix::from_dense(&dm), 4, 4);
+        let deltas = [
+            CompressedDelta::Sparse(CsrMatrix::from_dense(&dm)),
+            CompressedDelta::Quantized(dec),
+            CompressedDelta::Dense(dm.clone()),
+        ];
+        let pool = ThreadPool::new(3);
+        for delta in &deltas {
+            let plain = fused_matmul_nt(&x, &w, delta, &pool);
+            let sink = BirSink::new(1, 64);
+            let sampled = fused_matmul_nt_sampled(&x, &w, delta, &pool, &sink);
+            assert_eq!(plain, sampled);
+            assert_eq!(sink.sampled_rows(), 21);
+        }
+    }
+
+    #[test]
+    fn bir_streamed_stats_bit_match_batch_oracle() {
+        // the property the audit telemetry rests on: the online Welford
+        // fold inside the kernel produces *bit-identical* statistics to
+        // the batch oracle (`SampleStats::from_slice`) over the same
+        // densified-intermediate samples, for every group config and
+        // pool size — and the sample stream itself is thread-invariant
+        let mut rng = Pcg64::seeded(12);
+        let w = Matrix::randn(33, 40, 0.02, &mut rng);
+        let dm = sparse_random(33, 40, 0.2, &mut rng);
+        let x = Matrix::randn(7, 40, 1.0, &mut rng);
+        let csr = CsrMatrix::from_dense(&dm);
+        for (k, m) in [(8u32, 1u32), (8, 4), (4, 8), (2, 4)] {
+            let dec = DecomposedDelta::compress(&csr, k, m);
+            let delta = CompressedDelta::Quantized(dec);
+            let mut reference: Option<Vec<u32>> = None;
+            for threads in [1usize, 2, 3, 5, 16] {
+                let pool = ThreadPool::new(threads);
+                let sink = BirSink::new(2, 64);
+                fused_matmul_nt_sampled(&x, &w, &delta, &pool, &sink);
+                let samples = sink.samples();
+                assert_eq!(samples.len(), 17 * 7, "k={k} m={m}"); // ceil(33/2) rows × t
+                let bits: Vec<u32> = samples.iter().map(|v| v.to_bits()).collect();
+                match &reference {
+                    Some(r) => assert_eq!(&bits, r, "k={k} m={m} threads={threads}"),
+                    None => reference = Some(bits),
+                }
+                let online = sink.finalize();
+                let batch = SampleStats::from_slice(&samples);
+                assert_eq!(online.mean.to_bits(), batch.mean.to_bits(), "mean k={k} m={m}");
+                assert_eq!(
+                    online.variance.to_bits(),
+                    batch.variance.to_bits(),
+                    "variance k={k} m={m}"
+                );
+                assert_eq!(online.min.to_bits(), batch.min.to_bits(), "min k={k} m={m}");
+                assert_eq!(online.max.to_bits(), batch.max.to_bits(), "max k={k} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn bir_samples_match_densified_intermediate() {
+        // sampled columns equal X·Δᵀ's columns for accepted rows — the
+        // densified-intermediate ground truth, including all-zero rows
+        let mut rng = Pcg64::seeded(13);
+        let w = Matrix::randn(10, 12, 0.02, &mut rng);
+        let mut dm = Matrix::zeros(10, 12);
+        dm.set(0, 3, 0.5);
+        dm.set(4, 1, -0.25);
+        dm.set(4, 7, 0.75);
+        // rows 2, 6, 8 stay empty → sampled as zero columns
+        let x = Matrix::randn(3, 12, 1.0, &mut rng);
+        let delta = CompressedDelta::Sparse(CsrMatrix::from_dense(&dm));
+        let pool = ThreadPool::new(4);
+        let sink = BirSink::new(2, 64);
+        fused_matmul_nt_sampled(&x, &w, &delta, &pool, &sink);
+        assert_eq!(sink.sampled_rows(), 5); // q ∈ {0, 2, 4, 6, 8}
+        let want = x.matmul_nt_naive(&dm); // 3×10
+        let samples = sink.samples();
+        for (i, &q) in [0usize, 2, 4, 6, 8].iter().enumerate() {
+            for p in 0..3 {
+                let got = samples[i * 3 + p];
+                let exp = want.get(p, q);
+                assert!((got - exp).abs() < 1e-5, "q={q} p={p}: {got} vs {exp}");
+            }
+        }
+        // dense arm produces the same intermediates via its scalar pass
+        let dsink = BirSink::new(2, 64);
+        fused_matmul_nt_sampled(&x, &w, &CompressedDelta::Dense(dm.clone()), &pool, &dsink);
+        let dsamples = dsink.samples();
+        assert_eq!(dsamples.len(), samples.len());
+        for (a, b) in dsamples.iter().zip(&samples) {
+            assert!((a - b).abs() < 1e-5);
+        }
     }
 
     #[test]

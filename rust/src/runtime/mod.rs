@@ -22,7 +22,7 @@ pub mod native;
 pub mod pjrt;
 pub mod pool;
 
-pub use fused::{fused_matmul_nt, matmul_nt_pooled};
+pub use fused::{fused_matmul_nt, fused_matmul_nt_sampled, matmul_nt_pooled, BirSink};
 pub use native::{FusedDeltaView, NativeBackend};
 pub use pool::{SharedSliceMut, ThreadPool};
 #[cfg(feature = "pjrt")]

@@ -806,6 +806,11 @@ impl Scheduler<'_> {
         let total = seq.req.submitted.elapsed();
         metrics.tokens_generated.fetch_add(tokens.len() as u64, Ordering::Relaxed);
         metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+        // shadow-audit sampling: one atomic bump; clones only the
+        // sampled 1-in-N request (before `tokens` moves into Response)
+        if error.is_none() {
+            metrics.audit.offer(&seq.req.tenant, &seq.req.prompt, &tokens);
+        }
         metrics.observe_latency(total.as_secs_f64());
         seq.req.respond.send_done(Response {
             id: seq.req.id,

@@ -36,6 +36,10 @@ pub struct TensorRecord {
     pub len: u64,
     /// CRC-32 of the record bytes (verified on read).
     pub crc32: u32,
+    /// Pre-quantization Frobenius norm of the delta tensor (0.0 when the
+    /// pushing client predates norm capture) — the audit subsystem's
+    /// reconstruction-error reference.
+    pub norm: f64,
 }
 
 /// One tenant's artifact: shard files plus the per-layer offset table.
@@ -83,7 +87,8 @@ impl Manifest {
                     .set("shard", rec.shard)
                     .set("offset", rec.offset)
                     .set("len", rec.len)
-                    .set("crc32", rec.crc32);
+                    .set("crc32", rec.crc32)
+                    .set("norm", rec.norm);
                 tensors.push(r);
             }
             o.set("tensors", Json::Arr(tensors));
@@ -122,6 +127,8 @@ impl Manifest {
                     offset: field_u64(rec, "offset")?,
                     len: field_u64(rec, "len")?,
                     crc32: field_u64(rec, "crc32")? as u32,
+                    // absent in manifests written before norm capture
+                    norm: rec.get("norm").and_then(Json::as_f64).unwrap_or(0.0),
                 });
             }
             let arr = t.get("shards").and_then(Json::as_array);
@@ -219,6 +226,7 @@ mod tests {
                         offset: 8,
                         len: 1024,
                         crc32: 0xDEAD_BEEF,
+                        norm: 0.125,
                     },
                     TensorRecord {
                         name: "layers.0.attn.wk".to_string(),
@@ -226,6 +234,7 @@ mod tests {
                         offset: 8,
                         len: 1024,
                         crc32: 7,
+                        norm: 0.0,
                     },
                 ],
             },
@@ -255,6 +264,18 @@ mod tests {
         let wrong_version =
             r#"{"format": "deltastore", "version": 99, "next_id": 0, "tenants": {}}"#;
         assert!(Manifest::from_json(&Json::parse(wrong_version).unwrap()).is_err());
+    }
+
+    #[test]
+    fn missing_norm_field_defaults_to_zero() {
+        // manifests written before norm capture have no "norm" key
+        let text = r#"{"format": "deltastore", "version": 1, "next_id": 2, "tenants": {
+            "old": {"id": 1, "method": "DeltaDQ", "nominal_ratio": 16.0, "bytes": 8,
+                    "shards": ["shards/t1.0.ddq"],
+                    "tensors": [{"name": "lm_head", "shard": 0, "offset": 0,
+                                 "len": 8, "crc32": 1}]}}}"#;
+        let m = Manifest::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(m.tenants["old"].tensors[0].norm, 0.0);
     }
 
     #[test]

@@ -231,6 +231,7 @@ impl DeltaStore {
                     offset,
                     len,
                     crc32: blob.crc32,
+                    norm: set.norms.get(&blob.name).copied().unwrap_or(0.0),
                 });
                 offset += len;
                 total += len;
@@ -403,6 +404,9 @@ impl DeltaStore {
             let tensor = shard::decode_tensor(&rec.name, &raw)
                 .with_context(|| format!("tenant '{tenant}'"))?;
             set.tensors.insert(rec.name.clone(), tensor);
+            if rec.norm != 0.0 {
+                set.norms.insert(rec.name.clone(), rec.norm);
+            }
         }
         self.bytes_read.fetch_add(record.bytes, Ordering::Relaxed);
         Ok(set)
@@ -556,6 +560,19 @@ mod tests {
         assert_eq!(real, dry);
         assert!(!orphan.exists());
         assert_eq!(store.gc_dry_run().unwrap(), GcReport::default());
+    }
+
+    #[test]
+    fn norms_roundtrip_through_store() {
+        let root = tmp_store("norms");
+        let store = DeltaStore::open_or_create(&root).unwrap();
+        let mut set = sample_set(14, Some((8, 4)));
+        for (i, name) in set.tensors.keys().cloned().enumerate() {
+            set.norms.insert(name, 0.5 + i as f64);
+        }
+        store.push("t", &set).unwrap();
+        let loaded = store.load("t").unwrap();
+        assert_eq!(loaded.norms, set.norms);
     }
 
     #[test]

@@ -478,6 +478,51 @@ pub fn request_tree(request: u64) -> Option<Json> {
     Some(tree)
 }
 
+/// Index of the most recent traced requests, newest first: in-flight
+/// roots (rendered `"open": true`, duration so far), then closed roots
+/// from the ring, up to `limit` total. Backs the bare `/debug/trace`
+/// endpoint — each entry's `request` id keys `/debug/trace/<id>`.
+pub fn recent_requests(limit: usize) -> Json {
+    let reg = lock_registry();
+    let now = now_us();
+    let mut entries: Vec<Json> = Vec::new();
+    let mut open: Vec<&Span> = reg.open.values().collect();
+    open.sort_by_key(|s| std::cmp::Reverse(s.start_us));
+    for s in open {
+        if entries.len() >= limit {
+            break;
+        }
+        let mut j = Json::obj();
+        j.set("request", s.request)
+            .set("start_us", s.start_us)
+            .set("dur_us", now.saturating_sub(s.start_us))
+            .set("open", true);
+        if let Some(t) = &s.tenant {
+            j.set("tenant", t.as_ref());
+        }
+        entries.push(j);
+    }
+    for s in reg.ring.iter().rev().filter(|s| s.name == "request") {
+        if entries.len() >= limit {
+            break;
+        }
+        let mut j = Json::obj();
+        j.set("request", s.request)
+            .set("start_us", s.start_us)
+            .set("dur_us", s.end_us.saturating_sub(s.start_us));
+        if let Some(t) = &s.tenant {
+            j.set("tenant", t.as_ref());
+        }
+        if let Some((_, AttrVal::Str(e))) = s.attrs.iter().find(|(k, _)| *k == "error") {
+            j.set("error", e.as_str());
+        }
+        entries.push(j);
+    }
+    let mut root = Json::obj();
+    root.set("requests", Json::Arr(entries));
+    root
+}
+
 /// Dump the ring's last `window` (default: the configured flight
 /// window) as Chrome Trace Event Format JSON — `{"traceEvents": [...]}`
 /// with one complete (`"ph": "X"`) event per span and `thread_name`
@@ -620,6 +665,42 @@ mod tests {
         let exec_kids = exec.get("children").unwrap().as_array().unwrap();
         assert_eq!(exec_kids.len(), 1, "prefill chunk nests under its exec span");
         assert_eq!(exec_kids[0].get("name").unwrap().as_str().unwrap(), "prefill.chunk");
+    }
+
+    #[test]
+    fn recent_requests_indexes_closed_and_open_roots() {
+        let _g = locked();
+        set_enabled(true);
+        configure(DEFAULT_RING_SPANS);
+        let closed = 0xFEED_0001u64;
+        let inflight = 0xFEED_0002u64;
+        begin_request(closed, "idx-tt", 2, 4, Instant::now());
+        end_request(closed, Some("boom"));
+        begin_request(inflight, "idx-tt", 2, 4, Instant::now());
+
+        let idx = recent_requests(64);
+        let reqs = idx.get("requests").unwrap().as_array().unwrap();
+        let find = |id: u64| {
+            reqs.iter().find(|r| r.get("request").and_then(Json::as_u64) == Some(id))
+        };
+        let open = find(inflight).expect("in-flight root indexed");
+        assert_eq!(open.get("open").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(open.get("tenant").and_then(Json::as_str), Some("idx-tt"));
+        let done = find(closed).expect("closed root indexed");
+        assert!(done.get("open").is_none());
+        assert_eq!(done.get("error").and_then(Json::as_str), Some("boom"));
+        // open roots list before closed ones, newest first
+        let open_pos = reqs.iter().position(|r| {
+            r.get("request").and_then(Json::as_u64) == Some(inflight)
+        });
+        let closed_pos = reqs.iter().position(|r| {
+            r.get("request").and_then(Json::as_u64) == Some(closed)
+        });
+        assert!(open_pos < closed_pos, "{open_pos:?} vs {closed_pos:?}");
+        // a limit of 1 returns exactly the newest entry
+        let one = recent_requests(1);
+        assert_eq!(one.get("requests").unwrap().as_array().unwrap().len(), 1);
+        end_request(inflight, None);
     }
 
     #[test]

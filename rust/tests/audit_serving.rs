@@ -1,0 +1,181 @@
+//! Quality-audit chaos integration: a store-backed server shadow-audits
+//! every request (`sample_every = 1`) in enforce mode while the
+//! `tenant.corrupt_resident` failpoint silently corrupts the resident
+//! copy at hydration — numerically wrong weights behind valid CRCs,
+//! invisible to the store's integrity checks. The auditor must catch
+//! the drift (agreement collapses against the dense reference), raise
+//! the warn counter, quarantine the tenant, and — once the failpoint is
+//! disarmed — let the background probe heal it back to clean audits.
+//!
+//! Lives in its own integration binary: the failpoint registry is
+//! process-global, so arming here must not race other tests.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use deltadq::audit::AuditConfig;
+use deltadq::compress::pipeline::compress_model_deltas;
+use deltadq::compress::{DeltaDq, DeltaDqConfig};
+use deltadq::coordinator::{RetryPolicy, Server, ServerOptions, SubmitError};
+use deltadq::delta::extract_deltas;
+use deltadq::delta::format::DeltaSet;
+use deltadq::model::{ModelConfig, ModelWeights};
+use deltadq::runtime::NativeBackend;
+use deltadq::store::DeltaStore;
+use deltadq::tensor::{Matrix, Pcg64};
+use deltadq::util::failpoint;
+
+const MAX_NEW: usize = 6;
+
+fn deltas_for(base: &ModelWeights, seed: u64) -> DeltaSet {
+    let mut rng = Pcg64::seeded(seed);
+    let mut ft = base.clone();
+    for name in base.config.delta_tensor_names() {
+        let (r, c) = ft.get(&name).shape();
+        ft.get_mut(&name).add_assign(&Matrix::randn(r, c, 0.001, &mut rng));
+    }
+    let d = extract_deltas(base, &ft);
+    let dq = DeltaDq::new(DeltaDqConfig::for_total_ratio(16.0, Some(16)));
+    compress_model_deltas(&d, &dq, &Default::default(), &mut rng)
+}
+
+/// Wait until the async audit thread has drained everything it sampled.
+fn drain_audits(server: &Server) {
+    let t0 = Instant::now();
+    loop {
+        let a = &server.metrics.audit;
+        let sampled = a.sampled_total.load(Ordering::Relaxed);
+        let done =
+            a.completed_total.load(Ordering::Relaxed) + a.errors_total.load(Ordering::Relaxed);
+        if done >= sampled {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "audit thread did not drain ({done}/{sampled})"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn corrupt_resident_is_detected_quarantined_and_healed() {
+    failpoint::disarm_all();
+    let mut rng = Pcg64::seeded(2);
+    let base = Arc::new(ModelWeights::init(ModelConfig::tiny(), &mut rng));
+    let prompt = vec![1u32, 20, 4, 21, 3];
+    let set = deltas_for(&base, 77);
+
+    let root = std::env::temp_dir()
+        .join("deltadq-test-audit")
+        .join(format!("serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = Arc::new(DeltaStore::open_or_create(&root).unwrap());
+    store.push("probe", &set).unwrap();
+
+    let server = Server::with_store(
+        base.clone(),
+        ServerOptions {
+            workers: 2,
+            batch_window: Duration::from_micros(200),
+            promote_after: u64::MAX, // stay Cold: the fused serving path
+            retry: RetryPolicy {
+                load_retries: 2,
+                backoff: Duration::from_millis(10),
+                quarantine_after: 1,
+                probe_interval: Duration::from_millis(100),
+            },
+            audit: AuditConfig {
+                enabled: true,
+                sample_every: 1, // shadow-audit every request
+                quarantine_below: 0.9,
+                enforce: true,
+                window: 2,
+            },
+            ..Default::default()
+        },
+        Arc::new(NativeBackend::default()),
+        store.clone(),
+    )
+    .unwrap();
+
+    // the corruption is applied at hydration, behind the store's CRC
+    // checks: the request itself succeeds, only the tokens are wrong
+    failpoint::arm("tenant.corrupt_resident=err(1)").unwrap();
+    let rx = server.submit("probe", prompt.clone(), MAX_NEW).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert!(resp.error.is_none(), "corruption must be silent at serve time: {:?}", resp.error);
+    assert_eq!(failpoint::triggered("tenant.corrupt_resident"), 1);
+    failpoint::disarm_all();
+
+    // the shadow audit re-scores the request against a fresh (clean)
+    // store load, sees the agreement collapse, and — in enforce mode —
+    // quarantines the tenant
+    let hub = &server.metrics.audit;
+    let t0 = Instant::now();
+    while hub.quarantined_total.load(Ordering::Relaxed) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(30), "audit never quarantined the tenant");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(hub.warn_total.load(Ordering::Relaxed) >= 1, "drift must warn before quarantining");
+    assert!(hub.completed_total.load(Ordering::Relaxed) >= 1);
+    let t0 = Instant::now();
+    while server.quarantined_count() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "quarantine not visible to the server");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(server.quarantined("probe").is_some());
+
+    // heal: the failpoint is disarmed, so the background probe's fresh
+    // hydration is clean and the tenant comes back
+    let t0 = Instant::now();
+    let healed = loop {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "quarantined tenant never healed after the failpoint was disarmed"
+        );
+        match server.submit("probe", prompt.clone(), MAX_NEW) {
+            Err(SubmitError::Quarantined { .. }) => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(other) => panic!("unexpected submit error while healing: {other:?}"),
+            Ok(rx) => {
+                let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+                match resp.error {
+                    // admitted before the probe finished — retry
+                    Some(_) => std::thread::sleep(Duration::from_millis(25)),
+                    None => break resp,
+                }
+            }
+        }
+    };
+    assert!(!healed.tokens.is_empty());
+    assert_eq!(server.quarantined_count(), 0, "probe success clears the quarantine");
+
+    // post-heal audits are clean: the window was reset at quarantine,
+    // so the agreement it now reports comes from fresh comparisons
+    let warned_before = hub.warn_total.load(Ordering::Relaxed);
+    for _ in 0..3 {
+        let rx = server.submit("probe", prompt.clone(), MAX_NEW).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    drain_audits(&server);
+    let summary = hub
+        .tenant_summaries()
+        .into_iter()
+        .find(|(t, ..)| t == "probe")
+        .expect("healed tenant audited again");
+    assert_eq!(summary.1, 1.0, "healed tenant must audit clean, got {}", summary.1);
+    assert_eq!(
+        hub.warn_total.load(Ordering::Relaxed),
+        warned_before,
+        "clean post-heal audits must not warn"
+    );
+    assert_eq!(hub.quarantined_total.load(Ordering::Relaxed), 1, "quarantined exactly once");
+
+    failpoint::disarm_all();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}

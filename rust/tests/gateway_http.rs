@@ -663,6 +663,20 @@ fn debug_trace_tree_and_flight_recorder_over_the_wire() {
     // unknown ids answer 404, not an empty 200
     assert_eq!(get(addr, "/debug/trace/18446744073709551615").status, 404);
 
+    // the bare index lists the traced request with its root duration,
+    // so ids are discoverable without grepping server logs
+    let index = get(addr, "/debug/trace");
+    assert_eq!(index.status, 200, "{index:?}");
+    let ij = Json::parse(std::str::from_utf8(&index.body).unwrap()).unwrap();
+    let reqs = ij.get("requests").unwrap().as_array().unwrap();
+    let entry = reqs
+        .iter()
+        .find(|r| r.get("request").and_then(Json::as_u64) == Some(id))
+        .expect("traced request appears in the index");
+    assert!(entry.get("dur_us").unwrap().as_u64().unwrap() > 0);
+    assert_eq!(entry.get("tenant").and_then(Json::as_str), Some("tr0"));
+    assert!(entry.get("open").is_none(), "completed request is not open");
+
     gw.shutdown();
     if let Ok(s) = Arc::try_unwrap(server) {
         s.shutdown();
@@ -862,6 +876,128 @@ fn metrics_exposition_is_well_formed_prometheus_text() {
         let line = format!("deltadq_sched_stage_seconds_bucket{{stage=\"{stage}\",le=\"+Inf\"}}");
         assert!(text.contains(&line), "missing stage family line {line}");
     }
+
+    // build metadata and the exposition's own render time ride every
+    // scrape, so dashboards can tell versions (and scrape cost) apart
+    let info_line = text
+        .lines()
+        .find(|l| l.starts_with("deltadq_build_info{"))
+        .unwrap_or_else(|| panic!("deltadq_build_info missing from:\n{text}"));
+    for label in ["version=\"", "git_sha=\"", "features=\""] {
+        assert!(info_line.contains(label), "build_info lacks {label}: {info_line}");
+    }
+    assert!(info_line.ends_with(" 1"), "build_info value must be 1: {info_line}");
+    assert!(sample("deltadq_metrics_render_seconds") >= 0.0);
+    // quality-audit counters are exported even before the first sample
+    for fam in [
+        "deltadq_audit_sampled_total ",
+        "deltadq_audit_dropped_total ",
+        "deltadq_audit_completed_total ",
+        "deltadq_audit_warn_total ",
+        "deltadq_audit_quarantined_total ",
+    ] {
+        assert!(text.contains(fam), "missing audit counter {fam} in:\n{text}");
+    }
+
+    gw.shutdown();
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}
+
+/// Quality-telemetry contract over the wire: with the auditor sampling
+/// every request, `GET /debug/quality` reports the tenant's shadow
+/// window (exact agreement for an uncorrupted set) and — after the
+/// first scrape triggers the lazy profile — its per-layer
+/// reconstruction-error / BIR stats; the narrowed
+/// `/debug/quality/<tenant>` view answers 200 and unknown tenants 404;
+/// the same numbers surface as labeled Prometheus gauges on
+/// `/metrics`.
+#[test]
+fn debug_quality_reports_shadow_audits_and_layer_stats() {
+    use deltadq::audit::AuditConfig;
+
+    let b = base();
+    let server = Arc::new(Server::with_backend(
+        b.clone(),
+        ServerOptions {
+            workers: 2,
+            batch_window: Duration::from_micros(200),
+            audit: AuditConfig {
+                enabled: true,
+                sample_every: 1, // shadow-audit every request
+                quarantine_below: 0.0,
+                enforce: false,
+                window: 8,
+            },
+            ..Default::default()
+        },
+        Arc::new(NativeBackend::default()),
+    ));
+    server.register_tenant("q0", deltas_for(&b, 87));
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions::default()).unwrap();
+    let addr = gw.local_addr();
+
+    let resp = post(addr, &completion_body("q0", false));
+    assert_eq!(resp.status, 200, "{resp:?}");
+
+    // the audit and the layer profile both run on the async audit
+    // thread; the first scrape enqueues the profile, later ones see it
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let q0 = loop {
+        let resp = get(addr, "/debug/quality");
+        assert_eq!(resp.status, 200, "{resp:?}");
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(j.get("config").unwrap().get("enabled").unwrap().as_bool().unwrap());
+        assert_eq!(
+            j.get("config").unwrap().get("sample_every").unwrap().as_u64(),
+            Some(1)
+        );
+        if let Some(t) = j.get("tenants").and_then(|t| t.get("q0")) {
+            let audited = t.get("window_len").and_then(Json::as_u64).unwrap_or(0) >= 1;
+            let profiled =
+                t.get("layers").and_then(Json::as_array).is_some_and(|l| !l.is_empty());
+            if audited && profiled {
+                break t.clone();
+            }
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "audit window / layer profile never appeared"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    // an uncorrupted resident set must agree exactly with its reference
+    assert_eq!(q0.get("window_agreement").unwrap().as_f64(), Some(1.0));
+    let window = q0.get("window").unwrap().as_array().unwrap();
+    assert!(!window.is_empty());
+    for r in window {
+        for key in ["tokens", "agreement", "logit_maxabs", "logit_kl"] {
+            assert!(r.get(key).is_some(), "window entry missing {key}: {r:?}");
+        }
+    }
+    for l in q0.get("layers").unwrap().as_array().unwrap() {
+        for key in
+            ["name", "density", "bits_per_param", "recon_error", "bir_variance", "bir_min"]
+        {
+            assert!(l.get(key).is_some(), "layer entry missing {key}: {l:?}");
+        }
+    }
+
+    // narrowed view: 200 for a known tenant, 404 for a ghost
+    let one = get(addr, "/debug/quality/q0");
+    assert_eq!(one.status, 200, "{one:?}");
+    let j = Json::parse(std::str::from_utf8(&one.body).unwrap()).unwrap();
+    assert!(j.get("tenants").and_then(|t| t.get("q0")).is_some());
+    assert_eq!(get(addr, "/debug/quality/ghost").status, 404);
+
+    // the same telemetry rides /metrics as labeled gauges
+    let metrics = get(addr, "/metrics");
+    let text = String::from_utf8(metrics.body).unwrap();
+    assert!(text.contains("deltadq_audit_token_agreement{tenant=\"q0\"}"), "{text}");
+    assert!(text.contains("deltadq_audit_logit_maxabs{tenant=\"q0\"}"), "{text}");
+    assert!(text.contains("deltadq_layer_recon_error{tenant=\"q0\",layer=\""), "{text}");
+    assert!(text.contains("deltadq_bir_variance{tenant=\"q0\",layer=\""), "{text}");
 
     gw.shutdown();
     if let Ok(s) = Arc::try_unwrap(server) {
