@@ -66,6 +66,13 @@ pub fn run(
         // clean-tenant exact agreement, and injected-corruption
         // detection latency (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
         "audit" => experiments::audit(backend, Path::new("BENCH_audit.json")),
+        // per-tenant usage ledger + load-derived backpressure: ledger
+        // overhead on vs off (gate: ≤2% cost), Σ per-tenant compute vs
+        // exec wall (conservation, ≤5% error), a flood that must raise
+        // the Retry-After hint above the floor and decay back, and a
+        // loadgen run that honors the hints
+        // (DELTADQ_BENCH_QUICK=1 for the CI-sized run)
+        "usage" => experiments::usage(backend, Path::new("BENCH_usage.json")),
         "all" => {
             let mut out = String::new();
             for exp in [

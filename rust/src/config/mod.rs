@@ -304,6 +304,16 @@ pub struct ServeConfig {
     /// Audited requests per tenant in the drift window (`[audit]
     /// window`, default 16).
     pub audit_window: usize,
+    /// Usage-ledger toggle (`[usage] enabled`, default true). Off =
+    /// attribution calls are skipped and the `Retry-After` hint pins
+    /// to its 1 s floor.
+    pub usage_enabled: bool,
+    /// Per-tenant series exported on `/metrics` before the rest
+    /// aggregate into `tenant="other"` (`[usage] top_k`, default 8).
+    pub usage_top_k: usize,
+    /// Upper bound of the load-derived `Retry-After` hint in seconds
+    /// (`[usage] retry_max_s`, default 30).
+    pub usage_retry_max_s: u64,
 }
 
 impl ServeConfig {
@@ -349,6 +359,9 @@ impl ServeConfig {
             audit_quarantine_below: c.float_or("audit.quarantine_below", 0.0),
             audit_enforce: c.bool_or("audit.enforce", false),
             audit_window: c.int_or("audit.window", 16).max(1) as usize,
+            usage_enabled: c.bool_or("usage.enabled", true),
+            usage_top_k: c.int_or("usage.top_k", 8).max(1) as usize,
+            usage_retry_max_s: c.int_or("usage.retry_max_s", 30).max(1) as u64,
         }
     }
 
@@ -360,6 +373,15 @@ impl ServeConfig {
             quarantine_below: self.audit_quarantine_below,
             enforce: self.audit_enforce,
             window: self.audit_window,
+        }
+    }
+
+    /// The `[usage]` knobs resolved to the usage-ledger config.
+    pub fn usage_config(&self) -> crate::usage::UsageConfig {
+        crate::usage::UsageConfig {
+            enabled: self.usage_enabled,
+            top_k: self.usage_top_k,
+            retry_max_s: self.usage_retry_max_s,
         }
     }
 }
@@ -450,6 +472,22 @@ ratios = [2, 4, 8]
         assert_eq!(sc.audit_quarantine_below, 0.0);
         assert!(!sc.audit_enforce);
         assert_eq!(sc.audit_window, 16);
+        assert!(sc.usage_enabled);
+        assert_eq!(sc.usage_top_k, 8);
+        assert_eq!(sc.usage_retry_max_s, 30);
+    }
+
+    #[test]
+    fn serve_config_reads_usage_section() {
+        let c = Config::parse("[usage]\nenabled = false\ntop_k = 3\nretry_max_s = 10").unwrap();
+        let sc = ServeConfig::from_config(&c);
+        assert!(!sc.usage_enabled);
+        assert_eq!(sc.usage_top_k, 3);
+        assert_eq!(sc.usage_retry_max_s, 10);
+        let uc = sc.usage_config();
+        assert!(!uc.enabled);
+        assert_eq!(uc.top_k, 3);
+        assert_eq!(uc.retry_max_s, 10);
     }
 
     #[test]

@@ -221,6 +221,15 @@ impl Batcher {
         self.inner.lock().unwrap().queues.values().map(|q| q.len()).sum()
     }
 
+    /// Aggregate admission capacity: `queue_depth` × the number of
+    /// registered tenant queues (at least one, so `queued() / capacity`
+    /// is a well-defined fill fraction even before tenants register).
+    /// The saturation engine's queue axis.
+    pub fn queue_capacity(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        self.queue_depth * inner.queues.len().max(1)
+    }
+
     /// Queue depth per tenant (the `/metrics` per-tenant gauge).
     pub fn queue_depths(&self) -> Vec<(String, usize)> {
         let inner = self.inner.lock().unwrap();
@@ -521,6 +530,17 @@ mod tests {
         b.submit(r2).unwrap();
         let depths = b.queue_depths();
         assert_eq!(depths, vec![("a".to_string(), 2), ("b".to_string(), 0)]);
+    }
+
+    #[test]
+    fn queue_capacity_scales_with_tenants() {
+        let b = Batcher::new(4, Duration::from_millis(0), 16);
+        assert_eq!(b.queue_capacity(), 16, "no tenants yet: one nominal queue");
+        b.add_tenant("a");
+        b.add_tenant("b");
+        assert_eq!(b.queue_capacity(), 32);
+        b.remove_tenant("b");
+        assert_eq!(b.queue_capacity(), 16);
     }
 
     #[test]

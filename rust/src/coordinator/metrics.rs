@@ -47,6 +47,13 @@ pub struct Metrics {
     /// per-layer quality stats. Completion paths call
     /// `audit.offer(..)`; the dedicated audit thread consumes.
     pub audit: Arc<crate::audit::AuditHub>,
+    /// Per-tenant usage ledger + saturation engine
+    /// ([`crate::usage::UsageLedger`]): attributed compute /
+    /// KV-block-seconds / queue-wait / token / store-I/O counters with
+    /// rolling windows. Written by the scheduler, the legacy worker
+    /// loop, and the store's loader thread; read by `/metrics`,
+    /// `/debug/usage`, and the gateway's `Retry-After` derivation.
+    pub usage: Arc<crate::usage::UsageLedger>,
     /// End-to-end request latency (log-bucketed histogram; exact mean,
     /// percentiles to bucket precision over the *whole* history — the
     /// old bounded sample ring forgot everything but recent requests).
@@ -155,6 +162,10 @@ impl Metrics {
         o.set("audit_completed_total", self.audit.completed_total.load(Ordering::Relaxed));
         o.set("audit_warn_total", self.audit.warn_total.load(Ordering::Relaxed));
         o.set("audit_quarantined_total", self.audit.quarantined_total.load(Ordering::Relaxed));
+        o.set("usage_exec_wall_s", self.usage.exec_wall_us() as f64 / 1e6);
+        let sat = self.usage.saturation();
+        o.set("saturation_combined", sat.combined);
+        o.set("retry_after_s", sat.retry_after_s);
         o
     }
 }

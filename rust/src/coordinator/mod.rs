@@ -111,6 +111,7 @@ pub fn load_server(serve: &ServeConfig, tenants: &[String]) -> Result<Server> {
             probe_interval: Duration::from_millis(serve.probe_interval_ms.max(1)),
         },
         audit: serve.audit_config(),
+        usage: serve.usage_config(),
     };
     let backend = crate::runtime::backend_from_name(&serve.backend, serve)?;
     let delta_store = match &serve.store_path {

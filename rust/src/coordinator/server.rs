@@ -62,6 +62,10 @@ pub struct ServerOptions {
     /// rate, drift threshold, enforcement. Enabled by default at 1-in-64
     /// sampling with drift detection off (telemetry only).
     pub audit: crate::audit::AuditConfig,
+    /// Per-tenant usage accounting + saturation settings (`[usage]`):
+    /// ledger on/off, `/metrics` tenant cardinality cap, and the ceiling
+    /// of the load-derived `Retry-After` hint.
+    pub usage: crate::usage::UsageConfig,
 }
 
 impl Default for ServerOptions {
@@ -78,6 +82,7 @@ impl Default for ServerOptions {
             request_ttl: None,
             retry: RetryPolicy::default(),
             audit: crate::audit::AuditConfig::default(),
+            usage: crate::usage::UsageConfig::default(),
         }
     }
 }
@@ -164,6 +169,9 @@ impl Server {
         let metrics = Arc::new(Metrics::with_tiers(store.tiers()));
         let mut workers = Vec::new();
         metrics.audit.configure(&options.audit);
+        metrics.usage.configure(&options.usage);
+        // let the loader thread attribute hydration I/O per tenant
+        store.attach_usage(metrics.usage.clone());
         if options.audit.enabled {
             // shadow-audit consumer: low-priority, off the hot path.
             // Completion threads only ever try_send into the bounded
@@ -333,6 +341,10 @@ impl Server {
         if let Some(retry_after) = self.store.quarantined(tenant) {
             self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
             self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+            if let Some(u) = self.metrics.usage.tenant(tenant) {
+                u.requests.fetch_add(1, Ordering::Relaxed);
+                u.rejected_503.fetch_add(1, Ordering::Relaxed);
+            }
             return Err(SubmitError::Quarantined {
                 tenant: tenant.to_string(),
                 retry_after_s: retry_after.as_secs().max(1),
@@ -356,10 +368,32 @@ impl Server {
         // returns) and closed by the reply sink's terminal send
         trace::begin_request(id, tenant, prompt_len, max_new, submitted);
         match self.batcher.submit(req) {
-            Ok(()) => Ok(()),
+            Ok(()) => {
+                if let Some(u) = self.metrics.usage.tenant(tenant) {
+                    u.requests.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(())
+            }
             Err(e) => {
                 trace::end_request(id, Some("rejected at submission"));
                 self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                // attribute the rejection — but never mint a ledger entry
+                // for a tenant that doesn't exist (unbounded cardinality)
+                match &e {
+                    SubmitError::Backpressure { .. } => {
+                        if let Some(u) = self.metrics.usage.tenant(tenant) {
+                            u.requests.fetch_add(1, Ordering::Relaxed);
+                            u.rejected_429.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    SubmitError::Quarantined { .. } | SubmitError::Closed => {
+                        if let Some(u) = self.metrics.usage.tenant(tenant) {
+                            u.requests.fetch_add(1, Ordering::Relaxed);
+                            u.rejected_503.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    SubmitError::UnknownTenant(_) => {}
+                }
                 Err(e)
             }
         }
@@ -394,6 +428,55 @@ impl Server {
     /// run-to-completion worker pool drives execution.
     pub fn sched_stats(&self) -> Option<SchedStats> {
         self.sched_active.then(|| self.metrics.sched.stats())
+    }
+
+    /// Current saturation estimate. Feeds the instantaneous gauges (KV
+    /// occupancy, queue fill, audit backlog) into the usage ledger's
+    /// rolling window and reads the per-axis + combined scores back —
+    /// so it stays fresh even under the legacy worker loop, which has
+    /// no drive thread ticking the ledger.
+    pub fn saturation(&self) -> crate::usage::Saturation {
+        let sched = self.metrics.sched.stats();
+        let kv_frac = if sched.kv_blocks_total > 0 {
+            sched.kv_blocks_used as f64 / sched.kv_blocks_total as f64
+        } else {
+            0.0
+        };
+        let queue_frac =
+            self.batcher.queued() as f64 / self.batcher.queue_capacity().max(1) as f64;
+        let sampled = self.metrics.audit.sampled_total.load(Ordering::Relaxed);
+        let done = self
+            .metrics
+            .audit
+            .dropped_total
+            .load(Ordering::Relaxed)
+            .saturating_add(self.metrics.audit.completed_total.load(Ordering::Relaxed));
+        let pending = sampled.saturating_sub(done);
+        self.metrics.usage.tick(kv_frac, queue_frac, crate::usage::backlog_frac(pending));
+        self.metrics.usage.saturation()
+    }
+
+    /// The load-derived `Retry-After` hint, in whole seconds (≥ 1):
+    /// the floor while the server has headroom, climbing toward the
+    /// configured ceiling as saturation approaches 1.0. The gateway
+    /// stamps this on 429 and queue-full 503 responses.
+    pub fn retry_after_s(&self) -> u64 {
+        self.saturation().retry_after_s
+    }
+
+    /// JSON usage report for `/debug/usage` (all tenants) or
+    /// `/debug/usage/<tenant>`. `None` for an unknown tenant.
+    pub fn usage_json(&self, tenant: Option<&str>) -> Option<crate::util::json::Json> {
+        // refresh the saturation window first so the embedded scores
+        // reflect the live gauges, not the last scheduler tick
+        let _ = self.saturation();
+        if let Some(t) = tenant {
+            // a registered-but-idle tenant reports zeros, not 404
+            if self.store.contains(t) {
+                let _ = self.metrics.usage.tenant(t);
+            }
+        }
+        self.metrics.usage.snapshot_json(tenant)
     }
 
     /// Number of quarantined tenants (the `deltadq_tenant_quarantined`
@@ -441,6 +524,7 @@ fn worker_loop(
 ) {
     while let Some((tenant, batch)) = batcher.next_batch() {
         let exec_start = Instant::now();
+        let usage = metrics.usage.tenant(&tenant);
         let Some(acquired) = store.acquire(&tenant, batch.len() as u64) else {
             // tenant vanished or its hydration failed — answer the batch
             // with an error instead of leaving callers to time out
@@ -484,6 +568,10 @@ fn worker_loop(
             }
             let queue_wait = exec_start.duration_since(req.submitted);
             metrics.observe_queue_wait(queue_wait.as_secs_f64());
+            if let Some(u) = &usage {
+                u.add_queue_wait(queue_wait);
+                u.tokens_in.fetch_add(req.prompt.len() as u64, Ordering::Relaxed);
+            }
             // tokens flow to streaming sinks as they decode (batch
             // sinks ignore them); the decode loop is the same either
             // way, so streamed tokens are bit-identical to batch ones
@@ -526,6 +614,9 @@ fn worker_loop(
             };
             metrics.tokens_generated.fetch_add(tokens.len() as u64, Ordering::Relaxed);
             metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+            if let Some(u) = &usage {
+                u.tokens_out.fetch_add(tokens.len() as u64, Ordering::Relaxed);
+            }
             // shadow-audit sampling: one atomic bump; clones only the
             // sampled 1-in-N request
             if error.is_none() {
@@ -543,8 +634,17 @@ fn worker_loop(
                 error,
             });
         }
-        metrics.observe_batch_exec(exec_start.elapsed().as_secs_f64());
+        let batch_wall = exec_start.elapsed();
+        metrics.observe_batch_exec(batch_wall.as_secs_f64());
         metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
+        // whole-batch attribution: one tenant per legacy batch, and the
+        // batch wall also accrues the global exec denominator so the
+        // conservation invariant (Σ tenant compute ≈ exec wall) holds
+        // on this path too — per worker thread, resource-seconds
+        metrics.usage.add_exec_wall(batch_wall);
+        if let Some(u) = &usage {
+            u.add_compute(batch_wall);
+        }
     }
 }
 

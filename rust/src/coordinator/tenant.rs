@@ -177,6 +177,10 @@ struct Shared {
     tiers: Arc<TierCounters>,
     /// Hydration retry/backoff/quarantine policy.
     retry: RetryPolicy,
+    /// Per-tenant usage ledger, attached by the server after
+    /// construction ([`TenantStore::attach_usage`]) so the loader thread
+    /// can attribute hydration I/O to the tenant that caused it.
+    usage: Mutex<Option<Arc<crate::usage::UsageLedger>>>,
 }
 
 /// Thread-safe tenant store with tiered residency and byte budgets.
@@ -279,6 +283,7 @@ impl TenantStore {
             store,
             tiers: Arc::new(TierCounters::default()),
             retry,
+            usage: Mutex::new(None),
         });
         let (loader_tx, loader_handle) = match &shared.store {
             Some(_) => {
@@ -308,6 +313,13 @@ impl TenantStore {
     /// Tier-transition counters (shared with the metrics snapshot).
     pub fn tiers(&self) -> Arc<TierCounters> {
         self.shared.tiers.clone()
+    }
+
+    /// Attach the per-tenant usage ledger so the loader thread
+    /// attributes hydration I/O (`store_bytes_read`, `hydrations`) to
+    /// the tenant that caused it. Called once by the server at startup.
+    pub fn attach_usage(&self, ledger: Arc<crate::usage::UsageLedger>) {
+        *self.shared.usage.lock().unwrap() = Some(ledger);
     }
 
     /// Register (or replace) a tenant's compressed deltas in memory
@@ -736,6 +748,11 @@ fn hydrate_one(shared: &Shared, store: &DeltaStore, tenant: &str) {
             slot.health = SlotHealth::default(); // served again: forgiven
             shared.tiers.disk_loads.fetch_add(1, Ordering::Relaxed);
             shared.tiers.store_bytes_read.fetch_add(disk_bytes, Ordering::Relaxed);
+            let ledger = shared.usage.lock().unwrap().clone();
+            if let Some(u) = ledger.and_then(|l| l.tenant(tenant)) {
+                u.store_bytes_read.fetch_add(disk_bytes, Ordering::Relaxed);
+                u.hydrations.fetch_add(1, Ordering::Relaxed);
+            }
             enforce_delta_budget(shared, &mut slots, tenant);
         }
         (Some(slot), Err(e)) if slot.loading && slot.deltas.is_none() => {

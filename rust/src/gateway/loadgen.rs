@@ -16,8 +16,10 @@
 //! log-bucketed [`LatencyHistogram`]; non-streaming requests record
 //! TTFT at the response head and no inter-token samples.
 
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -58,6 +60,13 @@ pub struct LoadgenOptions {
     pub long_max_tokens: usize,
     /// Request SSE streaming (per-token TTFT/inter-arrival recording).
     pub stream: bool,
+    /// Honor `Retry-After` hints: a 429/503 carrying one pauses this
+    /// tenant's arrivals for the hinted interval (later arrivals wait
+    /// the pause out before connecting, counted as *deferred*) and
+    /// re-fires the rejected request after the pause (up to two
+    /// retries, counted as *retried*). Off = classic open loop where
+    /// rejections are terminal.
+    pub honor_retry_after: bool,
     /// Arrival/tenant/prompt randomness seed.
     pub seed: u64,
     /// Per-request client timeout.
@@ -77,10 +86,20 @@ impl Default for LoadgenOptions {
             long_frac: 0.0,
             long_max_tokens: 32,
             stream: true,
+            honor_retry_after: false,
             seed: 0x10AD,
             timeout: Duration::from_secs(120),
         }
     }
+}
+
+/// Per-tenant `--honor-retry-after` counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantBackoff {
+    /// Requests re-fired after a 429/503 carried a `Retry-After` hint.
+    pub retried: u64,
+    /// Arrivals delayed because their tenant was inside a hinted pause.
+    pub deferred: u64,
 }
 
 /// Aggregated results of one loadgen run (merge-able across threads).
@@ -115,6 +134,14 @@ pub struct LoadReport {
     /// server returned over the wire, kept so `--trace-slowest` can
     /// fetch the span trees of the slowest requests after the run.
     pub samples: Vec<(u64, f64)>,
+    /// Requests re-fired after honoring a `Retry-After` hint
+    /// (`--honor-retry-after` only; 0 otherwise).
+    pub retried: u64,
+    /// Requests whose start was delayed by a standing tenant pause
+    /// (`--honor-retry-after` only; 0 otherwise).
+    pub deferred: u64,
+    /// Per-tenant retried/deferred breakdown (honor mode only).
+    pub backoff: BTreeMap<String, TenantBackoff>,
 }
 
 impl LoadReport {
@@ -133,6 +160,13 @@ impl LoadReport {
         self.inter_token.merge(&other.inter_token);
         self.total.merge(&other.total);
         self.samples.extend_from_slice(&other.samples);
+        self.retried += other.retried;
+        self.deferred += other.deferred;
+        for (tenant, b) in &other.backoff {
+            let e = self.backoff.entry(tenant.clone()).or_default();
+            e.retried += b.retried;
+            e.deferred += b.deferred;
+        }
     }
 
     /// The `n` slowest ok requests as `(request_id, total_seconds)`,
@@ -168,7 +202,18 @@ impl LoadReport {
             .set("ttft_short_ms", self.ttft_short.summary_ms())
             .set("ttft_long_ms", self.ttft_long.summary_ms())
             .set("inter_token_ms", self.inter_token.summary_ms())
-            .set("total_ms", self.total.summary_ms());
+            .set("total_ms", self.total.summary_ms())
+            .set("retried", self.retried)
+            .set("deferred", self.deferred);
+        if !self.backoff.is_empty() {
+            let mut per_tenant = Json::obj();
+            for (tenant, b) in &self.backoff {
+                let mut t = Json::obj();
+                t.set("retried", b.retried).set("deferred", b.deferred);
+                per_tenant.set(tenant, t);
+            }
+            o.set("backoff", per_tenant);
+        }
         o
     }
 
@@ -185,6 +230,18 @@ impl LoadReport {
             self.achieved_rps(),
             self.elapsed_s
         ));
+        if self.retried > 0 || self.deferred > 0 {
+            out.push_str(&format!(
+                "backoff: {} retried, {} deferred (honoring Retry-After)\n",
+                self.retried, self.deferred
+            ));
+            for (tenant, b) in &self.backoff {
+                out.push_str(&format!(
+                    "  {tenant}: {} retried, {} deferred\n",
+                    b.retried, b.deferred
+                ));
+            }
+        }
         out.push_str(&self.ttft.report_ms("ttft"));
         out.push('\n');
         if !self.ttft_long.is_empty() {
@@ -244,6 +301,9 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadReport> {
         .collect();
 
     let t0 = Instant::now();
+    // honor mode's shared pause map: tenant → earliest next-fire time,
+    // stamped from Retry-After hints; workers wait standing pauses out
+    let pauses: Arc<Mutex<HashMap<String, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
     let mut handles = Vec::with_capacity(arrivals.len());
     for arrival in arrivals {
         if let Some(wait) = arrival.at.checked_sub(t0.elapsed()) {
@@ -253,6 +313,8 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadReport> {
             addr: opts.addr.clone(),
             stream: opts.stream,
             timeout: opts.timeout,
+            honor: opts.honor_retry_after,
+            pauses: pauses.clone(),
             arrival,
         };
         handles.push(std::thread::spawn(move || one_request(&spec)));
@@ -288,28 +350,111 @@ pub fn fetch_trace(addr: &str, id: u64, timeout: Duration) -> Result<Json> {
     Json::parse(text).context("trace json")
 }
 
+/// Fetch the usage/saturation snapshot from `GET /debug/usage` (or
+/// `GET /debug/usage/<tenant>` when `tenant` is given) — the HTTP
+/// client behind `deltadq usage`.
+pub fn fetch_usage(addr: &str, tenant: Option<&str>, timeout: Duration) -> Result<Json> {
+    let path = match tenant {
+        Some(t) => format!("/debug/usage/{t}"),
+        None => "/debug/usage".to_string(),
+    };
+    let conn = TcpStream::connect(addr).context("connect")?;
+    conn.set_read_timeout(Some(timeout)).context("set timeout")?;
+    let mut w = conn.try_clone().context("clone stream")?;
+    write!(w, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")
+        .context("send request")?;
+    w.flush().context("flush request")?;
+    let mut reader = BufReader::new(conn);
+    let resp = read_response(&mut reader).context("response")?;
+    if resp.status != 200 {
+        bail!("GET {path} returned status {}", resp.status);
+    }
+    let text = std::str::from_utf8(&resp.body).context("utf8 body")?;
+    Json::parse(text).context("usage json")
+}
+
 /// Everything one worker thread needs to fire its request.
 struct RequestSpec {
     addr: String,
     stream: bool,
     timeout: Duration,
+    /// Honor `Retry-After` (pause + retry) instead of terminal rejects.
+    honor: bool,
+    /// Shared tenant → next-fire-time map (honor mode).
+    pauses: Arc<Mutex<HashMap<String, Instant>>>,
     arrival: Arrival,
 }
 
+/// Extra attempts after the first when honoring `Retry-After`.
+const HONOR_RETRIES: usize = 2;
+
 /// Execute one request and fold its measurements into a fresh report.
+/// In honor mode a hinted 429/503 pauses the tenant and re-fires the
+/// request after the pause, up to [`HONOR_RETRIES`] times.
 fn one_request(spec: &RequestSpec) -> LoadReport {
     let mut report = LoadReport::default();
-    match try_request(spec, &mut report) {
-        Ok(()) => {}
-        Err(RequestError::Status(429)) => report.rejected_429 += 1,
-        Err(RequestError::Status(_)) => report.http_errors += 1,
-        Err(RequestError::Transport(_)) => report.transport_errors += 1,
+    let tenant = spec.arrival.tenant.clone();
+    let attempts = if spec.honor { 1 + HONOR_RETRIES } else { 1 };
+    let mut was_deferred = false;
+    for attempt in 0..attempts {
+        if spec.honor {
+            // wait out any standing pause for this tenant before firing
+            loop {
+                let until = spec.pauses.lock().unwrap().get(&tenant).copied();
+                match until {
+                    Some(t) if t > Instant::now() => {
+                        was_deferred = true;
+                        std::thread::sleep(t.saturating_duration_since(Instant::now()));
+                    }
+                    _ => break,
+                }
+            }
+        }
+        match try_request(spec, &mut report) {
+            Ok(()) => break,
+            Err(RequestError::Status { code, retry_after_s }) => {
+                let hinted = code == 429 || code == 503;
+                if spec.honor && hinted && attempt < attempts - 1 {
+                    if let Some(secs) = retry_after_s {
+                        let until = Instant::now() + Duration::from_secs(secs.max(1));
+                        let mut pauses = spec.pauses.lock().unwrap();
+                        let slot = pauses.entry(tenant.clone()).or_insert(until);
+                        if *slot < until {
+                            *slot = until;
+                        }
+                        drop(pauses);
+                        report.retried += 1;
+                        report.backoff.entry(tenant.clone()).or_default().retried += 1;
+                        continue;
+                    }
+                }
+                // terminal rejection: count it by class
+                if code == 429 {
+                    report.rejected_429 += 1;
+                } else {
+                    report.http_errors += 1;
+                }
+                break;
+            }
+            Err(RequestError::Transport(_)) => {
+                report.transport_errors += 1;
+                break;
+            }
+        }
+    }
+    if was_deferred {
+        report.deferred += 1;
+        report.backoff.entry(tenant).or_default().deferred += 1;
     }
     report
 }
 
 enum RequestError {
-    Status(u16),
+    Status {
+        code: u16,
+        /// Parsed `Retry-After` header, when the response carried one.
+        retry_after_s: Option<u64>,
+    },
     Transport(anyhow::Error),
 }
 
@@ -317,6 +462,12 @@ impl From<anyhow::Error> for RequestError {
     fn from(e: anyhow::Error) -> RequestError {
         RequestError::Transport(e)
     }
+}
+
+/// Parse a `Retry-After` header value (whole seconds only — the HTTP
+/// date form is not emitted by this gateway).
+fn parse_retry_after(value: Option<&str>) -> Option<u64> {
+    value.and_then(|v| v.trim().parse::<u64>().ok())
 }
 
 /// Record a TTFT observation into the combined and class histograms.
@@ -358,7 +509,10 @@ fn try_request(spec: &RequestSpec, report: &mut LoadReport) -> Result<(), Reques
         let head = read_response_head(&mut reader).context("response head")?;
         if head.status != 200 {
             // error bodies are fixed-length JSON even on the stream path
-            return Err(RequestError::Status(head.status));
+            return Err(RequestError::Status {
+                code: head.status,
+                retry_after_s: parse_retry_after(head.header("retry-after")),
+            });
         }
         let mut chunks = ChunkReader::new();
         let mut last_token_at: Option<Instant> = None;
@@ -386,7 +540,7 @@ fn try_request(spec: &RequestSpec, report: &mut LoadReport) -> Result<(), Reques
                 n_tokens += 1;
             } else if event.get("done").is_some() {
                 if event.get("error").is_some() {
-                    return Err(RequestError::Status(500));
+                    return Err(RequestError::Status { code: 500, retry_after_s: None });
                 }
                 req_id = event.get("id").and_then(Json::as_u64);
                 saw_done = true;
@@ -412,7 +566,10 @@ fn try_request(spec: &RequestSpec, report: &mut LoadReport) -> Result<(), Reques
     } else {
         let resp = read_response(&mut reader).context("response")?;
         if resp.status != 200 {
-            return Err(RequestError::Status(resp.status));
+            return Err(RequestError::Status {
+                code: resp.status,
+                retry_after_s: parse_retry_after(resp.header("retry-after")),
+            });
         }
         // no per-token frames here: TTFT collapses to head arrival
         record_ttft(report, arrival.long, started.elapsed().as_secs_f64());
@@ -484,6 +641,34 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.slowest(2), vec![(3, 0.9), (1, 0.5)]);
         assert_eq!(a.slowest(10).len(), 3, "n past the sample count clamps");
+    }
+
+    #[test]
+    fn retry_after_parses_whole_seconds_only() {
+        assert_eq!(parse_retry_after(Some("3")), Some(3));
+        assert_eq!(parse_retry_after(Some(" 12 ")), Some(12));
+        assert_eq!(parse_retry_after(Some("soon")), None);
+        assert_eq!(parse_retry_after(None), None);
+    }
+
+    #[test]
+    fn backoff_counters_merge_per_tenant() {
+        let mut a = LoadReport { retried: 1, deferred: 2, ..Default::default() };
+        a.backoff.insert("hot".into(), TenantBackoff { retried: 1, deferred: 2 });
+        let mut b = LoadReport { retried: 3, deferred: 1, ..Default::default() };
+        b.backoff.insert("hot".into(), TenantBackoff { retried: 2, deferred: 0 });
+        b.backoff.insert("cool".into(), TenantBackoff { retried: 1, deferred: 1 });
+        a.merge(&b);
+        assert_eq!(a.retried, 4);
+        assert_eq!(a.deferred, 3);
+        assert_eq!(a.backoff["hot"].retried, 3);
+        assert_eq!(a.backoff["hot"].deferred, 2);
+        assert_eq!(a.backoff["cool"].retried, 1);
+        let j = a.to_json().to_string();
+        assert!(j.contains("\"retried\":4"), "{j}");
+        assert!(j.contains("\"backoff\""), "{j}");
+        let rendered = a.render();
+        assert!(rendered.contains("honoring Retry-After"), "{rendered}");
     }
 
     #[test]

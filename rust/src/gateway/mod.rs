@@ -198,7 +198,9 @@ fn accept_loop(listener: &TcpListener, shared: &Shared) {
             // than letting the client hang unserved
             drop(queue);
             let mut stream = stream;
-            let _ = routes::error_response(&mut stream, 503, "gateway at capacity", false);
+            let hint = shared.server.retry_after_s();
+            let _ =
+                routes::error_response_retry(&mut stream, 503, "gateway at capacity", false, hint);
             let _ = stream.shutdown(std::net::Shutdown::Both);
             continue;
         }

@@ -3,11 +3,12 @@
 //! (the readiness report), `GET /debug/trace` (index of recent traced
 //! requests), `GET /debug/trace/<id>` (one request's span tree),
 //! `GET /debug/flight` (the flight recorder as Chrome Trace Event
-//! Format) and `GET /debug/quality[/<tenant>]` (shadow-audit and
-//! per-layer compression-quality telemetry) — plus the
-//! [`SubmitError`] → HTTP status mapping that
-//! turns batcher backpressure into 429 + `Retry-After` and unknown
-//! tenants into 404.
+//! Format), `GET /debug/quality[/<tenant>]` (shadow-audit and
+//! per-layer compression-quality telemetry) and
+//! `GET /debug/usage[/<tenant>]` (the per-tenant usage ledger +
+//! saturation report) — plus the [`SubmitError`] → HTTP status mapping
+//! that turns batcher backpressure into 429 + a load-derived
+//! `Retry-After` and unknown tenants into 404.
 
 use std::io::Write;
 use std::sync::mpsc::RecvTimeoutError;
@@ -19,6 +20,7 @@ use crate::coordinator::{Response, Server, StreamEvent, SubmitError, Tier};
 use crate::gateway::http::{write_response, ChunkedWriter, HttpRequest};
 use crate::gateway::sse;
 use crate::sched::SchedStage;
+use crate::usage::TenantTotals;
 use crate::util::json::Json;
 use crate::util::trace;
 
@@ -79,6 +81,21 @@ pub fn handle(
                 write_response(w, 200, CT_JSON, body.as_bytes(), keep, &[])?;
             } else {
                 error_response(w, 404, &format!("unknown tenant '{tenant}'"), keep)?;
+            }
+            Ok(keep)
+        }
+        ("GET", "/debug/usage") => {
+            let body = server.usage_json(None).unwrap_or_else(Json::obj).to_string();
+            write_response(w, 200, CT_JSON, body.as_bytes(), keep, &[])?;
+            Ok(keep)
+        }
+        ("GET", p) if p.starts_with("/debug/usage/") => {
+            let tenant = &p["/debug/usage/".len()..];
+            match server.usage_json(Some(tenant)) {
+                Some(j) => {
+                    write_response(w, 200, CT_JSON, j.to_string().as_bytes(), keep, &[])?;
+                }
+                None => error_response(w, 404, &format!("unknown tenant '{tenant}'"), keep)?,
             }
             Ok(keep)
         }
@@ -156,30 +173,49 @@ fn healthz(server: &Server, w: &mut impl Write, keep: bool) -> Result<bool> {
     Ok(keep)
 }
 
-/// `{"error": msg}` with the given status.
+/// `{"error": msg}` with the given status. A 429/503 carries the floor
+/// `Retry-After: 1`; load-aware callers use
+/// [`error_response_retry`] with the live-derived hint instead.
 pub fn error_response(w: &mut impl Write, status: u16, msg: &str, keep: bool) -> Result<()> {
+    error_response_retry(w, status, msg, keep, 1)
+}
+
+/// As [`error_response`] with an explicit `Retry-After` hint (whole
+/// seconds, clamped ≥ 1) stamped on 429/503 responses — the
+/// load-derived backoff from [`Server::retry_after_s`].
+pub fn error_response_retry(
+    w: &mut impl Write,
+    status: u16,
+    msg: &str,
+    keep: bool,
+    retry_after_s: u64,
+) -> Result<()> {
     let mut o = Json::obj();
     o.set("error", msg);
-    let extra: &[(&str, &str)] =
-        if status == 429 || status == 503 { RETRY_AFTER_HEADER } else { &[] };
+    let secs = retry_after_s.max(1).to_string();
+    let headers: [(&str, &str); 1] = [("Retry-After", secs.as_str())];
+    let extra: &[(&str, &str)] = if status == 429 || status == 503 { &headers } else { &[] };
     write_response(w, status, CT_JSON, o.to_string().as_bytes(), keep, extra)
 }
 
-const RETRY_AFTER_HEADER: &[(&str, &str)] = &[("Retry-After", "1")];
-
-/// Answer a [`SubmitError`] with its mapped status; a quarantined
-/// tenant's 503 carries the actual probe interval as `Retry-After`
-/// instead of the generic 1-second hint.
-fn submit_error_response(w: &mut impl Write, e: &SubmitError, keep: bool) -> Result<()> {
+/// Answer a [`SubmitError`] with its mapped status. A quarantined
+/// tenant's 503 carries the loader's probe interval as `Retry-After`;
+/// backpressure 429s and shutdown 503s carry the saturation-derived
+/// hint (the 1-second floor while the server has headroom, climbing
+/// toward the configured ceiling as load approaches saturation).
+fn submit_error_response(
+    w: &mut impl Write,
+    server: &Server,
+    e: &SubmitError,
+    keep: bool,
+) -> Result<()> {
     let (status, msg) = submit_error_status(e);
-    if let SubmitError::Quarantined { retry_after_s, .. } = e {
-        let secs = retry_after_s.to_string();
-        let mut o = Json::obj();
-        o.set("error", msg.as_str());
-        let headers: [(&str, &str); 1] = [("Retry-After", secs.as_str())];
-        return write_response(w, status, CT_JSON, o.to_string().as_bytes(), keep, &headers);
-    }
-    error_response(w, status, &msg, keep)
+    let hint = match e {
+        SubmitError::Quarantined { retry_after_s, .. } => *retry_after_s,
+        SubmitError::Backpressure { .. } | SubmitError::Closed => server.retry_after_s(),
+        SubmitError::UnknownTenant(_) => 1,
+    };
+    error_response_retry(w, status, &msg, keep, hint)
 }
 
 /// The JSON body shared by the non-streaming response and the SSE
@@ -311,7 +347,7 @@ fn completions_batch(
     let rx = match submitted {
         Ok(rx) => rx,
         Err(e) => {
-            submit_error_response(w, &e, keep)?;
+            submit_error_response(w, server, &e, keep)?;
             return Ok(keep);
         }
     };
@@ -350,7 +386,7 @@ fn completions_stream(
         Err(e) => {
             // nothing streamed yet — a plain status response is still
             // possible (this is where the 429/503 + Retry-After surfaces)
-            submit_error_response(w, &e, keep)?;
+            submit_error_response(w, server, &e, keep)?;
             return Ok(keep);
         }
     };
@@ -696,6 +732,112 @@ pub fn render_prometheus(server: &Server) -> String {
                     s.bir.variance
                 );
             }
+        }
+    }
+
+    // saturation + usage: per-axis load scores, the derived Retry-After
+    // hint, and per-tenant attributed-resource counters capped at the
+    // configured top-K (by attributed compute) with the remainder
+    // folded into tenant="other" — bounded exposition cardinality no
+    // matter how many tenants register
+    let sat = server.saturation();
+    let _ = writeln!(
+        out,
+        "# HELP deltadq_saturation Per-axis load score over the trailing window (0 idle, 1 saturated)."
+    );
+    let _ = writeln!(out, "# TYPE deltadq_saturation gauge");
+    for (axis, v) in sat.axes() {
+        let _ = writeln!(out, "deltadq_saturation{{axis=\"{axis}\"}} {v}");
+    }
+    let _ = writeln!(out, "deltadq_saturation{{axis=\"combined\"}} {}", sat.combined);
+    let _ = writeln!(
+        out,
+        "# HELP deltadq_retry_after_seconds Load-derived Retry-After hint stamped on 429/503 responses."
+    );
+    let _ = writeln!(out, "# TYPE deltadq_retry_after_seconds gauge");
+    let _ = writeln!(out, "deltadq_retry_after_seconds {}", sat.retry_after_s);
+
+    let (mut usage_rows, usage_other) = m.usage.export();
+    if let Some(rest) = usage_other {
+        usage_rows.push(("other".to_string(), rest));
+    }
+    if !usage_rows.is_empty() {
+        type Get = fn(&TenantTotals) -> f64;
+        let families: [(&str, &str, Get); 6] = [
+            (
+                "tenant_compute_seconds_total",
+                "Execution wall time attributed to this tenant.",
+                |t| t.compute_us as f64 / 1e6,
+            ),
+            (
+                "tenant_kv_block_seconds_total",
+                "KV-cache block-seconds held by this tenant's sequences.",
+                |t| t.kv_block_us as f64 / 1e6,
+            ),
+            (
+                "tenant_queue_wait_seconds_total",
+                "Admission queue wait accumulated by this tenant.",
+                |t| t.queue_wait_us as f64 / 1e6,
+            ),
+            (
+                "tenant_requests_total",
+                "Submissions per tenant (accepted + rejected).",
+                |t| t.requests as f64,
+            ),
+            (
+                "tenant_store_bytes_read_total",
+                "Delta-store shard bytes read hydrating this tenant.",
+                |t| t.store_bytes_read as f64,
+            ),
+            (
+                "tenant_hydrations_total",
+                "Disk→Cold hydrations performed for this tenant.",
+                |t| t.hydrations as f64,
+            ),
+        ];
+        for (name, help, get) in families {
+            let _ = writeln!(out, "# HELP deltadq_{name} {help}");
+            let _ = writeln!(out, "# TYPE deltadq_{name} counter");
+            for (tenant, totals) in &usage_rows {
+                let t = esc(tenant);
+                let _ = writeln!(out, "deltadq_{name}{{tenant=\"{t}\"}} {}", get(totals));
+            }
+        }
+        let _ = writeln!(
+            out,
+            "# HELP deltadq_tenant_tokens_total Tokens per tenant by direction (prompt in, generated out)."
+        );
+        let _ = writeln!(out, "# TYPE deltadq_tenant_tokens_total counter");
+        for (tenant, totals) in &usage_rows {
+            let t = esc(tenant);
+            let _ = writeln!(
+                out,
+                "deltadq_tenant_tokens_total{{tenant=\"{t}\",dir=\"in\"}} {}",
+                totals.tokens_in
+            );
+            let _ = writeln!(
+                out,
+                "deltadq_tenant_tokens_total{{tenant=\"{t}\",dir=\"out\"}} {}",
+                totals.tokens_out
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP deltadq_tenant_rejected_total Rejected submissions per tenant by HTTP status."
+        );
+        let _ = writeln!(out, "# TYPE deltadq_tenant_rejected_total counter");
+        for (tenant, totals) in &usage_rows {
+            let t = esc(tenant);
+            let _ = writeln!(
+                out,
+                "deltadq_tenant_rejected_total{{tenant=\"{t}\",status=\"429\"}} {}",
+                totals.rejected_429
+            );
+            let _ = writeln!(
+                out,
+                "deltadq_tenant_rejected_total{{tenant=\"{t}\",status=\"503\"}} {}",
+                totals.rejected_503
+            );
         }
     }
 

@@ -49,4 +49,5 @@ pub mod search;
 pub mod sparse;
 pub mod store;
 pub mod tensor;
+pub mod usage;
 pub mod util;

@@ -11,6 +11,7 @@
 //! * `gc`         — sweep a delta store (and optionally remove tenants)
 //! * `ls`         — list a delta store's tenants
 //! * `audit`      — offline shadow audit of a stored tenant (quality)
+//! * `usage`      — per-tenant usage + saturation from a live gateway
 //! * `bench`      — regenerate a paper table/figure (table1..4, fig4..8)
 //!
 //! CLI parsing is hand-rolled (the container vendors no clap); flags are
@@ -112,6 +113,7 @@ fn main() -> Result<()> {
         "gc" => cmd_gc(&args),
         "ls" => cmd_ls(&args),
         "audit" => cmd_audit(&args),
+        "usage" => cmd_usage(&args),
         "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -162,14 +164,21 @@ fn print_usage() {
                      [--audit.quarantine_below A] [--audit.enforce B]\n\
                      [--audit.window W] (online shadow-audit knobs;\n\
                      scrape GET /debug/quality[/<tenant>])\n\
+                     [--usage.enabled B] [--usage.top_k K]\n\
+                     [--usage.retry_max_s S] (per-tenant usage ledger +\n\
+                     saturation knobs; 429/503 Retry-After hints derive\n\
+                     from load; scrape GET /debug/usage[/<tenant>])\n\
            loadgen   --addr HOST:PORT [--requests N] [--rps R]\n\
                      [--tenants LIST] [--zipf S] [--prompt-len P]\n\
                      [--max-tokens M] [--long-frac F]\n\
                      [--long-max-tokens M] [--stream true|false]\n\
+                     [--honor-retry-after true|false]\n\
                      [--seed S] [--out REPORT.json] [--trace-slowest N]\n\
                      (open-loop HTTP load: TTFT / inter-token / total\n\
                      latency histograms split short-vs-long, 429\n\
-                     accounting; --trace-slowest fetches and prints the\n\
+                     accounting; --honor-retry-after pauses a tenant's\n\
+                     arrivals for the server's hinted interval and\n\
+                     retries; --trace-slowest fetches and prints the\n\
                      server-side span tree of the N slowest requests)\n\
            push      --store DIR --tenant NAME --delta F.ddq\n\
            gc        --store DIR [--remove TENANT[,TENANT...]]\n\
@@ -184,14 +193,17 @@ fn print_usage() {
                      serving path, re-score against a dense\n\
                      reconstruction of the store copy, and print the\n\
                      per-layer reconstruction-error / BIR table)\n\
+           usage     --addr HOST:PORT [--tenant NAME] [--json true]\n\
+                     (per-tenant resource totals + saturation axes from\n\
+                     a running gateway's GET /debug/usage)\n\
            bench     --name table1|table2|table3|table4|fig4|fig5|fig6|\n\
                      fig7|fig8|ablations|serving|kernels|churn|gateway|\n\
-                     decode|chaos|trace|audit\n\
+                     decode|chaos|trace|audit|usage\n\
                      [--models DIR] [--out FILE] [--backend native|pjrt]\n\
                      [--fused-threads N] [--artifacts DIR]\n\
-                     (kernels/churn/gateway/decode/chaos/trace write\n\
-                     BENCH_<name>.json; set DELTADQ_BENCH_QUICK=1 for\n\
-                     the CI-sized run)"
+                     (kernels/churn/gateway/decode/chaos/trace/usage\n\
+                     write BENCH_<name>.json; set DELTADQ_BENCH_QUICK=1\n\
+                     for the CI-sized run)"
     );
 }
 
@@ -393,6 +405,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 || k.starts_with("sched.")
                 || k.starts_with("trace.")
                 || k.starts_with("audit.")
+                || k.starts_with("usage.")
         })
         .map(|(k, v)| format!("{k}={v}"))
         .collect();
@@ -440,6 +453,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         long_frac: args.f64_or("long-frac", 0.0)?,
         long_max_tokens: args.usize_or("long-max-tokens", 32)?,
         stream: args.bool_or("stream", true)?,
+        honor_retry_after: args.bool_or("honor-retry-after", false)?,
         seed: args.u64_or("seed", 0x10AD)?,
         timeout: std::time::Duration::from_secs(args.u64_or("timeout-secs", 120)?),
     };
@@ -674,6 +688,88 @@ fn cmd_audit(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", lt.render());
+    Ok(())
+}
+
+// --------------------------------------------------------------- usage
+
+/// Live usage snapshot from a running gateway: fetches
+/// `GET /debug/usage[/<tenant>]` and renders per-tenant resource totals
+/// plus the saturation axes behind the server's `Retry-After` hints
+/// (`--json true` prints the raw endpoint JSON).
+fn cmd_usage(args: &Args) -> Result<()> {
+    use deltadq::util::json::Json;
+
+    let addr = args.get("addr").context("--addr HOST:PORT required")?;
+    let tenant = args.get("tenant");
+    let timeout = std::time::Duration::from_secs(args.u64_or("timeout-secs", 10)?);
+    let snap = deltadq::gateway::loadgen::fetch_usage(addr, tenant, timeout)?;
+    if args.bool_or("json", false)? {
+        println!("{}", snap.to_pretty_string());
+        return Ok(());
+    }
+    let num = |j: &Json, key: &str| j.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    if let Some(sat) = snap.get("saturation") {
+        println!(
+            "saturation: kv {:.2}, queue {:.2}, duty {:.2}, backlog {:.2} -> combined {:.2} \
+             (Retry-After hint {}s)",
+            num(sat, "kv"),
+            num(sat, "queue"),
+            num(sat, "duty"),
+            num(sat, "backlog"),
+            num(sat, "combined"),
+            sat.get("retry_after_s").and_then(Json::as_u64).unwrap_or(1),
+        );
+    }
+    let mut t = Table::new(
+        &format!("usage at {addr}"),
+        &[
+            "tenant",
+            "compute_s",
+            "kv_block_s",
+            "queue_wait_s",
+            "reqs",
+            "tok_out",
+            "429",
+            "503",
+            "tok/s_10s",
+        ],
+    );
+    let mut add_row = |name: &str, detail: &Json| {
+        let empty = Json::obj();
+        let totals = detail.get("totals").unwrap_or(&empty);
+        let tokens_10s = detail
+            .get("rates")
+            .and_then(|r| r.get("10s"))
+            .map(|w| num(w, "tokens_per_s"))
+            .unwrap_or(0.0);
+        t.add_row(vec![
+            name.to_string(),
+            format!("{:.3}", num(totals, "compute_s")),
+            format!("{:.3}", num(totals, "kv_block_s")),
+            format!("{:.3}", num(totals, "queue_wait_s")),
+            format!("{:.0}", num(totals, "requests")),
+            format!("{:.0}", num(totals, "tokens_out")),
+            format!("{:.0}", num(totals, "rejected_429")),
+            format!("{:.0}", num(totals, "rejected_503")),
+            format!("{:.1}", tokens_10s),
+        ]);
+    };
+    match tenant {
+        // the per-tenant endpoint flattens totals/rates into the root
+        Some(name) => add_row(name, &snap),
+        None => {
+            if let Some(by_tenant) = snap.get("tenants").and_then(Json::as_object) {
+                for (name, detail) in by_tenant {
+                    add_row(name, detail);
+                }
+            }
+        }
+    }
+    print!("{}", t.render());
+    if tenant.is_none() {
+        println!("attributed exec wall: {:.3}s", num(&snap, "exec_wall_s"));
+    }
     Ok(())
 }
 

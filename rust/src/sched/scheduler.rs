@@ -59,6 +59,13 @@ struct Sequence {
     /// resume); bounds the `sched.exec` trace span.
     admitted_at: Instant,
     state: SeqState,
+    /// This tenant's usage-ledger counters, cached at admission so
+    /// per-step attribution (KV accrual, group wall, tokens) never
+    /// touches the ledger's tenant map. `None` = ledger disabled.
+    usage: Option<Arc<crate::usage::TenantUsage>>,
+    /// When KV occupancy was last accrued into the ledger (advanced by
+    /// [`Scheduler::accrue_kv`]).
+    kv_stamp: Instant,
 }
 
 impl Sequence {
@@ -248,6 +255,7 @@ impl Scheduler<'_> {
         self.admissions += 1;
         seq.admission = self.admissions;
         seq.admitted_at = Instant::now();
+        seq.kv_stamp = seq.admitted_at; // fresh lease: accrual restarts here
         seq.state = SeqState::Active;
         self.running.push(seq);
         true
@@ -341,6 +349,11 @@ impl Scheduler<'_> {
         let queue_wait = exec_start.duration_since(req.submitted);
         self.metrics.observe_queue_wait(queue_wait.as_secs_f64());
         trace::span_between("queue.wait", req.id, req.submitted, exec_start);
+        let usage = self.metrics.usage.tenant(&req.tenant);
+        if let Some(u) = &usage {
+            u.add_queue_wait(queue_wait);
+            u.tokens_in.fetch_add(req.prompt.len() as u64, Ordering::Relaxed);
+        }
         let mut cache = PagedKvCache::new(self.pool.clone());
         {
             let mut alloc_span = trace::span_for("kv.alloc", req.id);
@@ -361,6 +374,8 @@ impl Scheduler<'_> {
             admission: self.admissions,
             admitted_at: exec_start,
             state: SeqState::Active,
+            usage,
+            kv_stamp: exec_start,
         });
         true
     }
@@ -397,8 +412,19 @@ impl Scheduler<'_> {
         let emit_start = Instant::now();
         self.metrics.sched.observe_stage(SchedStage::Decode, emit_start - decode_start);
         self.metrics.observe_batch_exec((emit_start - prefill_start).as_secs_f64());
+        // the conservation denominator: this step's execution wall
+        // (prefill + decode stages — exactly what the per-tenant
+        // prefill-chunk and decode-group attributions partition)
+        self.metrics.usage.add_exec_wall(emit_start - prefill_start);
         self.metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
         self.metrics.sched.steps_executed.fetch_add(1, Ordering::Relaxed);
+        // integrate KV occupancy once per step for sequences that stay
+        // active (transitions accrue at their own boundary)
+        for seq in &mut self.running {
+            if matches!(seq.state, SeqState::Active) {
+                Self::accrue_kv(seq);
+            }
+        }
         self.sweep();
         self.metrics.sched.observe_stage(SchedStage::Emit, emit_start.elapsed());
     }
@@ -465,6 +491,7 @@ impl Scheduler<'_> {
         chunk_span.set_tenant(&self.running[i].req.tenant);
         chunk_span.attr_u64("start_pos", start as u64);
         chunk_span.attr_u64("n_tokens", tokens.len() as u64);
+        let chunk_start = Instant::now();
         let result = {
             let seq = &mut self.running[i];
             crate::util::failpoint::hit("backend.prefill").and_then(|()| match &seq.view {
@@ -479,6 +506,9 @@ impl Scheduler<'_> {
                 ),
             })
         };
+        if let Some(u) = &self.running[i].usage {
+            u.add_compute(chunk_start.elapsed());
+        }
         drop(chunk_span);
         self.metrics.sched.prefill_chunks_total.fetch_add(1, Ordering::Relaxed);
         match result {
@@ -556,6 +586,7 @@ impl Scheduler<'_> {
         let Some((next, pos)) = self.decide_decode(i) else {
             return;
         };
+        let step_start = Instant::now();
         let result = {
             let seq = &mut self.running[i];
             crate::util::failpoint::hit("backend.decode").and_then(|()| match &seq.view {
@@ -571,6 +602,9 @@ impl Scheduler<'_> {
                 ),
             })
         };
+        if let Some(u) = &self.running[i].usage {
+            u.add_compute(step_start.elapsed());
+        }
         match result {
             Ok(logits) => self.running[i].last_logits = Some(logits),
             Err(e) => self.backend_failure(i, &e),
@@ -616,16 +650,19 @@ impl Scheduler<'_> {
         }
         // per-group trace identity: tenant plus the member request ids
         // (the attribute that joins the group span into each member's
-        // tree and nobody else's)
-        let mut group_meta: Vec<(String, String)> = Vec::with_capacity(groups.len());
+        // tree and nobody else's) — and the tenant's usage counters,
+        // since the whole group wall belongs to one tenant
+        type GroupMeta = (String, String, Option<Arc<crate::usage::TenantUsage>>);
+        let mut group_meta: Vec<GroupMeta> = Vec::with_capacity(groups.len());
         for (_, members) in &groups {
             self.metrics.sched.decode_groups_total.fetch_add(1, Ordering::Relaxed);
             self.metrics.sched.decode_lanes_total.fetch_add(members.len() as u64, Ordering::Relaxed);
             self.metrics.sched.observe_group(members.len());
             let tenant = self.running[members[0].0].req.tenant.clone();
+            let usage = self.running[members[0].0].usage.clone();
             let ids: Vec<String> =
                 members.iter().map(|&(slot, _, _)| self.running[slot].req.id.to_string()).collect();
-            group_meta.push((tenant, ids.join(",")));
+            group_meta.push((tenant, ids.join(","), usage));
         }
         let mut results: Vec<Option<Result<Matrix>>> = (0..groups.len()).map(|_| None).collect();
         {
@@ -639,7 +676,7 @@ impl Scheduler<'_> {
             let run_group = |gi: usize| {
                 let (view, members) = &groups[gi];
                 let mut group_span = trace::span("decode.group");
-                let (tenant, requests) = &group_meta[gi];
+                let (tenant, requests, usage) = &group_meta[gi];
                 group_span.set_tenant(tenant);
                 group_span.attr_str("requests", requests);
                 group_span.attr_u64("lanes", members.len() as u64);
@@ -676,7 +713,12 @@ impl Scheduler<'_> {
                         ))
                     }
                 };
-                let layer_ms = group_start.elapsed().as_secs_f64() * 1e3 / n_layers as f64;
+                let group_wall = group_start.elapsed();
+                if let Some(u) = usage {
+                    // the whole stacked forward is one tenant's work
+                    u.add_compute(group_wall);
+                }
+                let layer_ms = group_wall.as_secs_f64() * 1e3 / n_layers as f64;
                 group_span.attr_f64("layer_ms", layer_ms);
                 // SAFETY: result cell gi is owned by group gi alone.
                 unsafe { out.slice_mut(gi, 1)[0] = Some(r) };
@@ -738,12 +780,27 @@ impl Scheduler<'_> {
         }
     }
 
+    /// Integrate `blocks × time-held` since the last accrual into the
+    /// tenant's KV-block-seconds and advance the stamp. Must run
+    /// BEFORE a `cache.release()` (afterwards the block count is 0).
+    fn accrue_kv(seq: &mut Sequence) {
+        let now = Instant::now();
+        if let Some(u) = &seq.usage {
+            let blocks = seq.cache.n_blocks() as u64;
+            if blocks > 0 {
+                u.add_kv_blocks(blocks, now.duration_since(seq.kv_stamp));
+            }
+        }
+        seq.kv_stamp = now;
+    }
+
     fn preempt(&mut self, j: usize) {
         let seq = &mut self.running[j];
         let mut preempt_span = trace::span_for("sched.preempt", seq.req.id);
         preempt_span.set_tenant(&seq.req.tenant);
         preempt_span.attr_u64("generated", seq.generated.len() as u64);
         drop(preempt_span);
+        Self::accrue_kv(seq);
         seq.cache.release();
         seq.last_logits = None;
         seq.state = SeqState::Preempted;
@@ -774,11 +831,15 @@ impl Scheduler<'_> {
     /// is deterministic), there is just nobody left to read the rest.
     fn cancel(&mut self, i: usize) {
         let seq = &mut self.running[i];
+        Self::accrue_kv(seq);
         seq.cache.release();
         seq.state = SeqState::Cancelled;
         self.metrics.sched.cancelled_total.fetch_add(1, Ordering::Relaxed);
         self.metrics.tokens_generated.fetch_add(seq.generated.len() as u64, Ordering::Relaxed);
         self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+        if let Some(u) = &seq.usage {
+            u.tokens_out.fetch_add(seq.generated.len() as u64, Ordering::Relaxed);
+        }
     }
 
     /// Answer a request that never got a running slot (bad prompt,
@@ -801,8 +862,12 @@ impl Scheduler<'_> {
 
     fn respond(metrics: &Metrics, seq: &mut Sequence, error: Option<String>) {
         trace::span_between("sched.exec", seq.req.id, seq.admitted_at, Instant::now());
+        Self::accrue_kv(seq);
         seq.cache.release();
         let tokens = std::mem::take(&mut seq.generated);
+        if let Some(u) = &seq.usage {
+            u.tokens_out.fetch_add(tokens.len() as u64, Ordering::Relaxed);
+        }
         let total = seq.req.submitted.elapsed();
         metrics.tokens_generated.fetch_add(tokens.len() as u64, Ordering::Relaxed);
         metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
@@ -851,9 +916,22 @@ impl Scheduler<'_> {
         let s = &self.metrics.sched;
         s.last_heartbeat_us.store(trace::now_us(), Ordering::Relaxed);
         s.running.store(self.running.len() as u64, Ordering::Relaxed);
-        let waiting = self.batcher.queued() + self.preempted.len();
+        let queued = self.batcher.queued();
+        let waiting = queued + self.preempted.len();
         s.waiting.store(waiting as u64, Ordering::Relaxed);
-        s.kv_blocks_used.store(self.pool.used_blocks() as u64, Ordering::Relaxed);
+        let used = self.pool.used_blocks();
+        s.kv_blocks_used.store(used as u64, Ordering::Relaxed);
         s.kv_blocks_free.store(self.pool.free_blocks() as u64, Ordering::Relaxed);
+        // feed the saturation windows every iteration (and every idle
+        // tick), so the 10 s means rise under load and decay after it
+        let kv_frac = used as f64 / self.pool.total_blocks().max(1) as f64;
+        let queue_frac = queued as f64 / self.batcher.queue_capacity().max(1) as f64;
+        let audit = &self.metrics.audit;
+        let pending = audit
+            .sampled_total
+            .load(Ordering::Relaxed)
+            .saturating_sub(audit.dropped_total.load(Ordering::Relaxed))
+            .saturating_sub(audit.completed_total.load(Ordering::Relaxed));
+        self.metrics.usage.tick(kv_frac, queue_frac, crate::usage::backlog_frac(pending));
     }
 }

@@ -1,0 +1,716 @@
+//! Per-tenant usage ledger + saturation engine (PR 10).
+//!
+//! Attributes every unit of work the serving stack performs to the
+//! tenant that caused it — compute wall time (decode-group forwards,
+//! prefill chunks, legacy batch execution), KV-block-seconds
+//! (integrated block-pool occupancy per sequence), queue wait, store
+//! bytes read / hydrations, tokens in/out, and request / 429 / 503
+//! counts — in lock-light atomic counters ([`TenantUsage`]), and keeps
+//! a ring of per-second snapshots so callers can read rolling
+//! 1 s / 10 s / 60 s windows without a background thread.
+//!
+//! From the same windows the ledger derives a per-axis **saturation
+//! score** in `[0, 1]` (KV-pool occupancy, admission-queue fill,
+//! drive-loop duty cycle, audit/loader backlog) and a combined score
+//! that the gateway turns into a bounded, load-derived `Retry-After`
+//! hint on 429/503 responses ([`retry_after_from_score`]). The
+//! scheduler's `publish()` feeds the ring every iteration (and every
+//! idle tick), so the windows decay on their own once load drops; the
+//! legacy worker loop feeds it from the read paths (`/metrics`,
+//! `/debug/usage`, `/healthz`).
+//!
+//! Cardinality policy: `/metrics` exports per-tenant series for the
+//! top-K tenants by attributed compute, aggregating the rest into one
+//! `tenant="other"` sample per family ([`UsageLedger::export`]);
+//! `GET /debug/usage` serves the unaggregated JSON.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Ring capacity in one-second slots: one more than the longest window
+/// so a full 60 s delta always has its start snapshot resident.
+const RING_SECONDS: u64 = 61;
+
+/// The mid window (seconds) — what the saturation score smooths over.
+const MID_WINDOW_S: u64 = 10;
+
+/// Audit/loader backlog items that count as "fully backed up" (the
+/// normalizer for the backlog saturation axis).
+const BACKLOG_FULL: f64 = 32.0;
+
+/// `[usage]` configuration (see `config::ServeConfig::usage_config`).
+#[derive(Debug, Clone)]
+pub struct UsageConfig {
+    /// Ledger toggle (`[usage] enabled`, default true). Off = every
+    /// attribution call is a relaxed load + branch, windows stay empty,
+    /// and the `Retry-After` hint pins to the 1 s floor.
+    pub enabled: bool,
+    /// Per-tenant series exported on `/metrics` before aggregation
+    /// into `tenant="other"` (`[usage] top_k`, default 8).
+    pub top_k: usize,
+    /// Upper bound of the derived `Retry-After` hint in seconds
+    /// (`[usage] retry_max_s`, default 30; floor is always 1).
+    pub retry_max_s: u64,
+}
+
+impl Default for UsageConfig {
+    fn default() -> UsageConfig {
+        UsageConfig { enabled: true, top_k: 8, retry_max_s: 30 }
+    }
+}
+
+/// One tenant's attributed-resource counters. All monotonic totals,
+/// updated with relaxed atomics from the hot paths; durations are
+/// stored in integer microseconds.
+#[derive(Debug, Default)]
+pub struct TenantUsage {
+    /// Attributed compute wall time (µs): decode-group wall split by
+    /// group membership, prefill-chunk wall, legacy per-batch exec.
+    pub compute_us: AtomicU64,
+    /// Integrated KV occupancy (block-microseconds): Σ blocks × time
+    /// held, accrued at step/respond/preempt/cancel boundaries.
+    pub kv_block_us: AtomicU64,
+    /// Queue wait from submission to first admission (µs).
+    pub queue_wait_us: AtomicU64,
+    /// Bytes read from the delta store hydrating this tenant.
+    pub store_bytes_read: AtomicU64,
+    /// Disk→Cold hydrations performed for this tenant.
+    pub hydrations: AtomicU64,
+    /// Prompt tokens accepted.
+    pub tokens_in: AtomicU64,
+    /// Tokens generated (including streams cancelled mid-generation).
+    pub tokens_out: AtomicU64,
+    /// Requests accepted for this tenant.
+    pub requests: AtomicU64,
+    /// Requests refused with 429 (queue backpressure).
+    pub rejected_429: AtomicU64,
+    /// Requests refused with 503 (quarantine / shutdown).
+    pub rejected_503: AtomicU64,
+}
+
+impl TenantUsage {
+    /// Attribute `wall` of compute to this tenant.
+    pub fn add_compute(&self, wall: Duration) {
+        self.compute_us.fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Accrue `blocks` KV blocks held for `held`.
+    pub fn add_kv_blocks(&self, blocks: u64, held: Duration) {
+        self.kv_block_us.fetch_add(blocks * held.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Attribute one request's queue wait.
+    pub fn add_queue_wait(&self, wait: Duration) {
+        self.queue_wait_us.fetch_add(wait.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Plain-integer copy of every counter (consistent enough for
+    /// reporting; each field is read with one relaxed load).
+    pub fn totals(&self) -> TenantTotals {
+        TenantTotals {
+            compute_us: self.compute_us.load(Ordering::Relaxed),
+            kv_block_us: self.kv_block_us.load(Ordering::Relaxed),
+            queue_wait_us: self.queue_wait_us.load(Ordering::Relaxed),
+            store_bytes_read: self.store_bytes_read.load(Ordering::Relaxed),
+            hydrations: self.hydrations.load(Ordering::Relaxed),
+            tokens_in: self.tokens_in.load(Ordering::Relaxed),
+            tokens_out: self.tokens_out.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            rejected_429: self.rejected_429.load(Ordering::Relaxed),
+            rejected_503: self.rejected_503.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Snapshot of one tenant's [`TenantUsage`] counters (or the sum of
+/// several, for the `tenant="other"` aggregate).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantTotals {
+    /// See [`TenantUsage::compute_us`].
+    pub compute_us: u64,
+    /// See [`TenantUsage::kv_block_us`].
+    pub kv_block_us: u64,
+    /// See [`TenantUsage::queue_wait_us`].
+    pub queue_wait_us: u64,
+    /// See [`TenantUsage::store_bytes_read`].
+    pub store_bytes_read: u64,
+    /// See [`TenantUsage::hydrations`].
+    pub hydrations: u64,
+    /// See [`TenantUsage::tokens_in`].
+    pub tokens_in: u64,
+    /// See [`TenantUsage::tokens_out`].
+    pub tokens_out: u64,
+    /// See [`TenantUsage::requests`].
+    pub requests: u64,
+    /// See [`TenantUsage::rejected_429`].
+    pub rejected_429: u64,
+    /// See [`TenantUsage::rejected_503`].
+    pub rejected_503: u64,
+}
+
+impl TenantTotals {
+    /// Fold another snapshot into this one (the `other` aggregation).
+    pub fn absorb(&mut self, o: &TenantTotals) {
+        self.compute_us += o.compute_us;
+        self.kv_block_us += o.kv_block_us;
+        self.queue_wait_us += o.queue_wait_us;
+        self.store_bytes_read += o.store_bytes_read;
+        self.hydrations += o.hydrations;
+        self.tokens_in += o.tokens_in;
+        self.tokens_out += o.tokens_out;
+        self.requests += o.requests;
+        self.rejected_429 += o.rejected_429;
+        self.rejected_503 += o.rejected_503;
+    }
+
+    /// JSON object (durations converted to seconds).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("compute_s", self.compute_us as f64 / 1e6)
+            .set("kv_block_s", self.kv_block_us as f64 / 1e6)
+            .set("queue_wait_s", self.queue_wait_us as f64 / 1e6)
+            .set("store_bytes_read", self.store_bytes_read)
+            .set("hydrations", self.hydrations)
+            .set("tokens_in", self.tokens_in)
+            .set("tokens_out", self.tokens_out)
+            .set("requests", self.requests)
+            .set("rejected_429", self.rejected_429)
+            .set("rejected_503", self.rejected_503);
+        o
+    }
+}
+
+/// Saturation scores per resource axis, each in `[0, 1]`, plus the
+/// combined score (the max — any one saturated axis throttles) and the
+/// `Retry-After` hint it implies.
+#[derive(Debug, Clone, Copy)]
+pub struct Saturation {
+    /// KV-pool occupancy (used / total blocks), 10 s mean.
+    pub kv: f64,
+    /// Admission-queue fill (queued / aggregate queue capacity), 10 s
+    /// mean.
+    pub queue: f64,
+    /// Drive-loop duty cycle: attributed exec wall per wall-clock
+    /// second over the 10 s window.
+    pub duty: f64,
+    /// Audit/loader backlog pressure (pending shadow audits,
+    /// normalized), 10 s mean.
+    pub backlog: f64,
+    /// `max` of the axes.
+    pub combined: f64,
+    /// Bounded load-derived `Retry-After` hint (seconds, ≥ 1).
+    pub retry_after_s: u64,
+}
+
+impl Saturation {
+    /// The per-axis scores with their `/metrics` label values.
+    pub fn axes(&self) -> [(&'static str, f64); 4] {
+        [("kv", self.kv), ("queue", self.queue), ("duty", self.duty), ("backlog", self.backlog)]
+    }
+
+    /// JSON object (the `/debug/usage` `"saturation"` field).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kv", self.kv)
+            .set("queue", self.queue)
+            .set("duty", self.duty)
+            .set("backlog", self.backlog)
+            .set("combined", self.combined)
+            .set("retry_after_s", self.retry_after_s);
+        o
+    }
+}
+
+/// Normalize an audit/loader backlog (pending items) into the `[0, 1]`
+/// backlog-axis gauge fed to [`UsageLedger::tick`].
+pub fn backlog_frac(pending: u64) -> f64 {
+    (pending as f64 / BACKLOG_FULL).clamp(0.0, 1.0)
+}
+
+/// Map a combined saturation score to a bounded `Retry-After` hint:
+/// at or below 0.5 the hint stays at the 1 s floor; above it the hint
+/// grows linearly to `max_s` at full saturation.
+pub fn retry_after_from_score(score: f64, max_s: u64) -> u64 {
+    let max_s = max_s.max(1);
+    let score = if score.is_finite() { score.clamp(0.0, 1.0) } else { 0.0 };
+    let excess = (score - 0.5).max(0.0) / 0.5;
+    let hint = 1.0 + excess * (max_s - 1) as f64;
+    (hint.round() as u64).clamp(1, max_s)
+}
+
+/// Running mean of a gauge within one ring slot.
+#[derive(Debug, Clone, Copy, Default)]
+struct GaugeAvg {
+    sum: f64,
+    n: u64,
+}
+
+impl GaugeAvg {
+    fn record(&mut self, v: f64) {
+        self.sum += v;
+        self.n += 1;
+    }
+
+    fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// One second of ledger history: gauge means observed within the
+/// second plus cumulative-counter snapshots as of the latest tick in
+/// it (so window deltas are `latest − snapshot[window start]`).
+#[derive(Debug, Clone, Default)]
+struct Slot {
+    /// Absolute second (since ledger start) this slot holds.
+    second: u64,
+    valid: bool,
+    kv: GaugeAvg,
+    queue: GaugeAvg,
+    backlog: GaugeAvg,
+    /// Cumulative global exec wall (µs) snapshot.
+    exec_us: u64,
+    /// Cumulative per-tenant `(compute_us, tokens_out)` snapshots.
+    tenants: HashMap<String, (u64, u64)>,
+}
+
+/// The per-second snapshot ring. `last_second` is the slot the most
+/// recent tick landed in.
+#[derive(Debug)]
+struct Ring {
+    slots: Vec<Slot>,
+    last_second: u64,
+}
+
+impl Default for Ring {
+    fn default() -> Ring {
+        Ring { slots: vec![Slot::default(); RING_SECONDS as usize], last_second: 0 }
+    }
+}
+
+impl Ring {
+    fn slot_mut(&mut self, second: u64) -> &mut Slot {
+        &mut self.slots[(second % RING_SECONDS) as usize]
+    }
+
+    fn slot(&self, second: u64) -> &Slot {
+        &self.slots[(second % RING_SECONDS) as usize]
+    }
+
+    /// Valid slots within the trailing `window` seconds, oldest first.
+    fn window(&self, window: u64) -> Vec<&Slot> {
+        let from = self.last_second.saturating_sub(window.saturating_sub(1).min(RING_SECONDS - 1));
+        (from..=self.last_second)
+            .map(|s| self.slot(s))
+            .filter(|slot| slot.valid && slot.second + window > self.last_second)
+            .collect()
+    }
+}
+
+/// The coordinator-wide usage ledger: per-tenant attributed counters,
+/// the global exec-wall counter, and the per-second snapshot ring the
+/// saturation engine reads. Lives inside
+/// [`crate::coordinator::Metrics`]; one per server.
+#[derive(Debug)]
+pub struct UsageLedger {
+    enabled: AtomicBool,
+    top_k: AtomicU64,
+    retry_max_s: AtomicU64,
+    /// Monotonic base of the ring's second counter.
+    started: Instant,
+    /// Global attributed exec wall (µs): per-step exec wall on the
+    /// scheduler path, per-batch wall on the legacy path. The
+    /// conservation property checks Σ per-tenant compute against this.
+    exec_us: AtomicU64,
+    tenants: Mutex<HashMap<String, Arc<TenantUsage>>>,
+    ring: Mutex<Ring>,
+}
+
+impl Default for UsageLedger {
+    fn default() -> UsageLedger {
+        UsageLedger {
+            enabled: AtomicBool::new(true),
+            top_k: AtomicU64::new(8),
+            retry_max_s: AtomicU64::new(30),
+            started: Instant::now(),
+            exec_us: AtomicU64::new(0),
+            tenants: Mutex::new(HashMap::new()),
+            ring: Mutex::new(Ring::default()),
+        }
+    }
+}
+
+impl UsageLedger {
+    /// Apply the `[usage]` config (done once at server construction).
+    pub fn configure(&self, cfg: &UsageConfig) {
+        self.enabled.store(cfg.enabled, Ordering::Relaxed);
+        self.top_k.store(cfg.top_k.max(1) as u64, Ordering::Relaxed);
+        self.retry_max_s.store(cfg.retry_max_s.max(1), Ordering::Relaxed);
+    }
+
+    /// Whether attribution is on.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// The configured `Retry-After` upper bound in seconds.
+    pub fn retry_max_s(&self) -> u64 {
+        self.retry_max_s.load(Ordering::Relaxed)
+    }
+
+    /// The tenant's counter block, created on first touch. `None` when
+    /// the ledger is disabled — callers skip attribution entirely, so
+    /// the disabled hot path pays one relaxed load per call site.
+    pub fn tenant(&self, name: &str) -> Option<Arc<TenantUsage>> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut map = self.tenants.lock().unwrap();
+        Some(map.entry(name.to_string()).or_default().clone())
+    }
+
+    /// Add `wall` to the global exec-wall counter (the conservation
+    /// denominator and the duty-cycle numerator).
+    pub fn add_exec_wall(&self, wall: Duration) {
+        if self.enabled() {
+            self.exec_us.fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Total attributed exec wall in microseconds.
+    pub fn exec_wall_us(&self) -> u64 {
+        self.exec_us.load(Ordering::Relaxed)
+    }
+
+    /// Σ per-tenant attributed compute ÷ global exec wall, or `None`
+    /// before any exec wall has been recorded. ≈ 1.0 when attribution
+    /// conserves (the `bench --name usage` / `tests/usage_serving.rs`
+    /// property).
+    pub fn conservation_ratio(&self) -> Option<f64> {
+        let exec = self.exec_wall_us();
+        if exec == 0 {
+            return None;
+        }
+        let attributed: u64 = self
+            .tenants
+            .lock()
+            .unwrap()
+            .values()
+            .map(|t| t.compute_us.load(Ordering::Relaxed))
+            .sum();
+        Some(attributed as f64 / exec as f64)
+    }
+
+    /// Feed the snapshot ring one observation of the instantaneous
+    /// gauges (each in `[0, 1]`), rolling it to the current second.
+    /// Called by the scheduler's `publish()` every iteration / idle
+    /// tick, and by the read paths so the window decays even under the
+    /// legacy worker loop.
+    pub fn tick(&self, kv_frac: f64, queue_frac: f64, backlog_frac: f64) {
+        if !self.enabled() {
+            return;
+        }
+        let clamp = |v: f64| if v.is_finite() { v.clamp(0.0, 1.0) } else { 0.0 };
+        let now_s = self.started.elapsed().as_secs();
+        let exec_total = self.exec_us.load(Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap();
+        let rolled = now_s > ring.last_second || !ring.slot(now_s).valid;
+        if now_s > ring.last_second {
+            if now_s - ring.last_second >= RING_SECONDS {
+                // idle longer than the ring remembers: restart clean
+                for slot in &mut ring.slots {
+                    *slot = Slot::default();
+                }
+            } else {
+                // carry cumulative snapshots through skipped seconds
+                // (no activity) with zero-gauge slots, so window means
+                // decay while window deltas stay correct
+                let prev = ring.slot(ring.last_second).clone();
+                for s in (ring.last_second + 1)..now_s {
+                    *ring.slot_mut(s) = Slot {
+                        second: s,
+                        valid: prev.valid,
+                        exec_us: prev.exec_us,
+                        tenants: prev.tenants.clone(),
+                        ..Slot::default()
+                    };
+                }
+            }
+            ring.last_second = now_s;
+        }
+        if rolled {
+            // per-tenant cumulative snapshots are taken only at second
+            // boundaries — within a second, ticks touch atomics and one
+            // gauge record, nothing that allocates
+            let snaps: HashMap<String, (u64, u64)> = {
+                let map = self.tenants.lock().unwrap();
+                map.iter()
+                    .map(|(name, t)| {
+                        let c = t.compute_us.load(Ordering::Relaxed);
+                        let tok = t.tokens_out.load(Ordering::Relaxed);
+                        (name.clone(), (c, tok))
+                    })
+                    .collect()
+            };
+            *ring.slot_mut(now_s) =
+                Slot { second: now_s, valid: true, tenants: snaps, ..Slot::default() };
+        }
+        let slot = ring.slot_mut(now_s);
+        slot.exec_us = exec_total;
+        slot.kv.record(clamp(kv_frac));
+        slot.queue.record(clamp(queue_frac));
+        slot.backlog.record(clamp(backlog_frac));
+    }
+
+    /// Derive the saturation scores from the trailing 10 s window.
+    /// Callers should [`UsageLedger::tick`] first so the window
+    /// includes the present.
+    pub fn saturation(&self) -> Saturation {
+        if !self.enabled() {
+            return Saturation {
+                kv: 0.0,
+                queue: 0.0,
+                duty: 0.0,
+                backlog: 0.0,
+                combined: 0.0,
+                retry_after_s: 1,
+            };
+        }
+        let ring = self.ring.lock().unwrap();
+        let window = ring.window(MID_WINDOW_S);
+        let axis_mean = |pick: &dyn Fn(&Slot) -> GaugeAvg| -> f64 {
+            if window.is_empty() {
+                return 0.0;
+            }
+            window.iter().map(|s| pick(s).mean()).sum::<f64>() / window.len() as f64
+        };
+        let kv = axis_mean(&|s: &Slot| s.kv);
+        let queue = axis_mean(&|s: &Slot| s.queue);
+        let backlog = axis_mean(&|s: &Slot| s.backlog);
+        let duty = match (window.first(), window.last()) {
+            (Some(first), Some(last)) if last.second > first.second => {
+                let span_us = (last.second - first.second) as f64 * 1e6;
+                ((last.exec_us.saturating_sub(first.exec_us)) as f64 / span_us).clamp(0.0, 1.0)
+            }
+            _ => 0.0,
+        };
+        drop(ring);
+        let combined = kv.max(queue).max(duty).max(backlog);
+        let retry_after_s = retry_after_from_score(combined, self.retry_max_s());
+        Saturation { kv, queue, duty, backlog, combined, retry_after_s }
+    }
+
+    /// Per-tenant rate over the trailing `window` seconds:
+    /// `(compute seconds per second, tokens per second)` derived from
+    /// the ring's cumulative snapshots. Zero when the window has no
+    /// span yet.
+    fn window_rates(&self, window: u64) -> HashMap<String, (f64, f64)> {
+        let ring = self.ring.lock().unwrap();
+        let slots = ring.window(window);
+        let (Some(first), Some(last)) = (slots.first(), slots.last()) else {
+            return HashMap::new();
+        };
+        if last.second <= first.second {
+            return HashMap::new();
+        }
+        let span_s = (last.second - first.second) as f64;
+        last.tenants
+            .iter()
+            .map(|(name, &(compute, tokens))| {
+                let (c0, t0) = first.tenants.get(name).copied().unwrap_or((0, 0));
+                let compute_rate = compute.saturating_sub(c0) as f64 / 1e6 / span_s;
+                let token_rate = tokens.saturating_sub(t0) as f64 / span_s;
+                (name.clone(), (compute_rate, token_rate))
+            })
+            .collect()
+    }
+
+    /// The `/metrics` cardinality-capped view: the top-K tenants by
+    /// attributed compute (ties broken by name), plus the aggregate of
+    /// everyone else as `tenant="other"` when any were cut.
+    pub fn export(&self) -> (Vec<(String, TenantTotals)>, Option<TenantTotals>) {
+        let k = self.top_k.load(Ordering::Relaxed) as usize;
+        let mut all: Vec<(String, TenantTotals)> = {
+            let map = self.tenants.lock().unwrap();
+            map.iter().map(|(name, t)| (name.clone(), t.totals())).collect()
+        };
+        all.sort_by(|a, b| b.1.compute_us.cmp(&a.1.compute_us).then_with(|| a.0.cmp(&b.0)));
+        if all.len() <= k {
+            return (all, None);
+        }
+        let rest = all.split_off(k);
+        let mut other = TenantTotals::default();
+        for (_, t) in &rest {
+            other.absorb(t);
+        }
+        (all, Some(other))
+    }
+
+    /// One tenant's totals, if it has any attributed usage.
+    pub fn totals(&self, tenant: &str) -> Option<TenantTotals> {
+        self.tenants.lock().unwrap().get(tenant).map(|t| t.totals())
+    }
+
+    /// The `GET /debug/usage` JSON: saturation plus every tenant's
+    /// totals and windowed rates. With `tenant` set, the single-tenant
+    /// view (`None` when that tenant has no attributed usage).
+    pub fn snapshot_json(&self, tenant: Option<&str>) -> Option<Json> {
+        let sat = self.saturation();
+        let rates_1 = self.window_rates(1);
+        let rates_10 = self.window_rates(MID_WINDOW_S);
+        let rates_60 = self.window_rates(60);
+        let tenant_json = |name: &str, totals: &TenantTotals| -> Json {
+            let mut rates = Json::obj();
+            for (label, map) in [("1s", &rates_1), ("10s", &rates_10), ("60s", &rates_60)] {
+                let (compute, tokens) = map.get(name).copied().unwrap_or((0.0, 0.0));
+                let mut w = Json::obj();
+                w.set("compute_s_per_s", compute).set("tokens_per_s", tokens);
+                rates.set(label, w);
+            }
+            let mut o = Json::obj();
+            o.set("totals", totals.to_json()).set("rates", rates);
+            o
+        };
+        if let Some(name) = tenant {
+            let totals = self.totals(name)?;
+            let mut o = Json::obj();
+            o.set("tenant", name)
+                .set("enabled", self.enabled())
+                .set("saturation", sat.to_json());
+            let detail = tenant_json(name, &totals);
+            if let Some(obj) = detail.as_object() {
+                for (k, v) in obj {
+                    o.set(k, v.clone());
+                }
+            }
+            return Some(o);
+        }
+        let mut tenants: Vec<(String, TenantTotals)> = {
+            let map = self.tenants.lock().unwrap();
+            map.iter().map(|(name, t)| (name.clone(), t.totals())).collect()
+        };
+        tenants.sort_by(|a, b| b.1.compute_us.cmp(&a.1.compute_us).then_with(|| a.0.cmp(&b.0)));
+        let mut by_tenant = Json::obj();
+        for (name, totals) in &tenants {
+            by_tenant.set(name, tenant_json(name, totals));
+        }
+        let mut o = Json::obj();
+        o.set("enabled", self.enabled())
+            .set("saturation", sat.to_json())
+            .set("exec_wall_s", self.exec_wall_us() as f64 / 1e6)
+            .set("tenants", by_tenant);
+        Some(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_after_floor_ceiling_and_monotone() {
+        assert_eq!(retry_after_from_score(0.0, 30), 1);
+        assert_eq!(retry_after_from_score(0.5, 30), 1);
+        assert_eq!(retry_after_from_score(1.0, 30), 30);
+        assert_eq!(retry_after_from_score(2.0, 30), 30, "clamps above 1.0");
+        assert_eq!(retry_after_from_score(f64::NAN, 30), 1);
+        let mut last = 0;
+        for i in 0..=20 {
+            let hint = retry_after_from_score(i as f64 / 20.0, 30);
+            assert!(hint >= last, "hint grows with score");
+            last = hint;
+        }
+        assert_eq!(retry_after_from_score(1.0, 0), 1, "max_s floors at 1");
+    }
+
+    #[test]
+    fn disabled_ledger_skips_attribution() {
+        let ledger = UsageLedger::default();
+        ledger.configure(&UsageConfig { enabled: false, ..UsageConfig::default() });
+        assert!(ledger.tenant("math").is_none());
+        ledger.add_exec_wall(Duration::from_millis(5));
+        assert_eq!(ledger.exec_wall_us(), 0);
+        assert_eq!(ledger.saturation().retry_after_s, 1);
+    }
+
+    #[test]
+    fn counters_accumulate_and_conserve() {
+        let ledger = UsageLedger::default();
+        let a = ledger.tenant("a").unwrap();
+        let b = ledger.tenant("b").unwrap();
+        a.add_compute(Duration::from_millis(30));
+        b.add_compute(Duration::from_millis(10));
+        a.add_kv_blocks(4, Duration::from_millis(100));
+        a.add_queue_wait(Duration::from_millis(2));
+        a.tokens_out.fetch_add(7, Ordering::Relaxed);
+        ledger.add_exec_wall(Duration::from_millis(40));
+        let ratio = ledger.conservation_ratio().unwrap();
+        assert!((ratio - 1.0).abs() < 0.01, "attributed ≈ global: {ratio}");
+        let totals = ledger.totals("a").unwrap();
+        assert_eq!(totals.kv_block_us, 400_000);
+        assert_eq!(totals.tokens_out, 7);
+        assert!(ledger.totals("missing").is_none());
+    }
+
+    #[test]
+    fn export_caps_cardinality_with_other() {
+        let ledger = UsageLedger::default();
+        ledger.configure(&UsageConfig { top_k: 2, ..UsageConfig::default() });
+        for (name, ms) in [("hot", 30u64), ("warm", 20), ("cool", 5), ("cold", 1)] {
+            ledger.tenant(name).unwrap().add_compute(Duration::from_millis(ms));
+        }
+        let (top, other) = ledger.export();
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].0, "hot");
+        assert_eq!(top[1].0, "warm");
+        let other = other.expect("two tenants were cut");
+        assert_eq!(other.compute_us, 6_000);
+        // under the cap: no "other" sample at all
+        ledger.configure(&UsageConfig { top_k: 8, ..UsageConfig::default() });
+        let (top, other) = ledger.export();
+        assert_eq!(top.len(), 4);
+        assert!(other.is_none());
+    }
+
+    #[test]
+    fn saturation_tracks_gauges_and_derives_retry() {
+        let ledger = UsageLedger::default();
+        ledger.tick(0.0, 0.0, 0.0);
+        let calm = ledger.saturation();
+        assert!(calm.combined < 0.01);
+        assert_eq!(calm.retry_after_s, 1);
+        for _ in 0..8 {
+            ledger.tick(0.2, 1.0, 0.1);
+        }
+        let hot = ledger.saturation();
+        assert!(hot.queue > 0.5, "queue axis dominates: {hot:?}");
+        assert_eq!(hot.combined, hot.kv.max(hot.queue).max(hot.duty).max(hot.backlog));
+        assert!(hot.retry_after_s > 1, "saturated score lifts the hint: {hot:?}");
+        assert!(hot.retry_after_s <= 30);
+    }
+
+    #[test]
+    fn snapshot_json_shapes() {
+        let ledger = UsageLedger::default();
+        let t = ledger.tenant("math").unwrap();
+        t.add_compute(Duration::from_millis(12));
+        t.requests.fetch_add(3, Ordering::Relaxed);
+        ledger.tick(0.1, 0.2, 0.0);
+        let all = ledger.snapshot_json(None).unwrap().to_string();
+        assert!(all.contains("\"saturation\""), "{all}");
+        assert!(all.contains("\"math\""), "{all}");
+        assert!(all.contains("\"retry_after_s\""), "{all}");
+        assert!(all.contains("\"rates\""), "{all}");
+        let one = ledger.snapshot_json(Some("math")).unwrap().to_string();
+        assert!(one.contains("\"tenant\":\"math\""), "{one}");
+        assert!(one.contains("\"requests\":3"), "{one}");
+        assert!(ledger.snapshot_json(Some("nope")).is_none());
+    }
+}

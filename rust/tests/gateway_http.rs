@@ -36,6 +36,7 @@ use deltadq::runtime::{ExecutionBackend, NativeBackend};
 use deltadq::sched::SchedOptions;
 use deltadq::store::DeltaStore;
 use deltadq::tensor::{Matrix, Pcg64};
+use deltadq::usage::UsageConfig;
 use deltadq::util::json::Json;
 
 const N_TENANTS: usize = 3;
@@ -357,11 +358,14 @@ fn flood_past_queue_depth_sheds_with_429_and_serves_the_rest() {
                     (1usize, 0usize)
                 }
                 429 => {
-                    assert_eq!(
-                        resp.header("retry-after"),
-                        Some("1"),
-                        "429 carries Retry-After"
-                    );
+                    // the hint is load-derived: bounded by the
+                    // configured ceiling, never below the 1 s floor
+                    let hint: u64 = resp
+                        .header("retry-after")
+                        .expect("429 carries Retry-After")
+                        .parse()
+                        .expect("Retry-After is whole seconds");
+                    assert!((1..=30).contains(&hint), "hint {hint}s outside [1, 30]");
                     let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
                     assert!(j.get("error").unwrap().as_str().unwrap().contains("queue full"));
                     (0, 1)
@@ -898,6 +902,81 @@ fn metrics_exposition_is_well_formed_prometheus_text() {
     ] {
         assert!(text.contains(fam), "missing audit counter {fam} in:\n{text}");
     }
+    // saturation axes + the derived Retry-After hint ride every scrape
+    for axis in ["kv", "queue", "duty", "backlog", "combined"] {
+        let line = format!("deltadq_saturation{{axis=\"{axis}\"}}");
+        assert!(text.contains(&line), "missing saturation axis {line} in:\n{text}");
+    }
+    assert!(sample("deltadq_retry_after_seconds") >= 1.0);
+    // the served tenant's attributed usage series
+    for fam in [
+        "deltadq_tenant_compute_seconds_total{tenant=\"m0\"}",
+        "deltadq_tenant_requests_total{tenant=\"m0\"}",
+        "deltadq_tenant_tokens_total{tenant=\"m0\",dir=\"out\"}",
+    ] {
+        assert!(text.contains(fam), "missing usage series {fam} in:\n{text}");
+    }
+
+    gw.shutdown();
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}
+
+/// `/metrics` cardinality cap: with more tenants than `[usage] top_k`,
+/// the exposition keeps the top-K tenants by attributed compute and
+/// folds the rest into one `tenant="other"` aggregate, while
+/// `GET /debug/usage` stays uncapped (every tenant, plus saturation);
+/// the narrowed `/debug/usage/<tenant>` view answers 200 with the
+/// tenant's totals and unknown tenants 404.
+#[test]
+fn metrics_usage_export_caps_tenants_at_top_k_plus_other() {
+    let b = base();
+    let server = Arc::new(Server::with_backend(
+        b.clone(),
+        ServerOptions {
+            batch_window: Duration::from_micros(200),
+            usage: UsageConfig { top_k: 2, ..UsageConfig::default() },
+            ..Default::default()
+        },
+        Arc::new(NativeBackend::default()),
+    ));
+    for i in 0..4u64 {
+        server.register_tenant(&format!("u{i}"), deltas_for(&b, 70 + i));
+    }
+    let gw = Gateway::start(server.clone(), "127.0.0.1:0", GatewayOptions::default()).unwrap();
+    let addr = gw.local_addr();
+    for i in 0..4 {
+        let resp = post(addr, &completion_body(&format!("u{i}"), false));
+        assert_eq!(resp.status, 200, "{resp:?}");
+    }
+
+    let text = String::from_utf8(get(addr, "/metrics").body).unwrap();
+    let tenants: Vec<&str> = text
+        .lines()
+        .filter(|l| l.starts_with("deltadq_tenant_compute_seconds_total{"))
+        .map(|l| l.split("tenant=\"").nth(1).unwrap().split('"').next().unwrap())
+        .collect();
+    assert_eq!(tenants.len(), 3, "top_k=2 + other, got {tenants:?}");
+    assert!(tenants.contains(&"other"), "{tenants:?}");
+
+    // the debug endpoint is uncapped: every tenant appears
+    let usage = get(addr, "/debug/usage");
+    assert_eq!(usage.status, 200);
+    let j = Json::parse(std::str::from_utf8(&usage.body).unwrap()).unwrap();
+    let by_tenant = j.get("tenants").unwrap();
+    for i in 0..4 {
+        assert!(by_tenant.get(&format!("u{i}")).is_some(), "missing u{i}: {j:?}");
+    }
+    let sat = j.get("saturation").unwrap();
+    assert!(sat.get("retry_after_s").unwrap().as_u64().unwrap() >= 1);
+
+    // the per-tenant view flattens totals into the root object
+    let one = get(addr, "/debug/usage/u0");
+    assert_eq!(one.status, 200);
+    let j1 = Json::parse(std::str::from_utf8(&one.body).unwrap()).unwrap();
+    assert!(j1.get("totals").unwrap().get("requests").unwrap().as_u64().unwrap() >= 1);
+    assert_eq!(get(addr, "/debug/usage/nope").status, 404);
 
     gw.shutdown();
     if let Ok(s) = Arc::try_unwrap(server) {
